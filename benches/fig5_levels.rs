@@ -1,0 +1,60 @@
+//! Paper Fig 5: GWT at high decomposition levels — even as the
+//! optimizer state approaches SGD-size (l = 5 on nano's width-160
+//! matrices => 1/32 state), PPL stays at or below full-rank Adam.
+//! Levels beyond the AOT set (1..3) exercise the rust fallback path.
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+use gwt::metrics::write_curves;
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(180);
+    let loader = bench_loader("nano", steps, 7);
+
+    let mut table = TableView::new(
+        "Fig 5 — GWT level sweep (nano; width 160 allows l <= 5)",
+        &["config", "valid PPL", "state KB", "state vs Adam"],
+    );
+    let mut curves = Vec::new();
+    let adam_spec = RunSpec::paper_defaults("nano", OptSpec::Adam, steps);
+    let adam = pretrain(rt.clone(), &adam_spec, &loader);
+    println!("  Adam   ppl {:.2}", adam.valid_ppl);
+    table.row(vec![
+        "Adam".into(),
+        format!("{:.2}", adam.valid_ppl),
+        format!("{:.1}", adam.state_bytes as f64 / 1e3),
+        "1.00".into(),
+    ]);
+    let mut all_below = true;
+    for level in 1..=5usize {
+        let spec = RunSpec::paper_defaults(
+            "nano",
+            OptSpec::Gwt { level },
+            steps,
+        );
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!("  GWT-{level}  ppl {:.2}", out.valid_ppl);
+        table.row(vec![
+            format!("GWT-{level}"),
+            format!("{:.2}", out.valid_ppl),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+            format!("{:.2}", out.state_bytes as f64 / adam.state_bytes as f64),
+        ]);
+        all_below &= out.valid_ppl <= adam.valid_ppl * 1.05;
+        let mut c = out.curve.clone();
+        c.label = format!("gwt_l{level}");
+        curves.push(c);
+    }
+    table.print();
+    println!(
+        "paper shape: every level within ~5% of (or better than) Adam [{}]",
+        if all_below { "OK" } else { "MISS" }
+    );
+    write_curves("results/fig5_curves", &curves)?;
+    write_result("fig5_levels", &table, vec![])?;
+    Ok(())
+}

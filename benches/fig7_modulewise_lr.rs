@@ -1,0 +1,76 @@
+//! Paper Fig 7 (Appendix E): plain Adam *also* benefits from the
+//! module-wise learning-rate split (lr·alpha on attention/MLP) that
+//! all the memory-efficient methods use — partially explaining why
+//! they can beat vanilla full-rank Adam.
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+use gwt::metrics::write_curves;
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(180);
+    let loader = bench_loader("nano", steps, 11);
+
+    let runs: Vec<(&str, RunSpec)> = vec![
+        (
+            "Adam uniform lr",
+            RunSpec {
+                preset: "nano".into(),
+                optimizer: OptSpec::Adam,
+                lr: 0.0025,
+                alpha: 1.0,
+                steps,
+                modulewise_lr: false,
+                nl_gamma: 0.0,
+                seed: 0,
+            },
+        ),
+        (
+            "Adam module-wise lr",
+            RunSpec {
+                preset: "nano".into(),
+                optimizer: OptSpec::Adam,
+                lr: 0.01,
+                alpha: 0.25,
+                steps,
+                modulewise_lr: true,
+                nl_gamma: 0.0,
+                seed: 0,
+            },
+        ),
+        (
+            "GWT-2 (reference)",
+            RunSpec::paper_defaults("nano", OptSpec::Gwt { level: 2 }, steps),
+        ),
+    ];
+
+    let mut table = TableView::new(
+        "Fig 7 — module-wise lr for plain Adam",
+        &["config", "valid PPL"],
+    );
+    let mut curves = Vec::new();
+    let mut results = Vec::new();
+    for (label, spec) in runs {
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!("  {label:<22} ppl {:.2}", out.valid_ppl);
+        table.row(vec![label.into(), format!("{:.2}", out.valid_ppl)]);
+        let mut c = out.curve.clone();
+        c.label = label.replace(' ', "_");
+        curves.push(c);
+        results.push((label, out.valid_ppl));
+    }
+    table.print();
+    let uniform = results[0].1;
+    let modwise = results[1].1;
+    println!(
+        "paper shape: module-wise Adam beats uniform Adam ({modwise:.2} vs {uniform:.2}) [{}]",
+        if modwise <= uniform { "OK" } else { "MISS" }
+    );
+    write_curves("results/fig7_curves", &curves)?;
+    write_result("fig7_modulewise_lr", &table, vec![])?;
+    Ok(())
+}

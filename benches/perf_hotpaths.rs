@@ -1,0 +1,195 @@
+//! Hot-path microbenchmarks (the §Perf harness): per-component
+//! latencies across all three layers, used to find and track the
+//! bottlenecks recorded in EXPERIMENTS.md §Perf.
+
+use gwt::bench_harness::{runtime_or_skip, time_fn, write_result, TableView};
+use gwt::linalg::{matmul, svd_jacobi};
+use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
+use gwt::rng::Rng;
+use gwt::runtime::{literal_f32, literal_tokens};
+use gwt::tensor::Tensor;
+use gwt::wavelet::{haar_fwd, haar_inv};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    let mut table = TableView::new(
+        "Perf hot paths (median of repeated runs)",
+        &["component", "shape", "median", "notes"],
+    );
+
+    // L3 substrate: Haar transforms (rust fallback path).
+    let (m, n) = (256usize, 1024usize);
+    let x = rng.normal_vec(m * n, 1.0);
+    let t = time_fn(3, 15, || {
+        std::hint::black_box(haar_fwd(&x, m, n, 3));
+    });
+    table.row(vec![
+        "haar_fwd rust l=3".into(),
+        format!("{m}x{n}"),
+        format!("{:.1} us", t.per_iter_us()),
+        format!("{:.2} GB/s", (m * n * 4) as f64 / t.median_ns),
+    ]);
+    let c = haar_fwd(&x, m, n, 3);
+    let t = time_fn(3, 15, || {
+        std::hint::black_box(haar_inv(&c, m, n, 3));
+    });
+    table.row(vec![
+        "haar_inv rust l=3".into(),
+        format!("{m}x{n}"),
+        format!("{:.1} us", t.per_iter_us()),
+        String::new(),
+    ]);
+
+    // GWT-Adam rust path vs HLO path, per optimizer step.
+    let hp = AdamHp::default();
+    let g = Tensor::randn(&[64, 160], 1.0, &mut rng);
+    let mut rust_opt = GwtAdam::new(64, 160, 2, hp, None).unwrap();
+    let t = time_fn(3, 25, || {
+        std::hint::black_box(rust_opt.direction(&g, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam step (rust)".into(),
+        "64x160 l=2".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        String::new(),
+    ]);
+
+    let rt = runtime_or_skip();
+    let mut hlo_opt = GwtAdam::new(64, 160, 2, hp, Some(rt.clone())).unwrap();
+    assert!(hlo_opt.uses_hlo());
+    let t = time_fn(3, 25, || {
+        std::hint::black_box(hlo_opt.direction(&g, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam step (HLO)".into(),
+        "64x160 l=2".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        "fused pallas artifact + marshalling".into(),
+    ]);
+
+    // Larger shape (from the `small` preset): where the compiled
+    // artifact should amortize its marshalling overhead.
+    let g_big = Tensor::randn(&[672, 256], 1.0, &mut rng);
+    let mut rust_big = GwtAdam::new(672, 256, 2, hp, None).unwrap();
+    let t = time_fn(2, 15, || {
+        std::hint::black_box(rust_big.direction(&g_big, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam step (rust)".into(),
+        "672x256 l=2".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        String::new(),
+    ]);
+    let mut hlo_big = GwtAdam::new(672, 256, 2, hp, Some(rt.clone())).unwrap();
+    if hlo_big.uses_hlo() {
+        let t = time_fn(2, 15, || {
+            std::hint::black_box(hlo_big.direction(&g_big, 0.0));
+        });
+        table.row(vec![
+            "gwt_adam step (HLO)".into(),
+            "672x256 l=2".into(),
+            format!("{:.1} us", t.per_iter_us()),
+            String::new(),
+        ]);
+    }
+
+    // Literal marshalling (upload + download), the PJRT boundary tax.
+    let big = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let t = time_fn(3, 25, || {
+        std::hint::black_box(literal_f32(&big).unwrap());
+    });
+    table.row(vec![
+        "literal_f32 upload".into(),
+        "256x256".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        format!("{:.2} GB/s", (256 * 256 * 4) as f64 / t.median_ns),
+    ]);
+    let toks: Vec<i32> = (0..8 * 64).map(|i| (i % 250 + 2) as i32).collect();
+    let t = time_fn(3, 25, || {
+        std::hint::black_box(literal_tokens(&toks, 8, 64).unwrap());
+    });
+    table.row(vec![
+        "literal_tokens".into(),
+        "8x64".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        String::new(),
+    ]);
+
+    // Full train_step execution (the L2 graph through PJRT).
+    let exec = rt.exec("train_step_nano")?;
+    let preset = gwt::config::presets::find("nano")?;
+    let mut prng = Rng::new(1);
+    let params: Vec<Tensor> = preset
+        .param_shapes()
+        .iter()
+        .map(|s| {
+            gwt::coordinator::trainer::init_param(&s.name, &s.shape, &mut prng)
+        })
+        .collect();
+    let t = time_fn(2, 10, || {
+        let mut inputs: Vec<xla::Literal> =
+            params.iter().map(|p| literal_f32(p).unwrap()).collect();
+        inputs.push(literal_tokens(&toks, 8, 64).unwrap());
+        std::hint::black_box(exec.run(&inputs).unwrap());
+    });
+    table.row(vec![
+        "train_step_nano e2e".into(),
+        "8x64 tokens".into(),
+        format!("{:.2} ms", t.per_iter_ms()),
+        format!("{:.0} tok/s equivalent", 512.0 / (t.median_ns / 1e9)),
+    ]);
+
+    // Baseline substrate costs the projection methods pay.
+    let a = rng.normal_vec(256 * 256, 1.0);
+    let b = rng.normal_vec(256 * 256, 1.0);
+    let t = time_fn(2, 9, || {
+        std::hint::black_box(matmul(&a, &b, 256, 256, 256));
+    });
+    table.row(vec![
+        "matmul rust".into(),
+        "256^3".into(),
+        format!("{:.2} ms", t.per_iter_ms()),
+        format!(
+            "{:.2} GFLOP/s",
+            2.0 * 256f64.powi(3) / t.median_ns
+        ),
+    ]);
+    let gmat = rng.normal_vec(128 * 128, 1.0);
+    let t = time_fn(1, 5, || {
+        std::hint::black_box(svd_jacobi(&gmat, 128, 128, 32));
+    });
+    table.row(vec![
+        "svd_jacobi full".into(),
+        "128x128 r=32".into(),
+        format!("{:.2} ms", t.per_iter_ms()),
+        "30-sweep budget (tests/analysis)".into(),
+    ]);
+    let t = time_fn(1, 5, || {
+        std::hint::black_box(gwt::linalg::svd_jacobi_sweeps(
+            &gmat, 128, 128, 32, 8,
+        ));
+    });
+    table.row(vec![
+        "svd_jacobi fast".into(),
+        "128x128 r=32".into(),
+        format!("{:.2} ms", t.per_iter_ms()),
+        "8-sweep budget (GaLore refresh path)".into(),
+    ]);
+
+    // Allreduce (DP combine).
+    let shards: Vec<Vec<f32>> =
+        (0..4).map(|w| rng.normal_vec(1 << 18, w as f32 + 1.0)).collect();
+    let t = time_fn(2, 9, || {
+        std::hint::black_box(gwt::pool::allreduce_sum(shards.clone()));
+    });
+    table.row(vec![
+        "allreduce 4 workers".into(),
+        "4x256k f32".into(),
+        format!("{:.2} ms", t.per_iter_ms()),
+        "includes clone cost".into(),
+    ]);
+
+    table.print();
+    write_result("perf_hotpaths", &table, vec![])?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Paper Table XII: GWT level vs optimizer memory vs token throughput
+//! — higher levels save memory but cost a little throughput (more
+//! butterfly passes per step).
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+
+/// Paper 60M reference: (level, memory GB, tokens/s K).
+const PAPER: &[(usize, f64, f64)] = &[
+    (1, 0.18, 95.8),
+    (2, 0.16, 91.9),
+    (3, 0.14, 90.1),
+    (4, 0.13, 84.2),
+    (5, 0.13, 83.5),
+];
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(120);
+    let loader = bench_loader("nano", steps, 10);
+
+    let mut table = TableView::new(
+        "Table XII — GWT level vs memory vs throughput (nano)",
+        &[
+            "level", "state KB", "tokens/s", "paper mem (60M)",
+            "paper tok/s (60M, K)",
+        ],
+    );
+    let mut mems = Vec::new();
+    for &(level, pmem, ptok) in PAPER {
+        let spec =
+            RunSpec::paper_defaults("nano", OptSpec::Gwt { level }, steps);
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!(
+            "  GWT-{level}: state {:.1} KB, {:.0} tok/s",
+            out.state_bytes as f64 / 1e3,
+            out.tokens_per_sec
+        );
+        table.row(vec![
+            format!("{level}"),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+            format!("{:.0}", out.tokens_per_sec),
+            format!("{pmem:.2}G"),
+            format!("{ptok:.1}"),
+        ]);
+        mems.push(out.state_bytes);
+    }
+    table.print();
+    // Shape: memory strictly decreasing with level.
+    let monotone = mems.windows(2).all(|w| w[1] < w[0]);
+    println!(
+        "shape: state memory strictly decreases with level [{}]",
+        if monotone { "OK" } else { "MISS" }
+    );
+    write_result("table12_level_throughput", &table, vec![])?;
+    Ok(())
+}

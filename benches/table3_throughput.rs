@@ -1,0 +1,102 @@
+//! Paper Table III: PPL at iteration checkpoints + token throughput +
+//! memory, LLaMA-3B scaled down to `micro`. The paper's shape:
+//! 8bit-Adam is ~2x slower than the projection methods; GWT-2 ≈
+//! APOLLO ≥ GaLore on throughput (SVD cost); GWT-2 lowest PPL and
+//! lowest memory.
+
+use std::rc::Rc;
+
+use gwt::bench_harness::{
+    bench_loader, runtime_or_skip, scaled, write_result, RunSpec, TableView,
+};
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::coordinator::Trainer;
+use gwt::runtime::Runtime;
+
+/// Paper reference rows (3B): tokens/s per GPU and final PPL.
+const PAPER: &[(&str, f64, f64)] = &[
+    ("8bit-Adam", 0.274, 14.31),
+    ("GaLore-1/4", 0.526, 14.73),
+    ("APOLLO-1/4", 0.541, 13.75),
+    ("GWT-2", 0.532, 13.21),
+];
+
+fn run_with_checkpoints(
+    rt: Rc<Runtime>,
+    spec: &RunSpec,
+    n_checkpoints: usize,
+) -> (Vec<f32>, gwt::coordinator::TrainOutcome) {
+    let loader = bench_loader(&spec.preset, spec.steps, 5);
+    let cfg = TrainConfig {
+        preset: spec.preset.clone(),
+        optimizer: spec.optimizer,
+        lr: spec.lr,
+        alpha: spec.alpha,
+        steps: spec.steps,
+        modulewise_lr: spec.modulewise_lr,
+        nl_gamma: spec.nl_gamma,
+        eval_every: spec.steps + 1,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt, cfg, &loader).expect("trainer");
+    let every = (spec.steps / n_checkpoints).max(1);
+    let mut ppls = Vec::new();
+    for step in 0..spec.steps {
+        t.train_step().expect("step");
+        if (step + 1) % every == 0 && ppls.len() < n_checkpoints {
+            ppls.push(t.eval_loss(&loader, 2).expect("eval").exp());
+        }
+    }
+    let out = t.run_summary(&loader);
+    (ppls, out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(180);
+    let ckpts = 6; // mirrors the paper's 20K..120K columns
+
+    let mut table = TableView::new(
+        "Table III — PPL vs iterations + throughput (micro; paper: LLaMA-3B)",
+        &[
+            "method", "1/6", "2/6", "3/6", "4/6", "5/6", "6/6", "tok/s",
+            "state KB", "paper tok/s (K)", "paper final PPL",
+        ],
+    );
+    let mut tputs = Vec::new();
+    for (name, paper_tput, paper_ppl) in PAPER {
+        let spec =
+            RunSpec::paper_defaults("micro", OptSpec::parse(name).unwrap(), steps);
+        let (ppls, out) = run_with_checkpoints(rt.clone(), &spec, ckpts);
+        println!("  {name:<12} tok/s {:.0}  final ppl {:.2}", out.tokens_per_sec, out.valid_ppl);
+        let mut row = vec![name.to_string()];
+        for i in 0..ckpts {
+            row.push(
+                ppls.get(i).map(|p| format!("{p:.2}")).unwrap_or("-".into()),
+            );
+        }
+        row.push(format!("{:.0}", out.tokens_per_sec));
+        row.push(format!("{:.1}", out.state_bytes as f64 / 1e3));
+        row.push(format!("{paper_tput:.3}"));
+        row.push(format!("{paper_ppl:.2}"));
+        table.row(row);
+        tputs.push((name.to_string(), out.tokens_per_sec, out.valid_ppl));
+    }
+    table.print();
+
+    let get = |n: &str| tputs.iter().find(|(name, _, _)| name == n).unwrap();
+    // Substrate note: the paper's 1.9x gap vs 8bit-Adam comes from GPU
+    // quantization kernel overhead; on this CPU substrate the
+    // dequant/requant tax is milder, while GaLore's SVD tax (the
+    // paper's other throughput claim) reproduces directly.
+    let ok1 = get("GaLore-1/4").1 <= get("GWT-2").1;
+    let ok2 = get("GWT-2").2 <= get("APOLLO-1/4").2
+        && get("GWT-2").2 <= get("GaLore-1/4").2;
+    println!(
+        "shape: GaLore slowest of the projection methods (SVD) [{}]; GWT-2 lowest PPL [{}]",
+        if ok1 { "OK" } else { "MISS" },
+        if ok2 { "OK" } else { "MISS" }
+    );
+    write_result("table3_throughput", &table, vec![])?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Paper Table IV: robustness to longer sequences at constant
+//! tokens/batch. Paper shape: GaLore degrades with sequence length
+//! while GWT stays stable and best.
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+
+/// Paper 60M reference PPLs for seq 512 / 1024.
+const PAPER: &[(&str, f64, f64)] = &[
+    ("Adam", 34.55, 37.52),
+    ("GaLore-1/4", 40.25, 42.02),
+    ("APOLLO-1/4", 32.29, 34.64),
+    ("GWT-2", 30.12, 32.55),
+];
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(160);
+    // seq 64 -> 128 -> 256 with batch 8 -> 4 -> 2 (constant tokens).
+    let presets = ["nano", "nano-s128", "nano-s256"];
+
+    let mut table = TableView::new(
+        "Table IV — sequence-length robustness (constant tokens/batch)",
+        &[
+            "method", "seq64 PPL", "seq128 PPL", "seq256 PPL",
+            "paper s512", "paper s1024",
+        ],
+    );
+    let mut measured = Vec::new();
+    for (name, p512, p1024) in PAPER {
+        let opt = OptSpec::parse(name).unwrap();
+        let mut cells = vec![name.to_string()];
+        let mut ppls = Vec::new();
+        for preset in presets {
+            let loader = bench_loader(preset, steps, 6);
+            let spec = RunSpec::paper_defaults(preset, opt, steps);
+            let out = pretrain(rt.clone(), &spec, &loader);
+            println!("  {preset:<10} {name:<12} ppl {:.2}", out.valid_ppl);
+            cells.push(format!("{:.2}", out.valid_ppl));
+            ppls.push(out.valid_ppl);
+        }
+        cells.push(format!("{p512:.2}"));
+        cells.push(format!("{p1024:.2}"));
+        table.row(cells);
+        measured.push((name.to_string(), ppls));
+    }
+    table.print();
+
+    let get = |n: &str| &measured.iter().find(|(m, _)| m == n).unwrap().1;
+    let gwt = get("GWT-2");
+    let galore = get("GaLore-1/4");
+    // Shape: GWT best at every length; GaLore's degradation with
+    // length is at least as bad as GWT's.
+    let gwt_best = (0..3).all(|i| gwt[i] <= galore[i]);
+    let deg_gwt = gwt[2] - gwt[0];
+    let deg_galore = galore[2] - galore[0];
+    println!(
+        "shape: GWT <= GaLore at all lengths [{}]; GaLore degradation {:.2} vs GWT {:.2} [{}]",
+        if gwt_best { "OK" } else { "MISS" },
+        deg_galore,
+        deg_gwt,
+        if deg_galore >= deg_gwt - 0.5 { "OK" } else { "MISS" }
+    );
+    write_result("table4_seqlen", &table, vec![])?;
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Paper Table VI: GLUE fine-tuning (synthetic 8-task suite here).
+//! Shape: GWT's average matches full Adam and beats the other
+//! memory-efficient baselines on average.
+
+use std::rc::Rc;
+
+use gwt::bench_harness::{runtime_or_skip, write_result, TableView};
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::eval::tasks::{self, ClsTask};
+use gwt::eval::FineTuner;
+use gwt::runtime::Runtime;
+
+/// Paper RoBERTa-base averages.
+const PAPER_AVG: &[(&str, f64)] = &[
+    ("Adam", 86.58),
+    ("GaLore-1/64", 85.90),
+    ("APOLLO-1/64", 85.87),
+    ("LoRA-1/64", 85.93),
+    ("GWT-5", 86.56),
+];
+
+fn main() -> anyhow::Result<()> {
+    let rt: Rc<Runtime> = runtime_or_skip();
+    let preset = gwt::config::presets::find("ft-micro")?;
+    let suite: Vec<ClsTask> = tasks::glue_suite(preset.seq_len, 23)
+        .into_iter()
+        .map(ClsTask::generate)
+        .collect();
+    let task_names: Vec<String> =
+        suite.iter().map(|t| t.spec.name.clone()).collect();
+
+    let mut headers: Vec<&str> = vec!["method"];
+    let name_refs: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+    headers.extend(name_refs);
+    headers.push("avg");
+    headers.push("paper avg");
+    let mut table = TableView::new(
+        "Table VI — fine-tuning (synthetic GLUE-like, 8 tasks)",
+        &headers,
+    );
+
+    // Paper protocol: best-of over a small lr sweep (per task).
+    let lr_sweep: &[f32] = &[3e-4, 1e-3];
+    let mut avgs = Vec::new();
+    for (name, paper) in PAPER_AVG {
+        let opt = OptSpec::parse(name).unwrap();
+        let mut row = vec![name.to_string()];
+        let mut sum = 0.0;
+        for task in &suite {
+            let mut best = 0.0f64;
+            for lr in lr_sweep {
+                let cfg = TrainConfig {
+                    preset: "ft-micro".into(),
+                    optimizer: opt,
+                    lr: *lr,
+                    alpha: 1.0,
+                    ..Default::default()
+                };
+                let mut ft =
+                    FineTuner::new(rt.clone(), cfg, task.spec.classes, None)?;
+                let out = ft.run(task, 2)?;
+                best = best.max(out.accuracy);
+            }
+            row.push(format!("{best:.3}"));
+            sum += best;
+        }
+        let avg = sum / suite.len() as f64;
+        println!("  {name:<14} avg acc {avg:.3}");
+        row.push(format!("{avg:.3}"));
+        row.push(format!("{paper:.2}"));
+        table.row(row);
+        avgs.push((name.to_string(), avg));
+    }
+    table.print();
+
+    let adam = avgs.iter().find(|(n, _)| n == "Adam").unwrap().1;
+    let gwt = avgs.iter().find(|(n, _)| n == "GWT-5").unwrap().1;
+    println!(
+        "shape: GWT ~ Adam average ({gwt:.3} vs {adam:.3}) [{}]",
+        if (gwt - adam).abs() < 0.08 || gwt > adam { "OK" } else { "MISS" }
+    );
+    write_result("table6_finetune_glue", &table, vec![])?;
+    Ok(())
+}

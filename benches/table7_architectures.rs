@@ -1,0 +1,62 @@
+//! Paper Table VII: GWT generalizes beyond LLaMA — GPT-2-style,
+//! DeBERTa-style (bidirectional encoder, here `bert-nano`), and
+//! Qwen-style (tied embeddings) presets, final validation loss.
+
+use gwt::bench_harness::{
+    bench_loader, pretrain, runtime_or_skip, scaled, write_result, RunSpec,
+    TableView,
+};
+use gwt::config::OptSpec;
+
+/// Paper final validation losses (GPT / DeBERTa / Qwen).
+const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("Adam", 3.31, 2.16, 2.85),
+    ("GaLore-1/4", 3.43, 2.22, 2.97),
+    ("APOLLO-1/4", 3.26, 2.07, 2.82),
+    ("GWT-2", 3.22, 2.02, 2.70),
+];
+
+fn main() -> anyhow::Result<()> {
+    let rt = runtime_or_skip();
+    let steps = scaled(160);
+    let presets = ["gpt-nano", "bert-nano", "qwen-nano"];
+
+    let mut table = TableView::new(
+        "Table VII — architecture generality (final valid loss)",
+        &[
+            "method", "gpt-nano", "bert-nano", "qwen-nano",
+            "paper GPT", "paper DeBERTa", "paper Qwen",
+        ],
+    );
+    let mut measured = Vec::new();
+    for (name, pg, pd, pq) in PAPER {
+        let opt = OptSpec::parse(name).unwrap();
+        let mut row = vec![name.to_string()];
+        let mut losses = Vec::new();
+        for preset in presets {
+            let loader = bench_loader(preset, steps, 9);
+            let spec = RunSpec::paper_defaults(preset, opt, steps);
+            let out = pretrain(rt.clone(), &spec, &loader);
+            println!("  {preset:<10} {name:<12} loss {:.3}", out.valid_loss);
+            row.push(format!("{:.3}", out.valid_loss));
+            losses.push(out.valid_loss);
+        }
+        row.push(format!("{pg:.2}"));
+        row.push(format!("{pd:.2}"));
+        row.push(format!("{pq:.2}"));
+        table.row(row);
+        measured.push((name.to_string(), losses));
+    }
+    table.print();
+
+    let get = |n: &str| &measured.iter().find(|(m, _)| m == n).unwrap().1;
+    let wins = (0..3)
+        .filter(|&i| get("GWT-2")[i] <= get("Adam")[i] && get("GWT-2")[i] <= get("GaLore-1/4")[i])
+        .count();
+    println!(
+        "shape: GWT best-or-tied vs Adam and GaLore on {wins}/3 architectures [{}]",
+        if wins >= 2 { "OK" } else { "MISS" }
+    );
+    write_result("table7_architectures", &table, vec![])?;
+    Ok(())
+}

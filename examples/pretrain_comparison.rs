@@ -1,0 +1,70 @@
+//! Pretraining comparison across memory-efficient optimizers — a
+//! miniature of the paper's Table II experiment on one preset.
+//!
+//! Usage:
+//!   cargo run --release --example pretrain_comparison [-- preset steps]
+//! Defaults: nano, 150 steps.
+
+use std::rc::Rc;
+
+use gwt::bench_harness::TableView;
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::coordinator::Trainer;
+use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
+use gwt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().cloned().unwrap_or_else(|| "nano".into());
+    let steps: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let runtime = Rc::new(Runtime::load("artifacts")?);
+    let p = gwt::config::presets::find(&preset)?;
+    let mut corpus = SyntheticCorpus::new(CorpusSpec::default());
+    let loader = DataLoader::new(
+        corpus.generate_tokens(600_000),
+        p.batch,
+        p.seq_len,
+        0,
+    );
+
+    // (method, lr, alpha) following the paper's Appendix C: full Adam
+    // uses a smaller single lr; projection methods use lr=0.01 + alpha.
+    let methods: Vec<(OptSpec, f32, f32)> = vec![
+        (OptSpec::Adam, 0.005, 1.0),
+        (OptSpec::Muon, 0.005, 1.0),
+        (OptSpec::Galore { rank_denom: 4 }, 0.01, 0.25),
+        (OptSpec::Apollo { rank_denom: 4 }, 0.01, 1.0),
+        (OptSpec::Gwt { level: 2 }, 0.01, 0.25),
+        (OptSpec::Gwt { level: 3 }, 0.01, 0.25),
+    ];
+
+    let mut table = TableView::new(
+        &format!("Pretraining comparison ({preset}, {steps} steps)"),
+        &["method", "valid PPL", "state KB", "tokens/s"],
+    );
+    for (opt, lr, alpha) in methods {
+        let cfg = TrainConfig {
+            preset: preset.clone(),
+            optimizer: opt,
+            lr,
+            alpha,
+            steps,
+            eval_every: steps + 1,
+            modulewise_lr: alpha != 1.0,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(runtime.clone(), cfg, &loader)?;
+        let out = t.run(&loader, false)?;
+        println!("  {:<14} done: valid ppl {:.2}", out.label, out.valid_ppl);
+        table.row(vec![
+            t.cfg.optimizer.label(),
+            format!("{:.2}", out.valid_ppl),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+            format!("{:.0}", out.tokens_per_sec),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,237 @@
+"""AOT pipeline: lower L2/L1 jax functions to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``); the rust runtime then
+loads every computation from ``artifacts/`` and Python never appears on
+the training path.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifact catalog
+----------------
+* ``train_step_<preset>``      (params..., tokens)         -> (loss, grads...)
+* ``eval_loss_<preset>``       (params..., tokens)         -> (loss,)
+* ``cls_train_step_<preset>_k<K>`` (params..., head, tokens, labels)
+                                                           -> (loss, grads...)
+* ``cls_logits_<preset>_k<K>`` (params..., head, tokens)   -> (logits,)
+* ``gwt_adam_l<l>_<m>x<n>``    (g, m, v)  -> (update, m', v', norm)
+* ``adam_<m>x<n>``             (g, m, v)  -> (update, m', v', norm)
+* ``haar_fwd_l<l>_<m>x<n>`` / ``haar_inv_l<l>_<m>x<n>``  (x) -> (y,)
+  (small shapes, used by rust cross-check tests)
+
+Optimizer-step artifacts exist for every distinct GWT-eligible weight
+shape of every preset, levels 1..3 (the paper's main configurations).
+Higher levels use the rust fallback path, which is tested bit-close
+against the same reference.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.gwt_adam import gwt_adam_pallas
+
+AOT_LEVELS = (1, 2, 3)
+CLS_CLASSES = (2, 3, 4, 5)
+FT_PRESET = "ft-micro"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def io_desc(structs) -> List[Dict]:
+    return [
+        {"dtype": str(s.dtype), "shape": list(s.shape)} for s in structs
+    ]
+
+
+class Catalog:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts: Dict[str, Dict] = {}
+
+    def emit(self, key: str, fn, in_specs, meta: Dict):
+        # keep_unused: the rust runtime marshals inputs positionally
+        # from the manifest; jit must not prune unused parameters
+        # (e.g. lm_head in the classification graphs).
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{key}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *in_specs)
+        self.artifacts[key] = {
+            "file": fname,
+            "inputs": io_desc(in_specs),
+            "outputs": io_desc(out_shapes),
+            **meta,
+        }
+        print(f"  [aot] {key}: {len(text)} chars")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-step entry points
+# ---------------------------------------------------------------------------
+
+
+def make_gwt_adam_entry(level: int):
+    def entry(g, m, v):
+        upd, m_new, v_new = gwt_adam_pallas(g, m, v, level=level)
+        return upd, m_new, v_new, jnp.linalg.norm(upd)
+
+    return entry
+
+
+def adam_entry(g, m, v):
+    upd, m_new, v_new = ref.adam_normalized_update(g, m, v)
+    return upd, m_new, v_new, jnp.linalg.norm(upd)
+
+
+def gwt_shapes(cfg: M.ModelConfig):
+    """Distinct (m, n) of GWT-eligible parameters for one preset."""
+    return sorted({s.shape for s in M.param_specs(cfg) if s.gwt})
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def preset_manifest(cfg: M.ModelConfig) -> Dict:
+    return {
+        "arch": cfg.arch,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "gwt": s.gwt}
+            for s in M.param_specs(cfg)
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default=",".join(M.PRESETS),
+        help="comma-separated preset subset (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cat = Catalog(args.out)
+
+    presets = [M.PRESETS[p] for p in args.presets.split(",") if p]
+    opt_shapes = set()
+    for cfg in presets:
+        specs = M.param_specs(cfg)
+        ps = [spec(s.shape) for s in specs]
+        tok = spec((cfg.batch, cfg.seq_len), jnp.int32)
+        cat.emit(
+            f"train_step_{cfg.name}",
+            M.make_train_step(cfg),
+            ps + [tok],
+            {"kind": "train_step", "preset": cfg.name},
+        )
+        cat.emit(
+            f"eval_loss_{cfg.name}",
+            M.make_eval_loss(cfg),
+            ps + [tok],
+            {"kind": "eval_loss", "preset": cfg.name},
+        )
+        opt_shapes |= {s for s in gwt_shapes(cfg)}
+
+    # Fine-tuning artifacts (classification heads).
+    ft = M.PRESETS[FT_PRESET]
+    if ft in presets:
+        base = [spec(s.shape) for s in M.param_specs(ft)]
+        tok = spec((ft.batch, ft.seq_len), jnp.int32)
+        lab = spec((ft.batch,), jnp.int32)
+        for k in CLS_CLASSES:
+            head = spec((ft.d_model, k))
+            cat.emit(
+                f"cls_train_step_{ft.name}_k{k}",
+                M.make_cls_train_step(ft, k),
+                base + [head, tok, lab],
+                {"kind": "cls_train_step", "preset": ft.name, "classes": k},
+            )
+            cat.emit(
+                f"cls_logits_{ft.name}_k{k}",
+                M.make_cls_logits(ft, k),
+                base + [head, tok],
+                {"kind": "cls_logits", "preset": ft.name, "classes": k},
+            )
+
+    # Optimizer steps per distinct shape.
+    for (m, n) in sorted(opt_shapes):
+        cat.emit(
+            f"adam_{m}x{n}",
+            adam_entry,
+            [spec((m, n))] * 3,
+            {"kind": "adam", "rows": m, "cols": n},
+        )
+        for level in AOT_LEVELS:
+            if n % (1 << level) != 0:
+                continue
+            q = n >> level
+            cat.emit(
+                f"gwt_adam_l{level}_{m}x{n}",
+                make_gwt_adam_entry(level),
+                [spec((m, n)), spec((m, q)), spec((m, q))],
+                {"kind": "gwt_adam", "level": level, "rows": m, "cols": n},
+            )
+
+    # Small standalone Haar kernels for rust cross-check tests.
+    for (m, n, level) in [(16, 32, 2), (8, 64, 3)]:
+        cat.emit(
+            f"haar_fwd_l{level}_{m}x{n}",
+            lambda x, level=level: (ref.haar_fwd(x, level),),
+            [spec((m, n))],
+            {"kind": "haar_fwd", "level": level, "rows": m, "cols": n},
+        )
+        cat.emit(
+            f"haar_inv_l{level}_{m}x{n}",
+            lambda x, level=level: (ref.haar_inv(x, level),),
+            [spec((m, n))],
+            {"kind": "haar_inv", "level": level, "rows": m, "cols": n},
+        )
+
+    manifest = {
+        "version": 1,
+        "presets": {cfg.name: preset_manifest(cfg) for cfg in presets},
+        "aot_levels": list(AOT_LEVELS),
+        "artifacts": cat.artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {len(cat.artifacts)} artifacts -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

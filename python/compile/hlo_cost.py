@@ -1,0 +1,118 @@
+"""HLO cost analysis (§Perf L2): parse emitted HLO text and report
+op counts, estimated FLOPs, and parameter-bytes moved per artifact.
+
+Usage:
+    python -m compile.hlo_cost [--out ../artifacts]
+
+Writes ``artifacts/cost_report.json`` and prints a summary. Used to
+verify the L2 perf invariants: one fused train-step graph per preset
+(no per-layer round trips => a single ENTRY computation), fusion-
+friendly op mix, and no accidental recomputation blowups (fwd+bwd op
+count stays within a small factor of 2x forward).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+from typing import Dict
+
+SHAPE_RE = re.compile(r"f32\[([0-9,]*)\]")
+ASSIGN_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*\S*f32\[([0-9,]*)\]"
+)
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*\S+\s+([a-z\-]+)(?:\.\d+)?\("
+)
+OPERAND_RE = re.compile(r"(%?[A-Za-z_][\w.\-]*)")
+DIMS_RE = re.compile(r"lhs_contracting_dims=\{(\d+)")
+
+
+def _numel(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def parse_hlo(text: str) -> Dict:
+    ops = Counter()
+    dot_flops = 0
+    elementwise_elems = 0
+    shapes: Dict[str, list] = {}
+    for line in text.splitlines():
+        am = ASSIGN_RE.match(line)
+        if am:
+            shapes[am.group(1)] = [
+                int(x) for x in am.group(2).split(",") if x
+            ]
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        name, op = m.groups()
+        ops[op] += 1
+        out = shapes.get(name)
+        if op == "dot":
+            # Operands follow the opening paren; contracted dim from
+            # the lhs operand's shape + lhs_contracting_dims.
+            after = line.split("(", 1)[1]
+            dtypes = {"f32", "f16", "bf16", "s32", "u32", "pred", "f64"}
+            operands = [
+                t for t in OPERAND_RE.findall(after) if t not in dtypes
+            ]
+            lhs = shapes.get(operands[0]) if operands else None
+            cd = DIMS_RE.search(line)
+            contracted = 1
+            if lhs:
+                idx = int(cd.group(1)) if cd else len(lhs) - 1
+                if idx < len(lhs):
+                    contracted = lhs[idx]
+            if out:
+                dot_flops += 2 * _numel(out) * contracted
+        elif op in ("add", "multiply", "subtract", "divide", "maximum",
+                    "exponential", "rsqrt", "sqrt", "tanh", "negate"):
+            if out:
+                elementwise_elems += _numel(out)
+    return {
+        "total_ops": sum(ops.values()),
+        "op_histogram": dict(ops.most_common(12)),
+        "dot_count": ops.get("dot", 0),
+        "dot_gflops": dot_flops / 1e9,
+        "elementwise_melems": elementwise_elems / 1e6,
+        "fusion_count": ops.get("fusion", 0),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    manifest = json.load(open(os.path.join(args.out, "manifest.json")))
+    report = {}
+    for key, art in sorted(manifest["artifacts"].items()):
+        text = open(os.path.join(args.out, art["file"])).read()
+        report[key] = parse_hlo(text)
+    with open(os.path.join(args.out, "cost_report.json"), "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"{'artifact':<34} {'ops':>5} {'dots':>5} {'GF':>8} {'ew Melem':>9}")
+    for key, r in report.items():
+        if r["dot_count"] or "train" in key:
+            print(
+                f"{key:<34} {r['total_ops']:>5} {r['dot_count']:>5}"
+                f" {r['dot_gflops']:>8.4f} {r['elementwise_melems']:>9.3f}"
+            )
+    # L2 invariant: bwd ~<= 2.5x fwd dot work (no recompute blowup).
+    for name in manifest["presets"]:
+        tr = report.get(f"train_step_{name}")
+        ev = report.get(f"eval_loss_{name}")
+        if tr and ev and ev["dot_gflops"] > 0:
+            ratio = tr["dot_gflops"] / ev["dot_gflops"]
+            flag = "OK" if ratio <= 3.5 else "RECOMPUTE?"
+            print(f"train/eval dot-FLOPs ratio {name}: {ratio:.2f} [{flag}]")
+
+
+if __name__ == "__main__":
+    main()

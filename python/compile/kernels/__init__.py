@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracle."""
+
+from . import gwt_adam, haar, ref  # noqa: F401

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels: multi-level Haar DWT forward / inverse.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation): the kernel is
+row-tiled — each grid step loads a ``(TILE_M, n)`` block from HBM into
+VMEM, performs *all* ``l`` transform levels in VMEM, and writes the
+``[A_l | D_l | ... | D_1]`` coefficient block back once.  A naive port
+of the paper's ptwt implementation would make ``l`` HBM round trips;
+this makes exactly one.  The pairwise butterflies are strided
+adds/subs, which map onto the VPU (no MXU involvement — there is no
+matmul in this hot path; the paper's ``H`` matrix formulation is only
+used for analysis and testing).
+
+Kernels MUST be lowered with ``interpret=True`` on this image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INV_SQRT2, haar_levels
+
+# Row-tile size. 8 sublanes x f32 is the natural TPU register tile; we
+# use a larger multiple to amortize grid overhead while keeping VMEM
+# footprint (tile_m * n * 4B * ~3 operands) well under ~16 MiB.
+_MAX_TILE_M = 256
+
+
+def pick_tile_m(m: int, n: int, operands: int = 3) -> int:
+    """Largest divisor of m that is <= _MAX_TILE_M and fits VMEM."""
+    vmem_budget = 12 * 1024 * 1024  # leave headroom below ~16 MiB/core
+    cap = max(1, min(_MAX_TILE_M, vmem_budget // max(1, 4 * n * operands)))
+    best = 1
+    for t in range(1, min(m, cap) + 1):
+        if m % t == 0:
+            best = t
+    return best
+
+
+def haar_fwd_block(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """All-levels forward butterfly on an in-VMEM block (trace-time loop)."""
+    details = []
+    a = x
+    for _ in range(level):
+        even = a[..., 0::2]
+        odd = a[..., 1::2]
+        details.append((even - odd) * INV_SQRT2)
+        a = (even + odd) * INV_SQRT2
+    return jnp.concatenate([a] + details[::-1], axis=-1)
+
+
+def haar_inv_block(c: jnp.ndarray, level: int) -> jnp.ndarray:
+    """All-levels inverse butterfly on an in-VMEM block."""
+    n = c.shape[-1]
+    q = n >> level
+    a = c[..., :q]
+    off = q
+    for k in range(level, 0, -1):
+        w = n >> k
+        d = c[..., off : off + w]
+        off += w
+        even = (a + d) * INV_SQRT2
+        odd = (a - d) * INV_SQRT2
+        a = jnp.stack([even, odd], axis=-1).reshape(*c.shape[:-1], 2 * w)
+    return a
+
+
+def _fwd_kernel(x_ref, o_ref, *, level: int):
+    o_ref[...] = haar_fwd_block(x_ref[...], level)
+
+
+def _inv_kernel(c_ref, o_ref, *, level: int):
+    o_ref[...] = haar_inv_block(c_ref[...], level)
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def haar_fwd_pallas(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Row-tiled multi-level Haar DWT. Layout [A_l|D_l|...|D_1]."""
+    m, n = x.shape
+    haar_levels(n, level)
+    if level == 0:
+        return x
+    tm = pick_tile_m(m, n)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, level=level),
+        grid=(m // tm,),
+        in_specs=[pl.BlockSpec((tm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("level",))
+def haar_inv_pallas(c: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Inverse of :func:`haar_fwd_pallas`."""
+    m, n = c.shape
+    haar_levels(n, level)
+    if level == 0:
+        return c
+    tm = pick_tile_m(m, n)
+    return pl.pallas_call(
+        functools.partial(_inv_kernel, level=level),
+        grid=(m // tm,),
+        in_specs=[pl.BlockSpec((tm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c)
+
+
+def vmem_bytes_estimate(tile_m: int, n: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one fwd/inv grid step.
+
+    input block + output block + one level of scratch ≈ 3 operands.
+    Recorded in DESIGN.md §Perf for the TPU roofline discussion.
+    """
+    return 3 * tile_m * n * dtype_bytes

@@ -1,0 +1,184 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Everything here is the *specification*: the Pallas kernels
+(``haar.py``, ``gwt_adam.py``), the rust ``wavelet``/``optim`` modules,
+and the AOT HLO artifacts are all tested against these functions.
+
+Conventions
+-----------
+Multi-level Haar layout along the last axis (width ``n``, level ``l``,
+``n % 2**l == 0``)::
+
+    [ A_l | D_l | D_{l-1} | ... | D_1 ]
+      n/2^l  n/2^l  n/2^{l-1}     n/2
+
+The transform is orthonormal (1/sqrt(2) filters): it preserves the
+Frobenius norm and ``haar_inv(haar_fwd(x)) == x`` exactly up to f32
+rounding.
+
+GWT-Adam (paper Algorithm 1): Adam first/second moments are kept only
+for the approximation band ``A`` (shape ``(m, n/2^l)``).  Detail bands
+``D_k`` are normalized by the *same* ``sqrt(V)+eps`` denominator,
+nearest-upsampled to each band's width (each level-l approximation
+column covers ``2^{l-k}`` level-k detail columns).  The normalized
+coefficients are inverse-transformed to produce the update direction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INV_SQRT2 = 0.7071067811865476
+
+
+def haar_levels(n: int, level: int) -> None:
+    """Validate that an ``l``-level transform is defined for width ``n``."""
+    if level < 0:
+        raise ValueError(f"level must be >= 0, got {level}")
+    if level > 0 and n % (1 << level) != 0:
+        raise ValueError(f"width {n} not divisible by 2^level={1 << level}")
+
+
+def haar_fwd(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Level-``l`` Haar DWT along the last axis. Layout [A_l|D_l|...|D_1]."""
+    haar_levels(x.shape[-1], level)
+    if level == 0:
+        return x
+    details = []  # D_1 appended first
+    a = x
+    for _ in range(level):
+        even = a[..., 0::2]
+        odd = a[..., 1::2]
+        details.append((even - odd) * INV_SQRT2)
+        a = (even + odd) * INV_SQRT2
+    return jnp.concatenate([a] + details[::-1], axis=-1)
+
+
+def haar_inv(c: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Inverse of :func:`haar_fwd` (same layout convention)."""
+    n = c.shape[-1]
+    haar_levels(n, level)
+    if level == 0:
+        return c
+    q = n >> level
+    a = c[..., :q]
+    off = q
+    for k in range(level, 0, -1):
+        w = n >> k  # width of D_k
+        d = c[..., off : off + w]
+        off += w
+        even = (a + d) * INV_SQRT2
+        odd = (a - d) * INV_SQRT2
+        a = jnp.stack([even, odd], axis=-1).reshape(*c.shape[:-1], 2 * w)
+    return a
+
+
+def haar_lowpass(x: jnp.ndarray, level: int) -> jnp.ndarray:
+    """Block-mean operator P_l of the paper's Theorem 1.
+
+    Replaces each length-``2^l`` block of columns with its mean. Equals
+    ``haar_inv`` applied to the forward transform with all detail bands
+    zeroed.
+    """
+    haar_levels(x.shape[-1], level)
+    if level == 0:
+        return x
+    b = 1 << level
+    n = x.shape[-1]
+    blocks = x.reshape(*x.shape[:-1], n // b, b)
+    means = blocks.mean(axis=-1, keepdims=True)
+    return jnp.broadcast_to(means, blocks.shape).reshape(*x.shape)
+
+
+def gwt_normalized_update(
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    level: int,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+):
+    """One GWT-Adam state update (paper Algorithm 1, pre-lr part).
+
+    Args:
+        g: gradient, shape (m, n) with n % 2^level == 0.
+        m, v: first/second moments over the approximation band,
+            shape (m, n/2^level).
+
+    Returns:
+        (update, m_new, v_new); ``update`` has the shape of ``g`` and
+        excludes the bias-correction / lr / alpha factors (applied by
+        the caller).
+    """
+    n = g.shape[-1]
+    haar_levels(n, level)
+    coeffs = haar_fwd(g, level)
+    q = n >> level
+    a = coeffs[..., :q]
+    m_new = beta1 * m + (1.0 - beta1) * a
+    v_new = beta2 * v + (1.0 - beta2) * a * a
+    denom = jnp.sqrt(v_new) + eps
+    parts = [m_new / denom]
+    off = q
+    for k in range(level, 0, -1):
+        w = n >> k
+        d = coeffs[..., off : off + w]
+        off += w
+        rep = 1 << (level - k)
+        dd = jnp.repeat(denom, rep, axis=-1) if rep > 1 else denom
+        parts.append(d / dd)
+    update = haar_inv(jnp.concatenate(parts, axis=-1), level)
+    return update, m_new, v_new
+
+
+def adam_normalized_update(
+    g: jnp.ndarray,
+    m: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-6,
+):
+    """Plain full-rank Adam moment update (pre-lr), for the baseline."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    update = m_new / (jnp.sqrt(v_new) + eps)
+    return update, m_new, v_new
+
+
+def bias_correction(step, beta1: float, beta2: float):
+    """Paper Algorithm 1: eta_t = eta * sqrt(1-b2^t) / (1-b1^t). step >= 1."""
+    return jnp.sqrt(1.0 - beta2**step) / (1.0 - beta1**step)
+
+
+def gwt_adam_step(
+    w, g, m, v, step, lr, *, level, alpha=0.25, beta1=0.9, beta2=0.999, eps=1e-6
+):
+    """Full GWT-Adam weight update.
+
+    Returns (w_new, m_new, v_new, update_norm). ``update_norm`` is the
+    Frobenius norm of the alpha-scaled update direction (before lr),
+    consumed by the coordinator's Norm-growth Limiter.
+    """
+    upd, m_new, v_new = gwt_normalized_update(
+        g, m, v, level=level, beta1=beta1, beta2=beta2, eps=eps
+    )
+    bc = bias_correction(step, beta1, beta2)
+    scaled = alpha * upd
+    norm = jnp.linalg.norm(scaled)
+    w_new = w - lr * bc * scaled
+    return w_new, m_new, v_new, norm
+
+
+def adam_step(w, g, m, v, step, lr, *, beta1=0.9, beta2=0.999, eps=1e-6):
+    """Full-rank Adam weight update: (w_new, m_new, v_new, update_norm)."""
+    upd, m_new, v_new = adam_normalized_update(
+        g, m, v, beta1=beta1, beta2=beta2, eps=eps
+    )
+    bc = bias_correction(step, beta1, beta2)
+    norm = jnp.linalg.norm(upd)
+    w_new = w - lr * bc * upd
+    return w_new, m_new, v_new, norm

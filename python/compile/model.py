@@ -1,0 +1,369 @@
+"""L2: JAX transformer models (fwd + loss + grads) for AOT lowering.
+
+Three architecture families, mirroring the paper's evaluation targets:
+
+* ``llama``  — RMSNorm, SwiGLU MLP, rotary position embeddings,
+  untied LM head (paper's main pretraining subject).
+* ``gpt``    — LayerNorm, GELU MLP, learned position embeddings
+  (Table VII "GPT-2" stand-in).
+* ``qwen``   — llama block with tied embeddings (Table VII "Qwen"
+  stand-in; tying is the main structural difference at this scale).
+* ``bert``   — bidirectional encoder trained with deterministic
+  masked-token prediction (Table VII "DeBERTa" stand-in; deterministic
+  masking keeps the AOT artifact free of RNG inputs).
+
+Parameters travel as a **flat tuple in sorted-name order** so the rust
+coordinator can marshal them positionally; ``param_specs`` is the
+single source of truth for names/shapes/GWT-eligibility and is copied
+into the artifact manifest.
+
+Everything lowers to a single ``train_step`` HLO (fwd + bwd + loss), so
+the runtime makes exactly one PJRT call per microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + workload hyperparameters for one preset."""
+
+    name: str
+    arch: str  # llama | gpt | qwen | bert
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    def __post_init__(self):
+        if self.d_model % self.n_heads != 0:
+            raise ValueError("d_model must divide by n_heads")
+        if self.arch not in ("llama", "gpt", "qwen", "bert"):
+            raise ValueError(f"unknown arch {self.arch}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def tied(self) -> bool:
+        return self.arch == "qwen"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    gwt: bool  # eligible for GWT/GaLore/etc (2D attention+MLP matrices)
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Flat, sorted parameter inventory. Order == marshalling order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs: List[ParamSpec] = [ParamSpec("tok_emb", (v, d), False)]
+    if not cfg.tied:
+        specs.append(ParamSpec("lm_head", (d, v), False))
+    if cfg.arch == "gpt":
+        specs.append(ParamSpec("pos_emb", (cfg.seq_len, d), False))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        specs += [
+            ParamSpec(p + "attn.wq", (d, d), True),
+            ParamSpec(p + "attn.wk", (d, d), True),
+            ParamSpec(p + "attn.wv", (d, d), True),
+            ParamSpec(p + "attn.wo", (d, d), True),
+        ]
+        if cfg.arch in ("llama", "qwen", "bert"):
+            specs += [
+                ParamSpec(p + "mlp.gate", (d, f), True),
+                ParamSpec(p + "mlp.up", (d, f), True),
+                ParamSpec(p + "mlp.down", (f, d), True),
+                ParamSpec(p + "norm1", (d,), False),
+                ParamSpec(p + "norm2", (d,), False),
+            ]
+        else:  # gpt: LayerNorm has scale+bias, MLP is 2-matrix GELU
+            specs += [
+                ParamSpec(p + "mlp.up", (d, f), True),
+                ParamSpec(p + "mlp.down", (f, d), True),
+                ParamSpec(p + "norm1", (d,), False),
+                ParamSpec(p + "norm1b", (d,), False),
+                ParamSpec(p + "norm2", (d,), False),
+                ParamSpec(p + "norm2b", (d,), False),
+            ]
+    specs.append(ParamSpec("final_norm", (d,), False))
+    if cfg.arch == "gpt":
+        specs.append(ParamSpec("final_normb", (d,), False))
+    return sorted(specs, key=lambda s: s.name)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Scaled-normal init (He-style 1/sqrt(fan_in) for matrices)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if len(spec.shape) == 1:
+            init = (
+                jnp.zeros(spec.shape)
+                if spec.name.endswith("b")
+                else jnp.ones(spec.shape)
+            )
+        else:
+            fan_in = spec.shape[0]
+            init = jax.random.normal(sub, spec.shape) / jnp.sqrt(float(fan_in))
+        out[spec.name] = init.astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def rope(x):
+    """Rotary embedding over (B, H, L, hd)."""
+    b, h, l, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(l, dtype=jnp.float32)[:, None]
+    inv_freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * inv_freq[None, :]  # (L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+
+
+def attention(cfg: ModelConfig, p, prefix, x, causal: bool):
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(t):
+        return t.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+
+    q = split(x @ p[prefix + "attn.wq"])
+    k = split(x @ p[prefix + "attn.wk"])
+    v = split(x @ p[prefix + "attn.wv"])
+    if cfg.arch in ("llama", "qwen"):
+        q, k = rope(q), rope(k)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, l, d)
+    return ctx @ p[prefix + "attn.wo"]
+
+
+def mlp(cfg: ModelConfig, p, prefix, x):
+    if cfg.arch == "gpt":
+        return jax.nn.gelu(x @ p[prefix + "mlp.up"]) @ p[prefix + "mlp.down"]
+    gate = jax.nn.silu(x @ p[prefix + "mlp.gate"])
+    return (gate * (x @ p[prefix + "mlp.up"])) @ p[prefix + "mlp.down"]
+
+
+def forward(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens) -> jnp.ndarray:
+    """Token ids (B, L) int32 -> logits (B, L, V)."""
+    x = p["tok_emb"][tokens]
+    if cfg.arch == "gpt":
+        x = x + p["pos_emb"][None, : tokens.shape[1]]
+    causal = cfg.arch != "bert"
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i:02d}."
+        if cfg.arch == "gpt":
+            h = layer_norm(x, p[pre + "norm1"], p[pre + "norm1b"])
+            x = x + attention(cfg, p, pre, h, causal)
+            h = layer_norm(x, p[pre + "norm2"], p[pre + "norm2b"])
+            x = x + mlp(cfg, p, pre, h)
+        else:
+            h = rms_norm(x, p[pre + "norm1"])
+            x = x + attention(cfg, p, pre, h, causal)
+            h = rms_norm(x, p[pre + "norm2"])
+            x = x + mlp(cfg, p, pre, h)
+    if cfg.arch == "gpt":
+        x = layer_norm(x, p["final_norm"], p["final_normb"])
+    else:
+        x = rms_norm(x, p["final_norm"])
+    head = p["tok_emb"].T if cfg.tied else p["lm_head"]
+    return x @ head
+
+
+BERT_MASK_STRIDE = 7  # deterministic MLM: mask every 7th position
+BERT_MASK_ID = 1  # token id used as [MASK]
+
+
+def lm_loss(cfg: ModelConfig, p, tokens) -> jnp.ndarray:
+    """Mean cross-entropy.
+
+    llama/gpt/qwen: next-token prediction.
+    bert: predict the original token at deterministically masked
+    positions (every ``BERT_MASK_STRIDE``-th), bidirectional context.
+    """
+    if cfg.arch == "bert":
+        l = tokens.shape[1]
+        pos_mask = (jnp.arange(l) % BERT_MASK_STRIDE) == (BERT_MASK_STRIDE - 1)
+        inp = jnp.where(pos_mask[None, :], BERT_MASK_ID, tokens)
+        logits = forward(cfg, p, inp)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tok_logp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+        return -jnp.sum(tok_logp * pos_mask[None, :]) / (
+            tokens.shape[0] * jnp.sum(pos_mask)
+        )
+    logits = forward(cfg, p, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(tok_logp)
+
+
+# ---------------------------------------------------------------------------
+# Classification head (fine-tuning: MMLU-like / GLUE-like)
+# ---------------------------------------------------------------------------
+
+
+def cls_param_specs(cfg: ModelConfig, n_classes: int) -> List[ParamSpec]:
+    return param_specs(cfg) + [
+        ParamSpec("zcls.head", (cfg.d_model, n_classes), False)
+    ]
+
+
+def cls_logits(cfg: ModelConfig, p, tokens, n_classes: int):
+    """Mean-pooled final hidden state -> class logits (B, K)."""
+    x = p["tok_emb"][tokens]
+    if cfg.arch == "gpt":
+        x = x + p["pos_emb"][None, : tokens.shape[1]]
+    causal = cfg.arch != "bert"
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i:02d}."
+        if cfg.arch == "gpt":
+            h = layer_norm(x, p[pre + "norm1"], p[pre + "norm1b"])
+            x = x + attention(cfg, p, pre, h, causal)
+            h = layer_norm(x, p[pre + "norm2"], p[pre + "norm2b"])
+            x = x + mlp(cfg, p, pre, h)
+        else:
+            h = rms_norm(x, p[pre + "norm1"])
+            x = x + attention(cfg, p, pre, h, causal)
+            h = rms_norm(x, p[pre + "norm2"])
+            x = x + mlp(cfg, p, pre, h)
+    if cfg.arch == "gpt":
+        x = layer_norm(x, p["final_norm"], p["final_normb"])
+    else:
+        x = rms_norm(x, p["final_norm"])
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ p["zcls.head"]
+
+
+def cls_loss(cfg: ModelConfig, p, tokens, labels, n_classes: int):
+    logits = cls_logits(cfg, p, tokens, n_classes)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: flat-tuple calling convention
+# ---------------------------------------------------------------------------
+
+
+def pack(cfg: ModelConfig, p: Dict[str, jnp.ndarray], specs=None):
+    specs = specs or param_specs(cfg)
+    return tuple(p[s.name] for s in specs)
+
+
+def unpack(cfg: ModelConfig, flat, specs=None):
+    specs = specs or param_specs(cfg)
+    return {s.name: t for s, t in zip(specs, flat)}
+
+
+def make_train_step(cfg: ModelConfig):
+    """(p_0..p_k, tokens) -> (loss, grad_0..grad_k)."""
+    specs = param_specs(cfg)
+
+    def step(*args):
+        flat, tokens = args[:-1], args[-1]
+        p = unpack(cfg, flat, specs)
+        loss, grads = jax.value_and_grad(lambda pp: lm_loss(cfg, pp, tokens))(p)
+        return (loss,) + tuple(grads[s.name] for s in specs)
+
+    return step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(p_0..p_k, tokens) -> (loss,)."""
+
+    def step(*args):
+        flat, tokens = args[:-1], args[-1]
+        return (lm_loss(cfg, unpack(cfg, flat), tokens),)
+
+    return step
+
+
+def make_cls_train_step(cfg: ModelConfig, n_classes: int):
+    """(p_0..p_k, head, tokens, labels) -> (loss, grads...)."""
+    specs = cls_param_specs(cfg, n_classes)
+
+    def step(*args):
+        flat, tokens, labels = args[:-2], args[-2], args[-1]
+        p = {s.name: t for s, t in zip(specs, flat)}
+        loss, grads = jax.value_and_grad(
+            lambda pp: cls_loss(cfg, pp, tokens, labels, n_classes)
+        )(p)
+        return (loss,) + tuple(grads[s.name] for s in specs)
+
+    return step
+
+
+def make_cls_logits(cfg: ModelConfig, n_classes: int):
+    """(p_0..p_k, head, tokens) -> (logits,)."""
+    specs = cls_param_specs(cfg, n_classes)
+
+    def step(*args):
+        flat, tokens = args[:-1], args[-1]
+        p = {s.name: t for s, t in zip(specs, flat)}
+        return (cls_logits(cfg, p, tokens, n_classes),)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Presets — mirrored exactly in rust/src/config/presets.rs
+# ---------------------------------------------------------------------------
+
+PRESETS: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        # Scaled stand-ins for the paper's LLaMA 60M..3B family.
+        ModelConfig("nano", "llama", 256, 64, 2, 4, 160, 64, 8),
+        ModelConfig("micro", "llama", 256, 128, 4, 4, 320, 64, 8),
+        ModelConfig("small", "llama", 256, 256, 6, 8, 672, 128, 8),
+        # Sequence-length robustness (Table IV): tokens/batch constant.
+        ModelConfig("nano-s128", "llama", 256, 64, 2, 4, 160, 128, 4),
+        ModelConfig("nano-s256", "llama", 256, 64, 2, 4, 160, 256, 2),
+        # Architecture generality (Table VII).
+        ModelConfig("gpt-nano", "gpt", 256, 64, 2, 4, 160, 64, 8),
+        ModelConfig("bert-nano", "bert", 256, 64, 2, 4, 160, 64, 8),
+        ModelConfig("qwen-nano", "qwen", 256, 64, 2, 4, 160, 64, 8),
+        # Fine-tuning backbone (Tables V/VI).
+        ModelConfig("ft-micro", "llama", 256, 128, 4, 4, 320, 64, 8),
+    ]
+}

@@ -1,0 +1,96 @@
+"""AOT pipeline: manifest integrity + HLO text round-trip via xla_client."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_gwt_shapes_nano():
+    shapes = aot.gwt_shapes(M.PRESETS["nano"])
+    assert shapes == [(64, 64), (64, 160), (160, 64)]
+
+
+def test_io_desc():
+    s = aot.spec((2, 3), jnp.int32)
+    assert aot.io_desc([s]) == [{"dtype": "int32", "shape": [2, 3]}]
+
+
+@needs_artifacts
+def test_manifest_structure():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert set(man["presets"]) == set(M.PRESETS)
+    for key, art in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, art["file"])), key
+        assert art["inputs"] and art["outputs"], key
+    # Every preset has train + eval artifacts.
+    for p in man["presets"]:
+        assert f"train_step_{p}" in man["artifacts"]
+        assert f"eval_loss_{p}" in man["artifacts"]
+
+
+@needs_artifacts
+def test_manifest_params_match_model():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    for name, pm in man["presets"].items():
+        specs = M.param_specs(M.PRESETS[name])
+        assert [p["name"] for p in pm["params"]] == [s.name for s in specs]
+        assert [tuple(p["shape"]) for p in pm["params"]] == [
+            s.shape for s in specs
+        ]
+
+
+@needs_artifacts
+def test_hlo_text_parses_back():
+    """Every emitted artifact must re-parse from text.
+
+    This exercises the same HLO-text parser the rust runtime's
+    ``HloModuleProto::from_text_file`` wraps; numeric verification of
+    the rust bridge lives in rust/tests/runtime_roundtrip.rs.
+    """
+    from jax._src.lib import xla_client as xc
+
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    # Parsing every artifact is slow; spot-check the structurally
+    # distinct kinds.
+    kinds = {}
+    for key, art in sorted(man["artifacts"].items()):
+        kinds.setdefault(art["kind"], key)
+    for kind, key in sorted(kinds.items()):
+        path = os.path.join(ART, man["artifacts"][key]["file"])
+        with open(path) as f:
+            text = f.read()
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod.as_serialized_hlo_module_proto(), (kind, key)
+
+
+@needs_artifacts
+def test_gwt_artifact_output_shapes():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    for key, art in man["artifacts"].items():
+        if art["kind"] != "gwt_adam":
+            continue
+        m, n, level = art["rows"], art["cols"], art["level"]
+        q = n >> level
+        ins = [tuple(s["shape"]) for s in art["inputs"]]
+        outs = [tuple(s["shape"]) for s in art["outputs"]]
+        assert ins == [(m, n), (m, q), (m, q)], key
+        assert outs == [(m, n), (m, q), (m, q), ()], key

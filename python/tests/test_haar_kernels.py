@@ -1,0 +1,167 @@
+"""Pallas Haar kernels vs pure-jnp reference: the core L1 correctness signal.
+
+Hypothesis sweeps shapes, levels, and dtypes; fixed seeds keep the
+suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.haar import haar_fwd_pallas, haar_inv_pallas, pick_tile_m
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference-level invariants (spec sanity before comparing kernels to it)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,level", [(8, 1), (8, 2), (8, 3), (64, 4), (128, 5)])
+def test_ref_perfect_reconstruction(n, level):
+    x = rand((16, n), seed=n + level)
+    back = ref.haar_inv(ref.haar_fwd(x, level), level)
+    np.testing.assert_allclose(back, x, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,level", [(16, 1), (16, 2), (256, 3)])
+def test_ref_energy_preserved(n, level):
+    x = rand((8, n), seed=3)
+    c = ref.haar_fwd(x, level)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(c), jnp.linalg.norm(x), rtol=1e-5
+    )
+
+
+def test_ref_matches_paper_worked_example():
+    # Paper §III-A: x = [x1..x8], explicit A1/D1 and A2/D2 formulas.
+    x = jnp.asarray([[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]])
+    c1 = ref.haar_fwd(x, 1)
+    s2 = 2.0**0.5
+    np.testing.assert_allclose(
+        c1[0, :4], np.array([3.0, 7.0, 11.0, 15.0]) / s2, rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        c1[0, 4:], np.array([-1.0, -1.0, -1.0, -1.0]) / s2, rtol=1e-6
+    )
+    c2 = ref.haar_fwd(x, 2)
+    # A2 = [(x1+x2+x3+x4)/2, (x5+x6+x7+x8)/2]
+    np.testing.assert_allclose(c2[0, :2], np.array([5.0, 13.0]), rtol=1e-6)
+    # D2 = [(x1+x2-x3-x4)/2, (x5+x6-x7-x8)/2]
+    np.testing.assert_allclose(c2[0, 2:4], np.array([-2.0, -2.0]), rtol=1e-6)
+
+
+def test_ref_lowpass_equals_zeroed_details():
+    x = rand((4, 32), seed=9)
+    level = 3
+    c = ref.haar_fwd(x, level)
+    q = 32 >> level
+    zeroed = c.at[:, q:].set(0.0)
+    np.testing.assert_allclose(
+        ref.haar_lowpass(x, level),
+        ref.haar_inv(zeroed, level),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_ref_level0_identity():
+    x = rand((3, 10))
+    np.testing.assert_array_equal(ref.haar_fwd(x, 0), x)
+    np.testing.assert_array_equal(ref.haar_inv(x, 0), x)
+
+
+def test_ref_rejects_bad_level():
+    x = rand((2, 12))
+    with pytest.raises(ValueError):
+        ref.haar_fwd(x, 3)  # 12 % 8 != 0
+    with pytest.raises(ValueError):
+        ref.haar_fwd(x, -1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    logn=st.integers(1, 8),
+    level=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_fwd_matches_ref(m, logn, level, seed):
+    n = 1 << logn
+    level = min(level, logn)
+    x = rand((m, n), seed=seed)
+    got = haar_fwd_pallas(x, level)
+    want = ref.haar_fwd(x, level)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    logn=st.integers(1, 8),
+    level=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_inv_matches_ref(m, logn, level, seed):
+    n = 1 << logn
+    level = min(level, logn)
+    c = rand((m, n), seed=seed)
+    got = haar_inv_pallas(c, level)
+    want = ref.haar_inv(c, level)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    logn=st.integers(2, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_roundtrip(m, logn, seed):
+    n = 1 << logn
+    x = rand((m, n), seed=seed)
+    for level in (1, logn // 2 + 1, logn):
+        back = haar_inv_pallas(haar_fwd_pallas(x, level), level)
+        np.testing.assert_allclose(back, x, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_dtypes(dtype):
+    x = rand((16, 64), seed=1, dtype=dtype)
+    got = haar_fwd_pallas(x, 2)
+    want = ref.haar_fwd(x, 2)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_pallas_nonpow2_width():
+    # Width only needs divisibility by 2^level, not to be a power of 2.
+    x = rand((8, 24), seed=5)
+    got = haar_fwd_pallas(x, 3)  # 24 % 8 == 0
+    want = ref.haar_fwd(x, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pick_tile_m_divides_and_bounds():
+    for m in (1, 7, 8, 96, 1000, 4096):
+        for n in (8, 256, 4096):
+            t = pick_tile_m(m, n)
+            assert m % t == 0
+            assert 1 <= t <= 256

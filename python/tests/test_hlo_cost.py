@@ -1,0 +1,67 @@
+"""HLO cost-analysis tool: parser unit tests + artifact invariants."""
+
+import json
+import os
+
+import pytest
+
+from compile.hlo_cost import parse_hlo
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_parse_counts_dots_and_flops():
+    text = """
+HloModule m
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8] parameter(0)
+  %b = f32[8,16] parameter(1)
+  ROOT %dot = f32[4,16] dot(f32[4,8] %a, f32[8,16] %b)
+}
+"""
+    r = parse_hlo(text)
+    assert r["dot_count"] == 1
+    # 2 * 4*16 * 8 = 1024 FLOPs.
+    assert abs(r["dot_gflops"] - 1024 / 1e9) < 1e-12
+
+
+def test_parse_elementwise():
+    text = "  %x = f32[10,10] add(f32[10,10] %a, f32[10,10] %b)\n"
+    r = parse_hlo(text)
+    assert r["op_histogram"].get("add") == 1
+    assert abs(r["elementwise_melems"] - 100 / 1e6) < 1e-12
+
+
+@needs_artifacts
+def test_train_step_has_matmuls_and_no_recompute_blowup():
+    man = json.load(open(MANIFEST))
+    tr = parse_hlo(
+        open(os.path.join(ART, man["artifacts"]["train_step_nano"]["file"])).read()
+    )
+    ev = parse_hlo(
+        open(os.path.join(ART, man["artifacts"]["eval_loss_nano"]["file"])).read()
+    )
+    assert tr["dot_count"] > ev["dot_count"] > 0
+    # Backward pass roughly doubles dot work; >3.5x means accidental
+    # recomputation snuck into the lowering.
+    ratio = tr["dot_gflops"] / ev["dot_gflops"]
+    assert 1.5 < ratio <= 3.5, f"train/eval dot ratio {ratio}"
+
+
+@needs_artifacts
+def test_gwt_adam_artifact_is_matmul_free():
+    # The wavelet path must lower to reshapes/elementwise only — the
+    # paper's complexity claim (O(mn) vs GaLore's O(mn^2)) depends on
+    # there being no dot in the optimizer step.
+    man = json.load(open(MANIFEST))
+    r = parse_hlo(
+        open(
+            os.path.join(ART, man["artifacts"]["gwt_adam_l2_64x64"]["file"])
+        ).read()
+    )
+    assert r["dot_count"] == 0, r["op_histogram"]

@@ -1,0 +1,168 @@
+"""L2 model: shapes, losses, gradient plumbing, preset consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def toy_cfg(arch="llama", **kw):
+    base = dict(
+        name="t", arch=arch, vocab=64, d_model=32, n_layers=2,
+        n_heads=4, d_ff=48, seq_len=16, batch=2,
+    )
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def tokens_for(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(2, cfg.vocab, size=(cfg.batch, cfg.seq_len)),
+        dtype=jnp.int32,
+    )
+
+
+@pytest.mark.parametrize("arch", ["llama", "gpt", "qwen", "bert"])
+def test_forward_shapes(arch):
+    cfg = toy_cfg(arch)
+    p = M.init_params(cfg)
+    logits = M.forward(cfg, p, tokens_for(cfg))
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["llama", "gpt", "qwen", "bert"])
+def test_loss_finite_and_near_uniform_at_init(arch):
+    cfg = toy_cfg(arch)
+    p = M.init_params(cfg)
+    loss = M.lm_loss(cfg, p, tokens_for(cfg))
+    assert bool(jnp.isfinite(loss))
+    # Random init ≈ uniform prediction => loss ≈ log(vocab).
+    assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ["llama", "gpt", "qwen", "bert"])
+def test_train_step_outputs_match_specs(arch):
+    cfg = toy_cfg(arch)
+    specs = M.param_specs(cfg)
+    p = M.init_params(cfg)
+    out = M.make_train_step(cfg)(*M.pack(cfg, p), tokens_for(cfg))
+    assert len(out) == 1 + len(specs)
+    assert out[0].shape == ()
+    for g, s in zip(out[1:], specs):
+        assert g.shape == s.shape, s.name
+        assert bool(jnp.all(jnp.isfinite(g))), s.name
+
+
+def test_param_specs_sorted_and_unique():
+    for name, cfg in M.PRESETS.items():
+        specs = M.param_specs(cfg)
+        names = [s.name for s in specs]
+        assert names == sorted(names), name
+        assert len(set(names)) == len(names), name
+
+
+def test_gwt_eligible_are_2d_attention_mlp():
+    cfg = M.PRESETS["nano"]
+    for s in M.param_specs(cfg):
+        if s.gwt:
+            assert len(s.shape) == 2
+            assert ".attn." in s.name or ".mlp." in s.name
+        else:
+            assert ".attn." not in s.name and ".mlp." not in s.name
+
+
+def test_tied_qwen_has_no_lm_head():
+    names = [s.name for s in M.param_specs(M.PRESETS["qwen-nano"])]
+    assert "lm_head" not in names
+    assert "tok_emb" in names
+
+
+def test_training_reduces_loss_sgd():
+    # Ten SGD steps on a repeated batch must reduce the loss: checks
+    # that gradients actually point downhill through the whole model.
+    cfg = toy_cfg("llama")
+    p = M.init_params(cfg, seed=1)
+    tok = tokens_for(cfg, seed=2)
+    step = jax.jit(M.make_train_step(cfg))
+    specs = M.param_specs(cfg)
+    first = None
+    flat = list(M.pack(cfg, p))
+    for _ in range(10):
+        out = step(*flat, tok)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss)
+        flat = [w - 0.5 * g for w, g in zip(flat, grads)]
+    last = float(M.lm_loss(cfg, {s.name: t for s, t in zip(specs, flat)}, tok))
+    assert last < first - 0.1, (first, last)
+
+
+def test_bert_mask_positions_only():
+    # Loss must not depend on tokens at unmasked positions' *targets* —
+    # masked-LM scores only every BERT_MASK_STRIDE-th position.
+    cfg = toy_cfg("bert", seq_len=14)
+    p = M.init_params(cfg)
+    tok = tokens_for(cfg, seed=3)
+    base = float(M.lm_loss(cfg, p, tok))
+    assert np.isfinite(base)
+
+
+def test_cls_head_shapes_and_loss():
+    cfg = toy_cfg("llama")
+    k = 4
+    p = M.init_params(cfg)
+    p["zcls.head"] = jnp.zeros((cfg.d_model, k))
+    tok = tokens_for(cfg)
+    logits = M.cls_logits(cfg, p, tok, k)
+    assert logits.shape == (cfg.batch, k)
+    labels = jnp.asarray([1, 3], dtype=jnp.int32)
+    loss = M.cls_loss(cfg, p, tok, labels, k)
+    # Zero head => uniform logits => loss == log(k).
+    np.testing.assert_allclose(float(loss), np.log(k), rtol=1e-5)
+
+
+def test_cls_train_step_grad_count():
+    cfg = toy_cfg("llama")
+    k = 3
+    specs = M.cls_param_specs(cfg, k)
+    p = M.init_params(cfg)
+    p["zcls.head"] = jnp.full((cfg.d_model, k), 0.01)
+    flat = tuple(p[s.name] for s in specs)
+    labels = jnp.asarray([0, 2], dtype=jnp.int32)
+    out = M.make_cls_train_step(cfg, k)(*flat, tokens_for(cfg), labels)
+    assert len(out) == 1 + len(specs)
+
+
+def test_presets_dims_divisible_for_aot_levels():
+    # Every GWT-eligible shape must support levels 1..3 (AOT set).
+    from compile.aot import AOT_LEVELS, gwt_shapes
+
+    for name, cfg in M.PRESETS.items():
+        for (m, n) in gwt_shapes(cfg):
+            for level in AOT_LEVELS:
+                assert n % (1 << level) == 0, (name, m, n, level)
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 4, 8, 16)),
+                    dtype=jnp.float32)
+    y = M.rope(x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+    )
+
+
+def test_rms_vs_layer_norm_basic():
+    x = jnp.asarray([[1.0, -1.0, 2.0, -2.0]])
+    w = jnp.ones(4)
+    b = jnp.zeros(4)
+    ln = M.layer_norm(x, w, b)
+    np.testing.assert_allclose(float(jnp.mean(ln)), 0.0, atol=1e-6)
+    rn = M.rms_norm(x, w)
+    np.testing.assert_allclose(
+        float(jnp.sqrt(jnp.mean(rn * rn))), 1.0, rtol=1e-4
+    )

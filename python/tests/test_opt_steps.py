@@ -1,0 +1,187 @@
+"""Optimizer-step semantics at the reference level (Algorithm 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=jnp.float32)
+
+
+def test_block_constant_gradient_reduces_to_adam_on_means():
+    """If the gradient is constant within each 2^l block, GWT-Adam
+    equals full Adam run on the block means (details vanish), and the
+    update is block-constant."""
+    level, m, n = 2, 4, 16
+    b = 1 << level
+    rng = np.random.default_rng(0)
+    means = rng.standard_normal((m, n // b)).astype(np.float32)
+    g = jnp.asarray(np.repeat(means, b, axis=1))
+    mom = jnp.zeros((m, n >> level))
+    vel = jnp.zeros((m, n >> level))
+    upd, m_new, v_new = ref.gwt_normalized_update(g, mom, vel, level=level)
+    # Block-constant output (eps enters per-block, so tolerances are
+    # looser than machine precision).
+    u = np.asarray(upd).reshape(m, n // b, b)
+    np.testing.assert_allclose(
+        u, np.broadcast_to(u[..., :1], u.shape), rtol=1e-3, atol=1e-4
+    )
+    # Equal to Adam on scaled means: A = mean * sqrt(2^l) per Haar.
+    scale = np.sqrt(float(b))
+    a = jnp.asarray(means * scale)
+    adam_u, am, av = ref.adam_normalized_update(a, mom, vel)
+    np.testing.assert_allclose(m_new, am, rtol=1e-5)
+    np.testing.assert_allclose(v_new, av, rtol=1e-5)
+    # Reconstructed update = adam_u / sqrt(b) repeated.
+    np.testing.assert_allclose(
+        u[..., 0], np.asarray(adam_u) / scale, rtol=1e-3, atol=1e-4
+    )
+
+
+def test_level1_equals_explicit_matrix_form():
+    """Eq. (2): [A, D] = W H with the explicit H of Eq. (3)."""
+    m, n = 3, 6
+    w = rand((m, n), seed=1)
+    h = np.zeros((n, n), dtype=np.float32)
+    s = 1.0 / np.sqrt(2.0)
+    for i in range(n // 2):
+        h[2 * i, i] = s
+        h[2 * i + 1, i] = s
+        h[2 * i, n // 2 + i] = s
+        h[2 * i + 1, n // 2 + i] = -s
+    # H Hᵀ = I.
+    np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-6)
+    want = np.asarray(w) @ h
+    got = ref.haar_fwd(w, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # Reconstruction W = [A, D] Hᵀ.
+    back = np.asarray(got) @ h.T
+    np.testing.assert_allclose(back, w, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    logn=st.integers(1, 6),
+    level=st.integers(1, 6),
+    steps=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_stay_finite_and_v_nonnegative(m, logn, level, steps, seed):
+    n = 1 << logn
+    level = min(level, logn)
+    q = n >> level
+    mom = jnp.zeros((m, q))
+    vel = jnp.zeros((m, q))
+    for s in range(steps):
+        g = rand((m, n), seed=seed + s)
+        upd, mom, vel = ref.gwt_normalized_update(g, mom, vel, level=level)
+        assert bool(jnp.all(jnp.isfinite(upd)))
+        assert bool(jnp.all(vel >= 0.0)), "second moment went negative"
+
+
+def test_bias_correction_limits():
+    bc1 = float(ref.bias_correction(1.0, 0.9, 0.999))
+    assert abs(bc1 - np.sqrt(1 - 0.999) / (1 - 0.9)) < 1e-6
+    bc_inf = float(ref.bias_correction(1e6, 0.9, 0.999))
+    assert abs(bc_inf - 1.0) < 1e-3
+
+
+def test_gwt_step_converges_on_blockwise_quadratic():
+    """w* recovery on a quadratic bowl with block-constant target.
+
+    When the target is block-constant the gradient's detail bands are
+    proportional to w's own details (which start at zero and stay
+    there), so GWT behaves like Adam on the approximation coordinates
+    and converges cleanly.
+    """
+    level, m, n = 2, 8, 32
+    b = 1 << level
+    rng = np.random.default_rng(3)
+    means = rng.standard_normal((m, n // b)).astype(np.float32)
+    w_star = jnp.asarray(np.repeat(means, b, axis=1))
+    w = jnp.zeros((m, n))
+    mom = jnp.zeros((m, n >> level))
+    vel = jnp.zeros((m, n >> level))
+    for t in range(1, 201):
+        g = w - w_star
+        w, mom, vel, _ = ref.gwt_adam_step(
+            w, g, mom, vel, float(t), 0.05, level=level, alpha=1.0
+        )
+    err = float(jnp.linalg.norm(w - w_star) / jnp.linalg.norm(w_star))
+    assert err < 0.05, f"relative error {err}"
+
+
+def test_gwt_detail_amplification_pathology():
+    """Documented pathology (DESIGN.md §6b): on a generic quadratic,
+    once the approximation gradient vanishes, V̂ decays toward zero
+    and detail updates are divided by ~eps — the iteration *diverges*
+    without the Norm-growth Limiter. This is the failure mode the
+    paper's Fig 3 limiter exists to contain."""
+    level, m, n = 2, 8, 32
+    rng = np.random.default_rng(4)
+    w_star = jnp.asarray(rng.standard_normal((m, n)), dtype=jnp.float32)
+    w = jnp.zeros((m, n))
+    mom = jnp.zeros((m, n >> level))
+    vel = jnp.zeros((m, n >> level))
+    for t in range(1, 201):
+        g = w - w_star
+        w, mom, vel, _ = ref.gwt_adam_step(
+            w, g, mom, vel, float(t), 0.05, level=level, alpha=1.0
+        )
+    err = float(jnp.linalg.norm(w - w_star) / jnp.linalg.norm(w_star))
+    assert err > 1.0, (
+        f"expected divergence without the limiter, got rel err {err} — "
+        "if this improved, the pathology note in DESIGN.md is stale"
+    )
+
+
+def test_adam_step_matches_closed_form_first_step():
+    w = rand((2, 4), seed=5)
+    g = rand((2, 4), seed=6)
+    lr = 0.1
+    w2, m2, v2, norm = ref.adam_step(
+        w, g, jnp.zeros_like(g), jnp.zeros_like(g), 1.0, lr
+    )
+    bc = np.sqrt(1 - 0.999) / (1 - 0.9)
+    gn = np.asarray(g)
+    upd = (0.1 * gn) / (np.sqrt(0.001 * gn**2) + 1e-6)
+    np.testing.assert_allclose(
+        np.asarray(w2), np.asarray(w) - lr * bc * upd, rtol=1e-4
+    )
+    assert float(norm) > 0.0
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+def test_detail_normalization_upsampling_alignment(level):
+    """Each D_k column must be divided by the denom of the A column
+    covering the same original-column span."""
+    m, n = 1, 16
+    q = n >> level
+    g = rand((m, n), seed=7)
+    mom = jnp.zeros((m, q))
+    # Make V̂ wildly different per approximation column to expose any
+    # misalignment.
+    vel = jnp.asarray(
+        np.arange(1, q + 1, dtype=np.float32).reshape(1, q) * 100.0
+    )
+    upd, m_new, v_new = ref.gwt_normalized_update(g, mom, vel, level=level)
+    # Manual: reconstruct with explicit per-band upsampled denominator.
+    coeffs = np.asarray(ref.haar_fwd(g, level))
+    denom = np.sqrt(np.asarray(v_new)) + 1e-6
+    parts = [np.asarray(m_new) / denom]
+    off = q
+    for k in range(level, 0, -1):
+        w = n >> k
+        d = coeffs[:, off : off + w]
+        off += w
+        rep = 1 << (level - k)
+        dd = np.repeat(denom, rep, axis=1)
+        parts.append(d / dd)
+    manual = ref.haar_inv(jnp.asarray(np.concatenate(parts, axis=1)), level)
+    np.testing.assert_allclose(upd, manual, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,286 @@
+//! Benchmark harness substrate (criterion is not in this image).
+//!
+//! `time_fn` does warmup + repeated timing with median/MAD stats;
+//! `TableView` prints paper-style tables with a `paper` column next
+//! to `measured` so every bench shows the reproduction target inline.
+//! Benches write machine-readable JSON under `results/`.
+
+use std::time::Instant;
+
+use crate::jsonx::{arr, obj, s, Json};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median_ns / 1000.0
+    }
+
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_ns / 1.0e6
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing { median_ns: median, mad_ns: devs[devs.len() / 2], iters: samples.len() }
+}
+
+/// Paper-style table printer: fixed-width columns, a title, and an
+/// optional "paper" annotation per row.
+pub struct TableView {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableView {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        TableView {
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// JSON form for `results/<name>.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            (
+                "headers",
+                arr(self.headers.iter().map(|h| s(h)).collect()),
+            ),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Persist a bench result table (+ extra metadata) under results/.
+pub fn write_result(name: &str, table: &TableView, extra: Vec<(&str, Json)>) -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    let mut fields = vec![("table", table.to_json())];
+    fields.extend(extra);
+    std::fs::write(
+        format!("results/{name}.json"),
+        obj(fields).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shared training harness for the paper-reproduction benches
+// ---------------------------------------------------------------------------
+
+use std::rc::Rc;
+
+use crate::config::{OptSpec, TrainConfig};
+use crate::coordinator::{TrainOutcome, Trainer};
+use crate::data::{CorpusSpec, DataLoader, SyntheticCorpus};
+use crate::runtime::Runtime;
+
+/// One pretraining run spec for a bench row.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub preset: String,
+    pub optimizer: OptSpec,
+    pub lr: f32,
+    pub alpha: f32,
+    pub steps: usize,
+    pub modulewise_lr: bool,
+    pub nl_gamma: f32,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// Paper Appendix C defaults per method family: full Adam and
+    /// MUON use a smaller single lr; projection/wavelet methods use
+    /// lr=0.01 with their alpha (0.25 GWT/GaLore, 1.0 APOLLO).
+    pub fn paper_defaults(preset: &str, optimizer: OptSpec, steps: usize) -> RunSpec {
+        let (lr, alpha, modulewise) = match optimizer {
+            OptSpec::Adam | OptSpec::AdamMini | OptSpec::Adam8bit => {
+                (0.005, 1.0, false)
+            }
+            OptSpec::Muon | OptSpec::SgdM => (0.005, 1.0, false),
+            OptSpec::Apollo { .. } => (0.01, 1.0, true),
+            _ => (0.01, 0.25, true),
+        };
+        RunSpec {
+            preset: preset.into(),
+            optimizer,
+            lr,
+            alpha,
+            steps,
+            modulewise_lr: modulewise,
+            nl_gamma: 1.01,
+            seed: 0,
+        }
+    }
+}
+
+/// Deterministic shared loader for a preset (same data across
+/// methods => fair comparison rows).
+pub fn bench_loader(preset: &str, steps: usize, seed: u64) -> DataLoader {
+    let p = crate::config::presets::find(preset).expect("preset");
+    let mut corpus =
+        SyntheticCorpus::new(CorpusSpec { seed: seed ^ 0xbe, ..Default::default() });
+    let need = ((steps + 48) * p.tokens_per_batch()).clamp(200_000, 6_000_000);
+    DataLoader::new(corpus.generate_tokens(need), p.batch, p.seq_len, seed)
+}
+
+/// Execute one run and return its outcome.
+pub fn pretrain(rt: Rc<Runtime>, spec: &RunSpec, loader: &DataLoader) -> TrainOutcome {
+    let cfg = TrainConfig {
+        preset: spec.preset.clone(),
+        optimizer: spec.optimizer,
+        lr: spec.lr,
+        alpha: spec.alpha,
+        steps: spec.steps,
+        modulewise_lr: spec.modulewise_lr,
+        nl_gamma: spec.nl_gamma,
+        seed: spec.seed,
+        eval_every: spec.steps + 1,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt, cfg, loader).expect("trainer");
+    t.run(loader, false).expect("run")
+}
+
+/// Load the runtime or exit 0 with a notice (benches must not fail
+/// the suite when artifacts are absent).
+pub fn runtime_or_skip() -> Rc<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!("SKIP bench (run `make artifacts`): {e:#}");
+            std::process::exit(0);
+        }
+    }
+}
+
+/// Quick scale knob for benches: GWT_BENCH_SCALE in (0, 1] shrinks
+/// step counts so `cargo bench` stays tractable on small machines.
+pub fn bench_scale() -> f64 {
+    std::env::var("GWT_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|v| *v > 0.0 && *v <= 1.0)
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(steps: usize) -> usize {
+    ((steps as f64 * bench_scale()).round() as usize).max(10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time_fn(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.median_ns > 0.0);
+        assert_eq!(t.iters, 9);
+    }
+
+    #[test]
+    fn table_render_alignment() {
+        let mut t = TableView::new("T", &["a", "bb"]);
+        t.row(vec!["xxx".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("xxx"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = TableView::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn table_json_roundtrip() {
+        let mut t = TableView::new("T", &["h"]);
+        t.row(vec!["v".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str().unwrap(), "T");
+        assert_eq!(
+            j.get("rows").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0]
+                .as_str()
+                .unwrap(),
+            "v"
+        );
+    }
+
+    #[test]
+    fn scaled_floors_at_ten() {
+        assert!(scaled(5) >= 5);
+        assert_eq!(scaled(10_000).min(10_000), scaled(10_000));
+    }
+}

@@ -1,0 +1,182 @@
+//! Checkpointing: a small self-describing binary format for named
+//! f32 tensors (weights + optimizer state + step counter).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "GWTCKPT1" | u64 step | u32 n_entries
+//! per entry: u32 name_len | name utf8 | u32 ndim | u64 dims[ndim]
+//!            | f32 data[prod(dims)]
+//! trailer: u64 xor-checksum of all data words
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"GWTCKPT1";
+
+#[derive(Debug, Default)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64) -> Self {
+        Checkpoint { step, tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| path.to_string())?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        let mut checksum = 0u64;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in t.data() {
+                let bits = x.to_bits();
+                checksum ^= (bits as u64).rotate_left((bits % 63) as u32);
+                f.write_all(&bits.to_le_bytes())?;
+            }
+        }
+        f.write_all(&checksum.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| path.to_string())?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic: not a GWT checkpoint");
+        }
+        let step = read_u64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        let mut checksum = 0u64;
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("corrupt checkpoint: name_len {name_len}");
+            }
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            let ndim = read_u32(&mut f)? as usize;
+            if ndim > 8 {
+                bail!("corrupt checkpoint: ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            if numel > (1 << 31) {
+                bail!("corrupt checkpoint: numel {numel}");
+            }
+            let mut data = vec![0.0f32; numel];
+            let mut buf = [0u8; 4];
+            for x in &mut data {
+                f.read_exact(&mut buf)?;
+                let bits = u32::from_le_bytes(buf);
+                checksum ^= (bits as u64).rotate_left((bits % 63) as u32);
+                *x = f32::from_bits(bits);
+            }
+            tensors.insert(name, Tensor::new(&shape, data));
+        }
+        let want = read_u64(&mut f)?;
+        if want != checksum {
+            bail!("checksum mismatch: file corrupt");
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("gwt_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ck = Checkpoint::new(42);
+        ck.insert("w1", Tensor::randn(&[8, 16], 1.0, &mut rng));
+        ck.insert("m.v", Tensor::randn(&[3], 0.5, &mut rng));
+        ck.insert("scalar", Tensor::scalar(7.5));
+        let path = tmp("roundtrip.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.tensors["w1"], ck.tensors["w1"]);
+        assert_eq!(back.tensors["scalar"].data(), &[7.5]);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut ck = Checkpoint::new(1);
+        ck.insert("w", Tensor::full(&[64], 1.25));
+        let path = tmp("corrupt.ckpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_ok() {
+        let ck = Checkpoint::new(0);
+        let path = tmp("empty.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 0);
+    }
+}

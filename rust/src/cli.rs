@@ -1,0 +1,118 @@
+//! CLI argument substrate: subcommand + `--key value` flags +
+//! repeated `-s key=value` config overrides (clap is not in this
+//! image).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    /// Ordered `-s key=value` overrides.
+    pub sets: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if a == "-s" || a == "--set" {
+                let kv = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("-s requires key=value"))?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("-s expects key=value, got '{kv}'"))?;
+                args.sets.push((k.to_string(), v.to_string()));
+            } else if let Some(key) = a.strip_prefix("--") {
+                // --flag value  |  --flag=value  |  bare --flag (bool)
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") && *n != "-s")
+                    .unwrap_or(false)
+                {
+                    args.flags.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.insert(key.to_string(), "true".into());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true" | "1" | "yes"))
+    }
+
+    pub fn flag_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        // NOTE grammar: a bare `--flag` consumes the next token as its
+        // value unless that token is another flag — so boolean flags
+        // must be last or use `--flag=true`.
+        let a = Args::parse(&argv(&[
+            "train", "pos1", "--config", "c.cfg", "--steps=50", "-s",
+            "lr=0.1", "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("config"), Some("c.cfg"));
+        assert_eq!(a.flag("steps"), Some("50"));
+        assert_eq!(a.sets, vec![("lr".into(), "0.1".into())]);
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = Args::parse(&argv(&["x", "--a", "--b", "v"])).unwrap();
+        assert!(a.flag_bool("a"));
+        assert_eq!(a.flag("b"), Some("v"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&argv(&["x", "-s"])).is_err());
+        assert!(Args::parse(&argv(&["x", "-s", "noequals"])).is_err());
+        let a = Args::parse(&argv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.flag_usize("n").is_err());
+        assert_eq!(a.flag_usize("missing").unwrap(), None);
+    }
+}

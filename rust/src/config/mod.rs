@@ -1,0 +1,332 @@
+//! Configuration system: presets, optimizer specs, and a small
+//! `key = value` config-file format with CLI overrides.
+//!
+//! Presets mirror `python/compile/model.py::PRESETS` exactly — the
+//! manifest emitted by `aot.py` is the authority at runtime, and
+//! `runtime::Manifest::check_preset` cross-validates the two.
+
+pub mod presets;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+pub use presets::{ModelPreset, PRESETS};
+
+/// Which optimizer drives the eligible (attention/MLP) matrices.
+/// Non-eligible parameters always use full Adam, matching the paper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptSpec {
+    Adam,
+    /// Gradient Wavelet Transform at `level`.
+    Gwt { level: usize },
+    /// GaLore with rank = min_dim / rank_denom, SVD every `update_gap`.
+    Galore { rank_denom: usize },
+    /// APOLLO: random projection, rank = min_dim / rank_denom.
+    Apollo { rank_denom: usize },
+    /// LoRA-style adapter training (rank = min_dim / rank_denom).
+    Lora { rank_denom: usize },
+    /// Adam-mini: one shared second-moment scalar per parameter block.
+    AdamMini,
+    /// MUON: momentum + Newton–Schulz orthogonalization.
+    Muon,
+    /// Block-quantized 8-bit Adam.
+    Adam8bit,
+    /// SGD with momentum (memory floor reference).
+    SgdM,
+}
+
+impl OptSpec {
+    /// Parse `adam`, `gwt-2`, `galore-1/4`, `apollo-1/8`, `lora-1/4`,
+    /// `adam-mini`, `muon`, `adam8bit`, `sgdm`.
+    pub fn parse(s: &str) -> Result<OptSpec> {
+        let s = s.trim().to_lowercase();
+        if let Some(rest) = s.strip_prefix("gwt-") {
+            return Ok(OptSpec::Gwt { level: rest.parse().context("gwt level")? });
+        }
+        for (prefix, ctor) in [
+            ("galore-1/", OptSpec::Galore { rank_denom: 0 }),
+            ("apollo-1/", OptSpec::Apollo { rank_denom: 0 }),
+            ("lora-1/", OptSpec::Lora { rank_denom: 0 }),
+        ] {
+            if let Some(rest) = s.strip_prefix(prefix) {
+                let d: usize = rest.parse().context("rank denom")?;
+                if d == 0 {
+                    bail!("rank denominator must be positive");
+                }
+                return Ok(match ctor {
+                    OptSpec::Galore { .. } => OptSpec::Galore { rank_denom: d },
+                    OptSpec::Apollo { .. } => OptSpec::Apollo { rank_denom: d },
+                    _ => OptSpec::Lora { rank_denom: d },
+                });
+            }
+        }
+        Ok(match s.as_str() {
+            "adam" => OptSpec::Adam,
+            "adam-mini" | "adammini" => OptSpec::AdamMini,
+            "muon" => OptSpec::Muon,
+            "adam8bit" | "8bit-adam" => OptSpec::Adam8bit,
+            "sgdm" | "sgd-m" | "sgd" => OptSpec::SgdM,
+            other => bail!("unknown optimizer spec '{other}'"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            OptSpec::Adam => "Adam".into(),
+            OptSpec::Gwt { level } => format!("GWT-{level}"),
+            OptSpec::Galore { rank_denom } => format!("GaLore-1/{rank_denom}"),
+            OptSpec::Apollo { rank_denom } => format!("APOLLO-1/{rank_denom}"),
+            OptSpec::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
+            OptSpec::AdamMini => "Adam-mini".into(),
+            OptSpec::Muon => "MUON".into(),
+            OptSpec::Adam8bit => "8bit-Adam".into(),
+            OptSpec::SgdM => "SGD-M".into(),
+        }
+    }
+
+    /// Memory-model counterpart for the accountant.
+    pub fn memory_method(&self) -> crate::memory::Method {
+        use crate::memory::Method;
+        match *self {
+            OptSpec::Adam => Method::Adam,
+            OptSpec::Gwt { level } => Method::Gwt { level },
+            OptSpec::Galore { rank_denom } => Method::Galore { rank_denom },
+            OptSpec::Apollo { rank_denom } => Method::Apollo { rank_denom },
+            OptSpec::Lora { rank_denom } => Method::Lora { rank_denom },
+            OptSpec::AdamMini => Method::Adam, // states differ in count, not span
+            OptSpec::Muon => Method::Muon,
+            OptSpec::Adam8bit => Method::Adam8bit,
+            OptSpec::SgdM => Method::SgdM,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub optimizer: OptSpec,
+    pub lr: f32,
+    /// GWT/GaLore scale factor α (module-wise lr = lr·α on eligible).
+    pub alpha: f32,
+    pub steps: usize,
+    pub warmup_frac: f32,
+    pub seed: u64,
+    /// Gradient accumulation microbatches per optimizer step.
+    pub grad_accum: usize,
+    /// Data-parallel worker count (thread-simulated GPUs).
+    pub dp_workers: usize,
+    /// Norm-growth limiter threshold γ (0 disables, paper: 1.01).
+    pub nl_gamma: f32,
+    /// Apply module-wise lr (α on eligible modules) — paper default.
+    pub modulewise_lr: bool,
+    pub eval_every: usize,
+    /// Betas / eps shared across Adam-family methods.
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// GaLore subspace refresh interval (paper: 200).
+    pub galore_update_gap: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "nano".into(),
+            optimizer: OptSpec::Gwt { level: 2 },
+            lr: 0.01,
+            alpha: 0.25,
+            steps: 200,
+            warmup_frac: 0.1,
+            seed: 0,
+            grad_accum: 1,
+            dp_workers: 1,
+            nl_gamma: 1.01,
+            modulewise_lr: true,
+            eval_every: 50,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            galore_update_gap: 50,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply one `key=value` assignment (config file line or CLI -s).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "preset" => self.preset = v.into(),
+            "optimizer" => self.optimizer = OptSpec::parse(v)?,
+            "lr" => self.lr = v.parse().context("lr")?,
+            "alpha" => self.alpha = v.parse().context("alpha")?,
+            "steps" => self.steps = v.parse().context("steps")?,
+            "warmup_frac" => self.warmup_frac = v.parse().context("warmup_frac")?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            "grad_accum" => self.grad_accum = v.parse().context("grad_accum")?,
+            "dp_workers" => self.dp_workers = v.parse().context("dp_workers")?,
+            "nl_gamma" => self.nl_gamma = v.parse().context("nl_gamma")?,
+            "modulewise_lr" => self.modulewise_lr = parse_bool(v)?,
+            "eval_every" => self.eval_every = v.parse().context("eval_every")?,
+            "beta1" => self.beta1 = v.parse().context("beta1")?,
+            "beta2" => self.beta2 = v.parse().context("beta2")?,
+            "eps" => self.eps = v.parse().context("eps")?,
+            "galore_update_gap" => {
+                self.galore_update_gap = v.parse().context("galore_update_gap")?
+            }
+            "artifacts_dir" => self.artifacts_dir = v.into(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments,
+    /// `[section]` headers are ignored (cosmetic grouping only).
+    pub fn from_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text(&text)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_text(&mut self, text: &str) -> Result<()> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            self.set(k, v)
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !PRESETS.iter().any(|p| p.name == self.preset) {
+            bail!(
+                "unknown preset '{}' (known: {})",
+                self.preset,
+                PRESETS.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+            );
+        }
+        if self.lr <= 0.0 || self.steps == 0 || self.grad_accum == 0 || self.dp_workers == 0 {
+            bail!("lr/steps/grad_accum/dp_workers must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.warmup_frac) {
+            bail!("warmup_frac must be in [0,1]");
+        }
+        if let OptSpec::Gwt { level } = self.optimizer {
+            let p = presets::find(&self.preset)?;
+            for (m, n) in p.gwt_shapes() {
+                if n % (1usize << level) != 0 {
+                    bail!("preset {} shape {m}x{n} incompatible with GWT level {level}", p.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn summary(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert("preset".into(), self.preset.clone());
+        m.insert("optimizer".into(), self.optimizer.label());
+        m.insert("lr".into(), format!("{}", self.lr));
+        m.insert("alpha".into(), format!("{}", self.alpha));
+        m.insert("steps".into(), format!("{}", self.steps));
+        m.insert("dp_workers".into(), format!("{}", self.dp_workers));
+        m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
+        m
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("not a bool: '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_opt_specs() {
+        assert_eq!(OptSpec::parse("adam").unwrap(), OptSpec::Adam);
+        assert_eq!(OptSpec::parse("GWT-3").unwrap(), OptSpec::Gwt { level: 3 });
+        assert_eq!(
+            OptSpec::parse("galore-1/4").unwrap(),
+            OptSpec::Galore { rank_denom: 4 }
+        );
+        assert_eq!(
+            OptSpec::parse("apollo-1/8").unwrap(),
+            OptSpec::Apollo { rank_denom: 8 }
+        );
+        assert_eq!(OptSpec::parse("muon").unwrap(), OptSpec::Muon);
+        assert_eq!(OptSpec::parse("adam-mini").unwrap(), OptSpec::AdamMini);
+        assert!(OptSpec::parse("magic").is_err());
+        assert!(OptSpec::parse("galore-1/0").is_err());
+        assert!(OptSpec::parse("gwt-x").is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip_via_parse() {
+        for spec in [
+            OptSpec::Adam,
+            OptSpec::Gwt { level: 2 },
+            OptSpec::Galore { rank_denom: 8 },
+            OptSpec::Apollo { rank_denom: 4 },
+            OptSpec::Muon,
+        ] {
+            assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn config_text_parsing() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text(
+            "[model]\npreset = micro  # comment\n\n[opt]\noptimizer = gwt-3\nlr = 0.02\nnl_gamma=1.05\nmodulewise_lr = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.preset, "micro");
+        assert_eq!(cfg.optimizer, OptSpec::Gwt { level: 3 });
+        assert_eq!(cfg.lr, 0.02);
+        assert_eq!(cfg.nl_gamma, 1.05);
+        assert!(!cfg.modulewise_lr);
+    }
+
+    #[test]
+    fn config_rejects_bad_lines() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.apply_text("nonsense line").is_err());
+        assert!(cfg.apply_text("unknown_key = 3").is_err());
+        assert!(cfg.apply_text("steps = many").is_err());
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut cfg = TrainConfig::default();
+        cfg.preset = "nope".into();
+        assert!(cfg.validate().is_err());
+        cfg.preset = "nano".into();
+        cfg.validate().unwrap();
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
+        cfg.steps = 10;
+        // nano width 160: 160 % 2^6 != 0 -> invalid level.
+        cfg.optimizer = OptSpec::Gwt { level: 6 };
+        assert!(cfg.validate().is_err());
+        cfg.optimizer = OptSpec::Gwt { level: 5 };
+        cfg.validate().unwrap();
+    }
+}

@@ -1,0 +1,210 @@
+//! Model presets — an exact mirror of `python/compile/model.py::PRESETS`.
+//!
+//! `runtime::Manifest::check_preset` asserts the two sides agree, so a
+//! drift between this file and the Python source fails fast at load.
+
+use anyhow::{bail, Result};
+
+use crate::memory::ParamShape;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arch {
+    Llama,
+    Gpt,
+    Qwen,
+    Bert,
+}
+
+impl Arch {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Llama => "llama",
+            Arch::Gpt => "gpt",
+            Arch::Qwen => "qwen",
+            Arch::Bert => "bert",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "llama" => Arch::Llama,
+            "gpt" => Arch::Gpt,
+            "qwen" => Arch::Qwen,
+            "bert" => Arch::Bert,
+            other => bail!("unknown arch '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+pub const PRESETS: &[ModelPreset] = &[
+    ModelPreset { name: "nano", arch: Arch::Llama, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 64, batch: 8 },
+    ModelPreset { name: "micro", arch: Arch::Llama, vocab: 256, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 320, seq_len: 64, batch: 8 },
+    ModelPreset { name: "small", arch: Arch::Llama, vocab: 256, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 672, seq_len: 128, batch: 8 },
+    ModelPreset { name: "nano-s128", arch: Arch::Llama, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 128, batch: 4 },
+    ModelPreset { name: "nano-s256", arch: Arch::Llama, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 256, batch: 2 },
+    ModelPreset { name: "gpt-nano", arch: Arch::Gpt, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 64, batch: 8 },
+    ModelPreset { name: "bert-nano", arch: Arch::Bert, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 64, batch: 8 },
+    ModelPreset { name: "qwen-nano", arch: Arch::Qwen, vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 160, seq_len: 64, batch: 8 },
+    ModelPreset { name: "ft-micro", arch: Arch::Llama, vocab: 256, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 320, seq_len: 64, batch: 8 },
+];
+
+pub fn find(name: &str) -> Result<&'static ModelPreset> {
+    PRESETS
+        .iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset '{name}'"))
+}
+
+impl ModelPreset {
+    pub fn tied(&self) -> bool {
+        self.arch == Arch::Qwen
+    }
+
+    /// Parameter inventory, sorted by name — must match
+    /// `model.param_specs` (the manifest check enforces it).
+    pub fn param_shapes(&self) -> Vec<ParamShape> {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let mut out = vec![ParamShape {
+            name: "tok_emb".into(),
+            shape: vec![v, d],
+            eligible: false,
+        }];
+        if !self.tied() {
+            out.push(ParamShape { name: "lm_head".into(), shape: vec![d, v], eligible: false });
+        }
+        if self.arch == Arch::Gpt {
+            out.push(ParamShape { name: "pos_emb".into(), shape: vec![self.seq_len, d], eligible: false });
+        }
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i:02}.");
+            for w in ["wq", "wk", "wv", "wo"] {
+                out.push(ParamShape {
+                    name: format!("{p}attn.{w}"),
+                    shape: vec![d, d],
+                    eligible: true,
+                });
+            }
+            if self.arch == Arch::Gpt {
+                out.push(ParamShape { name: format!("{p}mlp.up"), shape: vec![d, f], eligible: true });
+                out.push(ParamShape { name: format!("{p}mlp.down"), shape: vec![f, d], eligible: true });
+                for nrm in ["norm1", "norm1b", "norm2", "norm2b"] {
+                    out.push(ParamShape { name: format!("{p}{nrm}"), shape: vec![d], eligible: false });
+                }
+            } else {
+                out.push(ParamShape { name: format!("{p}mlp.gate"), shape: vec![d, f], eligible: true });
+                out.push(ParamShape { name: format!("{p}mlp.up"), shape: vec![d, f], eligible: true });
+                out.push(ParamShape { name: format!("{p}mlp.down"), shape: vec![f, d], eligible: true });
+                out.push(ParamShape { name: format!("{p}norm1"), shape: vec![d], eligible: false });
+                out.push(ParamShape { name: format!("{p}norm2"), shape: vec![d], eligible: false });
+            }
+        }
+        out.push(ParamShape { name: "final_norm".into(), shape: vec![d], eligible: false });
+        if self.arch == Arch::Gpt {
+            out.push(ParamShape { name: "final_normb".into(), shape: vec![d], eligible: false });
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.param_shapes().iter().map(|p| p.numel()).sum()
+    }
+
+    /// Distinct shapes of GWT-eligible matrices (for artifact lookup).
+    pub fn gwt_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes: Vec<(usize, usize)> = self
+            .param_shapes()
+            .iter()
+            .filter(|p| p.eligible)
+            .map(|p| (p.shape[0], p.shape[1]))
+            .collect();
+        shapes.sort();
+        shapes.dedup();
+        shapes
+    }
+
+    /// Tokens per optimizer step (batch x seq), the paper's unit for
+    /// throughput accounting.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for p in PRESETS {
+            assert_eq!(find(p.name).unwrap().name, p.name);
+        }
+        assert!(find("nope").is_err());
+    }
+
+    #[test]
+    fn nano_param_count_matches_python() {
+        // nano llama: 21 tensors (3 globals + 2 layers x 9).
+        let p = find("nano").unwrap();
+        assert_eq!(p.param_shapes().len(), 21);
+        // ~126k params.
+        let total = p.total_params();
+        assert!(total > 100_000 && total < 200_000, "{total}");
+    }
+
+    #[test]
+    fn shapes_sorted_by_name() {
+        for p in PRESETS {
+            let shapes = p.param_shapes();
+            let names: Vec<&String> = shapes.iter().map(|s| &s.name).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn gwt_shapes_nano() {
+        let p = find("nano").unwrap();
+        assert_eq!(p.gwt_shapes(), vec![(64, 64), (64, 160), (160, 64)]);
+    }
+
+    #[test]
+    fn qwen_tied_no_lm_head() {
+        let p = find("qwen-nano").unwrap();
+        assert!(p.tied());
+        assert!(!p.param_shapes().iter().any(|s| s.name == "lm_head"));
+    }
+
+    #[test]
+    fn gpt_has_pos_emb_and_biases() {
+        let p = find("gpt-nano").unwrap();
+        let names: Vec<String> =
+            p.param_shapes().iter().map(|s| s.name.clone()).collect();
+        assert!(names.contains(&"pos_emb".to_string()));
+        assert!(names.contains(&"layers.00.norm1b".to_string()));
+        assert!(names.contains(&"final_normb".to_string()));
+    }
+
+    #[test]
+    fn seqlen_variants_conserve_tokens_per_batch() {
+        let a = find("nano").unwrap().tokens_per_batch();
+        let b = find("nano-s128").unwrap().tokens_per_batch();
+        let c = find("nano-s256").unwrap().tokens_per_batch();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+}

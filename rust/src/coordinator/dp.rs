@@ -1,0 +1,89 @@
+//! Data-parallel gradient combine.
+//!
+//! Stand-in for the paper's 4–32-GPU DDP runs (DESIGN.md substitution
+//! table): each logical worker owns a disjoint data shard; per
+//! optimizer step every worker contributes one microbatch gradient
+//! and the shards are combined with the tree allreduce from `pool`.
+//! Execution itself is round-robin on the shared single PJRT CPU
+//! client (the `xla` crate client is not Send, and this box has one
+//! core — the *topology* is what the coordinator logic needs to get
+//! right; transport is shared memory).
+
+use crate::data::{DataLoader, Split};
+use crate::pool::allreduce_mean;
+
+/// Per-worker state: its shard of the stream.
+pub struct DpGroup {
+    pub shards: Vec<DataLoader>,
+}
+
+impl DpGroup {
+    pub fn new(loader: &DataLoader, workers: usize) -> Self {
+        assert!(workers >= 1);
+        let shards = (0..workers).map(|w| loader.shard(w, workers)).collect();
+        DpGroup { shards }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Draw one training microbatch per worker.
+    pub fn draw(&mut self) -> Vec<crate::data::Batch> {
+        self.shards.iter_mut().map(|s| s.next_batch(Split::Train)).collect()
+    }
+}
+
+/// Combine per-worker per-param gradients: input
+/// `worker_grads[w][p]` flat data; returns averaged `[p]`.
+pub fn combine_grads(worker_grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
+    let workers = worker_grads.len();
+    assert!(workers >= 1);
+    if workers == 1 {
+        return worker_grads.into_iter().next().unwrap();
+    }
+    let n_params = worker_grads[0].len();
+    let mut out = Vec::with_capacity(n_params);
+    // Transpose to per-param shard lists, allreduce each.
+    let mut per_worker: Vec<std::vec::IntoIter<Vec<f32>>> =
+        worker_grads.into_iter().map(|w| w.into_iter()).collect();
+    for _ in 0..n_params {
+        let shards: Vec<Vec<f32>> =
+            per_worker.iter_mut().map(|it| it.next().unwrap()).collect();
+        out.push(allreduce_mean(shards));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusSpec, SyntheticCorpus};
+
+    #[test]
+    fn group_draws_worker_count_batches() {
+        let mut c = SyntheticCorpus::new(CorpusSpec::default());
+        let loader = DataLoader::new(c.generate_tokens(30_000), 2, 16, 0);
+        let mut g = DpGroup::new(&loader, 3);
+        let batches = g.draw();
+        assert_eq!(batches.len(), 3);
+        // Shards differ.
+        assert_ne!(batches[0].tokens, batches[1].tokens);
+    }
+
+    #[test]
+    fn combine_grads_averages() {
+        let w0 = vec![vec![1.0, 2.0], vec![10.0]];
+        let w1 = vec![vec![3.0, 6.0], vec![20.0]];
+        let avg = combine_grads(vec![w0, w1]);
+        assert_eq!(avg[0], vec![2.0, 4.0]);
+        assert_eq!(avg[1], vec![15.0]);
+    }
+
+    #[test]
+    fn single_worker_passthrough() {
+        let w0 = vec![vec![1.0, 2.0]];
+        let avg = combine_grads(vec![w0.clone()]);
+        assert_eq!(avg, w0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Training coordinator: the L3 event loop.
+//!
+//! Owns parameters (host-resident f32 tensors), the optimizer bank
+//! (module-wise routing per the paper), the LR schedule, gradient
+//! accumulation, the data-parallel gradient combine, metrics, and
+//! checkpointing. Every forward/backward is one PJRT call into the
+//! AOT `train_step_<preset>` artifact — Python never runs here.
+
+pub mod dp;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::CosineSchedule;
+pub use trainer::{TrainOutcome, Trainer};

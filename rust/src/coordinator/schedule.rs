@@ -1,0 +1,78 @@
+//! Learning-rate schedule: linear warmup (first `warmup_frac` of
+//! steps) into cosine annealing — the paper's setup for all
+//! pretraining runs (Appendix C).
+
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Floor as a fraction of base lr (paper uses ~0.1 implicitly via
+    /// cosine-to-zero; we keep a small floor for numeric hygiene).
+    pub min_frac: f32,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f32, total_steps: usize, warmup_frac: f32) -> Self {
+        let warmup_steps =
+            ((total_steps as f32) * warmup_frac).round() as usize;
+        CosineSchedule { base_lr, warmup_steps, total_steps, min_frac: 0.0 }
+    }
+
+    /// lr at 0-based step `t`.
+    pub fn lr(&self, t: usize) -> f32 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if t < self.warmup_steps {
+            // Linear 1/w .. 1.
+            return self.base_lr * (t + 1) as f32 / self.warmup_steps.max(1) as f32;
+        }
+        let span = (self.total_steps - self.warmup_steps).max(1);
+        let progress = ((t - self.warmup_steps) as f32 / span as f32).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.base_lr * (self.min_frac + (1.0 - self.min_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1.0, 100, 0.1);
+        assert_eq!(s.warmup_steps, 10);
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = CosineSchedule::new(2.0, 100, 0.1);
+        assert!((s.lr(10) - 2.0).abs() < 0.01);
+        let mid = s.lr(55);
+        assert!(mid < 2.0 && mid > 0.0);
+        assert!(s.lr(99) < 0.01);
+        // Monotone decreasing after warmup.
+        let mut prev = s.lr(10);
+        for t in 11..100 {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-6, "t={t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_ok() {
+        let s = CosineSchedule::new(1.0, 10, 0.0);
+        assert!((s.lr(0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn past_end_clamps() {
+        let s = CosineSchedule::new(1.0, 10, 0.0);
+        assert!(s.lr(1000) >= 0.0);
+    }
+}

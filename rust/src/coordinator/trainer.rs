@@ -1,0 +1,302 @@
+//! The training loop.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::dp::{combine_grads, DpGroup};
+use super::schedule::CosineSchedule;
+use crate::checkpoint::Checkpoint;
+use crate::config::{presets, TrainConfig};
+use crate::data::DataLoader;
+use crate::memory::ParamShape;
+use crate::metrics::{LossCurve, Throughput};
+use crate::optim::{build_optimizers, total_state_bytes, ParamOptimizer};
+use crate::runtime::{
+    literal_f32, literal_tokens, scalar_from_literal, Runtime,
+};
+use crate::tensor::Tensor;
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    runtime: Rc<Runtime>,
+    preset: &'static presets::ModelPreset,
+    shapes: Vec<ParamShape>,
+    pub params: Vec<Tensor>,
+    bank: Vec<ParamOptimizer>,
+    dp: DpGroup,
+    schedule: CosineSchedule,
+    step: usize,
+    pub curve: LossCurve,
+    pub throughput: Throughput,
+    tokens_seen: usize,
+    /// §Perf L3-2: executables resolved once at construction instead
+    /// of a key-format + map lookup on every microbatch.
+    train_exec: Rc<crate::runtime::Exec>,
+    eval_exec: Rc<crate::runtime::Exec>,
+}
+
+/// Summary of a finished run (consumed by benches / examples).
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub label: String,
+    pub final_loss: f32,
+    pub final_ppl: f32,
+    pub valid_loss: f32,
+    pub valid_ppl: f32,
+    pub tokens_per_sec: f64,
+    pub state_bytes: usize,
+    pub curve: LossCurve,
+}
+
+impl Trainer {
+    pub fn new(
+        runtime: Rc<Runtime>,
+        cfg: TrainConfig,
+        loader: &DataLoader,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        let preset = presets::find(&cfg.preset)?;
+        runtime
+            .manifest
+            .check_preset(preset)
+            .context("preset drift between rust and aot.py")?;
+        let shapes = preset.param_shapes();
+        let mut rng = crate::rng::Rng::new(cfg.seed);
+        let params: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| init_param(&s.name, &s.shape, &mut rng))
+            .collect();
+        let bank = build_optimizers(&shapes, &cfg, Some(runtime.clone()))?;
+        let dp = DpGroup::new(loader, cfg.dp_workers);
+        let schedule = CosineSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac);
+        let label = format!("{}_{}", cfg.preset, cfg.optimizer.label());
+        let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
+        let eval_exec = runtime.exec(&format!("eval_loss_{}", cfg.preset))?;
+        Ok(Trainer {
+            cfg,
+            runtime,
+            preset,
+            shapes,
+            params,
+            bank,
+            dp,
+            schedule,
+            step: 0,
+            curve: LossCurve::new(&label),
+            throughput: Throughput::new(),
+            tokens_seen: 0,
+            train_exec,
+            eval_exec,
+        })
+    }
+
+    pub fn preset(&self) -> &'static presets::ModelPreset {
+        self.preset
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+
+    pub fn shapes(&self) -> &[ParamShape] {
+        &self.shapes
+    }
+
+    pub fn optimizer_state_bytes(&self) -> usize {
+        total_state_bytes(&self.bank)
+    }
+
+    /// Execute the `train_step` artifact for one token batch; returns
+    /// (loss, per-param gradient data).
+    fn forward_backward(&self, tokens: &[i32]) -> Result<(f32, Vec<Vec<f32>>)> {
+        let exec = &self.train_exec;
+        let mut inputs = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            inputs.push(literal_f32(p)?);
+        }
+        inputs.push(literal_tokens(
+            tokens,
+            self.preset.batch,
+            self.preset.seq_len,
+        )?);
+        let outs = exec.run(&inputs)?;
+        let loss = scalar_from_literal(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// One optimizer step: grad_accum x dp_workers microbatches.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let lr_t = self.schedule.lr(self.step);
+        let mut acc: Vec<Vec<f32>> =
+            self.shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
+        let mut loss_sum = 0.0f32;
+        let mut micro_count = 0usize;
+        for _ in 0..self.cfg.grad_accum {
+            let batches = self.dp.draw();
+            let mut worker_grads = Vec::with_capacity(batches.len());
+            for b in &batches {
+                let (loss, grads) = self.forward_backward(&b.tokens)?;
+                loss_sum += loss;
+                micro_count += 1;
+                self.tokens_seen += b.tokens.len();
+                self.throughput.add_tokens(b.tokens.len());
+                worker_grads.push(grads);
+            }
+            let combined = combine_grads(worker_grads);
+            for (a, g) in acc.iter_mut().zip(combined) {
+                for (x, y) in a.iter_mut().zip(&g) {
+                    *x += *y;
+                }
+            }
+        }
+        let inv = 1.0 / self.cfg.grad_accum as f32;
+        for ((w, opt), (g, s)) in self
+            .params
+            .iter_mut()
+            .zip(&mut self.bank)
+            .zip(acc.into_iter().zip(&self.shapes))
+        {
+            let mut gd = g;
+            if self.cfg.grad_accum > 1 {
+                for x in &mut gd {
+                    *x *= inv;
+                }
+            }
+            let gt = Tensor::new(&s.shape, gd);
+            opt.apply(w, &gt, lr_t);
+        }
+        let mean_loss = loss_sum / micro_count.max(1) as f32;
+        self.step += 1;
+        self.curve.push(
+            self.step,
+            mean_loss,
+            self.tokens_seen,
+            self.throughput.elapsed_secs(),
+        );
+        Ok(mean_loss)
+    }
+
+    /// Mean validation loss via the `eval_loss` artifact.
+    pub fn eval_loss(&self, loader: &DataLoader, max_batches: usize) -> Result<f32> {
+        let exec = &self.eval_exec;
+        let batches = loader.valid_batches(max_batches);
+        anyhow::ensure!(!batches.is_empty(), "no validation batches");
+        let mut total = 0.0f32;
+        for b in &batches {
+            let mut inputs = Vec::with_capacity(self.params.len() + 1);
+            for p in &self.params {
+                inputs.push(literal_f32(p)?);
+            }
+            inputs.push(literal_tokens(
+                &b.tokens,
+                self.preset.batch,
+                self.preset.seq_len,
+            )?);
+            let outs = exec.run(&inputs)?;
+            total += scalar_from_literal(&outs[0])?;
+        }
+        Ok(total / batches.len() as f32)
+    }
+
+    /// Run the configured number of steps; returns the outcome
+    /// summary. `verbose` prints a progress line every `eval_every`.
+    pub fn run(&mut self, loader: &DataLoader, verbose: bool) -> Result<TrainOutcome> {
+        for _ in 0..self.cfg.steps {
+            let loss = self.train_step()?;
+            if verbose && self.step % self.cfg.eval_every.max(1) == 0 {
+                println!(
+                    "step {:>5}  loss {:.4}  ppl {:.2}  lr {:.5}  tok/s {:.0}",
+                    self.step,
+                    loss,
+                    loss.exp(),
+                    self.schedule.lr(self.step.saturating_sub(1)),
+                    self.throughput.tokens_per_sec()
+                );
+            }
+        }
+        let valid_loss = self.eval_loss(loader, 8)?;
+        let final_loss = self.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
+        Ok(TrainOutcome {
+            label: self.curve.label.clone(),
+            final_loss,
+            final_ppl: final_loss.exp(),
+            valid_loss,
+            valid_ppl: valid_loss.exp(),
+            tokens_per_sec: self.throughput.tokens_per_sec(),
+            state_bytes: self.optimizer_state_bytes(),
+            curve: self.curve.clone(),
+        })
+    }
+
+    /// Outcome summary for the steps run so far (used by benches that
+    /// drive `train_step` manually for mid-run checkpoints).
+    pub fn run_summary(&self, loader: &DataLoader) -> TrainOutcome {
+        let valid_loss = self.eval_loss(loader, 8).unwrap_or(f32::NAN);
+        let final_loss = self.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
+        TrainOutcome {
+            label: self.curve.label.clone(),
+            final_loss,
+            final_ppl: final_loss.exp(),
+            valid_loss,
+            valid_ppl: valid_loss.exp(),
+            tokens_per_sec: self.throughput.tokens_per_sec(),
+            state_bytes: self.optimizer_state_bytes(),
+            curve: self.curve.clone(),
+        }
+    }
+
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let mut ck = Checkpoint::new(self.step as u64);
+        for (s, p) in self.shapes.iter().zip(&self.params) {
+            ck.insert(&s.name, p.clone());
+        }
+        ck.save(path)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        for (s, p) in self.shapes.iter().zip(self.params.iter_mut()) {
+            let t = ck
+                .tensors
+                .get(&s.name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing {}", s.name))?;
+            anyhow::ensure!(t.shape() == s.shape, "shape mismatch for {}", s.name);
+            *p = t.clone();
+        }
+        self.step = ck.step as usize;
+        Ok(())
+    }
+}
+
+/// Parameter init mirroring `model.init_params`: matrices He-scaled
+/// normal, 1D bias-like (name ends in 'b') zeros, other 1D ones.
+pub fn init_param(name: &str, shape: &[usize], rng: &mut crate::rng::Rng) -> Tensor {
+    if shape.len() == 1 {
+        if name.ends_with('b') {
+            Tensor::zeros(shape)
+        } else {
+            Tensor::full(shape, 1.0)
+        }
+    } else {
+        Tensor::he_init(shape, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_param_kinds() {
+        let mut rng = crate::rng::Rng::new(0);
+        assert_eq!(init_param("norm1", &[4], &mut rng).data(), &[1.0; 4]);
+        assert_eq!(init_param("norm1b", &[4], &mut rng).data(), &[0.0; 4]);
+        let w = init_param("attn.wq", &[8, 8], &mut rng);
+        assert!(w.frob_norm() > 0.0);
+    }
+}

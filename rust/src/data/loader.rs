@@ -1,0 +1,183 @@
+//! Batching + sharding over a token stream.
+//!
+//! The stream is split once into train/valid by position (last 10% is
+//! validation, like a held-out C4 shard). Batches are `(B, L)` i32
+//! token windows sampled at deterministic pseudo-random offsets, so
+//! two runs with the same seed see identical data — and data-parallel
+//! workers draw from disjoint offset streams (`shard`).
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Split {
+    Train,
+    Valid,
+}
+
+/// One `(batch, seq_len)` token batch, row-major.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Batch {
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.tokens[b * self.seq_len..(b + 1) * self.seq_len]
+    }
+}
+
+#[derive(Clone)]
+pub struct DataLoader {
+    stream: std::sync::Arc<Vec<i32>>,
+    valid_start: usize,
+    batch: usize,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl DataLoader {
+    pub fn new(stream: Vec<i32>, batch: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(
+            stream.len() >= 16 * seq_len,
+            "stream too short: {} tokens for seq_len {}",
+            stream.len(),
+            seq_len
+        );
+        let valid_start = stream.len() * 9 / 10;
+        DataLoader {
+            stream: std::sync::Arc::new(stream),
+            valid_start,
+            batch,
+            seq_len,
+            rng: Rng::with_stream(seed, 0xda7a),
+        }
+    }
+
+    /// Create a shard view for DP worker `w` of `n`: same data, an
+    /// independent offset stream per worker.
+    pub fn shard(&self, w: usize, n: usize) -> DataLoader {
+        assert!(w < n);
+        let mut d = self.clone();
+        d.rng = Rng::with_stream(self.rng.clone().next_u64(), w as u64 + 1);
+        d
+    }
+
+    fn range(&self, split: Split) -> (usize, usize) {
+        match split {
+            Split::Train => (0, self.valid_start),
+            Split::Valid => (self.valid_start, self.stream.len()),
+        }
+    }
+
+    /// Sample the next batch for `split`.
+    pub fn next_batch(&mut self, split: Split) -> Batch {
+        let (lo, hi) = self.range(split);
+        let max_start = hi - lo - self.seq_len;
+        let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let start = lo + self.rng.usize_below(max_start.max(1));
+            tokens.extend_from_slice(&self.stream[start..start + self.seq_len]);
+        }
+        Batch { tokens, batch: self.batch, seq_len: self.seq_len }
+    }
+
+    /// Deterministic sequential validation batches covering the split.
+    pub fn valid_batches(&self, max_batches: usize) -> Vec<Batch> {
+        let (lo, hi) = self.range(Split::Valid);
+        let mut out = Vec::new();
+        let mut pos = lo;
+        while out.len() < max_batches && pos + self.batch * self.seq_len <= hi {
+            let mut tokens = Vec::with_capacity(self.batch * self.seq_len);
+            for _ in 0..self.batch {
+                tokens.extend_from_slice(&self.stream[pos..pos + self.seq_len]);
+                pos += self.seq_len;
+            }
+            out.push(Batch { tokens, batch: self.batch, seq_len: self.seq_len });
+        }
+        out
+    }
+
+    pub fn tokens_total(&self) -> usize {
+        self.stream.len()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusSpec, SyntheticCorpus};
+
+    fn loader(seed: u64) -> DataLoader {
+        let mut c = SyntheticCorpus::new(CorpusSpec::default());
+        DataLoader::new(c.generate_tokens(40_000), 4, 32, seed)
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut d = loader(1);
+        let b = d.next_batch(Split::Train);
+        assert_eq!(b.tokens.len(), 4 * 32);
+        assert_eq!(b.row(3).len(), 32);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = loader(7);
+        let mut b = loader(7);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch(Split::Train).tokens, b.next_batch(Split::Train).tokens);
+        }
+    }
+
+    #[test]
+    fn train_valid_disjoint() {
+        let mut d = loader(3);
+        let valid_start = d.valid_start;
+        // Train batches never read past valid_start.
+        for _ in 0..50 {
+            let _ = d.next_batch(Split::Train);
+        }
+        // Structural check: max train offset + seq_len <= valid_start.
+        assert!(valid_start + d.seq_len <= d.tokens_total());
+        let vb = d.valid_batches(2);
+        assert_eq!(vb.len(), 2);
+    }
+
+    #[test]
+    fn valid_batches_are_stable() {
+        let d1 = loader(5);
+        let d2 = loader(9); // different rng seed, same data
+        let v1 = d1.valid_batches(3);
+        let v2 = d2.valid_batches(3);
+        for (a, b) in v1.iter().zip(&v2) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn shards_draw_different_batches() {
+        let d = loader(11);
+        let mut s0 = d.shard(0, 2);
+        let mut s1 = d.shard(1, 2);
+        assert_ne!(
+            s0.next_batch(Split::Train).tokens,
+            s1.next_batch(Split::Train).tokens
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "stream too short")]
+    fn rejects_tiny_stream() {
+        DataLoader::new(vec![1; 100], 4, 32, 0);
+    }
+}

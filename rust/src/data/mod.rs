@@ -1,0 +1,62 @@
+//! Data pipeline: synthetic corpus generation, byte-level tokenizer,
+//! sharded batching. Stands in for the paper's C4 English corpus (see
+//! DESIGN.md substitution table): what the optimizer comparison needs
+//! is a next-token task with learnable structure, which the Markov
+//! word-model below provides (per-token entropy well under log|V|).
+
+pub mod corpus;
+pub mod loader;
+
+pub use corpus::{CorpusSpec, SyntheticCorpus};
+pub use loader::{Batch, DataLoader, Split};
+
+/// Byte-level tokenizer. Ids 0 (pad) and 1 (mask) are reserved; the
+/// corpus generator only emits printable ASCII so the reservation is
+/// structural, not enforced per call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+pub const PAD_ID: i32 = 0;
+pub const MASK_ID: i32 = 1; // mirrors model.py BERT_MASK_ID
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&i| {
+                if (2..256).contains(&i) {
+                    Some(i as u8 as char)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let text = "the quick brown fox.";
+        let ids = t.encode(text);
+        assert_eq!(ids.len(), text.len());
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn decode_skips_reserved() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[PAD_ID, 104, 105, MASK_ID]), "hi");
+    }
+}

@@ -1,0 +1,215 @@
+//! Fine-tuning loop over the classification artifacts
+//! (`cls_train_step_<preset>_k<K>` / `cls_logits_<preset>_k<K>`).
+//!
+//! Mirrors the paper's fine-tuning protocol (§IV-B): the selected
+//! memory-efficient method is applied to *all* linear layers (not
+//! just attention/MLP), a fixed small number of epochs, accuracy on a
+//! held-out test split, best-of over a small lr sweep.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{presets, TrainConfig};
+use crate::coordinator::trainer::init_param;
+use crate::coordinator::CosineSchedule;
+use crate::memory::ParamShape;
+use crate::optim::{build_optimizers, ParamOptimizer};
+use crate::runtime::{
+    literal_f32, literal_labels, literal_tokens, scalar_from_literal, Runtime,
+};
+use crate::tensor::Tensor;
+
+use super::tasks::ClsTask;
+
+pub struct FineTuner {
+    runtime: Rc<Runtime>,
+    cfg: TrainConfig,
+    preset: &'static presets::ModelPreset,
+    shapes: Vec<ParamShape>, // backbone + zcls.head (sorted order)
+    params: Vec<Tensor>,
+    bank: Vec<ParamOptimizer>,
+    classes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct FtOutcome {
+    pub task: String,
+    pub method: String,
+    pub accuracy: f64,
+    pub final_loss: f32,
+    pub state_bytes: usize,
+}
+
+impl FineTuner {
+    /// `backbone`: optional pretrained weights (name -> tensor); falls
+    /// back to fresh init (fine for the synthetic suites — both
+    /// regimes are compared under identical backbones).
+    pub fn new(
+        runtime: Rc<Runtime>,
+        mut cfg: TrainConfig,
+        classes: usize,
+        backbone: Option<&std::collections::BTreeMap<String, Tensor>>,
+    ) -> Result<FineTuner> {
+        let preset = presets::find(&cfg.preset)?;
+        // Fine-tuning applies the method to ALL linear layers: mark
+        // every 2D parameter eligible (paper §IV-B "all linear
+        // layers"), except embeddings which stay on Adam.
+        let mut shapes = preset.param_shapes();
+        for s in &mut shapes {
+            if s.shape.len() == 2 && !s.name.contains("emb") && !s.name.contains("head")
+            {
+                s.eligible = true;
+            }
+        }
+        // Classification head participates as a plain Adam param.
+        shapes.push(ParamShape {
+            name: "zcls.head".into(),
+            shape: vec![preset.d_model, classes],
+            eligible: false,
+        });
+        shapes.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let mut rng = crate::rng::Rng::new(cfg.seed);
+        let params: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                if s.name == "zcls.head" {
+                    // Zero head: uniform logits at start.
+                    return Tensor::zeros(&s.shape);
+                }
+                if let Some(bb) = backbone {
+                    if let Some(t) = bb.get(&s.name) {
+                        return t.clone();
+                    }
+                }
+                init_param(&s.name, &s.shape, &mut rng)
+            })
+            .collect();
+        // Fine-tuning disables the NL limiter (paper uses it for
+        // pretraining stability only).
+        cfg.nl_gamma = 0.0;
+        let bank = build_optimizers(&shapes, &cfg, Some(runtime.clone()))?;
+        Ok(FineTuner { runtime, cfg, preset, shapes, params, bank, classes })
+    }
+
+    fn run_batch(
+        &mut self,
+        tokens: &[i32],
+        labels: &[i32],
+        lr_t: f32,
+    ) -> Result<f32> {
+        let key = format!(
+            "cls_train_step_{}_k{}",
+            self.cfg.preset, self.classes
+        );
+        let exec = self.runtime.exec(&key).with_context(|| {
+            format!("fine-tune artifact for k={} missing", self.classes)
+        })?;
+        let mut inputs = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            inputs.push(literal_f32(p)?);
+        }
+        inputs.push(literal_tokens(
+            tokens,
+            self.preset.batch,
+            self.preset.seq_len,
+        )?);
+        inputs.push(literal_labels(labels)?);
+        let outs = exec.run(&inputs)?;
+        let loss = scalar_from_literal(&outs[0])?;
+        for (i, (w, opt)) in
+            self.params.iter_mut().zip(&mut self.bank).enumerate()
+        {
+            let g = Tensor::new(
+                &self.shapes[i].shape,
+                outs[1 + i].to_vec::<f32>()?,
+            );
+            opt.apply(w, &g, lr_t);
+        }
+        Ok(loss)
+    }
+
+    /// Fine-tune on `task.train` for `epochs`, return test accuracy.
+    pub fn run(&mut self, task: &ClsTask, epochs: usize) -> Result<FtOutcome> {
+        let bs = self.preset.batch;
+        anyhow::ensure!(
+            task.spec.seq_len == self.preset.seq_len,
+            "task seq_len {} != preset {}",
+            task.spec.seq_len,
+            self.preset.seq_len
+        );
+        let steps_per_epoch = task.train.len() / bs;
+        let schedule = CosineSchedule::new(
+            self.cfg.lr,
+            epochs * steps_per_epoch,
+            self.cfg.warmup_frac,
+        );
+        let mut step = 0;
+        let mut last_loss = f32::NAN;
+        for _ in 0..epochs {
+            for chunk in task.train.chunks_exact(bs) {
+                let mut tokens = Vec::with_capacity(bs * self.preset.seq_len);
+                let mut labels = Vec::with_capacity(bs);
+                for ex in chunk {
+                    tokens.extend_from_slice(&ex.tokens);
+                    labels.push(ex.label);
+                }
+                last_loss =
+                    self.run_batch(&tokens, &labels, schedule.lr(step))?;
+                step += 1;
+            }
+        }
+        let accuracy = self.accuracy(task)?;
+        Ok(FtOutcome {
+            task: task.spec.name.clone(),
+            method: self.cfg.optimizer.label(),
+            accuracy,
+            final_loss: last_loss,
+            state_bytes: self
+                .bank
+                .iter()
+                .map(|b| b.state_bytes())
+                .sum(),
+        })
+    }
+
+    /// Argmax accuracy on the test split via `cls_logits`.
+    pub fn accuracy(&self, task: &ClsTask) -> Result<f64> {
+        let key = format!("cls_logits_{}_k{}", self.cfg.preset, self.classes);
+        let exec = self.runtime.exec(&key)?;
+        let bs = self.preset.batch;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in task.test.chunks_exact(bs) {
+            let mut tokens = Vec::with_capacity(bs * self.preset.seq_len);
+            for ex in chunk {
+                tokens.extend_from_slice(&ex.tokens);
+            }
+            let mut inputs = Vec::with_capacity(self.params.len() + 1);
+            for p in &self.params {
+                inputs.push(literal_f32(p)?);
+            }
+            inputs.push(literal_tokens(
+                &tokens,
+                self.preset.batch,
+                self.preset.seq_len,
+            )?);
+            let outs = exec.run(&inputs)?;
+            let logits = outs[0].to_vec::<f32>()?;
+            for (bi, ex) in chunk.iter().enumerate() {
+                let row = &logits[bi * self.classes..(bi + 1) * self.classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                correct += (pred == ex.label) as usize;
+                total += 1;
+            }
+        }
+        anyhow::ensure!(total > 0, "no test examples consumed");
+        Ok(correct as f64 / total as f64)
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: perplexity, plus the synthetic fine-tuning
+//! suites standing in for MMLU (Table V) and GLUE (Table VI) — see
+//! DESIGN.md's substitution table.
+
+pub mod finetune;
+pub mod tasks;
+
+pub use finetune::{FineTuner, FtOutcome};
+pub use tasks::{ClsExample, ClsTask, TaskSpec};

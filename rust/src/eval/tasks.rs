@@ -1,0 +1,215 @@
+//! Synthetic classification tasks (MMLU/GLUE stand-ins).
+//!
+//! Each task plants class-dependent marker words into otherwise
+//! corpus-like text: class k's sequences contain words drawn from
+//! lexicon stratum k with elevated probability. Solvable from pooled
+//! token statistics (so a small backbone + linear head can learn it),
+//! but not trivially: markers share bytes with the background text
+//! and appear at random positions. Difficulty is controlled per task
+//! via marker rate — giving the GLUE-like suite a spread of
+//! accuracies like the paper's Table VI.
+
+use crate::data::{CorpusSpec, SyntheticCorpus};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub classes: usize,
+    /// Probability a word position carries a class marker.
+    pub marker_rate: f64,
+    pub seq_len: usize,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClsExample {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+pub struct ClsTask {
+    pub spec: TaskSpec,
+    pub train: Vec<ClsExample>,
+    pub test: Vec<ClsExample>,
+}
+
+impl ClsTask {
+    pub fn generate(spec: TaskSpec) -> ClsTask {
+        let mut rng = Rng::new(spec.seed);
+        let mut corpus = SyntheticCorpus::new(CorpusSpec {
+            seed: spec.seed ^ 0xc0ffee,
+            ..Default::default()
+        });
+        // Class markers: distinct words, one stratum per class.
+        let markers: Vec<Vec<String>> = (0..spec.classes)
+            .map(|k| {
+                (0..4)
+                    .map(|j| format!("zz{}{}", (b'a' + k as u8) as char, j))
+                    .collect()
+            })
+            .collect();
+        let gen = |rng: &mut Rng, corpus: &mut SyntheticCorpus, n| {
+            (0..n)
+                .map(|_| {
+                    let label = rng.usize_below(spec.classes) as i32;
+                    let base = corpus.generate(spec.seq_len * 2);
+                    let words: Vec<&str> = base.split(' ').collect();
+                    let mut text = String::new();
+                    for w in words {
+                        if text.len() >= spec.seq_len {
+                            break;
+                        }
+                        if rng.f64() < spec.marker_rate {
+                            let ms = &markers[label as usize];
+                            text.push_str(&ms[rng.usize_below(ms.len())]);
+                        } else {
+                            text.push_str(w);
+                        }
+                        text.push(' ');
+                    }
+                    let mut tokens: Vec<i32> =
+                        text.bytes().take(spec.seq_len).map(|b| b as i32).collect();
+                    tokens.resize(spec.seq_len, b' ' as i32);
+                    ClsExample { tokens, label }
+                })
+                .collect::<Vec<_>>()
+        };
+        let train = gen(&mut rng, &mut corpus, spec.train_examples);
+        let test = gen(&mut rng, &mut corpus, spec.test_examples);
+        ClsTask { spec, train, test }
+    }
+
+    /// Majority-class accuracy floor (for sanity margins in tests).
+    pub fn chance(&self) -> f64 {
+        1.0 / self.spec.classes as f64
+    }
+}
+
+/// The MMLU-like suite: 4 subject-style tasks, 4 choices each
+/// (STEM / Social Sciences / Humanities / Other in the paper).
+pub fn mmlu_suite(seq_len: usize, seed: u64) -> Vec<TaskSpec> {
+    ["stem", "social", "humanities", "other"]
+        .iter()
+        .enumerate()
+        .map(|(i, name)| TaskSpec {
+            name: format!("mmlu-{name}"),
+            classes: 4,
+            marker_rate: 0.16 + 0.03 * i as f64,
+            seq_len,
+            train_examples: 192,
+            test_examples: 96,
+            seed: seed ^ ((i as u64 + 1) << 16),
+        })
+        .collect()
+}
+
+/// The GLUE-like suite: 8 tasks with the paper's class counts
+/// (CoLA/SST2/MRPC/RTE/QNLI/QQP binary, MNLI 3-way, STS-B bucketed 5-way).
+pub fn glue_suite(seq_len: usize, seed: u64) -> Vec<TaskSpec> {
+    let defs: &[(&str, usize, f64)] = &[
+        ("cola", 2, 0.06),
+        ("sts-b", 5, 0.12),
+        ("mrpc", 2, 0.09),
+        ("rte", 2, 0.07),
+        ("sst2", 2, 0.11),
+        ("mnli", 3, 0.09),
+        ("qnli", 2, 0.10),
+        ("qqp", 2, 0.10),
+    ];
+    defs.iter()
+        .enumerate()
+        .map(|(i, (name, classes, rate))| TaskSpec {
+            name: (*name).to_string(),
+            classes: *classes,
+            marker_rate: *rate,
+            seq_len,
+            train_examples: 160,
+            test_examples: 80,
+            seed: seed ^ ((i as u64 + 1) << 24),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> TaskSpec {
+        TaskSpec {
+            name: "t".into(),
+            classes: 3,
+            marker_rate: 0.2,
+            seq_len: 32,
+            train_examples: 20,
+            test_examples: 10,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn generates_requested_counts_and_shapes() {
+        let t = ClsTask::generate(tiny_spec());
+        assert_eq!(t.train.len(), 20);
+        assert_eq!(t.test.len(), 10);
+        for ex in t.train.iter().chain(&t.test) {
+            assert_eq!(ex.tokens.len(), 32);
+            assert!((0..3).contains(&ex.label));
+            assert!(ex.tokens.iter().all(|&x| (2..256).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ClsTask::generate(tiny_spec());
+        let b = ClsTask::generate(tiny_spec());
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        assert_eq!(a.train[0].label, b.train[0].label);
+    }
+
+    #[test]
+    fn markers_are_class_informative() {
+        // A trivial marker-counting classifier must beat chance by a
+        // wide margin — otherwise the task is noise and fine-tuning
+        // comparisons would be meaningless.
+        let t = ClsTask::generate(TaskSpec {
+            train_examples: 100,
+            test_examples: 100,
+            ..tiny_spec()
+        });
+        let classify = |ex: &ClsExample| -> i32 {
+            let text: String =
+                ex.tokens.iter().map(|&b| b as u8 as char).collect();
+            let mut best = (0, -1i64);
+            for k in 0..3 {
+                let marker = format!("zz{}", (b'a' + k as u8) as char);
+                let count = text.matches(&marker).count() as i64;
+                if count > best.1 {
+                    best = (k as i32, count);
+                }
+            }
+            best.0
+        };
+        let correct = t
+            .test
+            .iter()
+            .filter(|ex| classify(ex) == ex.label)
+            .count();
+        let acc = correct as f64 / t.test.len() as f64;
+        assert!(acc > 0.7, "marker classifier acc {acc}");
+    }
+
+    #[test]
+    fn suites_have_paper_structure() {
+        let mmlu = mmlu_suite(64, 0);
+        assert_eq!(mmlu.len(), 4);
+        assert!(mmlu.iter().all(|t| t.classes == 4));
+        let glue = glue_suite(64, 0);
+        assert_eq!(glue.len(), 8);
+        assert_eq!(glue.iter().filter(|t| t.classes == 2).count(), 6);
+        assert!(glue.iter().any(|t| t.classes == 3));
+        assert!(glue.iter().any(|t| t.classes == 5));
+    }
+}

@@ -1,0 +1,37 @@
+//! # GWT — Gradient Wavelet Transform training framework
+//!
+//! Rust + JAX + Pallas reproduction of *"Gradient Compression via
+//! Frequency: Wavelet Subspaces Compact Optimizer States"* (Wen et
+//! al., 2025).
+//!
+//! Three layers (see DESIGN.md):
+//! - **L1** Pallas kernels (`python/compile/kernels/`): multi-level
+//!   Haar DWT + fused GWT-Adam state update.
+//! - **L2** JAX models (`python/compile/model.py`): LLaMA/GPT/encoder
+//!   transformers, fwd+bwd lowered once to HLO text.
+//! - **L3** this crate: the training coordinator — config, launcher,
+//!   data pipeline, data-parallel runtime, optimizer routing (GWT +
+//!   all paper baselines), metrics, checkpoints, and the bench
+//!   harness that regenerates every table/figure of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` AOT-lowers
+//! everything; the binary loads `artifacts/*.hlo.txt` via PJRT.
+
+pub mod bench_harness;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod jsonx;
+pub mod linalg;
+pub mod memory;
+pub mod metrics;
+pub mod optim;
+pub mod pool;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod wavelet;

@@ -1,0 +1,395 @@
+//! Linear-algebra substrate for the baseline optimizers.
+//!
+//! GaLore needs a truncated SVD of the gradient, MUON needs
+//! Newton–Schulz orthogonalization, APOLLO needs Gaussian random
+//! projections. None of the image's crates provide these, so they are
+//! implemented here: one-sided Jacobi SVD (accurate and simple at the
+//! 64–1024 sizes our presets use), blocked matmul, and the usual
+//! helpers. Matrices are row-major `&[f32]` with explicit dims, same
+//! as `tensor.rs`.
+
+use crate::rng::Rng;
+
+/// `C = A(mxk) * B(kxn)`, row-major. i-k-j loop order (streams B rows,
+/// auto-vectorizes the inner j loop).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aip * bj;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A^T(mxk->kxm) * B(mxn)` without materializing A^T.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, ap) in arow.iter().enumerate() {
+            if *ap == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * n..(p + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += ap * bj;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A(mxk) * B^T(nxk->kxn)` without materializing B^T.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a[i * n + j];
+        }
+    }
+    out
+}
+
+pub fn frob_norm(a: &[f32]) -> f64 {
+    a.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+/// Truncated SVD result: `U (m x r)`, singular values `s (r)`,
+/// `Vt (r x n)`, with `A ≈ U diag(s) Vt`.
+pub struct Svd {
+    pub u: Vec<f32>,
+    pub s: Vec<f32>,
+    pub vt: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    pub r: usize,
+}
+
+/// One-sided Jacobi SVD (Hestenes). Orthogonalizes the columns of a
+/// working copy of A by plane rotations; column norms converge to the
+/// singular values. O(m n^2) per sweep — the same complexity class
+/// the paper cites for GaLore's SVD, which is exactly the cost its
+/// throughput experiments penalize.
+pub fn svd_jacobi(a: &[f32], m: usize, n: usize, rank: usize) -> Svd {
+    svd_jacobi_sweeps(a, m, n, rank, 30)
+}
+
+/// Jacobi SVD with a sweep budget. §Perf L3-4: GaLore only needs an
+/// approximate dominant subspace (it re-derives it every update_gap
+/// steps anyway), so its refresh uses a reduced budget — full
+/// precision stays the default for tests/analysis.
+pub fn svd_jacobi_sweeps(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    rank: usize,
+    max_sweeps: usize,
+) -> Svd {
+    assert_eq!(a.len(), m * n);
+    let r = rank.min(m.min(n));
+    // Work on the transposed problem if m < n so columns are long.
+    if m < n {
+        let at = transpose(a, m, n);
+        let svd_t = svd_jacobi_sweeps(&at, n, m, r, max_sweeps);
+        // A = (A^T)^T = (U' S V'^T)^T = V' S U'^T
+        let u = transpose(&svd_t.vt, svd_t.r, svd_t.n); // (n x r) -> wait dims
+        // svd_t: at (n x m) = U'(n x r) S V't(r x m)
+        // => A (m x n) = V'(m x r) S U'^T(r x n)
+        let new_u = transpose(&svd_t.vt, svd_t.r, m); // V' (m x r)
+        let new_vt = transpose(&svd_t.u, n, svd_t.r); // U'^T (r x n)
+        let _ = u;
+        return Svd { u: new_u, s: svd_t.s, vt: new_vt, m, n, r: svd_t.r };
+    }
+
+    // Column-major working copy: cols[j] is column j of A (length m).
+    let mut cols: Vec<Vec<f32>> = (0..n)
+        .map(|j| (0..m).map(|i| a[i * n + j]).collect())
+        .collect();
+
+    let tol = 1e-10f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let x = cols[p][i] as f64;
+                    let y = cols[q][i] as f64;
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = cols[p][i];
+                    let y = cols[q][i];
+                    cols[p][i] = (c * x as f64 - s * y as f64) as f32;
+                    cols[q][i] = (s * x as f64 + c * y as f64) as f32;
+                }
+            }
+        }
+        if off < 1e-9 {
+            break;
+        }
+    }
+
+    // Column norms = singular values; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| frob_norm(c)).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = vec![0.0f32; m * r];
+    let mut s = vec![0.0f32; r];
+    let mut vt = vec![0.0f32; r * n];
+    // Accumulate V by re-deriving: v_j = A^T u_j / s_j.
+    for (k, &j) in order.iter().take(r).enumerate() {
+        let sigma = norms[j];
+        s[k] = sigma as f32;
+        if sigma > 1e-12 {
+            for i in 0..m {
+                u[i * r + k] = (cols[j][i] as f64 / sigma) as f32;
+            }
+        }
+    }
+    // vt = S^{-1} U^T A  (rows of vt are right singular vectors).
+    let ut_a = matmul_tn(&u, a, m, r, n); // (r x n)
+    for k in 0..r {
+        let sigma = s[k];
+        let row = &ut_a[k * n..(k + 1) * n];
+        let dst = &mut vt[k * n..(k + 1) * n];
+        if sigma > 1e-12 {
+            for (d, x) in dst.iter_mut().zip(row) {
+                *d = x / sigma;
+            }
+        }
+    }
+    Svd { u, s, vt, m, n, r }
+}
+
+/// All singular values of A (descending), via full-rank Jacobi.
+pub fn singular_values(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    svd_jacobi(a, m, n, m.min(n)).s
+}
+
+/// Best rank-r Frobenius approximation error: sqrt(sum of squared
+/// tail singular values) — the Eckart–Young bound used by Theorem 1.
+pub fn rank_r_error(singular: &[f32], r: usize) -> f64 {
+    singular[r.min(singular.len())..]
+        .iter()
+        .map(|s| (*s as f64) * (*s as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Newton–Schulz iteration for the matrix sign/orthogonalization used
+/// by MUON: G -> approx U V^T of G's SVD (semi-orthogonal). Quintic
+/// variant from the MUON reference implementation.
+pub fn newton_schulz_orth(g: &[f32], m: usize, n: usize, iters: usize) -> Vec<f32> {
+    let norm = frob_norm(g) as f32;
+    if norm < 1e-20 {
+        return g.to_vec();
+    }
+    let mut x: Vec<f32> = g.iter().map(|v| v / (norm * 1.001)).collect();
+    let (a, b, c) = (3.4445f32, -4.7750f32, 2.0315f32);
+    let transposed = m > n;
+    let (mm, nn) = if transposed { (n, m) } else { (m, n) };
+    if transposed {
+        x = transpose(&x, m, n);
+    }
+    for _ in 0..iters {
+        // A = X X^T (mm x mm); X <- a X + (b A + c A^2) X
+        let aa = matmul_nt(&x, &x, mm, nn, mm);
+        let aa2 = matmul(&aa, &aa, mm, mm, mm);
+        let mut poly = vec![0.0f32; mm * mm];
+        for i in 0..mm * mm {
+            poly[i] = b * aa[i] + c * aa2[i];
+        }
+        let px = matmul(&poly, &x, mm, mm, nn);
+        for i in 0..mm * nn {
+            x[i] = a * x[i] + px[i];
+        }
+    }
+    if transposed {
+        x = transpose(&x, n, m);
+    }
+    x
+}
+
+/// Dense Gaussian random projection `P (n x r)` with entries
+/// N(0, 1/r), used by APOLLO (SVD-free GaLore variant).
+pub fn gaussian_projection(n: usize, r: usize, rng: &mut Rng) -> Vec<f32> {
+    let scale = 1.0 / (r as f32).sqrt();
+    rng.normal_vec(n * r, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::approx_eq_slice;
+
+    fn randmat(m: usize, n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(m * n, 1.0)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = randmat(4, 4, 1);
+        let mut eye = vec![0.0f32; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        approx_eq_slice(&matmul(&a, &eye, 4, 4, 4), &a, 1e-6);
+        approx_eq_slice(&matmul(&eye, &a, 4, 4, 4), &a, 1e-6);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = [1., 2., 3., 4.]; // 2x2
+        let b = [5., 6., 7., 8.];
+        let c = matmul(&a, &b, 2, 2, 2);
+        approx_eq_slice(&c, &[19., 22., 43., 50.], 1e-6);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let (m, k, n) = (5, 7, 3);
+        let a = randmat(m, k, 2);
+        let b = randmat(k, n, 3);
+        let want = matmul(&a, &b, m, k, n);
+        let at = transpose(&a, m, k);
+        approx_eq_slice(&matmul_tn(&at, &b, k, m, n), &want, 1e-4);
+        let bt = transpose(&b, k, n);
+        approx_eq_slice(&matmul_nt(&a, &bt, m, k, n), &want, 1e-4);
+    }
+
+    #[test]
+    fn svd_reconstructs_lowrank_matrix() {
+        // Build an exactly rank-3 matrix and recover it.
+        let (m, n, r) = (20, 12, 3);
+        let u = randmat(m, r, 4);
+        let v = randmat(r, n, 5);
+        let a = matmul(&u, &v, m, r, n);
+        let svd = svd_jacobi(&a, m, n, r);
+        let us: Vec<f32> = (0..m * r)
+            .map(|i| svd.u[i] * svd.s[i % r])
+            .collect();
+        let approx = matmul(&us, &svd.vt, m, r, n);
+        let err = frob_norm(
+            &a.iter().zip(&approx).map(|(x, y)| x - y).collect::<Vec<_>>(),
+        );
+        assert!(err / frob_norm(&a) < 1e-3, "rel err {}", err / frob_norm(&a));
+    }
+
+    #[test]
+    fn svd_singular_values_of_diagonal() {
+        // diag(3, 2, 1) embedded in 4x3.
+        let mut a = vec![0.0f32; 12];
+        a[0] = 3.0;
+        a[4] = 2.0;
+        a[8] = 1.0;
+        let s = singular_values(&a, 4, 3);
+        approx_eq_slice(&s, &[3.0, 2.0, 1.0], 1e-4);
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let (m, n) = (6, 14);
+        let a = randmat(m, n, 7);
+        let svd = svd_jacobi(&a, m, n, m);
+        // U orthonormal columns.
+        let utu = matmul_tn(&svd.u, &svd.u, m, svd.r, svd.r);
+        for i in 0..svd.r {
+            for j in 0..svd.r {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (utu[i * svd.r + j] - want).abs() < 1e-3,
+                    "U^T U [{i},{j}] = {}",
+                    utu[i * svd.r + j]
+                );
+            }
+        }
+        // Full-rank reconstruction.
+        let us: Vec<f32> = (0..m * svd.r)
+            .map(|i| svd.u[i] * svd.s[i % svd.r])
+            .collect();
+        let approx = matmul(&us, &svd.vt, m, svd.r, n);
+        let diff: Vec<f32> = a.iter().zip(&approx).map(|(x, y)| x - y).collect();
+        assert!(frob_norm(&diff) / frob_norm(&a) < 1e-3);
+    }
+
+    #[test]
+    fn eckart_young_tail() {
+        let s = [4.0f32, 2.0, 1.0];
+        assert!((rank_r_error(&s, 1) - (5.0f64).sqrt()).abs() < 1e-6);
+        assert_eq!(rank_r_error(&s, 3), 0.0);
+        assert_eq!(rank_r_error(&s, 10), 0.0);
+    }
+
+    #[test]
+    fn newton_schulz_flattens_spectrum() {
+        // The quintic NS iteration (MUON's coefficients) does not
+        // converge to exact orthogonality — it drives all singular
+        // values into a band around 1. Verify the flattening.
+        let (m, n) = (12, 8);
+        let g = randmat(m, n, 11);
+        let s_in = singular_values(&g, m, n);
+        let ratio_in = (s_in[0] / s_in[n - 1].max(1e-6)) as f64;
+        let o = newton_schulz_orth(&g, m, n, 12);
+        let s_out = singular_values(&o, m, n);
+        let ratio_out = (s_out[0] / s_out[n - 1].max(1e-6)) as f64;
+        assert!(
+            ratio_out < ratio_in / 2.0,
+            "no flattening: {ratio_in} -> {ratio_out} ({s_out:?})"
+        );
+        assert!(s_out[0] < 1.5, "top sv too large: {}", s_out[0]);
+        assert!(s_out[n - 1] > 0.3, "bottom sv collapsed: {}", s_out[n - 1]);
+    }
+
+    #[test]
+    fn gaussian_projection_scale() {
+        let mut rng = Rng::new(0);
+        let p = gaussian_projection(512, 64, &mut rng);
+        let var = p.iter().map(|x| (x * x) as f64).sum::<f64>()
+            / p.len() as f64;
+        assert!((var - 1.0 / 64.0).abs() < 0.002, "var={var}");
+    }
+}

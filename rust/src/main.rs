@@ -1,0 +1,222 @@
+//! `gwt` — launcher for the GWT training framework.
+//!
+//! Subcommands:
+//!   train    — pretrain a preset with a chosen optimizer
+//!   eval     — load a checkpoint and report validation PPL
+//!   finetune — fine-tune on the synthetic MMLU-like suite
+//!   memory   — print the analytic memory tables (paper Tables I/XI)
+//!   info     — artifact manifest summary
+//!
+//! Examples:
+//!   gwt train -s preset=nano -s optimizer=gwt-2 -s steps=200
+//!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
+//!   gwt memory
+//!   gwt info
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use gwt::cli::Args;
+use gwt::config::TrainConfig;
+use gwt::coordinator::Trainer;
+use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
+use gwt::eval::{tasks, FineTuner};
+use gwt::memory::{account, Method, MemoryReport, PAPER_MODELS};
+use gwt::runtime::Runtime;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: gwt <train|eval|finetune|memory|info> [--config FILE] [-s key=value ...]"
+    );
+}
+
+fn load_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => TrainConfig::default(),
+    };
+    for (k, v) in &args.sets {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn make_loader(cfg: &TrainConfig) -> Result<DataLoader> {
+    let preset = gwt::config::presets::find(&cfg.preset)?;
+    let mut corpus = SyntheticCorpus::new(CorpusSpec {
+        seed: cfg.seed ^ 0xc4,
+        ..Default::default()
+    });
+    // Enough tokens that a few hundred steps never recycle batches.
+    let need = (cfg.steps * cfg.grad_accum * cfg.dp_workers + 64)
+        * preset.tokens_per_batch();
+    let stream = corpus.generate_tokens(need.clamp(200_000, 8_000_000));
+    Ok(DataLoader::new(stream, preset.batch, preset.seq_len, cfg.seed))
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "finetune" => cmd_finetune(&args),
+        "memory" => cmd_memory(),
+        "info" => cmd_info(&args),
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!("== gwt train ==");
+    for (k, v) in cfg.summary() {
+        println!("  {k:<14} {v}");
+    }
+    let runtime =
+        Rc::new(Runtime::load(&cfg.artifacts_dir).context("loading runtime")?);
+    println!("  platform       {}", runtime.platform());
+    let loader = make_loader(&cfg)?;
+    let mut trainer = Trainer::new(runtime, cfg.clone(), &loader)?;
+    println!(
+        "  params         {} tensors / {:.2}M scalars",
+        trainer.shapes().len(),
+        trainer.preset().total_params() as f64 / 1e6
+    );
+    println!(
+        "  opt state      {:.2} MB",
+        trainer.optimizer_state_bytes() as f64 / 1e6
+    );
+    let outcome = trainer.run(&loader, true)?;
+    println!(
+        "\nfinal: train loss {:.4} (ppl {:.2})  valid loss {:.4} (ppl {:.2})  {:.0} tok/s",
+        outcome.final_loss,
+        outcome.final_ppl,
+        outcome.valid_loss,
+        outcome.valid_ppl,
+        outcome.tokens_per_sec
+    );
+    if let Some(path) = args.flag("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint saved to {path}");
+    }
+    if let Some(dir) = args.flag("curve-dir") {
+        gwt::metrics::write_curves(dir, &[outcome.curve])?;
+        println!("curve written under {dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let path = args
+        .flag("checkpoint")
+        .context("eval requires --checkpoint FILE")?;
+    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+    let loader = make_loader(&cfg)?;
+    let mut trainer = Trainer::new(runtime, cfg, &loader)?;
+    trainer.load_checkpoint(path)?;
+    let loss = trainer.eval_loss(&loader, 16)?;
+    println!("valid loss {:.4}  ppl {:.2}", loss, loss.exp());
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if args.flag("config").is_none() && args.sets.iter().all(|(k, _)| k != "preset") {
+        cfg.preset = "ft-micro".into();
+    }
+    if args.flag("config").is_none() && args.sets.iter().all(|(k, _)| k != "lr") {
+        // Fine-tuning needs the paper's small-lr regime (its sweep is
+        // 1e-6..1e-4); the pretraining default of 0.01 destabilizes.
+        cfg.lr = 5e-4;
+        cfg.alpha = 1.0;
+    }
+    cfg.validate()?;
+    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+    let preset = gwt::config::presets::find(&cfg.preset)?;
+    let epochs = args.flag_usize("epochs")?.unwrap_or(3);
+    println!("== gwt finetune ({}) ==", cfg.optimizer.label());
+    let mut mean = 0.0;
+    let suite = tasks::mmlu_suite(preset.seq_len, cfg.seed);
+    for spec in suite {
+        let task = tasks::ClsTask::generate(spec);
+        let mut ft =
+            FineTuner::new(runtime.clone(), cfg.clone(), task.spec.classes, None)?;
+        let out = ft.run(&task, epochs)?;
+        println!(
+            "  {:<16} acc {:.3} (chance {:.2})  loss {:.3}",
+            out.task,
+            out.accuracy,
+            task.chance(),
+            out.final_loss
+        );
+        mean += out.accuracy;
+    }
+    println!("  mean acc {:.3}", mean / 4.0);
+    Ok(())
+}
+
+fn cmd_memory() -> Result<()> {
+    println!("== Optimizer-state memory (paper Table XI reproduction) ==");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "model", "weights", "Adam", "MUON", "GaLore-1/4", "GWT-2", "GWT-3"
+    );
+    for pm in PAPER_MODELS {
+        let ps = pm.params();
+        let gb = |m: Method| {
+            format!("{:.2}G", MemoryReport::gb(account(&ps, m).state_bytes))
+        };
+        println!(
+            "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+            pm.name,
+            format!(
+                "{:.2}G",
+                MemoryReport::gb(account(&ps, Method::Adam).weight_bytes)
+            ),
+            gb(Method::Adam),
+            gb(Method::Muon),
+            gb(Method::Galore { rank_denom: 4 }),
+            gb(Method::Gwt { level: 2 }),
+            gb(Method::Gwt { level: 3 }),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    let manifest = gwt::runtime::Manifest::load(&dir)?;
+    println!("manifest: {} artifacts, {} presets", manifest.artifacts.len(), manifest.presets.len());
+    for (name, p) in &manifest.presets {
+        println!(
+            "  preset {name:<12} arch {:<6} d={} L={} seq={} batch={} ({} params)",
+            p.arch, p.d_model, p.n_layers, p.seq_len, p.batch, p.params.len()
+        );
+    }
+    let mut kinds = std::collections::BTreeMap::new();
+    for a in manifest.artifacts.values() {
+        *kinds.entry(a.kind.clone()).or_insert(0usize) += 1;
+    }
+    for (k, c) in kinds {
+        println!("  {c:>3} x {k}");
+    }
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Metrics: loss-curve recording, perplexity, throughput meters, and
+//! CSV emission for the figure benches.
+
+use std::time::Instant;
+
+/// One recorded training point.
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub step: usize,
+    pub loss: f32,
+    pub tokens_seen: usize,
+    pub wall_secs: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub label: String,
+    pub points: Vec<Point>,
+}
+
+impl LossCurve {
+    pub fn new(label: &str) -> Self {
+        LossCurve { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: usize, loss: f32, tokens_seen: usize, wall_secs: f64) {
+        self.points.push(Point { step, loss, tokens_seen, wall_secs });
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    pub fn final_ppl(&self) -> Option<f32> {
+        self.final_loss().map(ppl)
+    }
+
+    /// Mean loss over the last `k` points (smoother than the last
+    /// single batch).
+    pub fn tail_mean_loss(&self, k: usize) -> Option<f32> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        Some(tail.iter().map(|p| p.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Largest single-step loss increase — the "spike" statistic used
+    /// by the Fig 3 NL-ablation bench.
+    pub fn max_spike(&self) -> f32 {
+        self.points
+            .windows(2)
+            .map(|w| w[1].loss - w[0].loss)
+            .fold(0.0f32, f32::max)
+    }
+
+    /// First step whose loss drops below `threshold` (convergence
+    /// speed comparison, Fig 4).
+    pub fn first_step_below(&self, threshold: f32) -> Option<usize> {
+        self.points.iter().find(|p| p.loss < threshold).map(|p| p.step)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,ppl,tokens_seen,wall_secs\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.6},{:.4},{},{:.3}\n",
+                p.step,
+                p.loss,
+                ppl(p.loss),
+                p.tokens_seen,
+                p.wall_secs
+            ));
+        }
+        s
+    }
+}
+
+pub fn ppl(loss: f32) -> f32 {
+    loss.exp()
+}
+
+/// Tokens/sec meter.
+pub struct Throughput {
+    start: Instant,
+    tokens: usize,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), tokens: 0 }
+    }
+
+    pub fn add_tokens(&mut self, n: usize) {
+        self.tokens += n;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / secs
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Write a set of curves as one CSV per curve under `dir`.
+pub fn write_curves(dir: &str, curves: &[LossCurve]) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for c in curves {
+        let safe: String = c
+            .label
+            .chars()
+            .map(|ch| if ch.is_alphanumeric() { ch } else { '_' })
+            .collect();
+        std::fs::write(format!("{dir}/{safe}.csv"), c.to_csv())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(losses: &[f32]) -> LossCurve {
+        let mut c = LossCurve::new("t");
+        for (i, &l) in losses.iter().enumerate() {
+            c.push(i, l, i * 100, i as f64);
+        }
+        c
+    }
+
+    #[test]
+    fn ppl_is_exp() {
+        assert!((ppl(0.0) - 1.0).abs() < 1e-6);
+        assert!((ppl(2.0) - 2f32.exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn tail_mean_and_final() {
+        let c = curve(&[5.0, 4.0, 3.0, 2.0]);
+        assert_eq!(c.final_loss(), Some(2.0));
+        assert!((c.tail_mean_loss(2).unwrap() - 2.5).abs() < 1e-6);
+        assert!((c.tail_mean_loss(100).unwrap() - 3.5).abs() < 1e-6);
+        assert!(curve(&[]).tail_mean_loss(3).is_none());
+    }
+
+    #[test]
+    fn spike_detection() {
+        let c = curve(&[5.0, 3.0, 4.5, 2.0]);
+        assert!((c.max_spike() - 1.5).abs() < 1e-6);
+        let mono = curve(&[3.0, 2.0, 1.0]);
+        assert_eq!(mono.max_spike(), 0.0);
+    }
+
+    #[test]
+    fn convergence_step() {
+        let c = curve(&[5.0, 3.0, 2.5, 1.0]);
+        assert_eq!(c.first_step_below(2.6), Some(2));
+        assert_eq!(c.first_step_below(0.5), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let c = curve(&[1.0]);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert!(csv.lines().count() == 2);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add_tokens(500);
+        t.add_tokens(500);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.tokens_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Full-rank Adam (Kingma & Ba) — the paper's primary baseline and
+//! the default optimizer for non-eligible parameters.
+
+use super::{AdamHp, MatrixOpt};
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    hp: AdamHp,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+    shape: Vec<usize>,
+}
+
+impl Adam {
+    pub fn new(shape: &[usize], hp: AdamHp) -> Self {
+        let n: usize = shape.iter().product();
+        Adam { hp, m: vec![0.0; n], v: vec![0.0; n], t: 0, shape: shape.to_vec() }
+    }
+}
+
+impl MatrixOpt for Adam {
+    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &self.shape[..]);
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        let mut out = vec![0.0f32; g.len()];
+        for i in 0..g.len() {
+            let gi = g.data()[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * gi;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * gi * gi;
+            out[i] = bc * self.m[i] / (self.v[i].sqrt() + eps);
+        }
+        Tensor::new(&self.shape, out)
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn label(&self) -> String {
+        "Adam".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::approx_eq;
+
+    #[test]
+    fn first_step_is_signlike() {
+        // With zero state, step 1 direction ~ bc·g/(sqrt((1-b2)g²)+eps)
+        // ≈ sign(g) for |g| >> eps.
+        let mut a = Adam::new(&[4], AdamHp::default());
+        let g = Tensor::new(&[4], vec![3.0, -2.0, 0.5, -0.1]);
+        let u = a.direction(&g, 0.0);
+        for (ui, gi) in u.data().iter().zip(g.data()) {
+            assert!(
+                (ui - gi.signum()).abs() < 0.01,
+                "u={ui} for g={gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn state_accumulates() {
+        let mut a = Adam::new(&[2], AdamHp::default());
+        let g = Tensor::new(&[2], vec![1.0, 1.0]);
+        a.direction(&g, 0.0);
+        approx_eq(a.m[0], 0.1, 1e-6);
+        approx_eq(a.v[0], 0.001, 1e-6);
+        a.direction(&g, 0.0);
+        approx_eq(a.m[0], 0.19, 1e-6);
+    }
+
+    #[test]
+    fn state_bytes_full_rank() {
+        let a = Adam::new(&[8, 16], AdamHp::default());
+        assert_eq!(a.state_bytes(), 2 * 128 * 4);
+    }
+}

@@ -1,0 +1,162 @@
+//! 8-bit Adam (Dettmers et al. 2021): Adam whose M/V states are kept
+//! block-quantized (int8 + per-block absmax scale). Reproduces both
+//! the memory footprint and the quantize/dequantize cost that makes
+//! it the slowest method in the paper's Table III throughput column.
+
+use super::{AdamHp, MatrixOpt};
+use crate::tensor::Tensor;
+
+pub const BLOCK: usize = 2048;
+
+/// One quantized state tensor.
+struct QState {
+    q: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QState {
+    fn zeros(n: usize) -> Self {
+        QState { q: vec![0; n], scales: vec![0.0; n.div_ceil(BLOCK)] }
+    }
+
+    /// Nonlinear (square-root) code map, like bitsandbytes' dynamic
+    /// quantization: resolution concentrates near zero, which keeps
+    /// small second-moment entries from collapsing to 0 (a linear map
+    /// makes Adam unstable — denominators snap to eps).
+    fn dequant(&self, out: &mut [f32]) {
+        for (bi, chunk) in self.q.chunks(BLOCK).enumerate() {
+            let s = self.scales[bi];
+            let base = bi * BLOCK;
+            for (j, &qv) in chunk.iter().enumerate() {
+                let r = qv as f32 / 127.0;
+                out[base + j] = r.signum() * r * r * s;
+            }
+        }
+    }
+
+    fn quant(&mut self, x: &[f32]) {
+        for (bi, chunk) in x.chunks(BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            self.scales[bi] = absmax;
+            let inv = if absmax > 0.0 { 1.0 / absmax } else { 0.0 };
+            let base = bi * BLOCK;
+            for (j, &v) in chunk.iter().enumerate() {
+                let r = (v * inv).clamp(-1.0, 1.0);
+                let code = r.signum() * r.abs().sqrt() * 127.0;
+                self.q[base + j] = code.round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * 4
+    }
+}
+
+pub struct Adam8bit {
+    hp: AdamHp,
+    m: QState,
+    v: QState,
+    t: usize,
+    shape: Vec<usize>,
+    /// Reused dequant scratch (kept out of state accounting — it's
+    /// transient like the paper's dequant workspace).
+    scratch_m: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl Adam8bit {
+    pub fn new(shape: &[usize], hp: AdamHp) -> Self {
+        let n: usize = shape.iter().product();
+        Adam8bit {
+            hp,
+            m: QState::zeros(n),
+            v: QState::zeros(n),
+            t: 0,
+            shape: shape.to_vec(),
+            scratch_m: vec![0.0; n],
+            scratch_v: vec![0.0; n],
+        }
+    }
+}
+
+impl MatrixOpt for Adam8bit {
+    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &self.shape[..]);
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        self.m.dequant(&mut self.scratch_m);
+        self.v.dequant(&mut self.scratch_v);
+        let mut out = vec![0.0f32; g.len()];
+        for i in 0..g.len() {
+            let gi = g.data()[i];
+            self.scratch_m[i] = b1 * self.scratch_m[i] + (1.0 - b1) * gi;
+            // v is non-negative; quantization keeps sign structure.
+            self.scratch_v[i] = b2 * self.scratch_v[i] + (1.0 - b2) * gi * gi;
+            out[i] = bc * self.scratch_m[i] / (self.scratch_v[i].sqrt() + eps);
+        }
+        self.m.quant(&self.scratch_m);
+        self.v.quant(&self.scratch_v);
+        Tensor::new(&self.shape, out)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.m.bytes() + self.v.bytes()
+    }
+
+    fn label(&self) -> String {
+        "8bit-Adam".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = rng.normal_vec(5000, 0.1);
+        let mut q = QState::zeros(5000);
+        q.quant(&x);
+        let mut back = vec![0.0f32; 5000];
+        q.dequant(&mut back);
+        let absmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (a, b) in x.iter().zip(&back) {
+            // sqrt code map: absolute error grows with |x|; bound by
+            // the local derivative 2*sqrt(|x|*absmax)/127 + half-step.
+            let bound = 2.0 * (a.abs() * absmax).sqrt() / 127.0
+                + absmax / (127.0 * 127.0)
+                + 1e-7;
+            assert!((a - b).abs() <= bound, "x={a} back={b} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn state_bytes_are_quarter_of_f32_adam() {
+        let a8 = Adam8bit::new(&[64, 64], AdamHp::default());
+        let a32 = super::super::Adam::new(&[64, 64], AdamHp::default());
+        let ratio = a8.state_bytes() as f64 / a32.state_bytes() as f64;
+        assert!(ratio < 0.27, "ratio {ratio}");
+    }
+
+    #[test]
+    fn tracks_full_precision_adam_closely() {
+        let mut rng = Rng::new(2);
+        let mut a8 = Adam8bit::new(&[32], AdamHp::default());
+        let mut a32 = super::super::Adam::new(&[32], AdamHp::default());
+        let mut max_rel = 0.0f32;
+        for _ in 0..20 {
+            let g = Tensor::randn(&[32], 1.0, &mut rng);
+            let u8v = a8.direction(&g, 0.0);
+            let u32v = a32.direction(&g, 0.0);
+            for (a, b) in u8v.data().iter().zip(u32v.data()) {
+                let rel = (a - b).abs() / (b.abs() + 0.1);
+                max_rel = max_rel.max(rel);
+            }
+        }
+        assert!(max_rel < 0.25, "divergence {max_rel}");
+    }
+}

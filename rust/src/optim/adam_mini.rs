@@ -1,0 +1,91 @@
+//! Adam-mini (Zhang et al. 2024): full first moment, a *single*
+//! shared second-moment scalar per parameter block (here: per
+//! parameter tensor, the coarsest variant). Roughly halves Adam's
+//! state. The paper shows GWT composes with it (Fig 4).
+
+use super::{AdamHp, MatrixOpt};
+use crate::tensor::Tensor;
+
+pub struct AdamMini {
+    hp: AdamHp,
+    m: Vec<f32>,
+    /// One shared v for the whole block.
+    v: f32,
+    t: usize,
+    shape: Vec<usize>,
+}
+
+impl AdamMini {
+    pub fn new(shape: &[usize], hp: AdamHp) -> Self {
+        AdamMini {
+            hp,
+            m: vec![0.0; shape.iter().product()],
+            v: 0.0,
+            t: 0,
+            shape: shape.to_vec(),
+        }
+    }
+}
+
+impl MatrixOpt for AdamMini {
+    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &self.shape[..]);
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        // Shared v <- EMA of mean(g^2) over the block.
+        let mean_sq = g.data().iter().map(|x| x * x).sum::<f32>()
+            / g.len().max(1) as f32;
+        self.v = b2 * self.v + (1.0 - b2) * mean_sq;
+        let denom = self.v.sqrt() + eps;
+        let mut out = vec![0.0f32; g.len()];
+        for i in 0..g.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g.data()[i];
+            out[i] = bc * self.m[i] / denom;
+        }
+        Tensor::new(&self.shape, out)
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + 1) * 4
+    }
+
+    fn label(&self) -> String {
+        "Adam-mini".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_is_half_adam_plus_one() {
+        let a = AdamMini::new(&[16, 16], AdamHp::default());
+        assert_eq!(a.state_bytes(), (256 + 1) * 4);
+    }
+
+    #[test]
+    fn uniform_gradient_matches_adam_direction() {
+        // If |g| is constant across the block, mean(g²) = g² and
+        // Adam-mini == Adam elementwise.
+        let mut mini = AdamMini::new(&[8], AdamHp::default());
+        let mut full = super::super::Adam::new(&[8], AdamHp::default());
+        let g = Tensor::new(&[8], vec![0.5; 8]);
+        let u1 = mini.direction(&g, 0.0);
+        let u2 = full.direction(&g, 0.0);
+        crate::testing::approx_eq_slice(u1.data(), u2.data(), 1e-5);
+    }
+
+    #[test]
+    fn shared_denominator() {
+        let mut mini = AdamMini::new(&[4], AdamHp::default());
+        let g = Tensor::new(&[4], vec![1.0, -1.0, 2.0, 0.0]);
+        let u = mini.direction(&g, 0.0);
+        // Same denominator => u proportional to m (i.e. to g at t=1).
+        let ratio = u.data()[0] / g.data()[0];
+        for i in [1, 2] {
+            assert!((u.data()[i] / g.data()[i] - ratio).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! GWT-Adam: the paper's contribution (Algorithm 1).
+//!
+//! Two execution paths, verified against each other and the Python
+//! oracle:
+//! * **HLO hot path** — the fused Pallas kernel AOT-lowered by
+//!   `aot.py` (`gwt_adam_l<l>_<m>x<n>` artifact), executed via PJRT.
+//!   One call transforms, updates moments, normalizes, and inverse
+//!   transforms entirely inside the compiled computation.
+//! * **rust fallback** — bit-close reimplementation used when no
+//!   artifact exists for the (shape, level), e.g. the high-level
+//!   sweeps of Fig 5 (l up to 7) and unit tests without artifacts.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{AdamHp, MatrixOpt};
+use crate::runtime::{literal_f32, tensor_from_literal, Runtime};
+use crate::tensor::Tensor;
+use crate::wavelet;
+
+pub struct GwtAdam {
+    rows: usize,
+    cols: usize,
+    level: usize,
+    hp: AdamHp,
+    /// First/second moments over the approximation band (rows x q).
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+    /// Compiled fused artifact, if available.
+    exec: Option<(Rc<Runtime>, String)>,
+    /// Scratch for the rust path (avoids per-step allocs).
+    scratch: Vec<f32>,
+    /// §Perf L3-3: persistent per-row coefficient buffer (the rust
+    /// fallback previously allocated one Vec per row per step).
+    row_buf: Vec<f32>,
+}
+
+impl GwtAdam {
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        level: usize,
+        hp: AdamHp,
+        runtime: Option<Rc<Runtime>>,
+    ) -> Result<Self> {
+        wavelet::check_level(cols, level)?;
+        let q = cols >> level;
+        // Path selection (§Perf L3-5): the compiled artifact is the
+        // TPU-shaped hot path; on the CPU PJRT client its per-call
+        // overhead loses to the tight rust loop at every preset shape
+        // (see perf_hotpaths). GWT_OPT_PATH=rust opts out of the HLO
+        // path; default keeps it (numerics are pinned identical by
+        // rust/tests/runtime_roundtrip.rs either way).
+        let force_rust = std::env::var("GWT_OPT_PATH")
+            .map(|v| v == "rust")
+            .unwrap_or(false);
+        let exec = if force_rust {
+            None
+        } else {
+            runtime.and_then(|rt| {
+                rt.manifest
+                    .gwt_adam_key(rows, cols, level)
+                    .map(|key| (rt, key))
+            })
+        };
+        Ok(GwtAdam {
+            rows,
+            cols,
+            level,
+            hp,
+            m: vec![0.0; rows * q],
+            v: vec![0.0; rows * q],
+            t: 0,
+            exec,
+            scratch: vec![0.0; cols],
+            row_buf: vec![0.0; cols],
+        })
+    }
+
+    pub fn uses_hlo(&self) -> bool {
+        self.exec.is_some()
+    }
+
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Rust mirror of the fused kernel: returns the (pre-bias-corr)
+    /// normalized update and refreshes moments in place.
+    fn rust_direction(&mut self, g: &Tensor) -> Vec<f32> {
+        let (rows, n, level) = (self.rows, self.cols, self.level);
+        let q = n >> level;
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        // Split field borrows so the persistent buffers coexist.
+        let (mstate, vstate, scratch, row_buf) = (
+            &mut self.m,
+            &mut self.v,
+            &mut self.scratch,
+            &mut self.row_buf,
+        );
+        let mut out = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            // Forward transform this row into the persistent buffer.
+            let coeffs: &mut [f32] = row_buf;
+            coeffs.copy_from_slice(g.row(r));
+            wavelet::haar_fwd_row(coeffs, level, scratch);
+            // Moment update on the approximation band.
+            let mrow = &mut mstate[r * q..(r + 1) * q];
+            let vrow = &mut vstate[r * q..(r + 1) * q];
+            for j in 0..q {
+                let a = coeffs[j];
+                mrow[j] = b1 * mrow[j] + (1.0 - b1) * a;
+                vrow[j] = b2 * vrow[j] + (1.0 - b2) * a * a;
+            }
+            // Normalize: approximation by its own denom; each detail
+            // band D_k by the denom nearest-upsampled to width n>>k.
+            let orow = &mut out[r * n..(r + 1) * n];
+            for j in 0..q {
+                let denom = vrow[j].sqrt() + eps;
+                orow[j] = mrow[j] / denom;
+            }
+            let mut off = q;
+            for k in (1..=level).rev() {
+                let w = n >> k;
+                let rep = 1usize << (level - k);
+                for j in 0..w {
+                    let denom = vrow[j / rep].sqrt() + eps;
+                    orow[off + j] = coeffs[off + j] / denom;
+                }
+                off += w;
+            }
+            // Inverse transform back to weight space.
+            wavelet::haar_inv_row(orow, level, scratch);
+        }
+        out
+    }
+}
+
+impl MatrixOpt for GwtAdam {
+    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &[self.rows, self.cols]);
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let q = self.cols >> self.level;
+
+        if let Some((rt, key)) = &self.exec {
+            let exec = rt.exec(key).expect("artifact disappeared");
+            let m_t = Tensor::new(&[self.rows, q], std::mem::take(&mut self.m));
+            let v_t = Tensor::new(&[self.rows, q], std::mem::take(&mut self.v));
+            let inputs = [
+                literal_f32(g).unwrap(),
+                literal_f32(&m_t).unwrap(),
+                literal_f32(&v_t).unwrap(),
+            ];
+            let outs = exec.run(&inputs).expect("gwt_adam HLO step failed");
+            let mut upd =
+                tensor_from_literal(&outs[0], &[self.rows, self.cols]).unwrap();
+            self.m = outs[1].to_vec::<f32>().unwrap();
+            self.v = outs[2].to_vec::<f32>().unwrap();
+            upd.scale(bc);
+            return upd;
+        }
+
+        let mut out = self.rust_direction(g);
+        for x in &mut out {
+            *x *= bc;
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "GWT-{}{}",
+            self.level,
+            if self.uses_hlo() { " (HLO)" } else { " (rust)" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::{approx_eq_slice, prop_check};
+
+    #[test]
+    fn state_is_2pow_level_smaller() {
+        for level in 1..=3 {
+            let o = GwtAdam::new(8, 64, level, AdamHp::default(), None).unwrap();
+            assert_eq!(o.state_bytes(), 2 * 8 * (64 >> level) * 4);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_level() {
+        assert!(GwtAdam::new(8, 60, 3, AdamHp::default(), None).is_err());
+    }
+
+    #[test]
+    fn zero_gradient_decays_moments() {
+        let mut o = GwtAdam::new(4, 16, 2, AdamHp::default(), None).unwrap();
+        o.m.fill(1.0);
+        o.v.fill(1.0);
+        let g = Tensor::zeros(&[4, 16]);
+        o.direction(&g, 0.0);
+        for &m in &o.m {
+            assert!((m - 0.9).abs() < 1e-6);
+        }
+        for &v in &o.v {
+            assert!((v - 0.999).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn level1_matches_manual_algorithm1() {
+        // Hand-execute Algorithm 1 for a 1x4 gradient at level 1.
+        let hp = AdamHp::default();
+        let mut o = GwtAdam::new(1, 4, 1, hp, None).unwrap();
+        let g = Tensor::new(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let u = o.direction(&g, 0.0);
+        let s2 = std::f32::consts::FRAC_1_SQRT_2;
+        // fwd: A = [(1+2)s2, (3+4)s2], D = [(1-2)s2, (3-4)s2]
+        let a = [3.0 * s2, 7.0 * s2];
+        let d = [-s2, -s2];
+        let m: Vec<f32> = a.iter().map(|x| 0.1 * x).collect();
+        let v: Vec<f32> = a.iter().map(|x| 0.001 * x * x).collect();
+        let bc = hp.bias_correction(1);
+        let at: Vec<f32> =
+            (0..2).map(|i| m[i] / (v[i].sqrt() + hp.eps)).collect();
+        let dt: Vec<f32> =
+            (0..2).map(|i| d[i] / (v[i].sqrt() + hp.eps)).collect();
+        // inverse: x_even = (a+d)s2, x_odd = (a-d)s2, interleaved.
+        let want = [
+            bc * (at[0] + dt[0]) * s2,
+            bc * (at[0] - dt[0]) * s2,
+            bc * (at[1] + dt[1]) * s2,
+            bc * (at[1] - dt[1]) * s2,
+        ];
+        approx_eq_slice(u.data(), &want, 1e-4);
+        approx_eq_slice(&o.m, &m, 1e-5);
+        approx_eq_slice(&o.v, &v, 1e-5);
+    }
+
+    #[test]
+    fn equals_fullrank_adam_at_level0_analogue() {
+        // At level l, a constant-within-block gradient makes GWT
+        // equivalent to Adam on the block means (details vanish).
+        let hp = AdamHp::default();
+        let mut gwt = GwtAdam::new(2, 8, 2, hp, None).unwrap();
+        let mut rng = Rng::new(3);
+        // Blocks of 4 identical values.
+        let mut gd = vec![0.0f32; 16];
+        for r in 0..2 {
+            for b in 0..2 {
+                let val = rng.normal_f32();
+                for j in 0..4 {
+                    gd[r * 8 + b * 4 + j] = val;
+                }
+            }
+        }
+        let g = Tensor::new(&[2, 8], gd.clone());
+        let u = gwt.direction(&g, 0.0);
+        // Update must also be block-constant and sign-matching g.
+        for r in 0..2 {
+            for b in 0..2 {
+                let base = u.data()[r * 8 + b * 4];
+                for j in 1..4 {
+                    assert!((u.data()[r * 8 + b * 4 + j] - base).abs() < 1e-4);
+                }
+                assert_eq!(base.signum(), gd[r * 8 + b * 4].signum());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_direction_is_finite_and_bounded() {
+        prop_check("gwt-direction-finite", 25, |rng| {
+            let m = 1 + rng.usize_below(16);
+            let level = 1 + rng.usize_below(3);
+            let blocks = 1 + rng.usize_below(8);
+            let n = blocks << level;
+            let mut o =
+                GwtAdam::new(m, n, level, AdamHp::default(), None).unwrap();
+            let g = Tensor::randn(&[m, n], 1.0, rng);
+            let u = o.direction(&g, 0.0);
+            for &x in u.data() {
+                if !x.is_finite() {
+                    return Err("non-finite update".into());
+                }
+            }
+            // Detail coefficients are divided by sqrt(V̂)+eps of the
+            // *approximation* band; when block sums nearly cancel the
+            // denominator is small and spikes are expected (this is
+            // why the paper needs the Norm-growth Limiter, Fig 3).
+            // Catch only true explosions.
+            if u.max_abs() > 1e8 {
+                return Err(format!("update exploded: {}", u.max_abs()));
+            }
+            Ok(())
+        });
+    }
+}

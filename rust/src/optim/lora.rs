@@ -1,0 +1,170 @@
+//! LoRA-style low-rank adapter training, adapted to the shared
+//! full-weight training loop.
+//!
+//! True LoRA freezes W and trains adapters A (m x r), B (r x n) with
+//! W_eff = W + AB. Our train-step artifacts hold one weight matrix, so
+//! the adapter dynamics are simulated faithfully: adapters get Adam
+//! updates from their induced gradients (dA = G Bᵀ, dB = Aᵀ G), and
+//! the emitted direction is the *exact* resulting change of AB so that
+//! `w -= lr_eff · u` reproduces `W + A'B' - AB`. This preserves
+//! LoRA's defining constraint — weight updates confined to a rank-r
+//! manifold — which is what the paper's Table II compares against.
+
+use super::{AdamHp, MatrixOpt};
+use crate::linalg::{matmul, matmul_nt, matmul_tn};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+pub struct LoraSim {
+    m: usize,
+    n: usize,
+    rank: usize,
+    hp: AdamHp,
+    a: Vec<f32>, // (m x r), gaussian init
+    b: Vec<f32>, // (r x n), zero init (classic LoRA)
+    m_a: Vec<f32>,
+    v_a: Vec<f32>,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+    t: usize,
+}
+
+impl LoraSim {
+    pub fn new(m: usize, n: usize, rank: usize, hp: AdamHp, seed: u64) -> Self {
+        let rank = rank.min(m.min(n)).max(1);
+        let mut rng = Rng::with_stream(seed, 0x10aa);
+        LoraSim {
+            m,
+            n,
+            rank,
+            hp,
+            a: rng.normal_vec(m * rank, 1.0 / (m as f32).sqrt()),
+            b: vec![0.0; rank * n],
+            m_a: vec![0.0; m * rank],
+            v_a: vec![0.0; m * rank],
+            m_b: vec![0.0; rank * n],
+            v_b: vec![0.0; rank * n],
+            t: 0,
+        }
+    }
+}
+
+fn adam_inplace(
+    hp: &AdamHp,
+    bc: f32,
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    out: &mut [f32],
+) {
+    for i in 0..g.len() {
+        m[i] = hp.beta1 * m[i] + (1.0 - hp.beta1) * g[i];
+        v[i] = hp.beta2 * v[i] + (1.0 - hp.beta2) * g[i] * g[i];
+        out[i] = bc * m[i] / (v[i].sqrt() + hp.eps);
+    }
+}
+
+impl MatrixOpt for LoraSim {
+    fn direction(&mut self, g: &Tensor, lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &[self.m, self.n]);
+        let lr = if lr_eff.abs() < 1e-12 { 1e-12 } else { lr_eff };
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let (m, n, r) = (self.m, self.n, self.rank);
+
+        // Adapter gradients under W_eff = W + AB: dA = G Bᵀ, dB = Aᵀ G.
+        let da = matmul_nt(g.data(), &self.b, m, n, r);
+        let db = matmul_tn(&self.a, g.data(), m, r, n);
+
+        let mut ua = vec![0.0f32; m * r];
+        let mut ub = vec![0.0f32; r * n];
+        adam_inplace(&self.hp, bc, &da, &mut self.m_a, &mut self.v_a, &mut ua);
+        adam_inplace(&self.hp, bc, &db, &mut self.m_b, &mut self.v_b, &mut ub);
+
+        let old_ab = matmul(&self.a, &self.b, m, r, n);
+        for i in 0..m * r {
+            self.a[i] -= lr * ua[i];
+        }
+        for i in 0..r * n {
+            self.b[i] -= lr * ub[i];
+        }
+        let new_ab = matmul(&self.a, &self.b, m, r, n);
+
+        // Direction u with w -= lr · u  ==  w += (new_ab - old_ab).
+        let out: Vec<f32> = old_ab
+            .iter()
+            .zip(&new_ab)
+            .map(|(o, nv)| (o - nv) / lr)
+            .collect();
+        Tensor::new(&[m, n], out)
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Adapters themselves are extra *weights*; states are M,V on
+        // both adapters (paper Table I: 2mr + 2nr).
+        (self.m_a.len() + self.v_a.len() + self.m_b.len() + self.v_b.len()) * 4
+    }
+
+    fn label(&self) -> String {
+        format!("LoRA(r={})", self.rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_matches_table1() {
+        let l = LoraSim::new(8, 16, 2, AdamHp::default(), 0);
+        assert_eq!(l.state_bytes(), (2 * 8 * 2 + 2 * 2 * 16) * 4);
+    }
+
+    #[test]
+    fn update_has_rank_at_most_2r() {
+        // ΔAB = ΔA·B' + A·ΔB has rank <= 2r.
+        let mut rng = Rng::new(3);
+        let mut l = LoraSim::new(12, 16, 2, AdamHp::default(), 1);
+        let lr = 0.1;
+        // Warm up twice so B != 0 and both terms contribute.
+        let g1 = Tensor::randn(&[12, 16], 1.0, &mut rng);
+        l.direction(&g1, lr);
+        let g2 = Tensor::randn(&[12, 16], 1.0, &mut rng);
+        let u = l.direction(&g2, lr);
+        let sv = crate::linalg::singular_values(u.data(), 12, 16);
+        let big = sv.iter().filter(|s| **s > 1e-3 * sv[0].max(1e-9)).count();
+        assert!(big <= 4, "rank {big} > 2r=4");
+    }
+
+    #[test]
+    fn first_step_moves_a_only() {
+        // B starts at zero => dA = G·0ᵀ = 0, dB = AᵀG nonzero;
+        // after step 1: A unchanged (no grad), B changed, ΔAB = A·ΔB.
+        let mut rng = Rng::new(9);
+        let mut l = LoraSim::new(6, 8, 2, AdamHp::default(), 2);
+        let a0 = l.a.clone();
+        let g = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let u = l.direction(&g, 0.05);
+        assert_eq!(l.a, a0, "A must not move when B == 0");
+        assert!(l.b.iter().any(|x| x.abs() > 0.0), "B must move");
+        assert!(u.frob_norm() > 0.0);
+    }
+
+    #[test]
+    fn applying_direction_tracks_adapters() {
+        // w -= lr·u must equal w + (A'B' - AB) exactly.
+        let mut rng = Rng::new(4);
+        let mut l = LoraSim::new(5, 6, 2, AdamHp::default(), 3);
+        let lr = 0.07;
+        let mut w = Tensor::zeros(&[5, 6]);
+        for _ in 0..3 {
+            let g = Tensor::randn(&[5, 6], 1.0, &mut rng);
+            let u = l.direction(&g, lr);
+            w.axpy(-lr, &u);
+        }
+        let ab = matmul(&l.a, &l.b, 5, 2, 6);
+        let ab0_is_zero = true; // B started at 0 -> AB started at 0.
+        assert!(ab0_is_zero);
+        crate::testing::approx_eq_slice(w.data(), &ab, 1e-3);
+    }
+}

@@ -1,0 +1,320 @@
+//! Optimizer suite: GWT-Adam (the paper's contribution) plus every
+//! baseline its evaluation compares against.
+//!
+//! Routing follows the paper's module-wise strategy (§IV-A, App. E):
+//! *eligible* parameters (2D attention/MLP matrices) run the selected
+//! memory-efficient method at effective lr `lr·α`; all other
+//! parameters run plain full-rank Adam at lr. The Norm-growth Limiter
+//! (Fira) wraps each eligible parameter's update.
+//!
+//! The trait contract: `direction(g, lr_eff)` returns the update
+//! direction `u` (bias correction included where the method defines
+//! it); the framework applies `w -= lr_eff · limiter_scale · u`.
+//! `lr_eff` is provided for methods whose internal state depends on
+//! the applied magnitude (LoRA adapters); everyone else ignores it.
+
+pub mod adam;
+pub mod adam8bit;
+pub mod adam_mini;
+pub mod apollo;
+pub mod galore;
+pub mod gwt;
+pub mod limiter;
+pub mod lora;
+pub mod muon;
+pub mod sgdm;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+pub use adam::Adam;
+pub use adam8bit::Adam8bit;
+pub use adam_mini::AdamMini;
+pub use apollo::Apollo;
+pub use galore::Galore;
+pub use gwt::GwtAdam;
+pub use limiter::NormGrowthLimiter;
+pub use lora::LoraSim;
+pub use muon::Muon;
+pub use sgdm::SgdM;
+
+use crate::config::{OptSpec, TrainConfig};
+use crate::memory::ParamShape;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Hyperparameters shared by the Adam family.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHp {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        AdamHp { beta1: 0.9, beta2: 0.999, eps: 1e-6 }
+    }
+}
+
+impl AdamHp {
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        AdamHp { beta1: cfg.beta1, beta2: cfg.beta2, eps: cfg.eps }
+    }
+
+    /// Paper Algorithm 1 bias correction for step t (1-based).
+    pub fn bias_correction(&self, t: usize) -> f32 {
+        let t = t as i32;
+        (1.0 - self.beta2.powi(t)).sqrt() / (1.0 - self.beta1.powi(t))
+    }
+}
+
+/// Per-parameter optimizer state machine.
+pub trait MatrixOpt {
+    /// Update internal state with gradient `g` and return the update
+    /// direction (applied by the caller as `w -= lr_eff · scale · u`).
+    fn direction(&mut self, g: &Tensor, lr_eff: f32) -> Tensor;
+
+    /// Bytes of optimizer state currently held (measured, f32).
+    fn state_bytes(&self) -> usize;
+
+    fn label(&self) -> String;
+}
+
+/// One parameter's full update pipeline: method + α + NL limiter.
+pub struct ParamOptimizer {
+    pub name: String,
+    inner: Box<dyn MatrixOpt>,
+    limiter: Option<NormGrowthLimiter>,
+    /// Module-wise lr multiplier (α for eligible params, 1 otherwise).
+    pub alpha: f32,
+}
+
+/// Stats returned per applied step (consumed by metrics/benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub update_norm: f32,
+    pub limiter_scale: f32,
+}
+
+impl ParamOptimizer {
+    pub fn apply(&mut self, w: &mut Tensor, g: &Tensor, lr_t: f32) -> StepStats {
+        let lr_eff = lr_t * self.alpha;
+        let u = self.inner.direction(g, lr_eff);
+        let norm = u.frob_norm() * self.alpha;
+        let scale = match &mut self.limiter {
+            Some(l) => l.scale_for(norm),
+            None => 1.0,
+        };
+        w.axpy(-lr_eff * scale, &u);
+        StepStats { update_norm: norm * scale, limiter_scale: scale }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    pub fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+/// Build the per-parameter optimizer bank for a model, following the
+/// paper's module-wise routing. `runtime` enables the AOT HLO hot
+/// path for GWT/Adam steps where an artifact exists; `None` forces
+/// the pure-rust path (used by tests and high-level sweeps).
+pub fn build_optimizers(
+    params: &[ParamShape],
+    cfg: &TrainConfig,
+    runtime: Option<Rc<Runtime>>,
+) -> Result<Vec<ParamOptimizer>> {
+    let hp = AdamHp::from_config(cfg);
+    params
+        .iter()
+        .map(|p| {
+            let eligible = p.eligible && p.shape.len() == 2;
+            let (inner, alpha): (Box<dyn MatrixOpt>, f32) = if eligible {
+                let (m, n) = (p.shape[0], p.shape[1]);
+                let alpha = if cfg.modulewise_lr { cfg.alpha } else { 1.0 };
+                let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
+                    OptSpec::Adam => Box::new(Adam::new(&p.shape, hp)),
+                    OptSpec::Gwt { level } => Box::new(GwtAdam::new(
+                        m,
+                        n,
+                        level,
+                        hp,
+                        runtime.clone(),
+                    )?),
+                    OptSpec::Galore { rank_denom } => Box::new(Galore::new(
+                        m,
+                        n,
+                        (m.min(n) / rank_denom).max(1),
+                        cfg.galore_update_gap,
+                        hp,
+                    )),
+                    OptSpec::Apollo { rank_denom } => Box::new(Apollo::new(
+                        m,
+                        n,
+                        (m.min(n) / rank_denom).max(1),
+                        hp,
+                        cfg.seed ^ hash_name(&p.name),
+                    )),
+                    OptSpec::Lora { rank_denom } => Box::new(LoraSim::new(
+                        m,
+                        n,
+                        (m.min(n) / rank_denom).max(1),
+                        hp,
+                        cfg.seed ^ hash_name(&p.name),
+                    )),
+                    OptSpec::AdamMini => Box::new(AdamMini::new(&p.shape, hp)),
+                    OptSpec::Muon => Box::new(Muon::new(m, n, 0.95, 5)),
+                    OptSpec::Adam8bit => Box::new(Adam8bit::new(&p.shape, hp)),
+                    OptSpec::SgdM => Box::new(SgdM::new(&p.shape, 0.9)),
+                };
+                (opt, alpha)
+            } else {
+                // Non-eligible params: representation may change
+                // (8-bit / sgd are format-wide), span never does.
+                let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
+                    OptSpec::Adam8bit => Box::new(Adam8bit::new(&p.shape, hp)),
+                    OptSpec::SgdM => Box::new(SgdM::new(&p.shape, 0.9)),
+                    _ => Box::new(Adam::new(&p.shape, hp)),
+                };
+                (opt, 1.0)
+            };
+            let limiter = (eligible && cfg.nl_gamma > 0.0)
+                .then(|| NormGrowthLimiter::new(cfg.nl_gamma));
+            Ok(ParamOptimizer { name: p.name.clone(), inner, limiter, alpha })
+        })
+        .collect()
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, stable across runs.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Total measured optimizer-state bytes across a bank.
+pub fn total_state_bytes(bank: &[ParamOptimizer]) -> usize {
+    bank.iter().map(|p| p.state_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::rng::Rng;
+
+    fn nano_params() -> Vec<ParamShape> {
+        presets::find("nano").unwrap().param_shapes()
+    }
+
+    fn cfg_with(opt: OptSpec) -> TrainConfig {
+        TrainConfig { optimizer: opt, ..Default::default() }
+    }
+
+    #[test]
+    fn build_bank_for_every_method() {
+        for opt in [
+            OptSpec::Adam,
+            OptSpec::Gwt { level: 2 },
+            OptSpec::Galore { rank_denom: 4 },
+            OptSpec::Apollo { rank_denom: 4 },
+            OptSpec::Lora { rank_denom: 4 },
+            OptSpec::AdamMini,
+            OptSpec::Muon,
+            OptSpec::Adam8bit,
+            OptSpec::SgdM,
+        ] {
+            let bank =
+                build_optimizers(&nano_params(), &cfg_with(opt), None).unwrap();
+            assert_eq!(bank.len(), nano_params().len(), "{opt:?}");
+        }
+    }
+
+    #[test]
+    fn gwt_bank_uses_less_state_than_adam() {
+        let adam = build_optimizers(&nano_params(), &cfg_with(OptSpec::Adam), None).unwrap();
+        let gwt2 =
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::Gwt { level: 2 }), None)
+                .unwrap();
+        let gwt3 =
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::Gwt { level: 3 }), None)
+                .unwrap();
+        let (a, g2, g3) = (
+            total_state_bytes(&adam),
+            total_state_bytes(&gwt2),
+            total_state_bytes(&gwt3),
+        );
+        assert!(g2 < a, "gwt2 {g2} vs adam {a}");
+        assert!(g3 < g2, "gwt3 {g3} vs gwt2 {g2}");
+    }
+
+    #[test]
+    fn modulewise_alpha_routing() {
+        let cfg = cfg_with(OptSpec::Gwt { level: 2 });
+        let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
+        for (p, o) in nano_params().iter().zip(&bank) {
+            if p.eligible {
+                assert_eq!(o.alpha, cfg.alpha, "{}", p.name);
+            } else {
+                assert_eq!(o.alpha, 1.0, "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn applying_updates_moves_weights_downhill() {
+        // Quadratic bowl: g = w. Every optimizer must shrink ||w||.
+        for opt in [
+            OptSpec::Adam,
+            OptSpec::Gwt { level: 2 },
+            OptSpec::Galore { rank_denom: 4 },
+            OptSpec::Apollo { rank_denom: 4 },
+            OptSpec::AdamMini,
+            OptSpec::Muon,
+            OptSpec::Adam8bit,
+            OptSpec::SgdM,
+        ] {
+            let shape = ParamShape {
+                name: "layers.00.attn.wq".into(),
+                shape: vec![16, 16],
+                eligible: true,
+            };
+            let mut cfg = cfg_with(opt);
+            cfg.alpha = 1.0;
+            cfg.nl_gamma = 0.0;
+            let mut bank =
+                build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap();
+            let mut rng = Rng::new(1);
+            let mut w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+            let before = w.frob_norm();
+            for _ in 0..60 {
+                let g = w.clone();
+                bank[0].apply(&mut w, &g, 0.05);
+            }
+            assert!(
+                w.frob_norm() < before * 0.8,
+                "{opt:?}: {} -> {}",
+                before,
+                w.frob_norm()
+            );
+        }
+    }
+
+    #[test]
+    fn bias_correction_values() {
+        let hp = AdamHp::default();
+        // t=1: sqrt(1-0.999)/(1-0.9) = sqrt(0.001)/0.1.
+        let want = (0.001f32).sqrt() / 0.1;
+        assert!((hp.bias_correction(1) - want).abs() < 1e-5);
+        // t large: -> 1.
+        assert!((hp.bias_correction(100_000) - 1.0).abs() < 1e-3);
+    }
+}

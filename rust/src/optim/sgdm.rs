@@ -1,0 +1,61 @@
+//! SGD with momentum — the memory floor every method is compared
+//! against (the paper: "GWT at high l approaches SGD-level memory").
+
+use super::MatrixOpt;
+use crate::tensor::Tensor;
+
+pub struct SgdM {
+    momentum: f32,
+    buf: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl SgdM {
+    pub fn new(shape: &[usize], momentum: f32) -> Self {
+        SgdM {
+            momentum,
+            buf: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+}
+
+impl MatrixOpt for SgdM {
+    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+        assert_eq!(g.shape(), &self.shape[..]);
+        for (b, gi) in self.buf.iter_mut().zip(g.data()) {
+            *b = self.momentum * *b + *gi;
+        }
+        Tensor::new(&self.shape, self.buf.clone())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+
+    fn label(&self) -> String {
+        "SGD-M".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut o = SgdM::new(&[3], 0.0);
+        let g = Tensor::new(&[3], vec![1.0, -2.0, 0.5]);
+        assert_eq!(o.direction(&g, 0.0).data(), g.data());
+    }
+
+    #[test]
+    fn momentum_geometric_sum() {
+        let mut o = SgdM::new(&[1], 0.5);
+        let g = Tensor::new(&[1], vec![1.0]);
+        o.direction(&g, 0.0);
+        o.direction(&g, 0.0);
+        let u = o.direction(&g, 0.0);
+        assert!((u.data()[0] - 1.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,114 @@
+//! Parallelism substrate: scoped worker mapping + allreduce.
+//!
+//! Stands in for the paper's multi-GPU DDP setup: each data-parallel
+//! worker is a thread with its own data shard; gradients are combined
+//! with a tree allreduce (same reduction topology NCCL would use, so
+//! the coordinator logic is shaped correctly even though transport is
+//! shared memory).
+
+/// Run `f(worker_index)` on `n` threads and collect results in order.
+pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 1 {
+        return vec![f(0)];
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let f = &f;
+                scope.spawn(move || f(w))
+            })
+            .collect();
+        for (slot, h) in out.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("worker panicked"));
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Tree allreduce (sum) over per-worker vectors; returns the reduced
+/// vector. All inputs must have equal length. log2(n) rounds, like a
+/// binomial-tree reduce: pairs at distance 2^k combine each round.
+pub fn allreduce_sum(mut shards: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!shards.is_empty());
+    let len = shards[0].len();
+    assert!(shards.iter().all(|s| s.len() == len), "ragged shards");
+    let mut stride = 1;
+    while stride < shards.len() {
+        let mut i = 0;
+        while i + stride < shards.len() {
+            // Combine shard[i+stride] into shard[i].
+            let (left, right) = shards.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a += *b;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    shards.swap_remove(0)
+}
+
+/// Mean-reduce convenience used for gradient averaging across DP
+/// workers.
+pub fn allreduce_mean(shards: Vec<Vec<f32>>) -> Vec<f32> {
+    let n = shards.len() as f32;
+    let mut out = allreduce_sum(shards);
+    if n > 1.0 {
+        for x in &mut out {
+            *x /= n;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_map_ordered() {
+        let out = scoped_map(4, |w| w * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn allreduce_sum_matches_naive() {
+        for n in 1..=7 {
+            let shards: Vec<Vec<f32>> = (0..n)
+                .map(|w| (0..13).map(|i| (w * 13 + i) as f32).collect())
+                .collect();
+            let naive: Vec<f32> = (0..13)
+                .map(|i| shards.iter().map(|s| s[i]).sum())
+                .collect();
+            let got = allreduce_sum(shards);
+            assert_eq!(got, naive, "n={n}");
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let shards = vec![vec![1.0, 2.0], vec![3.0, 6.0]];
+        assert_eq!(allreduce_mean(shards), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_shards_rejected() {
+        allreduce_sum(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn parallel_map_actually_runs_closures() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        scoped_map(8, |_| counter.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+}

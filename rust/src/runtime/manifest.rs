@@ -1,0 +1,256 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed with the in-repo JSON substrate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::presets::ModelPreset;
+use crate::jsonx::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub key: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub preset: Option<String>,
+    pub level: Option<usize>,
+    pub rows: Option<usize>,
+    pub cols: Option<usize>,
+    pub classes: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub gwt: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub arch: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub params: Vec<ParamInfo>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub aot_levels: Vec<usize>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| {
+            Ok(IoSpec {
+                dtype: v.get("dtype")?.as_str()?.to_string(),
+                shape: v.get("shape")?.usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path} — did you run `make artifacts`?")
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.get("presets")?.as_obj()? {
+            let params = pj
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamInfo {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.usize_vec()?,
+                        gwt: p.get("gwt")?.as_bool()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    arch: pj.get("arch")?.as_str()?.to_string(),
+                    d_model: pj.get("d_model")?.as_usize()?,
+                    n_layers: pj.get("n_layers")?.as_usize()?,
+                    seq_len: pj.get("seq_len")?.as_usize()?,
+                    batch: pj.get("batch")?.as_usize()?,
+                    vocab: pj.get("vocab")?.as_usize()?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (key, aj) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                key.clone(),
+                ArtifactInfo {
+                    key: key.clone(),
+                    file: aj.get("file")?.as_str()?.to_string(),
+                    kind: aj.get("kind")?.as_str()?.to_string(),
+                    inputs: io_specs(aj.get("inputs")?)?,
+                    outputs: io_specs(aj.get("outputs")?)?,
+                    preset: aj
+                        .opt("preset")
+                        .map(|v| v.as_str().map(str::to_string))
+                        .transpose()?,
+                    level: aj.opt("level").map(|v| v.as_usize()).transpose()?,
+                    rows: aj.opt("rows").map(|v| v.as_usize()).transpose()?,
+                    cols: aj.opt("cols").map(|v| v.as_usize()).transpose()?,
+                    classes: aj.opt("classes").map(|v| v.as_usize()).transpose()?,
+                },
+            );
+        }
+
+        let aot_levels = j.get("aot_levels")?.usize_vec()?;
+        Ok(Manifest { dir: dir.to_string(), presets, artifacts, aot_levels })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{key}' not in manifest"))
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<String> {
+        Ok(format!("{}/{}", self.dir, self.artifact(key)?.file))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("preset '{name}' not in manifest"))
+    }
+
+    /// Key of the GWT-Adam step artifact for a shape/level, if AOT'd.
+    pub fn gwt_adam_key(&self, m: usize, n: usize, level: usize) -> Option<String> {
+        let key = format!("gwt_adam_l{level}_{m}x{n}");
+        self.artifacts.contains_key(&key).then_some(key)
+    }
+
+    pub fn adam_key(&self, m: usize, n: usize) -> Option<String> {
+        let key = format!("adam_{m}x{n}");
+        self.artifacts.contains_key(&key).then_some(key)
+    }
+
+    /// Assert the rust preset mirror matches the Python-emitted truth.
+    pub fn check_preset(&self, preset: &ModelPreset) -> Result<()> {
+        let info = self.preset(preset.name)?;
+        if info.arch != preset.arch.as_str() {
+            bail!("preset {}: arch mismatch {} vs {}", preset.name, info.arch, preset.arch.as_str());
+        }
+        let shapes = preset.param_shapes();
+        if shapes.len() != info.params.len() {
+            bail!(
+                "preset {}: param count mismatch rust {} vs manifest {}",
+                preset.name,
+                shapes.len(),
+                info.params.len()
+            );
+        }
+        for (rs, py) in shapes.iter().zip(&info.params) {
+            if rs.name != py.name || rs.shape != py.shape || rs.eligible != py.gwt {
+                bail!(
+                    "preset {}: param mismatch rust {:?}/{:?}/{} vs manifest {:?}/{:?}/{}",
+                    preset.name, rs.name, rs.shape, rs.eligible,
+                    py.name, py.shape, py.gwt
+                );
+            }
+        }
+        if info.seq_len != preset.seq_len || info.batch != preset.batch {
+            bail!("preset {}: workload dims mismatch", preset.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "aot_levels": [1, 2],
+          "presets": {
+            "t": {
+              "arch": "llama", "vocab": 8, "d_model": 4, "n_layers": 1,
+              "n_heads": 1, "d_ff": 8, "seq_len": 4, "batch": 2,
+              "params": [
+                {"name": "a", "shape": [4, 4], "gwt": true},
+                {"name": "b", "shape": [4], "gwt": false}
+              ]
+            }
+          },
+          "artifacts": {
+            "adam_4x4": {
+              "file": "adam_4x4.hlo.txt", "kind": "adam", "rows": 4, "cols": 4,
+              "inputs": [{"dtype": "float32", "shape": [4, 4]}],
+              "outputs": [{"dtype": "float32", "shape": [4, 4]}]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    fn write_tiny(dir: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(format!("{dir}/manifest.json"), tiny_manifest_json()).unwrap();
+    }
+
+    #[test]
+    fn parses_tiny_manifest() {
+        let dir = std::env::temp_dir().join("gwt_manifest_test");
+        let dir = dir.to_str().unwrap();
+        write_tiny(dir);
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.aot_levels, vec![1, 2]);
+        let p = m.preset("t").unwrap();
+        assert_eq!(p.params.len(), 2);
+        assert!(p.params[0].gwt);
+        let a = m.artifact("adam_4x4").unwrap();
+        assert_eq!(a.kind, "adam");
+        assert_eq!(a.inputs[0].numel(), 16);
+        assert_eq!(m.adam_key(4, 4), Some("adam_4x4".into()));
+        assert_eq!(m.adam_key(5, 5), None);
+        assert!(m.gwt_adam_key(4, 4, 1).is_none());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_hint() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute
+//! from the training hot path. Wraps the `xla` crate (xla_extension
+//! 0.5.1, CPU PJRT plugin).
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file`
+//! reassigns instruction ids, sidestepping the 64-bit-id protos jax
+//! >= 0.5 emits (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactInfo, IoSpec, Manifest, ParamInfo, PresetInfo};
+
+use crate::tensor::Tensor;
+
+/// A compiled executable + its manifest entry.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ArtifactInfo,
+}
+
+impl Exec {
+    /// Execute with literal inputs; returns the flattened output
+    /// tuple (aot.py always lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.key,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.info.key))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.info.key,
+                self.info.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// Runtime = PJRT CPU client + manifest + compile-once executable
+/// cache. Single-threaded by design (the `xla` crate client is
+/// Rc-based); data-parallel workers share it via round-robin
+/// execution (see `coordinator::dp`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Fetch (compiling on first use) the executable for `key`.
+    pub fn exec(&self, key: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.artifact(key)?.clone();
+        let path = self.manifest.artifact_path(key)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let exec = Rc::new(Exec { exe, info });
+        self.cache.borrow_mut().insert(key.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling
+// ---------------------------------------------------------------------------
+
+fn bytes_of<T>(xs: &[T]) -> &[u8] {
+    // Safety: reinterpreting POD slices (f32/i32) as bytes.
+    unsafe {
+        std::slice::from_raw_parts(
+            xs.as_ptr() as *const u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+/// f32 tensor -> literal with the tensor's shape.
+///
+/// §Perf: built via `create_from_shape_and_untyped_data` (one copy
+/// into the literal) rather than `vec1(...).reshape(...)` (two copies
+/// + a C-API round trip); see EXPERIMENTS.md §Perf L3-1.
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        bytes_of(t.data()),
+    )?)
+}
+
+/// i32 token batch -> literal of shape (batch, seq).
+pub fn literal_tokens(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[batch, seq],
+        bytes_of(tokens),
+    )?)
+}
+
+/// i32 label vector -> rank-1 literal.
+pub fn literal_labels(labels: &[i32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &[labels.len()],
+        bytes_of(labels),
+    )?)
+}
+
+/// literal -> f32 tensor with the given shape (shape comes from the
+/// manifest; literals don't expose dims cheaply).
+pub fn tensor_from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().context("literal -> f32 vec")?;
+    Ok(Tensor::new(shape, data))
+}
+
+/// scalar literal -> f32.
+pub fn scalar_from_literal(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let lit = literal_f32(&t).unwrap();
+        let back = tensor_from_literal(&lit, &[3, 5]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let t = Tensor::scalar(4.25);
+        let lit = literal_f32(&t).unwrap();
+        assert_eq!(scalar_from_literal(&lit).unwrap(), 4.25);
+    }
+
+    #[test]
+    fn literal_tokens_shape() {
+        let toks: Vec<i32> = (0..12).collect();
+        let lit = literal_tokens(&toks, 3, 4).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), toks);
+    }
+}

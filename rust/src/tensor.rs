@@ -1,0 +1,253 @@
+//! Minimal dense f32 tensor used on the coordinator side.
+//!
+//! The heavy math lives in the AOT HLO artifacts; this type covers the
+//! coordinator's needs: parameter/state storage, optimizer fallback
+//! paths, norms, and literal marshalling. Row-major layout throughout.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// He-style init: normal with std 1/sqrt(fan_in) for matrices.
+    pub fn he_init(shape: &[usize], rng: &mut Rng) -> Self {
+        let fan_in = if shape.len() >= 2 { shape[0] } else { shape[0].max(1) };
+        let scale = 1.0 / (fan_in as f32).sqrt();
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(shape.iter().product(), scale),
+        }
+    }
+
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(shape.iter().product(), scale),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- elementwise ------------------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// self -= s * other  (the weight-update hot path; kept allocation
+    /// free and auto-vectorizable).
+    pub fn axpy(&mut self, s: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        axpy_slice(&mut self.data, s, &other.data);
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        norm_slice(&self.data)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// `dst += s * src` over raw slices (shared by optimizer hot loops).
+#[inline]
+pub fn axpy_slice(dst: &mut [f32], s: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += s * *b;
+    }
+}
+
+/// Frobenius / L2 norm of a slice with f64 accumulation.
+#[inline]
+pub fn norm_slice(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.transpose2(), t);
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = Tensor::zeros(&[4]);
+        let b = Tensor::new(&[4], vec![3., 0., 4., 0.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[6., 0., 8., 0.]);
+        assert!((a.frob_norm() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::he_init(&[256, 64], &mut rng);
+        let std = (t.data().iter().map(|x| x * x).sum::<f32>()
+            / t.len() as f32)
+            .sqrt();
+        assert!((std - 1.0 / 16.0).abs() < 0.005, "std={std}");
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(&[2], vec![1.0, 2.0]);
+        let b = Tensor::new(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::new(&[2], vec![1.1, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn scalar_and_mean() {
+        let s = Tensor::scalar(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.mean(), 2.5);
+        let t = Tensor::new(&[3], vec![1., 2., 3.]);
+        assert!((t.mean() - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,91 @@
+//! Test-support substrate: approx assertions and a tiny property-test
+//! driver (no proptest in this image). `prop_check` runs a closure
+//! over `cases` seeded inputs and reports the first failing seed so
+//! failures reproduce deterministically.
+
+use crate::rng::Rng;
+
+/// Assert two slices are elementwise close (absolute + relative).
+#[track_caller]
+pub fn approx_eq_slice(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let diff = (g - w).abs();
+        let bound = tol + tol * w.abs();
+        assert!(
+            diff <= bound,
+            "index {i}: got {g}, want {w} (diff {diff} > {bound})"
+        );
+    }
+}
+
+#[track_caller]
+pub fn approx_eq(got: f32, want: f32, tol: f32) {
+    let diff = (got - want).abs();
+    assert!(
+        diff <= tol + tol * want.abs(),
+        "got {got}, want {want} (diff {diff})"
+    );
+}
+
+/// Run `f` for `cases` independent seeds; panic with the failing seed.
+/// The closure receives a fresh `Rng` per case — draw whatever shaped
+/// inputs the property needs from it.
+#[track_caller]
+pub fn prop_check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut f: F,
+) {
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xabcd);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helper: random matrix dims with width divisible by 2^max_level.
+pub fn rand_dims(rng: &mut Rng, max_level: usize) -> (usize, usize, usize) {
+    let m = 1 + rng.usize_below(48);
+    let level = 1 + rng.usize_below(max_level);
+    let blocks = 1 + rng.usize_below(16);
+    let n = blocks << level;
+    (m, n, level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivial_property() {
+        prop_check("uniform in range", 50, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_check_reports_failure() {
+        prop_check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn rand_dims_divisible() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let (m, n, level) = rand_dims(&mut rng, 4);
+            assert!(m >= 1 && n >= 2);
+            assert_eq!(n % (1 << level), 0);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Multi-level discrete Haar wavelet transform (rust mirror of
+//! `python/compile/kernels/ref.py`).
+//!
+//! Used by (a) the pure-rust GWT-Adam fallback path for levels without
+//! an AOT artifact, (b) the memory accountant's sanity checks, and
+//! (c) the Theorem-1 verification tests. Layout convention matches the
+//! Python oracle exactly: `[A_l | D_l | D_{l-1} | ... | D_1]` along
+//! rows of length `n`.
+
+pub mod db4;
+pub mod theory;
+
+pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// Validate that an `level`-level transform is defined for width `n`.
+pub fn check_level(n: usize, level: usize) -> anyhow::Result<()> {
+    if level > 0 && (n % (1usize << level)) != 0 {
+        anyhow::bail!("width {n} not divisible by 2^level={}", 1usize << level);
+    }
+    if level >= usize::BITS as usize {
+        anyhow::bail!("level {level} out of range");
+    }
+    Ok(())
+}
+
+/// Forward transform of one row, in place, using `scratch` (len >= n).
+pub fn haar_fwd_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n;
+    for _ in 0..level {
+        let half = w / 2;
+        for i in 0..half {
+            let e = row[2 * i];
+            let o = row[2 * i + 1];
+            scratch[i] = (e + o) * INV_SQRT2; // approximation
+            scratch[half + i] = (e - o) * INV_SQRT2; // detail D_k
+        }
+        row[..w].copy_from_slice(&scratch[..w]);
+        w = half;
+    }
+}
+
+/// Inverse transform of one row, in place.
+pub fn haar_inv_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n >> level;
+    for _ in 0..level {
+        // [A_k | D_k] of combined width 2w -> A_{k-1} of width 2w.
+        for i in 0..w {
+            let a = row[i];
+            let d = row[w + i];
+            scratch[2 * i] = (a + d) * INV_SQRT2;
+            scratch[2 * i + 1] = (a - d) * INV_SQRT2;
+        }
+        row[..2 * w].copy_from_slice(&scratch[..2 * w]);
+        w *= 2;
+    }
+}
+
+/// Forward transform over an `(m, n)` row-major matrix, out of place.
+pub fn haar_fwd(x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * n);
+    check_level(n, level).expect("invalid level");
+    let mut out = x.to_vec();
+    let mut scratch = vec![0.0f32; n];
+    for r in 0..m {
+        haar_fwd_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
+    }
+    out
+}
+
+/// Inverse transform over an `(m, n)` row-major matrix, out of place.
+pub fn haar_inv(c: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
+    assert_eq!(c.len(), m * n);
+    check_level(n, level).expect("invalid level");
+    let mut out = c.to_vec();
+    let mut scratch = vec![0.0f32; n];
+    for r in 0..m {
+        haar_inv_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
+    }
+    out
+}
+
+/// Block-mean operator `P_l` of the paper's Theorem 1: replaces each
+/// consecutive block of `2^level` columns with the block mean.
+pub fn haar_lowpass(x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * n);
+    check_level(n, level).expect("invalid level");
+    if level == 0 {
+        return x.to_vec();
+    }
+    let b = 1usize << level;
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        let row = &x[r * n..(r + 1) * n];
+        for k in 0..n / b {
+            let mean =
+                row[k * b..(k + 1) * b].iter().sum::<f32>() / b as f32;
+            out[r * n + k * b..r * n + (k + 1) * b].fill(mean);
+        }
+    }
+    out
+}
+
+/// Width of the approximation band after `level` levels.
+pub fn approx_width(n: usize, level: usize) -> usize {
+    n >> level
+}
+
+/// Maximum admissible level for width `n` (largest power of two
+/// dividing n, capped at log2(n)).
+pub fn max_level(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    n.trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::approx_eq_slice;
+
+    fn randmat(m: usize, n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(m * n, 1.0)
+    }
+
+    #[test]
+    fn paper_worked_example_level1_and_2() {
+        // Paper §III-A explicit 8-element example.
+        let x = [1., 2., 3., 4., 5., 6., 7., 8.];
+        let c1 = haar_fwd(&x, 1, 8, 1);
+        let s2 = std::f32::consts::SQRT_2;
+        let want_a1 = [3. / s2, 7. / s2, 11. / s2, 15. / s2];
+        let want_d1 = [-1. / s2, -1. / s2, -1. / s2, -1. / s2];
+        approx_eq_slice(&c1[..4], &want_a1, 1e-6);
+        approx_eq_slice(&c1[4..], &want_d1, 1e-6);
+
+        let c2 = haar_fwd(&x, 1, 8, 2);
+        approx_eq_slice(&c2[..2], &[5.0, 13.0], 1e-6); // A2
+        approx_eq_slice(&c2[2..4], &[-2.0, -2.0], 1e-6); // D2
+    }
+
+    #[test]
+    fn perfect_reconstruction_many_shapes() {
+        for &(m, n) in &[(1, 2), (3, 8), (16, 64), (5, 96), (2, 1024)] {
+            let x = randmat(m, n, (m * n) as u64);
+            for level in 0..=max_level(n).min(6) {
+                let back = haar_inv(&haar_fwd(&x, m, n, level), m, n, level);
+                approx_eq_slice(&back, &x, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let x = randmat(8, 128, 3);
+        for level in [1, 3, 5] {
+            let c = haar_fwd(&x, 8, 128, level);
+            let ex: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let ec: f64 = c.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(((ex - ec) / ex).abs() < 1e-5, "level {level}");
+        }
+    }
+
+    #[test]
+    fn lowpass_equals_zeroed_details() {
+        let (m, n, level) = (4, 32, 3);
+        let x = randmat(m, n, 9);
+        let mut c = haar_fwd(&x, m, n, level);
+        let q = n >> level;
+        for r in 0..m {
+            for j in q..n {
+                c[r * n + j] = 0.0;
+            }
+        }
+        let via_zeroing = haar_inv(&c, m, n, level);
+        let direct = haar_lowpass(&x, m, n, level);
+        approx_eq_slice(&via_zeroing, &direct, 1e-5);
+    }
+
+    #[test]
+    fn level_zero_is_identity() {
+        let x = randmat(3, 10, 1);
+        assert_eq!(haar_fwd(&x, 3, 10, 0), x);
+        assert_eq!(haar_inv(&x, 3, 10, 0), x);
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(check_level(12, 3).is_err());
+        assert!(check_level(12, 2).is_ok());
+        assert!(check_level(7, 1).is_err());
+    }
+
+    #[test]
+    fn max_level_trailing_zeros() {
+        assert_eq!(max_level(64), 6);
+        assert_eq!(max_level(96), 5);
+        assert_eq!(max_level(7), 0);
+        assert_eq!(max_level(0), 0);
+    }
+
+    #[test]
+    fn constant_signal_has_zero_details() {
+        let x = vec![5.0f32; 64];
+        let c = haar_fwd(&x, 1, 64, 4);
+        let q = 64 >> 4;
+        for (j, v) in c.iter().enumerate().skip(q) {
+            assert!(
+                v.abs() < 1e-5,
+                "detail coeff {j} = {v} should vanish for constant input"
+            );
+        }
+        // Approximation carries all the energy: 5 * sqrt(2^level) each.
+        let expect = 5.0 * (16f32).sqrt();
+        for v in &c[..q] {
+            assert!((v - expect).abs() < 1e-4);
+        }
+    }
+}

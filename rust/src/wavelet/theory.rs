@@ -1,0 +1,290 @@
+//! Empirical verification machinery for the paper's Theorem 1
+//! ("Haar Low-Pass Dominance") and Assumption 1 (Column Smoothness).
+//!
+//! Theorem 1: if `||ΔG||_F < sin(π/b) · sqrt(r) · σ_{r+1}(G)` with
+//! `b = 2^l`, then `||G − P_l(G)||_F < inf_{rank(X)<=r} ||G − X||_F`.
+//!
+//! These functions compute every quantity in the statement so tests
+//! (and the fig2/theory bench) can check the implication on synthetic
+//! column-smooth gradients, and *also* exhibit non-smooth matrices
+//! where low-rank wins — the assumption is not vacuous.
+
+use crate::linalg::{rank_r_error, singular_values};
+use crate::wavelet::haar_lowpass;
+
+/// `||ΔG||_F`: Frobenius norm of consecutive-column differences.
+pub fn column_diff_norm(g: &[f32], m: usize, n: usize) -> f64 {
+    assert_eq!(g.len(), m * n);
+    let mut acc = 0.0f64;
+    for r in 0..m {
+        let row = &g[r * n..(r + 1) * n];
+        for j in 0..n - 1 {
+            let d = (row[j + 1] - row[j]) as f64;
+            acc += d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+/// `||G − P_l(G)||_F`: Haar low-pass approximation error.
+pub fn lowpass_error(g: &[f32], m: usize, n: usize, level: usize) -> f64 {
+    let p = haar_lowpass(g, m, n, level);
+    g.iter()
+        .zip(&p)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Lemma 1's Poincaré constant `κ_b = 1 / (2 sin(π/(2b)))`.
+pub fn kappa_b(b: usize) -> f64 {
+    1.0 / (2.0 * (std::f64::consts::PI / (2.0 * b as f64)).sin())
+}
+
+/// Full report for one matrix: every quantity of Theorem 1.
+pub struct TheoremReport {
+    pub delta_norm: f64,
+    pub lowpass_err: f64,
+    pub rank_r_err: f64,
+    pub sigma_r1: f64,
+    pub threshold: f64,
+    pub assumption_holds: bool,
+    pub dominance_holds: bool,
+    /// Lemma 2 bound: lowpass_err <= κ_b · delta_norm.
+    pub lemma2_holds: bool,
+}
+
+pub fn check_theorem1(
+    g: &[f32],
+    m: usize,
+    n: usize,
+    level: usize,
+    r: usize,
+) -> TheoremReport {
+    let b = 1usize << level;
+    let sv = singular_values(g, m, n);
+    let sigma_r1 = *sv.get(r).unwrap_or(&0.0) as f64;
+    let delta_norm = column_diff_norm(g, m, n);
+    let lowpass_err = lowpass_error(g, m, n, level);
+    let rank_err = rank_r_error(&sv, r);
+    let threshold =
+        (std::f64::consts::PI / b as f64).sin() * (r as f64).sqrt() * sigma_r1;
+    TheoremReport {
+        delta_norm,
+        lowpass_err,
+        rank_r_err: rank_err,
+        sigma_r1,
+        threshold,
+        assumption_holds: delta_norm < threshold,
+        dominance_holds: lowpass_err < rank_err,
+        lemma2_holds: lowpass_err <= kappa_b(b) * delta_norm + 1e-6,
+    }
+}
+
+/// Construct a gradient matrix that *provably* satisfies Assumption 1.
+///
+/// Soundness note (recorded in DESIGN.md / EXPERIMENTS.md): the
+/// paper's proof of Theorem 1 uses
+/// `inf_{rank r} ||G-X||_F = sqrt(sum_{k>r} σ_k²) >= sqrt(r)·σ_{r+1}`,
+/// which is FALSE for matrices with fewer than r tail singular values
+/// (e.g. rank r+1 exactly: the tail norm is σ_{r+1}, not √r·σ_{r+1}).
+/// The theorem is therefore sound only on matrices whose singular
+/// tail is "thick" (≥ r values at σ_{r+1} scale). This constructor
+/// produces exactly that regime: G = Σ_{k=0}^{modes-1} u_k c_kᵀ with
+/// c_k the k lowest path-graph Laplacian eigenvectors (DCT-II modes —
+/// maximally column-smooth) and orthonormal u_k, all singular values
+/// equal. With `modes ≈ 2r+1` and r ≲ 0.6·(n/π)·sin(π/b), Assumption
+/// 1 holds and the tail is thick, so dominance must follow.
+pub fn lowpass_friendly_gradient(
+    m: usize,
+    n: usize,
+    modes: usize,
+    rng: &mut crate::rng::Rng,
+) -> Vec<f32> {
+    assert!(modes <= m.min(n));
+    // DCT-II modes c_k[j] = cos((j+1/2)kπ/n), orthogonal on the path.
+    let mut c = vec![vec![0.0f32; n]; modes];
+    for (k, ck) in c.iter_mut().enumerate() {
+        for (j, v) in ck.iter_mut().enumerate() {
+            *v = ((j as f32 + 0.5) * k as f32 * std::f32::consts::PI
+                / n as f32)
+                .cos();
+        }
+        let norm = crate::linalg::frob_norm(ck) as f32;
+        for v in ck.iter_mut() {
+            *v /= norm;
+        }
+    }
+    // Random orthonormal u_k via Gram–Schmidt.
+    let mut u = vec![vec![0.0f32; m]; modes];
+    for k in 0..modes {
+        let mut vk = rng.normal_vec(m, 1.0);
+        for prev in u.iter().take(k) {
+            let dot: f32 = vk.iter().zip(prev).map(|(a, b)| a * b).sum();
+            for (x, p) in vk.iter_mut().zip(prev) {
+                *x -= dot * p;
+            }
+        }
+        let norm = crate::linalg::frob_norm(&vk) as f32;
+        assert!(norm > 1e-6, "Gram-Schmidt degenerate");
+        for x in vk.iter_mut() {
+            *x /= norm;
+        }
+        u[k] = vk;
+    }
+    let mut g = vec![0.0f32; m * n];
+    for k in 0..modes {
+        for i in 0..m {
+            for j in 0..n {
+                g[i * n + j] += u[k][i] * c[k][j];
+            }
+        }
+    }
+    g
+}
+
+/// Synthetic "column-smooth" gradient: smooth low-frequency row
+/// profiles plus small high-frequency noise — a qualitative stand-in
+/// for trained-transformer gradients (used by demo benches; the
+/// rigorous Assumption-1 regime is `lowpass_friendly_gradient`).
+pub fn smooth_gradient(
+    m: usize,
+    n: usize,
+    noise: f32,
+    rng: &mut crate::rng::Rng,
+) -> Vec<f32> {
+    let mut g = vec![0.0f32; m * n];
+    // A few random smooth column profiles shared across rows (keeps
+    // effective rank moderate) + per-row amplitude.
+    let n_modes = 4;
+    let amps: Vec<Vec<f32>> = (0..m)
+        .map(|_| (0..n_modes).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let freqs: Vec<f32> = (0..n_modes).map(|k| 0.5 + k as f32).collect();
+    let phases: Vec<f32> = (0..n_modes)
+        .map(|_| rng.f32() * std::f32::consts::TAU)
+        .collect();
+    for i in 0..m {
+        for j in 0..n {
+            let t = j as f32 / n as f32;
+            let mut v = 0.0f32;
+            for k in 0..n_modes {
+                v += amps[i][k]
+                    * (std::f32::consts::TAU * freqs[k] * t + phases[k]).sin();
+            }
+            g[i * n + j] = v + noise * rng.normal_f32();
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn kappa_matches_paper_constant() {
+        // Paper: for b = 2^3, sin(π/8) → threshold factor 0.1913·sqrt(n)
+        // with r = n/4: sin(π/8)·sqrt(n/4) = 0.38268/2·sqrt(n).
+        let s = (std::f64::consts::PI / 8.0).sin() / 2.0;
+        assert!((s - 0.19134).abs() < 1e-4, "{s}");
+        // κ_b sanity: κ_2 = 1/(2 sin(π/4)) = 1/√2.
+        assert!((kappa_b(2) - 1.0 / 2f64.sqrt() * 2f64.sqrt() / 2f64.sqrt()).abs() < 1.0);
+        assert!((kappa_b(2) - 0.7071).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lemma2_poincare_bound_always_holds() {
+        // Lemma 2 is assumption-free: check it on random matrices.
+        let mut rng = Rng::new(5);
+        for &(m, n, level) in &[(8, 32, 2), (16, 64, 3), (4, 16, 1)] {
+            let g = rng.normal_vec(m * n, 1.0);
+            let rep = check_theorem1(&g, m, n, level, 2);
+            assert!(
+                rep.lemma2_holds,
+                "lemma2 violated: err={} bound={}",
+                rep.lowpass_err,
+                kappa_b(1 << level) * rep.delta_norm
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_on_lowpass_friendly_gradients() {
+        // Thick-tail spectral construction: Assumption 1 holds by
+        // design, and dominance must follow (the regime where the
+        // paper's proof chain is valid — see lowpass_friendly_gradient
+        // docs for the soundness caveat).
+        let mut rng = Rng::new(7);
+        let (m, n, level, r) = (48, 64, 2usize, 8usize);
+        let g = lowpass_friendly_gradient(m, n, 2 * r + 1, &mut rng);
+        let rep = check_theorem1(&g, m, n, level, r);
+        assert!(
+            rep.assumption_holds,
+            "assumption should hold by construction: delta={} thresh={}",
+            rep.delta_norm, rep.threshold
+        );
+        assert!(
+            rep.dominance_holds,
+            "dominance should follow: lowpass={} rank_r={}",
+            rep.lowpass_err, rep.rank_r_err
+        );
+    }
+
+    #[test]
+    fn papers_tail_bound_is_not_universal() {
+        // Pin the soundness gap: a rank-(r+1) matrix with equal
+        // singular values has tail norm σ_{r+1}, NOT ≥ √r·σ_{r+1} as
+        // the paper's proof of Theorem 1 asserts.
+        let mut rng = Rng::new(13);
+        let (m, n, r) = (32, 32, 8usize);
+        let g = lowpass_friendly_gradient(m, n, r + 1, &mut rng);
+        let sv = crate::linalg::singular_values(&g, m, n);
+        let tail = crate::linalg::rank_r_error(&sv, r);
+        let sigma_r1 = sv[r] as f64;
+        assert!(
+            tail < (r as f64).sqrt() * sigma_r1 * 0.9,
+            "tail {tail} vs paper-claimed bound {}",
+            (r as f64).sqrt() * sigma_r1
+        );
+    }
+
+    #[test]
+    fn white_noise_breaks_assumption_and_lowrank_can_win() {
+        // Pure white noise: columns are rough, assumption fails.
+        let mut rng = Rng::new(9);
+        let (m, n, level) = (32, 32, 3);
+        let g = rng.normal_vec(m * n, 1.0);
+        let rep = check_theorem1(&g, m, n, level, n / 4);
+        assert!(
+            !rep.assumption_holds,
+            "white noise should violate column smoothness"
+        );
+    }
+
+    #[test]
+    fn implication_never_violated_on_thick_tails() {
+        // Theorem as implication over the thick-tail spectral family:
+        // whenever Assumption 1 holds, dominance must hold.
+        crate::testing::prop_check("thm1-implication", 20, |rng| {
+            let level = 1 + rng.usize_below(2);
+            let n = 32 << rng.usize_below(2); // 32 or 64
+            let m = n; // square, like the paper's discussion
+            let r = 2 + rng.usize_below(n / 8);
+            let modes = (2 * r + 1).min(m.min(n));
+            let g = lowpass_friendly_gradient(m, n, modes, rng);
+            let rep = check_theorem1(&g, m, n, level, r);
+            if rep.assumption_holds && !rep.dominance_holds {
+                return Err(format!(
+                    "assumption held but dominance failed: {} vs {} (n={n} r={r} l={level})",
+                    rep.lowpass_err, rep.rank_r_err
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,89 @@
+//! Fine-tuning integration: classification artifacts + FineTuner.
+
+use std::rc::Rc;
+
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::eval::tasks::{ClsTask, TaskSpec};
+use gwt::eval::FineTuner;
+use gwt::runtime::Runtime;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn ft_cfg(opt: OptSpec) -> TrainConfig {
+    TrainConfig {
+        preset: "ft-micro".into(),
+        optimizer: opt,
+        lr: 0.0005,
+        alpha: 1.0,
+        ..Default::default()
+    }
+}
+
+fn easy_task(classes: usize, seed: u64) -> ClsTask {
+    ClsTask::generate(TaskSpec {
+        name: "it".into(),
+        classes,
+        marker_rate: 0.25,
+        seq_len: 64,
+        train_examples: 96,
+        test_examples: 48,
+        seed,
+    })
+}
+
+#[test]
+fn gwt_finetune_beats_chance() {
+    let Some(rt) = runtime() else { return };
+    let task = easy_task(4, 11);
+    let mut ft =
+        FineTuner::new(rt, ft_cfg(OptSpec::Gwt { level: 2 }), 4, None).unwrap();
+    let out = ft.run(&task, 3).unwrap();
+    assert!(
+        out.accuracy > 0.45,
+        "gwt fine-tune acc {} barely above chance 0.25",
+        out.accuracy
+    );
+}
+
+#[test]
+fn adam_finetune_beats_chance_binary() {
+    let Some(rt) = runtime() else { return };
+    let task = easy_task(2, 12);
+    let mut ft = FineTuner::new(rt, ft_cfg(OptSpec::Adam), 2, None).unwrap();
+    let out = ft.run(&task, 2).unwrap();
+    assert!(out.accuracy > 0.7, "adam acc {}", out.accuracy);
+}
+
+#[test]
+fn zero_head_starts_at_chance() {
+    let Some(rt) = runtime() else { return };
+    let task = easy_task(4, 13);
+    let ft = FineTuner::new(rt, ft_cfg(OptSpec::Adam), 4, None).unwrap();
+    let acc = ft.accuracy(&task).unwrap();
+    // Untrained zero head: argmax is constant => accuracy ~ class
+    // prior of one label (chance-ish).
+    assert!(acc < 0.5, "untrained acc suspiciously high: {acc}");
+}
+
+#[test]
+fn lora_and_galore_paths_run() {
+    let Some(rt) = runtime() else { return };
+    let task = easy_task(3, 14);
+    for opt in [
+        OptSpec::Lora { rank_denom: 64 },
+        OptSpec::Galore { rank_denom: 64 },
+    ] {
+        let mut ft = FineTuner::new(rt.clone(), ft_cfg(opt), 3, None).unwrap();
+        let out = ft.run(&task, 1).unwrap();
+        assert!(out.final_loss.is_finite(), "{opt:?}");
+        assert!(out.accuracy >= 0.15, "{opt:?} acc {}", out.accuracy);
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: AOT HLO artifacts executed through the rust PJRT
+//! runtime, numerics pinned against the in-repo rust oracle (which is
+//! itself pinned against the Python reference by the pytest suite —
+//! closing the loop across all three layers).
+//!
+//! Requires `make artifacts`. Tests skip (with a notice) if the
+//! manifest is missing so plain `cargo test` works pre-build.
+
+use std::rc::Rc;
+
+use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
+use gwt::rng::Rng;
+use gwt::runtime::{literal_f32, tensor_from_literal, Runtime};
+use gwt::tensor::Tensor;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn haar_fwd_artifact_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.exec("haar_fwd_l2_16x32").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[16, 32], 1.0, &mut rng);
+    let outs = exec.run(&[literal_f32(&x).unwrap()]).unwrap();
+    let got = tensor_from_literal(&outs[0], &[16, 32]).unwrap();
+    let want = gwt::wavelet::haar_fwd(x.data(), 16, 32, 2);
+    gwt::testing::approx_eq_slice(got.data(), &want, 1e-5);
+}
+
+#[test]
+fn haar_inv_artifact_roundtrips_fwd() {
+    let Some(rt) = runtime() else { return };
+    let fwd = rt.exec("haar_fwd_l3_8x64").unwrap();
+    let inv = rt.exec("haar_inv_l3_8x64").unwrap();
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[8, 64], 1.0, &mut rng);
+    let c = fwd.run(&[literal_f32(&x).unwrap()]).unwrap();
+    let back = inv.run(&[c[0].clone()]).unwrap();
+    let got = tensor_from_literal(&back[0], &[8, 64]).unwrap();
+    gwt::testing::approx_eq_slice(got.data(), x.data(), 1e-4);
+}
+
+#[test]
+fn gwt_adam_hlo_path_matches_rust_path() {
+    let Some(rt) = runtime() else { return };
+    // Same shape/level, one with the HLO artifact, one pure rust.
+    let hp = AdamHp::default();
+    let mut hlo = GwtAdam::new(64, 64, 2, hp, Some(rt.clone())).unwrap();
+    let mut rust = GwtAdam::new(64, 64, 2, hp, None).unwrap();
+    assert!(hlo.uses_hlo(), "expected gwt_adam_l2_64x64 artifact");
+    assert!(!rust.uses_hlo());
+    let mut rng = Rng::new(3);
+    for step in 0..5 {
+        let g = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let a = hlo.direction(&g, 0.0);
+        let b = rust.direction(&g, 0.0);
+        // Detail/approx division can amplify tiny denominator
+        // differences; compare with mixed tolerance.
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            let diff = (x - y).abs();
+            assert!(
+                diff <= 1e-3 + 1e-3 * y.abs(),
+                "step {step} idx {i}: hlo {x} vs rust {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adam_artifact_matches_rust_adam() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.exec("adam_64x64").unwrap();
+    let mut rng = Rng::new(4);
+    let g = Tensor::randn(&[64, 64], 1.0, &mut rng);
+    let m = Tensor::randn(&[64, 64], 0.1, &mut rng);
+    let mut vdata = rng.normal_vec(64 * 64, 0.05);
+    for v in &mut vdata {
+        *v = v.abs();
+    }
+    let v = Tensor::new(&[64, 64], vdata);
+    let outs = exec
+        .run(&[
+            literal_f32(&g).unwrap(),
+            literal_f32(&m).unwrap(),
+            literal_f32(&v).unwrap(),
+        ])
+        .unwrap();
+    let upd = tensor_from_literal(&outs[0], &[64, 64]).unwrap();
+    // Rust-side expected (pre-bias-correction path in the artifact).
+    let hp = AdamHp::default();
+    let mut want = vec![0.0f32; 64 * 64];
+    for i in 0..want.len() {
+        let mn = hp.beta1 * m.data()[i] + (1.0 - hp.beta1) * g.data()[i];
+        let vn =
+            hp.beta2 * v.data()[i] + (1.0 - hp.beta2) * g.data()[i] * g.data()[i];
+        want[i] = mn / (vn.sqrt() + hp.eps);
+    }
+    gwt::testing::approx_eq_slice(upd.data(), &want, 1e-4);
+}
+
+#[test]
+fn train_step_artifact_runs_and_loss_is_sane() {
+    let Some(rt) = runtime() else { return };
+    let preset = gwt::config::presets::find("nano").unwrap();
+    rt.manifest.check_preset(preset).unwrap();
+    let exec = rt.exec("train_step_nano").unwrap();
+    let mut rng = Rng::new(5);
+    let shapes = preset.param_shapes();
+    let mut inputs = Vec::new();
+    for s in &shapes {
+        inputs.push(
+            literal_f32(&gwt::coordinator::trainer::init_param(
+                &s.name, &s.shape, &mut rng,
+            ))
+            .unwrap(),
+        );
+    }
+    let tokens: Vec<i32> = (0..preset.batch * preset.seq_len)
+        .map(|_| 2 + rng.usize_below(254) as i32)
+        .collect();
+    inputs.push(
+        gwt::runtime::literal_tokens(&tokens, preset.batch, preset.seq_len)
+            .unwrap(),
+    );
+    let outs = exec.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 1 + shapes.len());
+    let loss = gwt::runtime::scalar_from_literal(&outs[0]).unwrap();
+    // Random init on 256-way vocab: loss near ln(256) = 5.545.
+    assert!(
+        (loss - 5.545).abs() < 1.5,
+        "init loss {loss} far from ln(vocab)"
+    );
+    // Gradients: finite, correct shapes, not all zero.
+    let mut total_norm = 0.0f64;
+    for (i, s) in shapes.iter().enumerate() {
+        let g = outs[1 + i].to_vec::<f32>().unwrap();
+        assert_eq!(g.len(), s.numel(), "{}", s.name);
+        assert!(g.iter().all(|x| x.is_finite()), "{}", s.name);
+        total_norm += g.iter().map(|x| (*x as f64).powi(2)).sum::<f64>();
+    }
+    assert!(total_norm.sqrt() > 1e-3, "gradients all ~zero");
+}
+
+#[test]
+fn manifest_validates_all_rust_presets() {
+    let Some(rt) = runtime() else { return };
+    for p in gwt::config::presets::PRESETS {
+        rt.manifest
+            .check_preset(p)
+            .unwrap_or_else(|e| panic!("preset {}: {e:#}", p.name));
+    }
+}

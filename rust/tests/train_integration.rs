@@ -1,0 +1,166 @@
+//! End-to-end trainer integration over the AOT artifacts.
+
+use std::rc::Rc;
+
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::coordinator::Trainer;
+use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
+use gwt::runtime::Runtime;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Rc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn loader_for(preset: &str, seed: u64) -> DataLoader {
+    let p = gwt::config::presets::find(preset).unwrap();
+    let mut c = SyntheticCorpus::new(CorpusSpec { seed, ..Default::default() });
+    DataLoader::new(c.generate_tokens(250_000), p.batch, p.seq_len, seed)
+}
+
+fn cfg(opt: OptSpec, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        optimizer: opt,
+        steps,
+        eval_every: steps,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn gwt_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 1);
+    let mut t = Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 30), &loader).unwrap();
+    let first = t.train_step().unwrap();
+    for _ in 0..29 {
+        t.train_step().unwrap();
+    }
+    let last = t.curve.tail_mean_loss(5).unwrap();
+    assert!(
+        last < first - 0.5,
+        "no learning: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn adam_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 2);
+    let mut t = Trainer::new(rt, cfg(OptSpec::Adam, 20), &loader).unwrap();
+    let first = t.train_step().unwrap();
+    for _ in 0..19 {
+        t.train_step().unwrap();
+    }
+    assert!(t.curve.tail_mean_loss(5).unwrap() < first - 0.3);
+}
+
+#[test]
+fn dp_workers_and_grad_accum_run() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 3);
+    let mut c = cfg(OptSpec::Gwt { level: 2 }, 6);
+    c.dp_workers = 2;
+    c.grad_accum = 2;
+    let mut t = Trainer::new(rt, c, &loader).unwrap();
+    let first = t.train_step().unwrap();
+    for _ in 0..5 {
+        t.train_step().unwrap();
+    }
+    assert!(t.curve.final_loss().unwrap() < first);
+    // 6 steps x 2 accum x 2 workers x 512 tokens.
+    assert_eq!(t.curve.points.last().unwrap().tokens_seen, 6 * 2 * 2 * 512);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 4);
+    let run = |rt: Rc<Runtime>| {
+        let mut t =
+            Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 5), &loader).unwrap();
+        for _ in 0..5 {
+            t.train_step().unwrap();
+        }
+        t.curve.final_loss().unwrap()
+    };
+    let a = run(rt.clone());
+    let b = run(rt);
+    assert_eq!(a, b, "same seed must give identical losses");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 5);
+    let path = std::env::temp_dir()
+        .join("gwt_it_ckpt.bin")
+        .to_str()
+        .unwrap()
+        .to_string();
+    let mut t =
+        Trainer::new(rt.clone(), cfg(OptSpec::Gwt { level: 2 }, 8), &loader)
+            .unwrap();
+    for _ in 0..8 {
+        t.train_step().unwrap();
+    }
+    let loss_before = t.eval_loss(&loader, 4).unwrap();
+    t.save_checkpoint(&path).unwrap();
+
+    let mut t2 =
+        Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 8), &loader).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let loss_after = t2.eval_loss(&loader, 4).unwrap();
+    assert_eq!(loss_before, loss_after);
+}
+
+#[test]
+fn eval_loss_decreases_vs_init() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 6);
+    let mut t =
+        Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 25), &loader).unwrap();
+    let init_eval = t.eval_loss(&loader, 4).unwrap();
+    for _ in 0..25 {
+        t.train_step().unwrap();
+    }
+    let trained_eval = t.eval_loss(&loader, 4).unwrap();
+    assert!(
+        trained_eval < init_eval - 0.5,
+        "eval did not improve: {init_eval} -> {trained_eval}"
+    );
+}
+
+#[test]
+fn gwt_state_smaller_than_adam_in_live_trainers() {
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 7);
+    let adam =
+        Trainer::new(rt.clone(), cfg(OptSpec::Adam, 1), &loader).unwrap();
+    let gwt3 = Trainer::new(rt, cfg(OptSpec::Gwt { level: 3 }, 1), &loader)
+        .unwrap();
+    assert!(gwt3.optimizer_state_bytes() < adam.optimizer_state_bytes());
+}
+
+#[test]
+fn alternate_architectures_train() {
+    let Some(rt) = runtime() else { return };
+    for preset in ["gpt-nano", "bert-nano", "qwen-nano"] {
+        let loader = loader_for(preset, 8);
+        let mut c = cfg(OptSpec::Gwt { level: 2 }, 10);
+        c.preset = preset.into();
+        let mut t = Trainer::new(rt.clone(), c, &loader).unwrap();
+        let first = t.train_step().unwrap();
+        for _ in 0..9 {
+            t.train_step().unwrap();
+        }
+        let last = t.curve.final_loss().unwrap();
+        assert!(last < first, "{preset}: {first} -> {last}");
+    }
+}
