@@ -2,7 +2,10 @@
 //! latencies across all three layers, used to find and track the
 //! bottlenecks recorded in EXPERIMENTS.md §Perf.
 
-use gwt::bench_harness::{runtime_or_skip, time_fn, write_result, TableView};
+use gwt::bench_harness::{
+    runtime_or_skip, time_bank_step, time_fn, write_result, TableView,
+};
+use gwt::config::OptSpec;
 use gwt::linalg::{matmul, svd_jacobi};
 use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
 use gwt::rng::Rng;
@@ -92,6 +95,56 @@ fn main() -> anyhow::Result<()> {
             String::new(),
         ]);
     }
+
+    // Parallel step engine: full-bank optimizer step, serial vs
+    // sharded — the trainer's per-parameter loop driven through
+    // pool::scoped_chunks_mut (bit-identical output at every count;
+    // see tests/parallel_determinism.rs).
+    for (preset, opt) in [
+        ("nano", OptSpec::Gwt { level: 2 }),
+        ("small", OptSpec::Gwt { level: 2 }),
+        ("small", OptSpec::Adam),
+    ] {
+        let t1 = time_bank_step(preset, opt, 1, 2, 9);
+        let t4 = time_bank_step(preset, opt, 4, 2, 9);
+        table.row(vec![
+            format!("bank step {} serial", opt.label()),
+            preset.into(),
+            format!("{:.2} ms", t1.per_iter_ms()),
+            String::new(),
+        ]);
+        table.row(vec![
+            format!("bank step {} threads=4", opt.label()),
+            preset.into(),
+            format!("{:.2} ms", t4.per_iter_ms()),
+            format!("{:.2}x vs serial", t1.median_ns / t4.median_ns),
+        ]);
+    }
+
+    // Row-sharded GwtAdam rust path at the largest preset shape (the
+    // step engine's row level, single-matrix regime).
+    let g_rows = Tensor::randn(&[672, 256], 1.0, &mut rng);
+    let mut row_serial = GwtAdam::new(672, 256, 2, hp, None).unwrap();
+    let tr1 = time_fn(2, 15, || {
+        std::hint::black_box(row_serial.direction(&g_rows, 0.0));
+    });
+    let mut row_sharded =
+        GwtAdam::new(672, 256, 2, hp, None).unwrap().with_threads(4);
+    let tr4 = time_fn(2, 15, || {
+        std::hint::black_box(row_sharded.direction(&g_rows, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam rows serial".into(),
+        "672x256 l=2".into(),
+        format!("{:.1} us", tr1.per_iter_us()),
+        String::new(),
+    ]);
+    table.row(vec![
+        "gwt_adam rows threads=4".into(),
+        "672x256 l=2".into(),
+        format!("{:.1} us", tr4.per_iter_us()),
+        format!("{:.2}x vs serial", tr1.median_ns / tr4.median_ns),
+    ]);
 
     // Literal marshalling (upload + download), the PJRT boundary tax.
     let big = Tensor::randn(&[256, 256], 1.0, &mut rng);

@@ -4,7 +4,7 @@
 //! APOLLO ≥ GaLore on throughput (SVD cost); GWT-2 lowest PPL and
 //! lowest memory.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::bench_harness::{
     bench_loader, runtime_or_skip, scaled, write_result, RunSpec, TableView,
@@ -22,7 +22,7 @@ const PAPER: &[(&str, f64, f64)] = &[
 ];
 
 fn run_with_checkpoints(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     spec: &RunSpec,
     n_checkpoints: usize,
 ) -> (Vec<f32>, gwt::coordinator::TrainOutcome) {

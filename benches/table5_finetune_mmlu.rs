@@ -4,7 +4,7 @@
 //! aligns with rank = min_dim/64 (the paper aligns l=8 with rank 8 on
 //! 3-7B models).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::bench_harness::{runtime_or_skip, write_result, TableView};
 use gwt::config::{OptSpec, TrainConfig};
@@ -30,7 +30,7 @@ const PAPER_AVG: &[(&str, f64)] = &[
 const LR_SWEEP: &[f32] = &[3e-4, 1e-3];
 
 fn run_suite(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     opt: OptSpec,
     suite: &[ClsTask],
     epochs: usize,

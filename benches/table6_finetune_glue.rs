@@ -2,7 +2,7 @@
 //! Shape: GWT's average matches full Adam and beats the other
 //! memory-efficient baselines on average.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::bench_harness::{runtime_or_skip, write_result, TableView};
 use gwt::config::{OptSpec, TrainConfig};
@@ -20,7 +20,7 @@ const PAPER_AVG: &[(&str, f64)] = &[
 ];
 
 fn main() -> anyhow::Result<()> {
-    let rt: Rc<Runtime> = runtime_or_skip();
+    let rt: Arc<Runtime> = runtime_or_skip();
     let preset = gwt::config::presets::find("ft-micro")?;
     let suite: Vec<ClsTask> = tasks::glue_suite(preset.seq_len, 23)
         .into_iter()

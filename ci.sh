@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI gate for the GWT reproduction: build, tests, formatting, lints.
+#
+# Usage: ./ci.sh            # full gate
+#        ./ci.sh --fast     # skip clippy/fmt (tier-1 only)
+#
+# The integration tests that need compiled HLO artifacts skip
+# themselves when `artifacts/` is absent, so this runs green on a
+# fresh checkout; run `make artifacts` first for full coverage.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "$fast" == 0 ]]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "CI OK"

@@ -10,7 +10,7 @@
 //! Defaults: micro (~0.8M params), 300 steps. Use `small` (~5M) for a
 //! longer run.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::config::{OptSpec, TrainConfig};
 use gwt::coordinator::Trainer;
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let preset = args.first().cloned().unwrap_or_else(|| "micro".into());
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let runtime = Rc::new(Runtime::load("artifacts")?);
+    let runtime = Arc::new(Runtime::load("artifacts")?);
     let p = gwt::config::presets::find(&preset)?;
     println!(
         "== e2e: {preset} ({:.2}M params), {steps} steps, GWT-2 vs Adam ==",

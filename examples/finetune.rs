@@ -4,7 +4,7 @@
 //!
 //! Usage: cargo run --release --example finetune [-- epochs]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::bench_harness::TableView;
 use gwt::config::{OptSpec, TrainConfig};
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(2);
-    let runtime = Rc::new(Runtime::load("artifacts")?);
+    let runtime = Arc::new(Runtime::load("artifacts")?);
     let preset = gwt::config::presets::find("ft-micro")?;
 
     // Level 5 on width-128/320 matrices roughly aligns state memory

@@ -5,7 +5,7 @@
 //!   cargo run --release --example pretrain_comparison [-- preset steps]
 //! Defaults: nano, 150 steps.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::bench_harness::TableView;
 use gwt::config::{OptSpec, TrainConfig};
@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let steps: usize =
         args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
 
-    let runtime = Rc::new(Runtime::load("artifacts")?);
+    let runtime = Arc::new(Runtime::load("artifacts")?);
     let p = gwt::config::presets::find(&preset)?;
     let mut corpus = SyntheticCorpus::new(CorpusSpec::default());
     let loader = DataLoader::new(

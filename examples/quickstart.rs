@@ -8,7 +8,7 @@
 //! Run with:  cargo run --release --example quickstart
 //! (requires `make artifacts` first)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::config::{OptSpec, TrainConfig};
 use gwt::coordinator::Trainer;
@@ -17,7 +17,7 @@ use gwt::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     // 1. Load the AOT runtime (compiled HLO artifacts + PJRT CPU).
-    let runtime = Rc::new(Runtime::load("artifacts")?);
+    let runtime = Arc::new(Runtime::load("artifacts")?);
     println!("platform: {}", runtime.platform());
 
     // 2. Build a synthetic corpus + loader (C4 stand-in).
@@ -32,11 +32,17 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Configure: GWT level 2, the paper's pretraining defaults
     //    (lr = 0.01, alpha = 0.25, NL limiter gamma = 1.01).
+    //    `threads` drives the parallel step engine (optimizer bank +
+    //    GWT row sharding): 1 = serial, 0 = auto-detect from the
+    //    host. Any value produces bit-identical weights — the engine
+    //    uses fixed chunk boundaries and no cross-item reductions —
+    //    so it is purely a throughput knob (CLI: `--threads N`).
     let cfg = TrainConfig {
         preset: "nano".into(),
         optimizer: OptSpec::Gwt { level: 2 },
         steps: 100,
         eval_every: 25,
+        threads: 0,
         ..Default::default()
     };
 

@@ -135,7 +135,7 @@ pub fn write_result(name: &str, table: &TableView, extra: Vec<(&str, Json)>) -> 
 // Shared training harness for the paper-reproduction benches
 // ---------------------------------------------------------------------------
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::{OptSpec, TrainConfig};
 use crate::coordinator::{TrainOutcome, Trainer};
@@ -192,7 +192,7 @@ pub fn bench_loader(preset: &str, steps: usize, seed: u64) -> DataLoader {
 }
 
 /// Execute one run and return its outcome.
-pub fn pretrain(rt: Rc<Runtime>, spec: &RunSpec, loader: &DataLoader) -> TrainOutcome {
+pub fn pretrain(rt: Arc<Runtime>, spec: &RunSpec, loader: &DataLoader) -> TrainOutcome {
     let cfg = TrainConfig {
         preset: spec.preset.clone(),
         optimizer: spec.optimizer,
@@ -211,14 +211,49 @@ pub fn pretrain(rt: Rc<Runtime>, spec: &RunSpec, loader: &DataLoader) -> TrainOu
 
 /// Load the runtime or exit 0 with a notice (benches must not fail
 /// the suite when artifacts are absent).
-pub fn runtime_or_skip() -> Rc<Runtime> {
+pub fn runtime_or_skip() -> Arc<Runtime> {
     match Runtime::load("artifacts") {
-        Ok(rt) => Rc::new(rt),
+        Ok(rt) => Arc::new(rt),
         Err(e) => {
             eprintln!("SKIP bench (run `make artifacts`): {e:#}");
             std::process::exit(0);
         }
     }
+}
+
+/// Time one full-bank optimizer step at a given step-engine worker
+/// count: synthetic gradients, the pure-rust optimizer paths, and the
+/// same `step_bank` call the trainer makes. Used by the
+/// serial-vs-parallel comparison in `benches/perf_hotpaths.rs`.
+pub fn time_bank_step(
+    preset: &str,
+    optimizer: OptSpec,
+    threads: usize,
+    warmup: usize,
+    iters: usize,
+) -> Timing {
+    let p = crate::config::presets::find(preset).expect("preset");
+    let shapes = p.param_shapes();
+    let cfg = TrainConfig {
+        preset: preset.into(),
+        optimizer,
+        threads,
+        ..Default::default()
+    };
+    let mut bank = crate::optim::build_optimizers(&shapes, &cfg, None)
+        .expect("bank");
+    let mut rng = crate::rng::Rng::new(0xb41c);
+    let mut params: Vec<crate::tensor::Tensor> = shapes
+        .iter()
+        .map(|s| crate::tensor::Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect();
+    let grads: Vec<crate::tensor::Tensor> = shapes
+        .iter()
+        .map(|s| crate::tensor::Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect();
+    time_fn(warmup, iters, || {
+        crate::optim::step_bank(&mut bank, &mut params, &grads, 0.01, threads);
+    })
 }
 
 /// Quick scale knob for benches: GWT_BENCH_SCALE in (0, 1] shrinks

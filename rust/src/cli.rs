@@ -1,6 +1,11 @@
 //! CLI argument substrate: subcommand + `--key value` flags +
 //! repeated `-s key=value` config overrides (clap is not in this
 //! image).
+//!
+//! Flags the launcher recognizes beyond `-s` include `--config FILE`,
+//! `--checkpoint FILE`, `--curve-dir DIR`, and `--threads N` — the
+//! parallel step-engine worker count (`0` = auto-detect; equivalent
+//! to `-s threads=N`, see `TrainConfig::threads`).
 
 use std::collections::BTreeMap;
 

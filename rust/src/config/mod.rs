@@ -117,6 +117,12 @@ pub struct TrainConfig {
     pub grad_accum: usize,
     /// Data-parallel worker count (thread-simulated GPUs).
     pub dp_workers: usize,
+    /// Parallel step-engine worker threads for the optimizer bank /
+    /// GWT row sharding (`pool::scoped_chunks_mut`). `1` = serial,
+    /// `0` = auto-detect from the host, capped by the preset's
+    /// `max_step_workers`. Output is bit-identical at every setting
+    /// (fixed chunk boundaries, no cross-item reductions).
+    pub threads: usize,
     /// Norm-growth limiter threshold γ (0 disables, paper: 1.01).
     pub nl_gamma: f32,
     /// Apply module-wise lr (α on eligible modules) — paper default.
@@ -143,6 +149,7 @@ impl Default for TrainConfig {
             seed: 0,
             grad_accum: 1,
             dp_workers: 1,
+            threads: 1,
             nl_gamma: 1.01,
             modulewise_lr: true,
             eval_every: 50,
@@ -169,6 +176,7 @@ impl TrainConfig {
             "seed" => self.seed = v.parse().context("seed")?,
             "grad_accum" => self.grad_accum = v.parse().context("grad_accum")?,
             "dp_workers" => self.dp_workers = v.parse().context("dp_workers")?,
+            "threads" => self.threads = v.parse().context("threads")?,
             "nl_gamma" => self.nl_gamma = v.parse().context("nl_gamma")?,
             "modulewise_lr" => self.modulewise_lr = parse_bool(v)?,
             "eval_every" => self.eval_every = v.parse().context("eval_every")?,
@@ -234,6 +242,23 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Resolve the step-engine worker count: `0` auto-detects from
+    /// the host's available parallelism, capped by the preset's
+    /// useful maximum (one worker per parameter tensor); an explicit
+    /// positive value is honored as-is.
+    pub fn resolve_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let cap = presets::find(&self.preset)
+            .map(|p| p.max_step_workers())
+            .unwrap_or(hw);
+        hw.min(cap).max(1)
+    }
+
     pub fn summary(&self) -> BTreeMap<String, String> {
         let mut m = BTreeMap::new();
         m.insert("preset".into(), self.preset.clone());
@@ -242,6 +267,7 @@ impl TrainConfig {
         m.insert("alpha".into(), format!("{}", self.alpha));
         m.insert("steps".into(), format!("{}", self.steps));
         m.insert("dp_workers".into(), format!("{}", self.dp_workers));
+        m.insert("threads".into(), format!("{}", self.threads));
         m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
         m
     }
@@ -295,7 +321,7 @@ mod tests {
     fn config_text_parsing() {
         let mut cfg = TrainConfig::default();
         cfg.apply_text(
-            "[model]\npreset = micro  # comment\n\n[opt]\noptimizer = gwt-3\nlr = 0.02\nnl_gamma=1.05\nmodulewise_lr = false\n",
+            "[model]\npreset = micro  # comment\n\n[opt]\noptimizer = gwt-3\nlr = 0.02\nnl_gamma=1.05\nmodulewise_lr = false\nthreads = 4\n",
         )
         .unwrap();
         assert_eq!(cfg.preset, "micro");
@@ -303,6 +329,22 @@ mod tests {
         assert_eq!(cfg.lr, 0.02);
         assert_eq!(cfg.nl_gamma, 1.05);
         assert!(!cfg.modulewise_lr);
+        assert_eq!(cfg.threads, 4);
+    }
+
+    #[test]
+    fn threads_resolution() {
+        let mut cfg = TrainConfig::default();
+        // Explicit values are honored as-is.
+        cfg.threads = 7;
+        assert_eq!(cfg.resolve_threads(), 7);
+        // Auto-detect is positive and capped by the preset's tensor
+        // count (one worker per parameter is the useful maximum).
+        cfg.threads = 0;
+        let auto = cfg.resolve_threads();
+        assert!(auto >= 1);
+        let cap = presets::find(&cfg.preset).unwrap().max_step_workers();
+        assert!(auto <= cap, "auto {auto} > cap {cap}");
     }
 
     #[test]

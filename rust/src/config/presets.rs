@@ -141,6 +141,14 @@ impl ModelPreset {
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.seq_len
     }
+
+    /// Useful upper bound on step-engine workers for this preset: the
+    /// bank shards one parameter tensor per worker, so threads beyond
+    /// the tensor count would idle (`TrainConfig::resolve_threads`
+    /// caps auto-detection here).
+    pub fn max_step_workers(&self) -> usize {
+        self.param_shapes().len()
+    }
 }
 
 #[cfg(test)]

@@ -4,10 +4,11 @@
 //! table): each logical worker owns a disjoint data shard; per
 //! optimizer step every worker contributes one microbatch gradient
 //! and the shards are combined with the tree allreduce from `pool`.
-//! Execution itself is round-robin on the shared single PJRT CPU
-//! client (the `xla` crate client is not Send, and this box has one
-//! core — the *topology* is what the coordinator logic needs to get
-//! right; transport is shared memory).
+//! Execution itself is round-robin on the shared PJRT CPU client
+//! (the runtime serializes all PJRT dispatch behind one lock — see
+//! `runtime`'s threading-model doc — so concurrent forward/backward
+//! would not overlap anyway; the *topology* is what the coordinator
+//! logic needs to get right, and transport is shared memory).
 
 use crate::data::{DataLoader, Split};
 use crate::pool::allreduce_mean;

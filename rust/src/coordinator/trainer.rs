@@ -1,6 +1,6 @@
 //! The training loop.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -11,7 +11,9 @@ use crate::config::{presets, TrainConfig};
 use crate::data::DataLoader;
 use crate::memory::ParamShape;
 use crate::metrics::{LossCurve, Throughput};
-use crate::optim::{build_optimizers, total_state_bytes, ParamOptimizer};
+use crate::optim::{
+    build_optimizers, step_bank, total_state_bytes, ParamOptimizer,
+};
 use crate::runtime::{
     literal_f32, literal_tokens, scalar_from_literal, Runtime,
 };
@@ -19,7 +21,7 @@ use crate::tensor::Tensor;
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    runtime: Rc<Runtime>,
+    runtime: Arc<Runtime>,
     preset: &'static presets::ModelPreset,
     shapes: Vec<ParamShape>,
     pub params: Vec<Tensor>,
@@ -30,10 +32,12 @@ pub struct Trainer {
     pub curve: LossCurve,
     pub throughput: Throughput,
     tokens_seen: usize,
+    /// Step-engine worker count (resolved once from `cfg.threads`).
+    threads: usize,
     /// §Perf L3-2: executables resolved once at construction instead
     /// of a key-format + map lookup on every microbatch.
-    train_exec: Rc<crate::runtime::Exec>,
-    eval_exec: Rc<crate::runtime::Exec>,
+    train_exec: Arc<crate::runtime::Exec>,
+    eval_exec: Arc<crate::runtime::Exec>,
 }
 
 /// Summary of a finished run (consumed by benches / examples).
@@ -51,7 +55,7 @@ pub struct TrainOutcome {
 
 impl Trainer {
     pub fn new(
-        runtime: Rc<Runtime>,
+        runtime: Arc<Runtime>,
         cfg: TrainConfig,
         loader: &DataLoader,
     ) -> Result<Trainer> {
@@ -73,6 +77,7 @@ impl Trainer {
         let label = format!("{}_{}", cfg.preset, cfg.optimizer.label());
         let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
         let eval_exec = runtime.exec(&format!("eval_loss_{}", cfg.preset))?;
+        let threads = cfg.resolve_threads();
         Ok(Trainer {
             cfg,
             runtime,
@@ -86,6 +91,7 @@ impl Trainer {
             curve: LossCurve::new(&label),
             throughput: Throughput::new(),
             tokens_seen: 0,
+            threads,
             train_exec,
             eval_exec,
         })
@@ -95,7 +101,7 @@ impl Trainer {
         self.preset
     }
 
-    pub fn runtime(&self) -> &Rc<Runtime> {
+    pub fn runtime(&self) -> &Arc<Runtime> {
         &self.runtime
     }
 
@@ -155,21 +161,21 @@ impl Trainer {
             }
         }
         let inv = 1.0 / self.cfg.grad_accum as f32;
-        for ((w, opt), (g, s)) in self
-            .params
-            .iter_mut()
-            .zip(&mut self.bank)
-            .zip(acc.into_iter().zip(&self.shapes))
-        {
-            let mut gd = g;
-            if self.cfg.grad_accum > 1 {
-                for x in &mut gd {
-                    *x *= inv;
+        let grads: Vec<Tensor> = acc
+            .into_iter()
+            .zip(&self.shapes)
+            .map(|(mut gd, s)| {
+                if self.cfg.grad_accum > 1 {
+                    for x in &mut gd {
+                        *x *= inv;
+                    }
                 }
-            }
-            let gt = Tensor::new(&s.shape, gd);
-            opt.apply(w, &gt, lr_t);
-        }
+                Tensor::new(&s.shape, gd)
+            })
+            .collect();
+        // Parallel step engine: shard the bank over the configured
+        // worker count (bit-identical to the serial loop).
+        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, self.threads);
         let mean_loss = loss_sum / micro_count.max(1) as f32;
         self.step += 1;
         self.curve.push(

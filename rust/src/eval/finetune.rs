@@ -6,7 +6,7 @@
 //! just attention/MLP), a fixed small number of epochs, accuracy on a
 //! held-out test split, best-of over a small lr sweep.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -14,7 +14,7 @@ use crate::config::{presets, TrainConfig};
 use crate::coordinator::trainer::init_param;
 use crate::coordinator::CosineSchedule;
 use crate::memory::ParamShape;
-use crate::optim::{build_optimizers, ParamOptimizer};
+use crate::optim::{build_optimizers, step_bank, ParamOptimizer};
 use crate::runtime::{
     literal_f32, literal_labels, literal_tokens, scalar_from_literal, Runtime,
 };
@@ -23,13 +23,15 @@ use crate::tensor::Tensor;
 use super::tasks::ClsTask;
 
 pub struct FineTuner {
-    runtime: Rc<Runtime>,
+    runtime: Arc<Runtime>,
     cfg: TrainConfig,
     preset: &'static presets::ModelPreset,
     shapes: Vec<ParamShape>, // backbone + zcls.head (sorted order)
     params: Vec<Tensor>,
     bank: Vec<ParamOptimizer>,
     classes: usize,
+    /// Step-engine worker count (resolved once from `cfg.threads`).
+    threads: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -46,7 +48,7 @@ impl FineTuner {
     /// back to fresh init (fine for the synthetic suites — both
     /// regimes are compared under identical backbones).
     pub fn new(
-        runtime: Rc<Runtime>,
+        runtime: Arc<Runtime>,
         mut cfg: TrainConfig,
         classes: usize,
         backbone: Option<&std::collections::BTreeMap<String, Tensor>>,
@@ -90,7 +92,17 @@ impl FineTuner {
         // pretraining stability only).
         cfg.nl_gamma = 0.0;
         let bank = build_optimizers(&shapes, &cfg, Some(runtime.clone()))?;
-        Ok(FineTuner { runtime, cfg, preset, shapes, params, bank, classes })
+        let threads = cfg.resolve_threads();
+        Ok(FineTuner {
+            runtime,
+            cfg,
+            preset,
+            shapes,
+            params,
+            bank,
+            classes,
+            threads,
+        })
     }
 
     fn run_batch(
@@ -118,15 +130,15 @@ impl FineTuner {
         inputs.push(literal_labels(labels)?);
         let outs = exec.run(&inputs)?;
         let loss = scalar_from_literal(&outs[0])?;
-        for (i, (w, opt)) in
-            self.params.iter_mut().zip(&mut self.bank).enumerate()
-        {
-            let g = Tensor::new(
-                &self.shapes[i].shape,
-                outs[1 + i].to_vec::<f32>()?,
-            );
-            opt.apply(w, &g, lr_t);
-        }
+        let grads = self
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                Ok(Tensor::new(&s.shape, outs[1 + i].to_vec::<f32>()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, self.threads);
         Ok(loss)
     }
 

@@ -10,10 +10,11 @@
 //! Examples:
 //!   gwt train -s preset=nano -s optimizer=gwt-2 -s steps=200
 //!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
+//!   gwt train --threads 4 -s preset=small      # parallel step engine
 //!   gwt memory
 //!   gwt info
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -39,7 +40,8 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gwt <train|eval|finetune|memory|info> [--config FILE] [-s key=value ...]"
+        "usage: gwt <train|eval|finetune|memory|info> [--config FILE] \
+         [--threads N] [-s key=value ...]"
     );
 }
 
@@ -50,6 +52,11 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     };
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
+    }
+    // `--threads N` is the CLI spelling of the step-engine knob
+    // (equivalent to `-s threads=N`; 0 = auto-detect).
+    if let Some(t) = args.flag_usize("threads")? {
+        cfg.threads = t;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -90,7 +97,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("  {k:<14} {v}");
     }
     let runtime =
-        Rc::new(Runtime::load(&cfg.artifacts_dir).context("loading runtime")?);
+        Arc::new(Runtime::load(&cfg.artifacts_dir).context("loading runtime")?);
     println!("  platform       {}", runtime.platform());
     let loader = make_loader(&cfg)?;
     let mut trainer = Trainer::new(runtime, cfg.clone(), &loader)?;
@@ -128,7 +135,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let path = args
         .flag("checkpoint")
         .context("eval requires --checkpoint FILE")?;
-    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+    let runtime = Arc::new(Runtime::load(&cfg.artifacts_dir)?);
     let loader = make_loader(&cfg)?;
     let mut trainer = Trainer::new(runtime, cfg, &loader)?;
     trainer.load_checkpoint(path)?;
@@ -149,7 +156,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         cfg.alpha = 1.0;
     }
     cfg.validate()?;
-    let runtime = Rc::new(Runtime::load(&cfg.artifacts_dir)?);
+    let runtime = Arc::new(Runtime::load(&cfg.artifacts_dir)?);
     let preset = gwt::config::presets::find(&cfg.preset)?;
     let epochs = args.flag_usize("epochs")?.unwrap_or(3);
     println!("== gwt finetune ({}) ==", cfg.optimizer.label());

@@ -5,17 +5,27 @@
 //! * **HLO hot path** — the fused Pallas kernel AOT-lowered by
 //!   `aot.py` (`gwt_adam_l<l>_<m>x<n>` artifact), executed via PJRT.
 //!   One call transforms, updates moments, normalizes, and inverse
-//!   transforms entirely inside the compiled computation.
+//!   transforms entirely inside the compiled computation. Input
+//!   literals are built from *borrowed* state, so a failed runtime
+//!   call leaves the moments intact; on any failure the optimizer
+//!   logs, disables the artifact, and falls back to the rust path
+//!   instead of aborting training.
 //! * **rust fallback** — bit-close reimplementation used when no
 //!   artifact exists for the (shape, level), e.g. the high-level
 //!   sweeps of Fig 5 (l up to 7) and unit tests without artifacts.
+//!   Rows are independent, so this path is row-sharded through the
+//!   parallel step engine (`pool::scoped_chunks_mut`) when `threads`
+//!   > 1 — bit-identical to the serial loop (same per-row code, fixed
+//!   chunk boundaries, no cross-row reduction).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::{AdamHp, MatrixOpt};
-use crate::runtime::{literal_f32, tensor_from_literal, Runtime};
+use crate::runtime::{
+    literal_f32, literal_f32_from, tensor_from_literal, Runtime,
+};
 use crate::tensor::Tensor;
 use crate::wavelet;
 
@@ -29,11 +39,14 @@ pub struct GwtAdam {
     v: Vec<f32>,
     t: usize,
     /// Compiled fused artifact, if available.
-    exec: Option<(Rc<Runtime>, String)>,
-    /// Scratch for the rust path (avoids per-step allocs).
+    exec: Option<(Arc<Runtime>, String)>,
+    /// Row-shard worker count for the rust path (1 = serial).
+    threads: usize,
+    /// Scratch for the serial rust path (avoids per-step allocs).
     scratch: Vec<f32>,
     /// §Perf L3-3: persistent per-row coefficient buffer (the rust
-    /// fallback previously allocated one Vec per row per step).
+    /// fallback previously allocated one Vec per row per step). The
+    /// row-sharded path gives each worker its own pair instead.
     row_buf: Vec<f32>,
 }
 
@@ -43,7 +56,7 @@ impl GwtAdam {
         cols: usize,
         level: usize,
         hp: AdamHp,
-        runtime: Option<Rc<Runtime>>,
+        runtime: Option<Arc<Runtime>>,
     ) -> Result<Self> {
         wavelet::check_level(cols, level)?;
         let q = cols >> level;
@@ -74,9 +87,21 @@ impl GwtAdam {
             v: vec![0.0; rows * q],
             t: 0,
             exec,
+            threads: 1,
             scratch: vec![0.0; cols],
             row_buf: vec![0.0; cols],
         })
+    }
+
+    /// Set the row-shard worker count for the rust path (builder
+    /// form; `0` means serial, same as `1`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.set_threads(threads);
+        self
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     pub fn uses_hlo(&self) -> bool {
@@ -87,55 +112,147 @@ impl GwtAdam {
         self.level
     }
 
+    /// Test/bench seam: force the HLO path onto an arbitrary artifact
+    /// key (integration tests use a bogus key to exercise the
+    /// moments-intact fallback).
+    #[doc(hidden)]
+    pub fn force_hlo_key(&mut self, runtime: Arc<Runtime>, key: String) {
+        self.exec = Some((runtime, key));
+    }
+
+    /// HLO hot path for one step. Input literals are built from
+    /// *borrowed* state (no `mem::take`), so any failure — missing
+    /// artifact, compile/run error, marshalling error — leaves
+    /// `self.m`/`self.v` exactly as they were; moments are replaced
+    /// only after every fallible call has succeeded.
+    fn hlo_direction(&mut self, g: &Tensor) -> Result<Tensor> {
+        let q = self.cols >> self.level;
+        let exec = {
+            let (rt, key) =
+                self.exec.as_ref().expect("hlo_direction without exec");
+            rt.exec(key)?
+        };
+        let inputs = [
+            literal_f32(g)?,
+            literal_f32_from(&[self.rows, q], &self.m)?,
+            literal_f32_from(&[self.rows, q], &self.v)?,
+        ];
+        let outs = exec.run(&inputs)?;
+        let upd = tensor_from_literal(&outs[0], &[self.rows, self.cols])?;
+        let m = outs[1].to_vec::<f32>().context("fetching m state")?;
+        let v = outs[2].to_vec::<f32>().context("fetching v state")?;
+        self.m = m;
+        self.v = v;
+        Ok(upd)
+    }
+
     /// Rust mirror of the fused kernel: returns the (pre-bias-corr)
-    /// normalized update and refreshes moments in place.
+    /// normalized update and refreshes moments in place. Row-sharded
+    /// over `self.threads` workers; bit-identical at every count.
     fn rust_direction(&mut self, g: &Tensor) -> Vec<f32> {
         let (rows, n, level) = (self.rows, self.cols, self.level);
         let q = n >> level;
         let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
-        // Split field borrows so the persistent buffers coexist.
-        let (mstate, vstate, scratch, row_buf) = (
-            &mut self.m,
-            &mut self.v,
-            &mut self.scratch,
-            &mut self.row_buf,
-        );
         let mut out = vec![0.0f32; rows * n];
-        for r in 0..rows {
-            // Forward transform this row into the persistent buffer.
-            let coeffs: &mut [f32] = row_buf;
-            coeffs.copy_from_slice(g.row(r));
-            wavelet::haar_fwd_row(coeffs, level, scratch);
-            // Moment update on the approximation band.
-            let mrow = &mut mstate[r * q..(r + 1) * q];
-            let vrow = &mut vstate[r * q..(r + 1) * q];
-            for j in 0..q {
-                let a = coeffs[j];
-                mrow[j] = b1 * mrow[j] + (1.0 - b1) * a;
-                vrow[j] = b2 * vrow[j] + (1.0 - b2) * a * a;
+        if self.threads <= 1 || rows == 1 {
+            // Serial fast path: persistent buffers, zero allocs beyond
+            // the output.
+            let (mstate, vstate, scratch, coeffs) = (
+                &mut self.m,
+                &mut self.v,
+                &mut self.scratch,
+                &mut self.row_buf,
+            );
+            for r in 0..rows {
+                gwt_adam_row(
+                    g.row(r),
+                    &mut out[r * n..(r + 1) * n],
+                    &mut mstate[r * q..(r + 1) * q],
+                    &mut vstate[r * q..(r + 1) * q],
+                    level,
+                    coeffs,
+                    scratch,
+                    b1,
+                    b2,
+                    eps,
+                );
             }
-            // Normalize: approximation by its own denom; each detail
-            // band D_k by the denom nearest-upsampled to width n>>k.
-            let orow = &mut out[r * n..(r + 1) * n];
-            for j in 0..q {
-                let denom = vrow[j].sqrt() + eps;
-                orow[j] = mrow[j] / denom;
-            }
-            let mut off = q;
-            for k in (1..=level).rev() {
-                let w = n >> k;
-                let rep = 1usize << (level - k);
-                for j in 0..w {
-                    let denom = vrow[j / rep].sqrt() + eps;
-                    orow[off + j] = coeffs[off + j] / denom;
-                }
-                off += w;
-            }
-            // Inverse transform back to weight space.
-            wavelet::haar_inv_row(orow, level, scratch);
+            return out;
         }
+        // Row-sharded path: each worker owns a persistent
+        // (coeffs, scratch) pair for its whole chunk.
+        let mut items: Vec<_> = g
+            .data()
+            .chunks_exact(n)
+            .zip(out.chunks_exact_mut(n))
+            .zip(self.m.chunks_exact_mut(q))
+            .zip(self.v.chunks_exact_mut(q))
+            .map(|(((gr, orow), mrow), vrow)| (gr, orow, mrow, vrow))
+            .collect();
+        crate::pool::scoped_chunks_mut(
+            &mut items,
+            self.threads,
+            |_| (vec![0.0f32; n], vec![0.0f32; n]),
+            |(coeffs, scratch), _, chunk| {
+                for (gr, orow, mrow, vrow) in chunk.iter_mut() {
+                    gwt_adam_row(
+                        gr, orow, mrow, vrow, level, coeffs, scratch, b1, b2,
+                        eps,
+                    );
+                }
+            },
+        );
         out
     }
+}
+
+/// One row of the fused rust kernel: forward Haar into `coeffs`,
+/// moment update on the approximation band, band-wise normalize into
+/// `orow`, inverse Haar back to weight space. Both the serial and the
+/// row-sharded path run exactly this code — which is what makes the
+/// parallel output bit-identical to the serial one.
+#[allow(clippy::too_many_arguments)]
+fn gwt_adam_row(
+    gr: &[f32],
+    orow: &mut [f32],
+    mrow: &mut [f32],
+    vrow: &mut [f32],
+    level: usize,
+    coeffs: &mut [f32],
+    scratch: &mut [f32],
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    let n = gr.len();
+    let q = mrow.len();
+    // Forward transform this row into the coefficient buffer.
+    coeffs[..n].copy_from_slice(gr);
+    wavelet::haar_fwd_row(&mut coeffs[..n], level, scratch);
+    // Moment update on the approximation band.
+    for j in 0..q {
+        let a = coeffs[j];
+        mrow[j] = b1 * mrow[j] + (1.0 - b1) * a;
+        vrow[j] = b2 * vrow[j] + (1.0 - b2) * a * a;
+    }
+    // Normalize: approximation by its own denom; each detail band D_k
+    // by the denom nearest-upsampled to width n>>k.
+    for j in 0..q {
+        let denom = vrow[j].sqrt() + eps;
+        orow[j] = mrow[j] / denom;
+    }
+    let mut off = q;
+    for k in (1..=level).rev() {
+        let w = n >> k;
+        let rep = 1usize << (level - k);
+        for j in 0..w {
+            let denom = vrow[j / rep].sqrt() + eps;
+            orow[off + j] = coeffs[off + j] / denom;
+        }
+        off += w;
+    }
+    // Inverse transform back to weight space.
+    wavelet::haar_inv_row(orow, level, scratch);
 }
 
 impl MatrixOpt for GwtAdam {
@@ -143,24 +260,26 @@ impl MatrixOpt for GwtAdam {
         assert_eq!(g.shape(), &[self.rows, self.cols]);
         self.t += 1;
         let bc = self.hp.bias_correction(self.t);
-        let q = self.cols >> self.level;
 
-        if let Some((rt, key)) = &self.exec {
-            let exec = rt.exec(key).expect("artifact disappeared");
-            let m_t = Tensor::new(&[self.rows, q], std::mem::take(&mut self.m));
-            let v_t = Tensor::new(&[self.rows, q], std::mem::take(&mut self.v));
-            let inputs = [
-                literal_f32(g).unwrap(),
-                literal_f32(&m_t).unwrap(),
-                literal_f32(&v_t).unwrap(),
-            ];
-            let outs = exec.run(&inputs).expect("gwt_adam HLO step failed");
-            let mut upd =
-                tensor_from_literal(&outs[0], &[self.rows, self.cols]).unwrap();
-            self.m = outs[1].to_vec::<f32>().unwrap();
-            self.v = outs[2].to_vec::<f32>().unwrap();
-            upd.scale(bc);
-            return upd;
+        if self.exec.is_some() {
+            match self.hlo_direction(g) {
+                Ok(mut upd) => {
+                    upd.scale(bc);
+                    return upd;
+                }
+                Err(e) => {
+                    // Moments were never moved out (see
+                    // `hlo_direction`), so state is intact — disable
+                    // the artifact and continue on the rust path for
+                    // this and all future steps.
+                    eprintln!(
+                        "gwt-adam[{}x{} l={}]: HLO step failed ({e:#}); \
+                         falling back to the rust path",
+                        self.rows, self.cols, self.level
+                    );
+                    self.exec = None;
+                }
+            }
         }
 
         let mut out = self.rust_direction(g);
@@ -274,6 +393,34 @@ mod tests {
                     assert!((u.data()[r * 8 + b * 4 + j] - base).abs() < 1e-4);
                 }
                 assert_eq!(base.signum(), gd[r * 8 + b * 4].signum());
+            }
+        }
+    }
+
+    #[test]
+    fn row_sharded_path_bit_identical_to_serial() {
+        // The step-engine determinism contract at the row level:
+        // every worker count yields exactly the serial bits — update,
+        // m, and v alike — across multiple steps.
+        let hp = AdamHp::default();
+        for threads in [0usize, 2, 4, 7] {
+            let mut serial =
+                GwtAdam::new(13, 32, 2, hp, None).unwrap();
+            let mut sharded = GwtAdam::new(13, 32, 2, hp, None)
+                .unwrap()
+                .with_threads(threads);
+            let mut rng = Rng::new(41);
+            for step in 0..4 {
+                let g = Tensor::randn(&[13, 32], 1.0, &mut rng);
+                let a = serial.direction(&g, 0.0);
+                let b = sharded.direction(&g, 0.0);
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "threads={threads} step={step}"
+                );
+                assert_eq!(serial.m, sharded.m, "threads={threads} m state");
+                assert_eq!(serial.v, sharded.v, "threads={threads} v state");
             }
         }
     }

@@ -24,7 +24,7 @@ pub mod lora;
 pub mod muon;
 pub mod sgdm;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -71,7 +71,11 @@ impl AdamHp {
 }
 
 /// Per-parameter optimizer state machine.
-pub trait MatrixOpt {
+///
+/// `Send` is part of the contract: the parallel step engine
+/// (`step_bank`, `pool::scoped_chunks_mut`) moves `&mut` bank entries
+/// onto worker threads, so every impl must be safe to hand off.
+pub trait MatrixOpt: Send {
     /// Update internal state with gradient `g` and return the update
     /// direction (applied by the caller as `w -= lr_eff · scale · u`).
     fn direction(&mut self, g: &Tensor, lr_eff: f32) -> Tensor;
@@ -102,7 +106,12 @@ impl ParamOptimizer {
     pub fn apply(&mut self, w: &mut Tensor, g: &Tensor, lr_t: f32) -> StepStats {
         let lr_eff = lr_t * self.alpha;
         let u = self.inner.direction(g, lr_eff);
-        let norm = u.frob_norm() * self.alpha;
+        // The Fira reference norm is the *applied* update ‖lr_eff·u‖,
+        // lr schedule included — tracking only ‖u‖·α would let a
+        // warmup→cosine lr swing distort the growth ratio (a rising lr
+        // would sneak past the limiter; a falling one would over-clip
+        // later steps).
+        let norm = u.frob_norm() * lr_eff;
         let scale = match &mut self.limiter {
             Some(l) => l.scale_for(norm),
             None => 1.0,
@@ -127,9 +136,15 @@ impl ParamOptimizer {
 pub fn build_optimizers(
     params: &[ParamShape],
     cfg: &TrainConfig,
-    runtime: Option<Rc<Runtime>>,
+    runtime: Option<Arc<Runtime>>,
 ) -> Result<Vec<ParamOptimizer>> {
     let hp = AdamHp::from_config(cfg);
+    // Thread-budget routing: a multi-param bank is sharded across
+    // parameters by `step_bank`, so the per-row engine inside each
+    // GwtAdam stays serial (nesting the two would oversubscribe
+    // threads²). A single-param bank has no bank-level parallelism to
+    // exploit, so the whole budget goes to GwtAdam's row sharding.
+    let threads = if params.len() == 1 { cfg.resolve_threads() } else { 1 };
     params
         .iter()
         .map(|p| {
@@ -139,13 +154,10 @@ pub fn build_optimizers(
                 let alpha = if cfg.modulewise_lr { cfg.alpha } else { 1.0 };
                 let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
                     OptSpec::Adam => Box::new(Adam::new(&p.shape, hp)),
-                    OptSpec::Gwt { level } => Box::new(GwtAdam::new(
-                        m,
-                        n,
-                        level,
-                        hp,
-                        runtime.clone(),
-                    )?),
+                    OptSpec::Gwt { level } => Box::new(
+                        GwtAdam::new(m, n, level, hp, runtime.clone())?
+                            .with_threads(threads),
+                    ),
                     OptSpec::Galore { rank_denom } => Box::new(Galore::new(
                         m,
                         n,
@@ -203,6 +215,40 @@ fn hash_name(name: &str) -> u64 {
 /// Total measured optimizer-state bytes across a bank.
 pub fn total_state_bytes(bank: &[ParamOptimizer]) -> usize {
     bank.iter().map(|p| p.state_bytes()).sum()
+}
+
+/// Step every parameter of a bank — the parallel step engine's bank
+/// level. Each `(optimizer, weight, gradient)` triple is independent
+/// (per-parameter state, disjoint weights), so the work is sharded
+/// over `threads` workers with `pool::scoped_chunks_mut`; the fixed
+/// chunk boundaries and the absence of any cross-parameter reduction
+/// make the result bit-identical to the serial loop for every worker
+/// count (`threads <= 1` runs inline with no spawn overhead).
+///
+/// Returns per-parameter `StepStats` in bank order.
+pub fn step_bank(
+    bank: &mut [ParamOptimizer],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    lr_t: f32,
+    threads: usize,
+) -> Vec<StepStats> {
+    assert_eq!(bank.len(), params.len(), "bank/params length mismatch");
+    assert_eq!(bank.len(), grads.len(), "bank/grads length mismatch");
+    let mut stats = vec![StepStats::default(); bank.len()];
+    let mut items: Vec<_> = bank
+        .iter_mut()
+        .zip(params.iter_mut())
+        .zip(grads.iter())
+        .zip(stats.iter_mut())
+        .map(|(((opt, w), g), s)| (opt, w, g, s))
+        .collect();
+    crate::pool::scoped_chunks_mut(&mut items, threads, |_| (), |_, _, chunk| {
+        for (opt, w, g, s) in chunk.iter_mut() {
+            **s = opt.apply(w, g, lr_t);
+        }
+    });
+    stats
 }
 
 #[cfg(test)]
@@ -305,6 +351,83 @@ mod tests {
                 before,
                 w.frob_norm()
             );
+        }
+    }
+
+    #[test]
+    fn limiter_tracks_applied_norm_across_lr_schedule() {
+        // A constant direction under a doubling lr must trip the
+        // limiter: the applied update ‖lr_eff·u‖ doubles even though
+        // ‖u‖ is flat. The pre-fix code fed the limiter ‖u‖·α
+        // (schedule-blind), letting warmup→cosine lr swings through
+        // unclipped.
+        struct ConstDir;
+        impl MatrixOpt for ConstDir {
+            fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+                Tensor::full(g.shape(), 1.0)
+            }
+            fn state_bytes(&self) -> usize {
+                0
+            }
+            fn label(&self) -> String {
+                "const".into()
+            }
+        }
+        let gamma = 1.01f32;
+        let mut po = ParamOptimizer {
+            name: "w".into(),
+            inner: Box::new(ConstDir),
+            limiter: Some(NormGrowthLimiter::new(gamma)),
+            alpha: 1.0,
+        };
+        let mut w = Tensor::zeros(&[4, 4]);
+        let g = Tensor::zeros(&[4, 4]);
+        let s1 = po.apply(&mut w, &g, 0.1);
+        assert_eq!(s1.limiter_scale, 1.0);
+        // lr doubles, direction unchanged: applied norm would double,
+        // so the limiter must clip growth to γ: scale = γ·0.1/0.2.
+        let s2 = po.apply(&mut w, &g, 0.2);
+        assert!(
+            (s2.limiter_scale - gamma * 0.5).abs() < 1e-6,
+            "scale {}",
+            s2.limiter_scale
+        );
+        // Reported norm is the post-clip applied norm: γ·prev.
+        assert!((s2.update_norm - gamma * s1.update_norm).abs() < 1e-5);
+        // A falling lr shrinks the applied norm — never clipped.
+        let s3 = po.apply(&mut w, &g, 0.05);
+        assert_eq!(s3.limiter_scale, 1.0);
+    }
+
+    #[test]
+    fn step_bank_matches_serial_apply() {
+        for threads in [0usize, 1, 2, 4, 7] {
+            let cfg = cfg_with(OptSpec::Gwt { level: 2 });
+            let shapes = nano_params();
+            let mut serial = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut sharded = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut rng = Rng::new(11);
+            let mut w1: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            let mut w2 = w1.clone();
+            for step in 0..3u64 {
+                let mut grng = Rng::new(100 + step);
+                let grads: Vec<Tensor> = shapes
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
+                    .collect();
+                for ((o, w), g) in
+                    serial.iter_mut().zip(w1.iter_mut()).zip(&grads)
+                {
+                    o.apply(w, g, 0.01);
+                }
+                step_bank(&mut sharded, &mut w2, &grads, 0.01, threads);
+            }
+            for (i, (a, b)) in w1.iter().zip(&w2).enumerate() {
+                assert_eq!(a.data(), b.data(), "threads={threads} param {i}");
+            }
         }
     }
 

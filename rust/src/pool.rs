@@ -1,10 +1,105 @@
-//! Parallelism substrate: scoped worker mapping + allreduce.
+//! Parallelism substrate: the optimizer **step engine** plus the
+//! data-parallel allreduce.
 //!
-//! Stands in for the paper's multi-GPU DDP setup: each data-parallel
-//! worker is a thread with its own data shard; gradients are combined
-//! with a tree allreduce (same reduction topology NCCL would use, so
-//! the coordinator logic is shaped correctly even though transport is
+//! ## Step-engine architecture
+//!
+//! The paper's pitch is that GWT makes memory-heavy optimizers cheap
+//! enough to scale; this module supplies the throughput half of that
+//! claim. Two loops in the training step are embarrassingly parallel
+//! and share one work-sharding layer:
+//!
+//! * **Bank level** — every `ParamOptimizer` in the bank owns its own
+//!   state and its own weight tensor, so per-parameter steps are
+//!   independent (`optim::step_bank` drives the coordinator and
+//!   fine-tuning loops through `scoped_chunks_mut`).
+//! * **Row level** — inside `GwtAdam::rust_direction`, each matrix row
+//!   is transformed/updated/inverse-transformed independently (the
+//!   per-row Haar + moment update touches only that row's slice of
+//!   `m`/`v`/`out`).
+//!
+//! Sharding is **chunked and deterministic**: `chunk_bounds` cuts the
+//! item range into at most `workers` contiguous chunks with a fixed
+//! ceil-division boundary formula, every item is processed by exactly
+//! one worker with the same single-threaded code path as the serial
+//! loop, and there is no cross-item reduction — so the parallel step
+//! is *bit-identical* to the serial one for every worker count (the
+//! property tests in `tests/parallel_determinism.rs` pin this for all
+//! optimizer specs). Each worker gets a persistent per-worker scratch
+//! value (allocated once per call via the `init` hook, not once per
+//! item), which is what keeps the row-sharded GWT path alloc-free in
+//! the inner loop.
+//!
+//! Worker count comes from `TrainConfig::threads` (0 = auto-detect,
+//! capped by `ModelPreset::max_step_workers`; 1 = serial fast path
+//! with zero thread overhead).
+//!
+//! `scoped_map`/`allreduce_*` below additionally stand in for the
+//! paper's multi-GPU DDP setup: each data-parallel worker is a thread
+//! with its own data shard; gradients are combined with a tree
+//! allreduce (same reduction topology NCCL would use, so the
+//! coordinator logic is shaped correctly even though transport is
 //! shared memory).
+
+/// Deterministic contiguous chunk boundaries: `len` items split into
+/// at most `workers` chunks of ceil(len/workers) items each. The
+/// boundary formula is a pure function of `(len, workers)` — no
+/// work-stealing, no reordering — which is what makes the parallel
+/// step engine bit-reproducible.
+pub fn chunk_bounds(len: usize, workers: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(len);
+    let size = len.div_ceil(workers);
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    while start < len {
+        let end = (start + size).min(len);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// The step engine's sharding primitive: split `items` into
+/// `chunk_bounds(items.len(), workers)` contiguous chunks and run
+/// `f(&mut scratch, chunk_offset, chunk)` for each chunk on its own
+/// scoped thread. `init(worker_index)` builds the per-worker
+/// persistent scratch once per worker (not once per item).
+///
+/// Serial fast path: with 0/1 workers, a single chunk, or an empty
+/// slice, everything runs on the calling thread — no spawn overhead,
+/// and `workers = 0` is treated as 1 (the zero-worker edge case).
+///
+/// Determinism contract: each item is visited exactly once, by the
+/// same in-chunk loop a serial caller would run, and chunk boundaries
+/// never depend on thread scheduling — so for independent items the
+/// result is bit-identical to the serial loop for every worker count.
+pub fn scoped_chunks_mut<T, S, I, F>(items: &mut [T], workers: usize, init: I, f: F)
+where
+    T: Send,
+    I: Fn(usize) -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
+    let bounds = chunk_bounds(items.len(), workers);
+    if bounds.len() <= 1 {
+        let mut scratch = init(0);
+        f(&mut scratch, 0, items);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let (init, f) = (&init, &f);
+        let mut rest = items;
+        for (w, (start, end)) in bounds.iter().copied().enumerate() {
+            let (chunk, tail) = rest.split_at_mut(end - start);
+            rest = tail;
+            scope.spawn(move || {
+                let mut scratch = init(w);
+                f(&mut scratch, start, chunk);
+            });
+        }
+    });
+}
 
 /// Run `f(worker_index)` on `n` threads and collect results in order.
 pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
@@ -76,6 +171,80 @@ mod tests {
     fn scoped_map_ordered() {
         let out = scoped_map(4, |w| w * 10);
         assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn chunk_bounds_cover_range_disjointly() {
+        for len in [0usize, 1, 2, 5, 7, 16, 100] {
+            for workers in [0usize, 1, 2, 3, 4, 7, 16, 100] {
+                let b = chunk_bounds(len, workers);
+                if len == 0 {
+                    assert!(b.is_empty());
+                    continue;
+                }
+                assert!(b.len() <= workers.max(1));
+                assert_eq!(b[0].0, 0, "len={len} workers={workers}");
+                assert_eq!(b.last().unwrap().1, len);
+                for pair in b.windows(2) {
+                    assert_eq!(pair[0].1, pair[1].0, "gap/overlap");
+                    assert!(pair[0].0 < pair[0].1, "empty chunk");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_deterministic() {
+        assert_eq!(chunk_bounds(10, 4), chunk_bounds(10, 4));
+        assert_eq!(chunk_bounds(10, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+    }
+
+    #[test]
+    fn scoped_chunks_visit_each_item_once() {
+        for workers in [0usize, 1, 2, 3, 7, 64] {
+            let mut items: Vec<usize> = vec![0; 23];
+            scoped_chunks_mut(&mut items, workers, |_| (), |_, off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x += off + i + 1; // global index + 1
+                }
+            });
+            let want: Vec<usize> = (1..=23).collect();
+            assert_eq!(items, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_empty_and_single_item() {
+        let mut empty: Vec<u8> = Vec::new();
+        scoped_chunks_mut(&mut empty, 4, |_| (), |_, _, chunk| {
+            assert!(chunk.is_empty());
+        });
+        let mut one = vec![5u32];
+        scoped_chunks_mut(&mut one, 7, |_| (), |_, off, chunk| {
+            assert_eq!(off, 0);
+            chunk[0] *= 2;
+        });
+        assert_eq!(one, vec![10]);
+    }
+
+    #[test]
+    fn scoped_chunks_per_worker_scratch_is_persistent() {
+        // The scratch init must run once per worker, not once per item.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let mut items = vec![0u8; 64];
+        scoped_chunks_mut(
+            &mut items,
+            4,
+            |_| inits.fetch_add(1, Ordering::SeqCst),
+            |_, _, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = 1;
+                }
+            },
+        );
+        assert_eq!(inits.load(Ordering::SeqCst), 4);
+        assert!(items.iter().all(|x| *x == 1));
     }
 
     #[test]

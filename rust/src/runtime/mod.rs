@@ -5,12 +5,24 @@
 //! Interchange is HLO *text* — `HloModuleProto::from_text_file`
 //! reassigns instruction ids, sidestepping the 64-bit-id protos jax
 //! >= 0.5 emits (see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! ## Threading model
+//!
+//! The parallel step engine (`pool`, `optim::step_bank`) steps
+//! optimizer banks from worker threads, and any `GwtAdam` on its HLO
+//! path may dispatch a compiled artifact from such a thread. The
+//! runtime is therefore shared as `Arc<Runtime>` and every PJRT
+//! interaction (compile *and* execute) is serialized behind one
+//! `pjrt_lock` mutex — the conservative choice, since the `xla`
+//! wrapper types carry non-atomic internal refcounts even though the
+//! PJRT C API itself is thread-safe. Literal construction/destruction
+//! creates thread-local objects and needs no lock. Async HLO dispatch
+//! (per-executable locking) is a ROADMAP follow-on.
 
 pub mod manifest;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -22,11 +34,23 @@ use crate::tensor::Tensor;
 pub struct Exec {
     exe: xla::PjRtLoadedExecutable,
     pub info: ArtifactInfo,
+    /// Shared per-runtime dispatch lock (see module doc).
+    pjrt_lock: Arc<Mutex<()>>,
 }
+
+// SAFETY: `xla::PjRtLoadedExecutable` wraps heap state owned by the
+// PJRT plugin. The PJRT C API is thread-safe; the only non-atomic
+// pieces are the wrapper's internal refcounts, which are touched only
+// while executing — and every execute (and compile) goes through
+// `pjrt_lock`, so no two threads ever race on them. `Exec` itself is
+// immutable after construction.
+unsafe impl Send for Exec {}
+unsafe impl Sync for Exec {}
 
 impl Exec {
     /// Execute with literal inputs; returns the flattened output
     /// tuple (aot.py always lowers with `return_tuple=True`).
+    /// Dispatch is serialized across the owning runtime (module doc).
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.info.inputs.len() {
             bail!(
@@ -36,6 +60,7 @@ impl Exec {
                 inputs.len()
             );
         }
+        let _dispatch = self.pjrt_lock.lock().expect("pjrt lock poisoned");
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
@@ -57,25 +82,41 @@ impl Exec {
 }
 
 /// Runtime = PJRT CPU client + manifest + compile-once executable
-/// cache. Single-threaded by design (the `xla` crate client is
-/// Rc-based); data-parallel workers share it via round-robin
-/// execution (see `coordinator::dp`).
+/// cache. Shared across the step engine's worker threads as
+/// `Arc<Runtime>`; all PJRT calls are serialized by `pjrt_lock`.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Exec>>>,
+    cache: Mutex<HashMap<String, Arc<Exec>>>,
+    pjrt_lock: Arc<Mutex<()>>,
 }
+
+// SAFETY: same argument as `Exec` — the client handle is only used
+// under `pjrt_lock` (compile) and the cache has its own mutex. The
+// manifest is plain immutable data.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     pub fn load(artifacts_dir: &str) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            pjrt_lock: Arc::new(Mutex::new(())),
+        })
     }
 
-    /// Fetch (compiling on first use) the executable for `key`.
-    pub fn exec(&self, key: &str) -> Result<Rc<Exec>> {
-        if let Some(e) = self.cache.borrow().get(key) {
+    /// Fetch (compiling on first use) the executable for `key`. The
+    /// cache lock is held across the compile so each artifact is
+    /// compiled exactly once even under concurrent first use (lock
+    /// order is always cache → pjrt, never the reverse — `Exec::run`
+    /// takes only the pjrt lock, so there is no cycle).
+    pub fn exec(&self, key: &str) -> Result<Arc<Exec>> {
+        let mut cache = self.cache.lock().expect("exec cache poisoned");
+        if let Some(e) = cache.get(key) {
             return Ok(e.clone());
         }
         let info = self.manifest.artifact(key)?.clone();
@@ -83,20 +124,26 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {path}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {key}"))?;
-        let exec = Rc::new(Exec { exe, info });
-        self.cache.borrow_mut().insert(key.to_string(), exec.clone());
+        let exe = {
+            let _dispatch = self.pjrt_lock.lock().expect("pjrt lock poisoned");
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?
+        };
+        let exec =
+            Arc::new(Exec { exe, info, pjrt_lock: self.pjrt_lock.clone() });
+        cache.insert(key.to_string(), exec.clone());
         Ok(exec)
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().expect("exec cache poisoned").len()
     }
 
     pub fn platform(&self) -> String {
+        // Even metadata queries go through the client handle, so they
+        // honor the same lock the Send/Sync safety argument relies on.
+        let _dispatch = self.pjrt_lock.lock().expect("pjrt lock poisoned");
         self.client.platform_name()
     }
 }
@@ -121,10 +168,17 @@ fn bytes_of<T>(xs: &[T]) -> &[u8] {
 /// into the literal) rather than `vec1(...).reshape(...)` (two copies
 /// + a C-API round trip); see EXPERIMENTS.md §Perf L3-1.
 pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    literal_f32_from(t.shape(), t.data())
+}
+
+/// f32 slice + shape -> literal, without requiring a `Tensor` (lets
+/// callers marshal borrowed state without cloning or `mem::take`).
+pub fn literal_f32_from(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
     Ok(xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
-        t.shape(),
-        bytes_of(t.data()),
+        shape,
+        bytes_of(data),
     )?)
 }
 
@@ -171,6 +225,16 @@ mod tests {
         let lit = literal_f32(&t).unwrap();
         let back = tensor_from_literal(&lit, &[3, 5]).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_from_borrowed_slice() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32_from(&[2, 3], &data).unwrap();
+        let back = tensor_from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back.data(), &data[..]);
+        // `data` is still usable — no move, no take.
+        assert_eq!(data[0], 1.0);
     }
 
     #[test]

@@ -13,12 +13,17 @@ pub mod theory;
 pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
 
 /// Validate that an `level`-level transform is defined for width `n`.
+///
+/// The range check must come first: `1usize << level` overflows (and
+/// panics in debug builds) for `level >= usize::BITS`, so evaluating
+/// the divisibility check before the guard turned an invalid-config
+/// error into a shift-overflow panic.
 pub fn check_level(n: usize, level: usize) -> anyhow::Result<()> {
-    if level > 0 && (n % (1usize << level)) != 0 {
-        anyhow::bail!("width {n} not divisible by 2^level={}", 1usize << level);
-    }
     if level >= usize::BITS as usize {
         anyhow::bail!("level {level} out of range");
+    }
+    if level > 0 && (n % (1usize << level)) != 0 {
+        anyhow::bail!("width {n} not divisible by 2^level={}", 1usize << level);
     }
     Ok(())
 }
@@ -194,6 +199,20 @@ mod tests {
         assert!(check_level(12, 3).is_err());
         assert!(check_level(12, 2).is_ok());
         assert!(check_level(7, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_level_without_panicking() {
+        // Regression: `1usize << level` used to be evaluated before
+        // the range guard, panicking with shift overflow for
+        // level >= usize::BITS instead of returning Err.
+        assert!(check_level(8, 64).is_err());
+        assert!(check_level(8, usize::BITS as usize).is_err());
+        assert!(check_level(8, 200).is_err());
+        assert!(check_level(8, usize::MAX).is_err());
+        // The largest representable level is still validated, not
+        // panicked on (width can never satisfy it, so it errors).
+        assert!(check_level(8, 63).is_err());
     }
 
     #[test]

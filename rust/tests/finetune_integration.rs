@@ -1,15 +1,15 @@
 //! Fine-tuning integration: classification artifacts + FineTuner.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::config::{OptSpec, TrainConfig};
 use gwt::eval::tasks::{ClsTask, TaskSpec};
 use gwt::eval::FineTuner;
 use gwt::runtime::Runtime;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::load("artifacts") {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             eprintln!("SKIP (run `make artifacts`): {e:#}");
             None

@@ -1,0 +1,186 @@
+//! Step-engine determinism: the parallel optimizer step must be
+//! *bit-identical* to the serial one — same weights, same stats —
+//! for every optimizer spec and every worker count. This is the
+//! contract that makes `TrainConfig::threads` a pure throughput knob
+//! (fixed chunk boundaries, no cross-item reductions, each item
+//! processed by the same single-threaded code as the serial loop).
+//!
+//! Runs entirely on the pure-rust optimizer paths (no artifacts
+//! needed), so it exercises the full bank: GWT row sharding included.
+
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::memory::ParamShape;
+use gwt::optim::{build_optimizers, step_bank};
+use gwt::pool::{chunk_bounds, scoped_chunks_mut};
+use gwt::rng::Rng;
+use gwt::tensor::Tensor;
+
+fn nano_shapes() -> Vec<ParamShape> {
+    gwt::config::presets::find("nano").unwrap().param_shapes()
+}
+
+const ALL_SPECS: &[OptSpec] = &[
+    OptSpec::Adam,
+    OptSpec::Gwt { level: 2 },
+    OptSpec::Gwt { level: 3 },
+    OptSpec::Galore { rank_denom: 4 },
+    OptSpec::Apollo { rank_denom: 4 },
+    OptSpec::Lora { rank_denom: 4 },
+    OptSpec::AdamMini,
+    OptSpec::Muon,
+    OptSpec::Adam8bit,
+    OptSpec::SgdM,
+];
+
+fn init_weights(shapes: &[ParamShape], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    shapes
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+        .collect()
+}
+
+fn step_grads(shapes: &[ParamShape], step: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(50 + step);
+    shapes
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect()
+}
+
+#[test]
+fn parallel_bank_bit_identical_for_every_optimizer() {
+    let shapes = nano_shapes();
+    for &opt in ALL_SPECS {
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        // Serial reference run.
+        let mut ser_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut ser_w = init_weights(&shapes, 1);
+        let mut ser_stats = Vec::new();
+        for step in 0..3u64 {
+            let grads = step_grads(&shapes, step);
+            ser_stats.push(step_bank(&mut ser_bank, &mut ser_w, &grads, 0.01, 1));
+        }
+        for threads in [2usize, 4, 7] {
+            let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut w = init_weights(&shapes, 1);
+            for (step, ser) in ser_stats.iter().enumerate() {
+                let grads = step_grads(&shapes, step as u64);
+                let stats = step_bank(&mut bank, &mut w, &grads, 0.01, threads);
+                // Stats come back in bank order with the exact serial
+                // bits, regardless of which worker produced them.
+                assert_eq!(stats.len(), ser.len());
+                for (i, (a, b)) in stats.iter().zip(ser).enumerate() {
+                    assert_eq!(
+                        a.update_norm.to_bits(),
+                        b.update_norm.to_bits(),
+                        "{opt:?} threads={threads} step={step} param {i} norm"
+                    );
+                    assert_eq!(
+                        a.limiter_scale.to_bits(),
+                        b.limiter_scale.to_bits(),
+                        "{opt:?} threads={threads} step={step} param {i} scale"
+                    );
+                }
+            }
+            for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{opt:?} threads={threads} param {} ({})",
+                    i,
+                    shapes[i].name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_param_row_sharding_matches_serial() {
+    // With a one-param bank, build_optimizers routes the thread
+    // budget into GwtAdam's row sharding instead of the bank level;
+    // the result must still match the serial run bit-for-bit.
+    let shape = ParamShape {
+        name: "layers.00.attn.wq".into(),
+        shape: vec![32, 64],
+        eligible: true,
+    };
+    let mk = |threads: usize| {
+        let cfg = TrainConfig {
+            optimizer: OptSpec::Gwt { level: 3 },
+            threads,
+            ..Default::default()
+        };
+        build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap()
+    };
+    let mut serial = mk(1);
+    let mut sharded = mk(4);
+    let mut rng = Rng::new(9);
+    let mut w1 = vec![Tensor::randn(&[32, 64], 1.0, &mut rng)];
+    let mut w2 = w1.clone();
+    for step in 0..3u64 {
+        let mut grng = Rng::new(70 + step);
+        let g = vec![Tensor::randn(&[32, 64], 1.0, &mut grng)];
+        step_bank(&mut serial, &mut w1, &g, 0.01, 1);
+        step_bank(&mut sharded, &mut w2, &g, 0.01, 1);
+    }
+    assert_eq!(w1[0].data(), w2[0].data());
+}
+
+#[test]
+fn zero_workers_and_one_param_edge_cases() {
+    // chunk_bounds: zero workers behaves as one; empty input is empty.
+    assert_eq!(chunk_bounds(5, 0), vec![(0, 5)]);
+    assert!(chunk_bounds(0, 4).is_empty());
+    // scoped_chunks_mut with zero workers runs inline on the caller.
+    let mut xs = vec![1u32, 2, 3];
+    scoped_chunks_mut(&mut xs, 0, |_| (), |_, _, c| {
+        for x in c.iter_mut() {
+            *x += 1;
+        }
+    });
+    assert_eq!(xs, vec![2, 3, 4]);
+    // A one-param bank sharded over many workers steps exactly once.
+    let shape = ParamShape {
+        name: "layers.00.attn.wq".into(),
+        shape: vec![16, 16],
+        eligible: true,
+    };
+    let cfg = TrainConfig {
+        optimizer: OptSpec::Gwt { level: 2 },
+        ..Default::default()
+    };
+    let mut bank =
+        build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap();
+    let mut rng = Rng::new(3);
+    let mut w = vec![Tensor::randn(&[16, 16], 1.0, &mut rng)];
+    let g = vec![Tensor::randn(&[16, 16], 1.0, &mut rng)];
+    let before = w[0].clone();
+    let stats = step_bank(&mut bank, &mut w, &g, 0.01, 7);
+    assert_eq!(stats.len(), 1);
+    assert!(stats[0].update_norm > 0.0);
+    assert_ne!(before.data(), w[0].data());
+    // Empty bank: no-op, no panic.
+    let stats = step_bank(&mut [], &mut [], &[], 0.01, 4);
+    assert!(stats.is_empty());
+}
+
+#[test]
+fn step_bank_zero_threads_is_serial() {
+    let shapes = nano_shapes();
+    let cfg = TrainConfig {
+        optimizer: OptSpec::Gwt { level: 2 },
+        ..Default::default()
+    };
+    let mut a_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+    let mut b_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+    let mut a_w = init_weights(&shapes, 5);
+    let mut b_w = a_w.clone();
+    let grads = step_grads(&shapes, 0);
+    step_bank(&mut a_bank, &mut a_w, &grads, 0.01, 0);
+    step_bank(&mut b_bank, &mut b_w, &grads, 0.01, 1);
+    for (a, b) in a_w.iter().zip(&b_w) {
+        assert_eq!(a.data(), b.data());
+    }
+}

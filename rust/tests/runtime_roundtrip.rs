@@ -6,16 +6,16 @@
 //! Requires `make artifacts`. Tests skip (with a notice) if the
 //! manifest is missing so plain `cargo test` works pre-build.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
 use gwt::rng::Rng;
 use gwt::runtime::{literal_f32, tensor_from_literal, Runtime};
 use gwt::tensor::Tensor;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::load("artifacts") {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             eprintln!("SKIP (run `make artifacts`): {e:#}");
             None
@@ -72,6 +72,34 @@ fn gwt_adam_hlo_path_matches_rust_path() {
             );
         }
     }
+}
+
+#[test]
+fn failed_hlo_step_preserves_moments_and_falls_back() {
+    // Satellite regression: the HLO path used to `mem::take` the
+    // moments before running the executable and `.expect` on the
+    // result — any runtime failure aborted training with destroyed
+    // optimizer state. Now a failed step must (a) leave m/v intact
+    // and (b) fall back to the rust path, so the first "failed" step
+    // is bit-identical to a pure-rust twin with the same history.
+    let Some(rt) = runtime() else { return };
+    let hp = AdamHp::default();
+    let mut bad = GwtAdam::new(64, 64, 2, hp, None).unwrap();
+    let mut rust = GwtAdam::new(64, 64, 2, hp, None).unwrap();
+    bad.force_hlo_key(rt.clone(), "no_such_artifact".into());
+    assert!(bad.uses_hlo());
+    let mut rng = Rng::new(7);
+    for step in 0..3 {
+        let g = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let a = bad.direction(&g, 0.0);
+        let b = rust.direction(&g, 0.0);
+        assert_eq!(
+            a.data(),
+            b.data(),
+            "step {step}: fallback must match the rust path bit-for-bit"
+        );
+    }
+    assert!(!bad.uses_hlo(), "failed HLO path must disable itself");
 }
 
 #[test]

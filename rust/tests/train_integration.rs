@@ -1,15 +1,15 @@
 //! End-to-end trainer integration over the AOT artifacts.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gwt::config::{OptSpec, TrainConfig};
 use gwt::coordinator::Trainer;
 use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
 use gwt::runtime::Runtime;
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     match Runtime::load("artifacts") {
-        Ok(rt) => Some(Rc::new(rt)),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
             eprintln!("SKIP (run `make artifacts`): {e:#}");
             None
@@ -82,7 +82,7 @@ fn dp_workers_and_grad_accum_run() {
 fn deterministic_given_seed() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 4);
-    let run = |rt: Rc<Runtime>| {
+    let run = |rt: Arc<Runtime>| {
         let mut t =
             Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 5), &loader).unwrap();
         for _ in 0..5 {
