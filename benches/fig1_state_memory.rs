@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         let ps = pm.params();
         let adam = account(&ps, Method::Adam).state_bytes;
         let levels: Vec<usize> = (1..=3)
-            .map(|l| account(&ps, Method::Gwt { level: l }).state_bytes)
+            .map(|l| account(&ps, Method::gwt(l)).state_bytes)
             .collect();
         println!(
             "  {:>5} Adam  |{}| {:.2}G",

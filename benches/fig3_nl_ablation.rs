@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         for (si, &seed) in seeds.iter().enumerate() {
             let mut spec = RunSpec::paper_defaults(
                 "nano",
-                OptSpec::Gwt { level: 2 },
+                OptSpec::gwt(2),
                 steps,
             );
             spec.nl_gamma = gamma;

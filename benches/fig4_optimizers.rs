@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     // full-state baselines the figure compares against.
     let runs: Vec<(&str, OptSpec)> = vec![
         ("Adam", OptSpec::Adam),
-        ("Adam+GWT-2", OptSpec::Gwt { level: 2 }),
+        ("Adam+GWT-2", OptSpec::gwt(2)),
         ("Adam-mini", OptSpec::AdamMini),
         ("MUON", OptSpec::Muon),
     ];

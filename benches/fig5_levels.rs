@@ -9,6 +9,7 @@ use gwt::bench_harness::{
 };
 use gwt::config::OptSpec;
 use gwt::metrics::write_curves;
+use gwt::wavelet::WaveletBasis;
 
 fn main() -> anyhow::Result<()> {
     let rt = runtime_or_skip();
@@ -30,10 +31,11 @@ fn main() -> anyhow::Result<()> {
         "1.00".into(),
     ]);
     let mut all_below = true;
+    let mut haar_state = Vec::new();
     for level in 1..=5usize {
         let spec = RunSpec::paper_defaults(
             "nano",
-            OptSpec::Gwt { level },
+            OptSpec::gwt(level),
             steps,
         );
         let out = pretrain(rt.clone(), &spec, &loader);
@@ -45,8 +47,34 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", out.state_bytes as f64 / adam.state_bytes as f64),
         ]);
         all_below &= out.valid_ppl <= adam.valid_ppl * 1.05;
+        haar_state.push(out.state_bytes);
         let mut c = out.curve.clone();
         c.label = format!("gwt_l{level}");
+        curves.push(c);
+    }
+    // Basis ablation (paper open problem (a)): the DB4 rows ride the
+    // same sweep via the rust path; state must match Haar exactly.
+    for level in [2usize, 3] {
+        let spec = RunSpec::paper_defaults(
+            "nano",
+            OptSpec::gwt_basis(WaveletBasis::Db4, level),
+            steps,
+        );
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!("  GWT-DB4-{level}  ppl {:.2}", out.valid_ppl);
+        assert_eq!(
+            out.state_bytes,
+            haar_state[level - 1],
+            "DB4 state must be byte-identical to Haar at level {level}"
+        );
+        table.row(vec![
+            format!("GWT-DB4-{level}"),
+            format!("{:.2}", out.valid_ppl),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+            format!("{:.2}", out.state_bytes as f64 / adam.state_bytes as f64),
+        ]);
+        let mut c = out.curve.clone();
+        c.label = format!("gwt_db4_l{level}");
         curves.push(c);
     }
     table.print();

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let mut ppls = Vec::new();
     for &alpha in &alphas {
         let mut spec =
-            RunSpec::paper_defaults("nano", OptSpec::Gwt { level: 2 }, steps);
+            RunSpec::paper_defaults("nano", OptSpec::gwt(2), steps);
         spec.alpha = alpha;
         let out = pretrain(rt.clone(), &spec, &loader);
         println!("  alpha {alpha:<5} ppl {:.2}", out.valid_ppl);

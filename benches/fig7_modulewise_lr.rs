@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         ),
         (
             "GWT-2 (reference)",
-            RunSpec::paper_defaults("nano", OptSpec::Gwt { level: 2 }, steps),
+            RunSpec::paper_defaults("nano", OptSpec::gwt(2), steps),
         ),
     ];
 

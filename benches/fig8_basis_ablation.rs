@@ -1,0 +1,149 @@
+//! Basis ablation (paper open problem (a)): Haar vs DB4 across the
+//! whole stack, now that `WaveletBasis` is a first-class axis.
+//!
+//! Part 1 is artifact-free and always runs: approximation-band
+//! compression error for both bases on three gradient-like signal
+//! classes (the transform-level story — DB4's extra vanishing moment
+//! wins on smooth rows, Haar's strict locality wins on blocky rows,
+//! white noise is a wash). Part 2 pretrains nano with `gwt-2` vs
+//! `gwt-db4-2` on identical data when AOT artifacts are present
+//! (the DB4 run takes the rust path; state bytes must match Haar
+//! exactly).
+//!
+//! ci.sh smoke-invokes this bench (Part 1 at minimum), so keep the
+//! artifact-free section fast and dependency-free.
+
+use gwt::bench_harness::{bench_loader, pretrain, scaled, write_result, RunSpec, TableView};
+use gwt::config::OptSpec;
+use gwt::rng::Rng;
+use gwt::runtime::Runtime;
+use gwt::wavelet::db4::lowpass_error;
+use gwt::wavelet::WaveletBasis;
+
+/// Smooth periodic rows (no wrap discontinuity): DB4's regime.
+fn smooth_rows(m: usize, n: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut x = vec![0.0f32; m * n];
+    for r in 0..m {
+        let amp = 1.0 + rng.f32();
+        let phase = rng.f32() * std::f32::consts::TAU;
+        for j in 0..n {
+            let t = j as f32 / n as f32 * std::f32::consts::TAU;
+            x[r * n + j] =
+                amp * (t + phase).sin() + 0.3 * amp * (2.0 * t + phase).cos();
+        }
+    }
+    x
+}
+
+/// Piecewise-constant rows (block width = 2^level): Haar's regime.
+fn blocky_rows(m: usize, n: usize, level: usize, rng: &mut Rng) -> Vec<f32> {
+    let b = 1usize << level;
+    let mut x = vec![0.0f32; m * n];
+    for r in 0..m {
+        for blk in 0..n / b {
+            let v = rng.normal_f32();
+            for j in 0..b {
+                x[r * n + blk * b + j] = v;
+            }
+        }
+    }
+    x
+}
+
+fn main() -> anyhow::Result<()> {
+    let (m, n) = (32usize, 128usize);
+    let mut rng = Rng::new(0x5a51);
+
+    let mut table = TableView::new(
+        "Basis ablation — approximation-band compression error (32x128)",
+        &["signal", "level", "Haar err", "DB4 err", "DB4/Haar", "winner"],
+    );
+    let mut claims_ok = true;
+    for level in 1..=3usize {
+        let cases: [(&str, Vec<f32>); 3] = [
+            ("smooth periodic", smooth_rows(m, n, &mut rng)),
+            ("blocky", blocky_rows(m, n, level, &mut rng)),
+            ("white noise", rng.normal_vec(m * n, 1.0)),
+        ];
+        for (name, x) in cases {
+            let e_haar = lowpass_error(&x, m, n, level, false);
+            let e_db4 = lowpass_error(&x, m, n, level, true);
+            let ratio = e_db4 / e_haar;
+            table.row(vec![
+                name.into(),
+                format!("{level}"),
+                format!("{e_haar:.3}"),
+                format!("{e_db4:.3}"),
+                format!("{ratio:.3}"),
+                if ratio < 0.95 {
+                    "DB4".into()
+                } else if ratio > 1.05 {
+                    "Haar".into()
+                } else {
+                    "tie".into()
+                },
+            ]);
+            // The trade-off behind the paper's choice of Haar — and
+            // the reason the basis is worth having as an axis.
+            match name {
+                "smooth periodic" => claims_ok &= ratio < 1.0,
+                "blocky" => claims_ok &= ratio > 1.0,
+                _ => {}
+            }
+        }
+    }
+    table.print();
+    println!(
+        "transform-level shape: DB4 wins smooth rows, Haar wins blocky rows [{}]",
+        if claims_ok { "OK" } else { "MISS" }
+    );
+
+    // Part 2: end-to-end training ablation, only when artifacts exist
+    // (the transform-level section above must run everywhere, so no
+    // runtime_or_skip process-exit before this point).
+    let Ok(rt) = Runtime::load("artifacts") else {
+        println!("(skipping training ablation: no artifacts)");
+        write_result("fig8_basis_ablation", &table, vec![])?;
+        return Ok(());
+    };
+    let rt = std::sync::Arc::new(rt);
+    let steps = scaled(150);
+    let loader = bench_loader("nano", steps, 21);
+    let mut train_table = TableView::new(
+        "Basis ablation — nano pretraining, identical data",
+        &["config", "valid PPL", "state KB", "path"],
+    );
+    let mut outs = Vec::new();
+    for (label, opt) in [
+        ("GWT-2 (Haar)", OptSpec::gwt(2)),
+        ("GWT-DB4-2", OptSpec::gwt_basis(WaveletBasis::Db4, 2)),
+    ] {
+        let spec = RunSpec::paper_defaults("nano", opt, steps);
+        let out = pretrain(rt.clone(), &spec, &loader);
+        println!("  {label:<12} ppl {:.2}", out.valid_ppl);
+        train_table.row(vec![
+            label.into(),
+            format!("{:.2}", out.valid_ppl),
+            format!("{:.1}", out.state_bytes as f64 / 1e3),
+            if label.contains("DB4") { "rust (no AOT artifact)".into() } else { "auto".into() },
+        ]);
+        outs.push(out);
+    }
+    assert_eq!(
+        outs[0].state_bytes, outs[1].state_bytes,
+        "basis swap must not change optimizer-state bytes"
+    );
+    train_table.print();
+    println!(
+        "state parity: {} KB both bases [OK]; ppl Haar {:.2} vs DB4 {:.2}",
+        outs[0].state_bytes as f64 / 1e3,
+        outs[0].valid_ppl,
+        outs[1].valid_ppl
+    );
+    write_result(
+        "fig8_basis_ablation",
+        &table,
+        vec![("training", train_table.to_json())],
+    )?;
+    Ok(())
+}

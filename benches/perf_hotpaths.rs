@@ -11,7 +11,7 @@ use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
 use gwt::rng::Rng;
 use gwt::runtime::{literal_f32, literal_tokens};
 use gwt::tensor::Tensor;
-use gwt::wavelet::{haar_fwd, haar_inv};
+use gwt::wavelet::{haar_fwd, haar_inv, WaveletBasis};
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
@@ -55,6 +55,22 @@ fn main() -> anyhow::Result<()> {
         "64x160 l=2".into(),
         format!("{:.1} us", t.per_iter_us()),
         String::new(),
+    ]);
+
+    // Basis ablation: the same step through the 4-tap DB4 filters
+    // (rust path only — no DB4 AOT artifact exists). Twice the taps,
+    // so expect roughly 2x the transform cost per row.
+    let mut db4_opt =
+        GwtAdam::new_with_basis(64, 160, 2, WaveletBasis::Db4, hp, None)
+            .unwrap();
+    let t = time_fn(3, 25, || {
+        std::hint::black_box(db4_opt.direction(&g, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam step (rust, db4)".into(),
+        "64x160 l=2".into(),
+        format!("{:.1} us", t.per_iter_us()),
+        "4-tap filters vs Haar's 2".into(),
     ]);
 
     let rt = runtime_or_skip();
@@ -101,8 +117,8 @@ fn main() -> anyhow::Result<()> {
     // pool::scoped_chunks_mut (bit-identical output at every count;
     // see tests/parallel_determinism.rs).
     for (preset, opt) in [
-        ("nano", OptSpec::Gwt { level: 2 }),
-        ("small", OptSpec::Gwt { level: 2 }),
+        ("nano", OptSpec::gwt(2)),
+        ("small", OptSpec::gwt(2)),
         ("small", OptSpec::Adam),
     ] {
         let t1 = time_bank_step(preset, opt, 1, 2, 9);
@@ -144,6 +160,34 @@ fn main() -> anyhow::Result<()> {
         "672x256 l=2".into(),
         format!("{:.1} us", tr4.per_iter_us()),
         format!("{:.2}x vs serial", tr1.median_ns / tr4.median_ns),
+    ]);
+
+    // Row-sharded DB4 at the same shape: the basis dispatch must not
+    // cost the sharding its scaling.
+    let mut db4_serial =
+        GwtAdam::new_with_basis(672, 256, 2, WaveletBasis::Db4, hp, None)
+            .unwrap();
+    let td1 = time_fn(2, 15, || {
+        std::hint::black_box(db4_serial.direction(&g_rows, 0.0));
+    });
+    let mut db4_sharded =
+        GwtAdam::new_with_basis(672, 256, 2, WaveletBasis::Db4, hp, None)
+            .unwrap()
+            .with_threads(4);
+    let td4 = time_fn(2, 15, || {
+        std::hint::black_box(db4_sharded.direction(&g_rows, 0.0));
+    });
+    table.row(vec![
+        "gwt_adam rows serial (db4)".into(),
+        "672x256 l=2".into(),
+        format!("{:.1} us", td1.per_iter_us()),
+        String::new(),
+    ]);
+    table.row(vec![
+        "gwt_adam rows threads=4 (db4)".into(),
+        "672x256 l=2".into(),
+        format!("{:.1} us", td4.per_iter_us()),
+        format!("{:.2}x vs serial", td1.median_ns / td4.median_ns),
     ]);
 
     // Literal marshalling (upload + download), the PJRT boundary tax.

@@ -24,10 +24,10 @@ fn method_for(name: &str) -> Method {
         "MUON" => Method::Muon,
         "GaLore-1/4" => Method::Galore { rank_denom: 4 },
         "APOLLO-1/4" => Method::Apollo { rank_denom: 4 },
-        "GWT-2" => Method::Gwt { level: 2 },
+        "GWT-2" => Method::gwt(2),
         "GaLore-1/8" => Method::Galore { rank_denom: 8 },
         "APOLLO-1/8" => Method::Apollo { rank_denom: 8 },
-        "GWT-3" => Method::Gwt { level: 3 },
+        "GWT-3" => Method::gwt(3),
         _ => unreachable!(),
     }
 }

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let mut mems = Vec::new();
     for &(level, pmem, ptok) in PAPER {
         let spec =
-            RunSpec::paper_defaults("nano", OptSpec::Gwt { level }, steps);
+            RunSpec::paper_defaults("nano", OptSpec::gwt(level), steps);
         let out = pretrain(rt.clone(), &spec, &loader);
         println!(
             "  GWT-{level}: state {:.1} KB, {:.0} tok/s",

@@ -19,6 +19,19 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Second pass under the forced-rust GWT path: environments *with*
+# artifacts would otherwise never exercise the HLO-less optimizer
+# fallback (the env var is the legacy fallback spelling of the
+# `gwt_path = rust` config key; see TrainConfig::resolve_gwt_path).
+echo "== cargo test -q (GWT_OPT_PATH=rust) =="
+GWT_OPT_PATH=rust cargo test -q
+
+# Smoke the Haar-vs-DB4 basis-ablation bench: its transform-level
+# section is artifact-free, so this runs green on a fresh checkout
+# and covers the end-to-end ablation when artifacts are present.
+echo "== basis ablation bench (smoke) =="
+GWT_BENCH_SCALE=0.2 cargo bench --bench fig8_basis_ablation
+
 if [[ "$fast" == 0 ]]; then
     echo "== cargo fmt --check =="
     cargo fmt --check

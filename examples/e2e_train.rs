@@ -6,9 +6,10 @@
 //! Pallas kernel -> JAX model -> HLO artifact -> PJRT -> rust
 //! coordinator -> optimizer bank -> metrics -> checkpoint.
 //!
-//! Usage: cargo run --release --example e2e_train [-- preset steps]
+//! Usage: cargo run --release --example e2e_train [-- preset steps [db4]]
 //! Defaults: micro (~0.8M params), 300 steps. Use `small` (~5M) for a
-//! longer run.
+//! longer run. A trailing `db4` swaps the GWT run onto the DB4 basis
+//! (`gwt-db4-2`, rust path) for the Haar-vs-DB4 ablation.
 
 use std::sync::Arc;
 
@@ -22,12 +23,19 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let preset = args.first().cloned().unwrap_or_else(|| "micro".into());
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let basis = if args.iter().any(|a| a == "db4" || a == "--db4") {
+        gwt::wavelet::WaveletBasis::Db4
+    } else {
+        gwt::wavelet::WaveletBasis::Haar
+    };
+    let gwt_spec = OptSpec::gwt_basis(basis, 2);
 
     let runtime = Arc::new(Runtime::load("artifacts")?);
     let p = gwt::config::presets::find(&preset)?;
     println!(
-        "== e2e: {preset} ({:.2}M params), {steps} steps, GWT-2 vs Adam ==",
-        p.total_params() as f64 / 1e6
+        "== e2e: {preset} ({:.2}M params), {steps} steps, {} vs Adam ==",
+        p.total_params() as f64 / 1e6,
+        gwt_spec.label()
     );
 
     let mut corpus = SyntheticCorpus::new(CorpusSpec::default());
@@ -39,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let mut curves = Vec::new();
     let mut summaries = Vec::new();
     for (opt, lr, alpha, modulewise) in [
-        (OptSpec::Gwt { level: 2 }, 0.01, 0.25, true),
+        (gwt_spec, 0.01, 0.25, true),
         (OptSpec::Adam, 0.005, 1.0, false),
     ] {
         let cfg = TrainConfig {
@@ -101,7 +109,8 @@ fn main() -> anyhow::Result<()> {
     }
     let (gwt_out, adam_out) = (&summaries[0], &summaries[1]);
     println!(
-        "\nGWT-2 vs Adam: ppl {:.2} vs {:.2} ({}), state saved {:.0}%",
+        "\n{} vs Adam: ppl {:.2} vs {:.2} ({}), state saved {:.0}%",
+        gwt_spec.label(),
         gwt_out.valid_ppl,
         adam_out.valid_ppl,
         if gwt_out.valid_ppl <= adam_out.valid_ppl {

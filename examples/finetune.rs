@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         OptSpec::Lora { rank_denom: 64 },
         OptSpec::Galore { rank_denom: 64 },
         OptSpec::Apollo { rank_denom: 64 },
-        OptSpec::Gwt { level: 5 },
+        OptSpec::gwt(5),
     ];
 
     let suite: Vec<ClsTask> = tasks::mmlu_suite(preset.seq_len, 7)

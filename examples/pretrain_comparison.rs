@@ -36,8 +36,11 @@ fn main() -> anyhow::Result<()> {
         (OptSpec::Muon, 0.005, 1.0),
         (OptSpec::Galore { rank_denom: 4 }, 0.01, 0.25),
         (OptSpec::Apollo { rank_denom: 4 }, 0.01, 1.0),
-        (OptSpec::Gwt { level: 2 }, 0.01, 0.25),
-        (OptSpec::Gwt { level: 3 }, 0.01, 0.25),
+        (OptSpec::gwt(2), 0.01, 0.25),
+        (OptSpec::gwt(3), 0.01, 0.25),
+        // Basis ablation (open problem (a)): DB4-backed GWT rides the
+        // same hyperparameters; identical state bytes, rust path.
+        (OptSpec::gwt_basis(gwt::wavelet::WaveletBasis::Db4, 2), 0.01, 0.25),
     ];
 
     let mut table = TableView::new(

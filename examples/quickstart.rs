@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     //    so it is purely a throughput knob (CLI: `--threads N`).
     let cfg = TrainConfig {
         preset: "nano".into(),
-        optimizer: OptSpec::Gwt { level: 2 },
+        optimizer: OptSpec::gwt(2),
         steps: 100,
         eval_every: 25,
         threads: 0,

@@ -6,10 +6,25 @@
 //! `--checkpoint FILE`, `--curve-dir DIR`, and `--threads N` — the
 //! parallel step-engine worker count (`0` = auto-detect; equivalent
 //! to `-s threads=N`, see `TrainConfig::threads`).
+//!
+//! Grammar notes: flags in [`BOOL_FLAGS`] are boolean by contract —
+//! a bare `--verbose` never consumes the following token, so
+//! `train --verbose pos1` keeps `pos1` positional. Any other bare
+//! `--flag` takes the next token as its value unless it looks like a
+//! flag. A standalone `--` ends flag parsing: everything after it is
+//! positional verbatim (the escape hatch for positionals that start
+//! with `--`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
+
+/// Flags that are boolean by contract: a bare occurrence never
+/// swallows the next token as its value. Extend this set when adding
+/// a boolean flag to any launcher — otherwise a trailing positional
+/// after the flag would be consumed as its value (the old grammar
+/// footgun).
+pub const BOOL_FLAGS: &[&str] = &["verbose"];
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -27,8 +42,14 @@ impl Args {
         if let Some(cmd) = it.next() {
             args.command = cmd.clone();
         }
+        let mut rest_positional = false;
         while let Some(a) = it.next() {
-            if a == "-s" || a == "--set" {
+            if rest_positional {
+                args.positional.push(a.clone());
+            } else if a == "--" {
+                // Separator: everything after is positional verbatim.
+                rest_positional = true;
+            } else if a == "-s" || a == "--set" {
                 let kv = it
                     .next()
                     .ok_or_else(|| anyhow::anyhow!("-s requires key=value"))?;
@@ -40,10 +61,11 @@ impl Args {
                 // --flag value  |  --flag=value  |  bare --flag (bool)
                 if let Some((k, v)) = key.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--") && *n != "-s")
-                    .unwrap_or(false)
+                } else if !BOOL_FLAGS.contains(&key)
+                    && it
+                        .peek()
+                        .map(|n| !n.starts_with("--") && *n != "-s")
+                        .unwrap_or(false)
                 {
                     args.flags.insert(key.to_string(), it.next().unwrap().clone());
                 } else {
@@ -89,9 +111,10 @@ mod tests {
 
     #[test]
     fn parses_subcommand_and_flags() {
-        // NOTE grammar: a bare `--flag` consumes the next token as its
-        // value unless that token is another flag — so boolean flags
-        // must be last or use `--flag=true`.
+        // Grammar: an unknown bare `--flag` consumes the next token
+        // as its value unless that token is another flag; flags in
+        // BOOL_FLAGS never consume (see the tests below for the
+        // positional-after-boolean and `--` separator cases).
         let a = Args::parse(&argv(&[
             "train", "pos1", "--config", "c.cfg", "--steps=50", "-s",
             "lr=0.1", "--verbose",
@@ -110,6 +133,34 @@ mod tests {
         let a = Args::parse(&argv(&["x", "--a", "--b", "v"])).unwrap();
         assert!(a.flag_bool("a"));
         assert_eq!(a.flag("b"), Some("v"));
+    }
+
+    #[test]
+    fn known_boolean_flag_does_not_swallow_positional() {
+        // The old grammar footgun: `train --verbose pos1` used to
+        // parse as `verbose = "pos1"` with no positionals. Flags in
+        // BOOL_FLAGS are boolean by contract and never consume.
+        let a = Args::parse(&argv(&["train", "--verbose", "pos1"])).unwrap();
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        // Unknown bare flags keep the value-consuming grammar.
+        let a = Args::parse(&argv(&["train", "--config", "c.cfg"])).unwrap();
+        assert_eq!(a.flag("config"), Some("c.cfg"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn double_dash_ends_flag_parsing() {
+        let a = Args::parse(&argv(&[
+            "train", "--steps", "5", "--", "--not-a-flag", "-s", "x",
+        ]))
+        .unwrap();
+        assert_eq!(a.flag("steps"), Some("5"));
+        assert!(a.sets.is_empty());
+        assert_eq!(a.positional, vec!["--not-a-flag", "-s", "x"]);
+        // `--` with nothing after is a no-op.
+        let a = Args::parse(&argv(&["train", "--"])).unwrap();
+        assert!(a.positional.is_empty());
     }
 
     #[test]

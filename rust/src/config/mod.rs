@@ -13,13 +13,16 @@ use anyhow::{bail, Context, Result};
 
 pub use presets::{ModelPreset, PRESETS};
 
+use crate::wavelet::WaveletBasis;
+
 /// Which optimizer drives the eligible (attention/MLP) matrices.
 /// Non-eligible parameters always use full Adam, matching the paper.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum OptSpec {
     Adam,
-    /// Gradient Wavelet Transform at `level`.
-    Gwt { level: usize },
+    /// Gradient Wavelet Transform at `level` over `basis`
+    /// (spec syntax `gwt-2` = Haar, `gwt-db4-2` = DB4).
+    Gwt { level: usize, basis: WaveletBasis },
     /// GaLore with rank = min_dim / rank_denom, SVD every `update_gap`.
     Galore { rank_denom: usize },
     /// APOLLO: random projection, rank = min_dim / rank_denom.
@@ -37,12 +40,37 @@ pub enum OptSpec {
 }
 
 impl OptSpec {
-    /// Parse `adam`, `gwt-2`, `galore-1/4`, `apollo-1/8`, `lora-1/4`,
-    /// `adam-mini`, `muon`, `adam8bit`, `sgdm`.
+    /// Haar-basis GWT at `level` — the paper's configuration.
+    pub const fn gwt(level: usize) -> OptSpec {
+        OptSpec::Gwt { level, basis: WaveletBasis::Haar }
+    }
+
+    /// GWT at `level` over an explicit wavelet basis.
+    pub const fn gwt_basis(basis: WaveletBasis, level: usize) -> OptSpec {
+        OptSpec::Gwt { level, basis }
+    }
+
+    /// Parse `adam`, `gwt-2`, `gwt-db4-2` (basis-qualified GWT;
+    /// `gwt-haar-2` is accepted too), `galore-1/4`, `apollo-1/8`,
+    /// `lora-1/4`, `adam-mini`, `muon`, `adam8bit`, `sgdm`.
     pub fn parse(s: &str) -> Result<OptSpec> {
         let s = s.trim().to_lowercase();
         if let Some(rest) = s.strip_prefix("gwt-") {
-            return Ok(OptSpec::Gwt { level: rest.parse().context("gwt level")? });
+            // Optional basis segment between `gwt-` and the level:
+            // an unrecognized token falls through to level parsing so
+            // `gwt-3` stays the Haar spelling and `gwt-x` still
+            // errors on the level.
+            let (basis, lvl) = match rest.split_once('-') {
+                Some((tok, lvl)) => match WaveletBasis::parse(tok) {
+                    Some(b) => (b, lvl),
+                    None => (WaveletBasis::Haar, rest),
+                },
+                None => (WaveletBasis::Haar, rest),
+            };
+            return Ok(OptSpec::Gwt {
+                level: lvl.parse().context("gwt level")?,
+                basis,
+            });
         }
         for (prefix, ctor) in [
             ("galore-1/", OptSpec::Galore { rank_denom: 0 }),
@@ -74,7 +102,7 @@ impl OptSpec {
     pub fn label(&self) -> String {
         match self {
             OptSpec::Adam => "Adam".into(),
-            OptSpec::Gwt { level } => format!("GWT-{level}"),
+            OptSpec::Gwt { level, basis } => basis.gwt_label(*level),
             OptSpec::Galore { rank_denom } => format!("GaLore-1/{rank_denom}"),
             OptSpec::Apollo { rank_denom } => format!("APOLLO-1/{rank_denom}"),
             OptSpec::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
@@ -90,7 +118,7 @@ impl OptSpec {
         use crate::memory::Method;
         match *self {
             OptSpec::Adam => Method::Adam,
-            OptSpec::Gwt { level } => Method::Gwt { level },
+            OptSpec::Gwt { level, basis } => Method::Gwt { level, basis },
             OptSpec::Galore { rank_denom } => Method::Galore { rank_denom },
             OptSpec::Apollo { rank_denom } => Method::Apollo { rank_denom },
             OptSpec::Lora { rank_denom } => Method::Lora { rank_denom },
@@ -98,6 +126,39 @@ impl OptSpec {
             OptSpec::Muon => Method::Muon,
             OptSpec::Adam8bit => Method::Adam8bit,
             OptSpec::SgdM => Method::SgdM,
+        }
+    }
+}
+
+/// Execution-path selection for GWT-Adam steps (`gwt_path` key).
+///
+/// Resolved once per optimizer-bank construction (not per
+/// parameter); the resolved value is what `TrainConfig::summary()`
+/// shows. The legacy `GWT_OPT_PATH=rust` env var is kept as a
+/// fallback when the config says `Auto`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GwtPath {
+    /// Use the AOT HLO artifact when the manifest carries one for
+    /// the (basis, shape, level); pure-rust fallback otherwise.
+    #[default]
+    Auto,
+    /// Always take the pure-rust path (skip artifact lookup).
+    Rust,
+}
+
+impl GwtPath {
+    pub fn parse(s: &str) -> Result<GwtPath> {
+        match s.trim().to_lowercase().as_str() {
+            "auto" => Ok(GwtPath::Auto),
+            "rust" => Ok(GwtPath::Rust),
+            other => bail!("gwt_path must be auto|rust, got '{other}'"),
+        }
+    }
+
+    pub const fn label(self) -> &'static str {
+        match self {
+            GwtPath::Auto => "auto",
+            GwtPath::Rust => "rust",
         }
     }
 }
@@ -134,6 +195,11 @@ pub struct TrainConfig {
     pub eps: f32,
     /// GaLore subspace refresh interval (paper: 200).
     pub galore_update_gap: usize,
+    /// GWT execution-path selection (`auto` = HLO artifact when
+    /// available, `rust` = force the pure-rust path). Resolved via
+    /// [`TrainConfig::resolve_gwt_path`], which keeps the legacy
+    /// `GWT_OPT_PATH` env var as a fallback.
+    pub gwt_path: GwtPath,
     pub artifacts_dir: String,
 }
 
@@ -141,7 +207,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             preset: "nano".into(),
-            optimizer: OptSpec::Gwt { level: 2 },
+            optimizer: OptSpec::gwt(2),
             lr: 0.01,
             alpha: 0.25,
             steps: 200,
@@ -157,6 +223,7 @@ impl Default for TrainConfig {
             beta2: 0.999,
             eps: 1e-6,
             galore_update_gap: 50,
+            gwt_path: GwtPath::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -186,6 +253,7 @@ impl TrainConfig {
             "galore_update_gap" => {
                 self.galore_update_gap = v.parse().context("galore_update_gap")?
             }
+            "gwt_path" => self.gwt_path = GwtPath::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
             other => bail!("unknown config key '{other}'"),
         }
@@ -231,15 +299,39 @@ impl TrainConfig {
         if !(0.0..=1.0).contains(&self.warmup_frac) {
             bail!("warmup_frac must be in [0,1]");
         }
-        if let OptSpec::Gwt { level } = self.optimizer {
+        if let OptSpec::Gwt { level, basis } = self.optimizer {
             let p = presets::find(&self.preset)?;
             for (m, n) in p.gwt_shapes() {
-                if n % (1usize << level) != 0 {
-                    bail!("preset {} shape {m}x{n} incompatible with GWT level {level}", p.name);
-                }
+                // Route through the basis contract's admissibility
+                // check rather than re-implementing divisibility: the
+                // inline `n % (1usize << level)` form shift-overflowed
+                // (debug-build panic) for level >= usize::BITS, turning
+                // an invalid `optimizer = gwt-64` config line into a
+                // crash instead of an Err.
+                basis.check_level(n, level).with_context(|| {
+                    format!(
+                        "preset {} shape {m}x{n} incompatible with GWT level {level}",
+                        p.name
+                    )
+                })?;
             }
         }
         Ok(())
+    }
+
+    /// Resolve the GWT execution path once (per bank construction):
+    /// an explicit `gwt_path = rust` wins; otherwise the legacy
+    /// `GWT_OPT_PATH=rust` env var forces the rust path; default is
+    /// `Auto` (HLO artifact when available).
+    pub fn resolve_gwt_path(&self) -> GwtPath {
+        if self.gwt_path == GwtPath::Rust {
+            return GwtPath::Rust;
+        }
+        if std::env::var("GWT_OPT_PATH").map(|v| v == "rust").unwrap_or(false)
+        {
+            return GwtPath::Rust;
+        }
+        GwtPath::Auto
     }
 
     /// Resolve the step-engine worker count: `0` auto-detects from
@@ -269,6 +361,8 @@ impl TrainConfig {
         m.insert("dp_workers".into(), format!("{}", self.dp_workers));
         m.insert("threads".into(), format!("{}", self.threads));
         m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
+        // Show the *resolved* path so an env-var fallback is visible.
+        m.insert("gwt_path".into(), self.resolve_gwt_path().label().into());
         m
     }
 }
@@ -288,7 +382,7 @@ mod tests {
     #[test]
     fn parse_opt_specs() {
         assert_eq!(OptSpec::parse("adam").unwrap(), OptSpec::Adam);
-        assert_eq!(OptSpec::parse("GWT-3").unwrap(), OptSpec::Gwt { level: 3 });
+        assert_eq!(OptSpec::parse("GWT-3").unwrap(), OptSpec::gwt(3));
         assert_eq!(
             OptSpec::parse("galore-1/4").unwrap(),
             OptSpec::Galore { rank_denom: 4 }
@@ -305,16 +399,42 @@ mod tests {
     }
 
     #[test]
+    fn parse_basis_qualified_gwt_specs() {
+        assert_eq!(
+            OptSpec::parse("gwt-db4-2").unwrap(),
+            OptSpec::gwt_basis(WaveletBasis::Db4, 2)
+        );
+        assert_eq!(
+            OptSpec::parse("GWT-DB4-5").unwrap(),
+            OptSpec::gwt_basis(WaveletBasis::Db4, 5)
+        );
+        // Explicit Haar spelling is accepted and equals the bare form.
+        assert_eq!(OptSpec::parse("gwt-haar-2").unwrap(), OptSpec::gwt(2));
+        // Bad level or bad basis segment still errors (never panics).
+        assert!(OptSpec::parse("gwt-db4-x").is_err());
+        assert!(OptSpec::parse("gwt-db4-").is_err());
+        assert!(OptSpec::parse("morlet-2").is_err());
+    }
+
+    #[test]
     fn labels_roundtrip_via_parse() {
         for spec in [
             OptSpec::Adam,
-            OptSpec::Gwt { level: 2 },
+            OptSpec::gwt(2),
+            OptSpec::gwt_basis(WaveletBasis::Db4, 2),
+            OptSpec::gwt_basis(WaveletBasis::Db4, 7),
             OptSpec::Galore { rank_denom: 8 },
             OptSpec::Apollo { rank_denom: 4 },
             OptSpec::Muon,
         ] {
             assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
         }
+        // Label spelling: Haar stays bare, other bases are qualified.
+        assert_eq!(OptSpec::gwt(2).label(), "GWT-2");
+        assert_eq!(
+            OptSpec::gwt_basis(WaveletBasis::Db4, 2).label(),
+            "GWT-DB4-2"
+        );
     }
 
     #[test]
@@ -325,11 +445,31 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.preset, "micro");
-        assert_eq!(cfg.optimizer, OptSpec::Gwt { level: 3 });
+        assert_eq!(cfg.optimizer, OptSpec::gwt(3));
         assert_eq!(cfg.lr, 0.02);
         assert_eq!(cfg.nl_gamma, 1.05);
         assert!(!cfg.modulewise_lr);
         assert_eq!(cfg.threads, 4);
+    }
+
+    #[test]
+    fn config_accepts_basis_and_path_keys() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text("optimizer = gwt-db4-2\ngwt_path = rust\n").unwrap();
+        assert_eq!(cfg.optimizer, OptSpec::gwt_basis(WaveletBasis::Db4, 2));
+        assert_eq!(cfg.gwt_path, GwtPath::Rust);
+        assert_eq!(cfg.resolve_gwt_path(), GwtPath::Rust);
+        assert_eq!(cfg.summary()["gwt_path"], "rust");
+        assert_eq!(cfg.summary()["optimizer"], "GWT-DB4-2");
+        assert!(cfg.apply_text("gwt_path = gpu").is_err());
+        cfg.gwt_path = GwtPath::Auto;
+        // Without the env var set, Auto resolves to Auto. (The env
+        // fallback itself is exercised by ci.sh's forced-rust pass —
+        // mutating process env in-test would race other tests.)
+        if std::env::var("GWT_OPT_PATH").is_err() {
+            assert_eq!(cfg.resolve_gwt_path(), GwtPath::Auto);
+            assert_eq!(cfg.summary()["gwt_path"], "auto");
+        }
     }
 
     #[test]
@@ -366,9 +506,38 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.steps = 10;
         // nano width 160: 160 % 2^6 != 0 -> invalid level.
-        cfg.optimizer = OptSpec::Gwt { level: 6 };
+        cfg.optimizer = OptSpec::gwt(6);
         assert!(cfg.validate().is_err());
-        cfg.optimizer = OptSpec::Gwt { level: 5 };
+        cfg.optimizer = OptSpec::gwt(5);
         cfg.validate().unwrap();
+        // The same admissibility rule applies to every basis.
+        cfg.optimizer = OptSpec::gwt_basis(WaveletBasis::Db4, 6);
+        assert!(cfg.validate().is_err());
+        cfg.optimizer = OptSpec::gwt_basis(WaveletBasis::Db4, 2);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_level_without_panicking() {
+        // Regression: validate re-implemented divisibility as
+        // `n % (1usize << level)`, so `optimizer = gwt-64` in a
+        // config file shift-overflow-panicked in debug builds instead
+        // of returning Err. Same battery `wavelet::check_level` got.
+        for level in [64usize, usize::BITS as usize, 200, usize::MAX, 63] {
+            let cfg = TrainConfig {
+                optimizer: OptSpec::gwt(level),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "level {level}");
+            let cfg = TrainConfig {
+                optimizer: OptSpec::gwt_basis(WaveletBasis::Db4, level),
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "db4 level {level}");
+        }
+        // The config-file route hits the same guard.
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text("optimizer = gwt-64").unwrap();
+        assert!(cfg.validate().is_err());
     }
 }

@@ -9,6 +9,7 @@
 //!
 //! Examples:
 //!   gwt train -s preset=nano -s optimizer=gwt-2 -s steps=200
+//!   gwt train -s optimizer=gwt-db4-2 -s gwt_path=rust  # DB4 basis ablation
 //!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
 //!   gwt train --threads 4 -s preset=small      # parallel step engine
 //!   gwt memory
@@ -201,8 +202,8 @@ fn cmd_memory() -> Result<()> {
             gb(Method::Adam),
             gb(Method::Muon),
             gb(Method::Galore { rank_denom: 4 }),
-            gb(Method::Gwt { level: 2 }),
-            gb(Method::Gwt { level: 3 }),
+            gb(Method::gwt(2)),
+            gb(Method::gwt(3)),
         );
     }
     Ok(())

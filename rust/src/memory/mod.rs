@@ -9,6 +9,8 @@
 //! All byte counts assume BF16 (2 bytes/element) like the paper,
 //! except 8-bit Adam states (1 byte + per-block f32 scale).
 
+use crate::wavelet::WaveletBasis;
+
 /// One weight matrix (or vector) with its GWT/low-rank eligibility.
 /// Eligible = attention + MLP 2D matrices (paper §IV-A).
 #[derive(Clone, Debug)]
@@ -30,7 +32,11 @@ pub enum Method {
     /// Full-rank Adam: M + V, full size.
     Adam,
     /// GWT at level l: M + V on the approximation band (1/2^l cols).
-    Gwt { level: usize },
+    /// The basis is carried for labeling only — state bytes are
+    /// basis-independent by construction (every family's
+    /// approximation band is n >> level), asserted by
+    /// `gwt_state_bytes_are_basis_independent`.
+    Gwt { level: usize, basis: WaveletBasis },
     /// GaLore with rank = min_dim / denom: P (m x r) + M,V (r x n).
     Galore { rank_denom: usize },
     /// APOLLO: same state layout as GaLore (random P instead of SVD).
@@ -46,10 +52,15 @@ pub enum Method {
 }
 
 impl Method {
+    /// Haar-basis GWT at `level` (the paper's configuration).
+    pub const fn gwt(level: usize) -> Method {
+        Method::Gwt { level, basis: WaveletBasis::Haar }
+    }
+
     pub fn label(&self) -> String {
         match self {
             Method::Adam => "Full-Rank Adam".into(),
-            Method::Gwt { level } => format!("GWT-{level}"),
+            Method::Gwt { level, basis } => basis.gwt_label(*level),
             Method::Galore { rank_denom } => format!("GaLore-1/{rank_denom}"),
             Method::Apollo { rank_denom } => format!("APOLLO-1/{rank_denom}"),
             Method::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
@@ -85,10 +96,12 @@ pub fn state_bytes(p: &ParamShape, method: Method) -> usize {
     let (m, n) = (p.shape[0], p.shape[1]);
     match method {
         Method::Adam => full_adam,
-        Method::Gwt { level } => {
+        Method::Gwt { level, .. } => {
             // M + V over the approximation band; no projection matrix
-            // stored. Odd widths are padded per level (ptwt behaviour,
-            // matching the paper's estimates on LLaMA's odd d_ff).
+            // stored, and no basis dependence (every family halves
+            // the band per level). Odd widths are padded per level
+            // (ptwt behaviour, matching the paper's estimates on
+            // LLaMA's odd d_ff).
             let mut w = n;
             for _ in 0..level {
                 w = w.div_ceil(2);
@@ -260,7 +273,7 @@ mod tests {
     fn paper_60m_gwt2_total_memory() {
         // Appendix D worked example: GWT-2 total ≈ 0.27 GB
         // (25.3 MB states on eligible + 131.1 MB on rest + 116.1 MB weights).
-        let rep = account(&m60().params(), Method::Gwt { level: 2 });
+        let rep = account(&m60().params(), Method::gwt(2));
         let total_mb = rep.total() as f64 / 1e6;
         assert!((total_mb - 272.5).abs() < 5.0, "total {total_mb} MB");
     }
@@ -282,8 +295,8 @@ mod tests {
             let adam = account(&ps, Method::Adam).state_bytes;
             let muon = account(&ps, Method::Muon).state_bytes;
             let galore4 = account(&ps, Method::Galore { rank_denom: 4 }).state_bytes;
-            let gwt2 = account(&ps, Method::Gwt { level: 2 }).state_bytes;
-            let gwt3 = account(&ps, Method::Gwt { level: 3 }).state_bytes;
+            let gwt2 = account(&ps, Method::gwt(2)).state_bytes;
+            let gwt3 = account(&ps, Method::gwt(3)).state_bytes;
             assert!(adam > muon, "{}", pm.name);
             assert!(muon > galore4, "{}", pm.name);
             assert!(galore4 >= gwt2, "{}: galore {galore4} gwt2 {gwt2}", pm.name);
@@ -294,13 +307,40 @@ mod tests {
     #[test]
     fn gwt_halves_per_level() {
         let p = ParamShape { name: "w".into(), shape: vec![64, 256], eligible: true };
-        let s1 = state_bytes(&p, Method::Gwt { level: 1 });
-        let s2 = state_bytes(&p, Method::Gwt { level: 2 });
-        let s3 = state_bytes(&p, Method::Gwt { level: 3 });
+        let s1 = state_bytes(&p, Method::gwt(1));
+        let s2 = state_bytes(&p, Method::gwt(2));
+        let s3 = state_bytes(&p, Method::gwt(3));
         assert_eq!(s1, 2 * s2);
         assert_eq!(s2, 2 * s3);
         let adam = state_bytes(&p, Method::Adam);
         assert_eq!(adam, 2 * s1);
+    }
+
+    #[test]
+    fn gwt_state_bytes_are_basis_independent() {
+        // The accountant carries the basis for labeling only: state
+        // shapes are identical by construction (approximation band is
+        // n >> level for every family), so `gwt-2` and `gwt-db4-2`
+        // must report byte-identical footprints at every shape —
+        // including the padded odd-width path.
+        // 100 -> 50 -> 25 -> 13 exercises the div_ceil padding.
+        for shape in [vec![64, 256], vec![512, 1376], vec![8, 96], vec![8, 100]] {
+            let p = ParamShape { name: "w".into(), shape, eligible: true };
+            for level in 1..=3 {
+                let haar = state_bytes(&p, Method::gwt(level));
+                let db4 = state_bytes(
+                    &p,
+                    Method::Gwt { level, basis: WaveletBasis::Db4 },
+                );
+                assert_eq!(haar, db4, "{:?} level {level}", p.shape);
+            }
+        }
+        // Labels stay distinguishable (and Haar keeps the bare form).
+        assert_eq!(Method::gwt(2).label(), "GWT-2");
+        assert_eq!(
+            Method::Gwt { level: 2, basis: WaveletBasis::Db4 }.label(),
+            "GWT-DB4-2"
+        );
     }
 
     #[test]

@@ -1,22 +1,41 @@
-//! GWT-Adam: the paper's contribution (Algorithm 1).
+//! GWT-Adam: the paper's contribution (Algorithm 1), generic over
+//! the wavelet basis.
+//!
+//! The transform is a pluggable [`WaveletBasis`] (Haar — the paper's
+//! choice — or DB4, the open-problem-(a) ablation), fixed at
+//! construction: both the serial and the row-sharded rust paths
+//! dispatch every row through `basis.fwd_row`/`basis.inv_row`, and
+//! the HLO artifact lookup is keyed by the basis. Because every
+//! basis shares the module contract (same coefficient layout, same
+//! `n >> level` approximation width), the moment buffers `m`/`v`
+//! have *identical shapes for every basis* — swapping the basis
+//! changes numerics, never state size.
 //!
 //! Two execution paths, verified against each other and the Python
 //! oracle:
 //! * **HLO hot path** — the fused Pallas kernel AOT-lowered by
-//!   `aot.py` (`gwt_adam_l<l>_<m>x<n>` artifact), executed via PJRT.
-//!   One call transforms, updates moments, normalizes, and inverse
-//!   transforms entirely inside the compiled computation. Input
-//!   literals are built from *borrowed* state, so a failed runtime
-//!   call leaves the moments intact; on any failure the optimizer
-//!   logs, disables the artifact, and falls back to the rust path
-//!   instead of aborting training.
+//!   `aot.py` (`gwt_adam_l<l>_<m>x<n>` artifact; Haar-only today,
+//!   non-Haar bases resolve to no artifact and take the rust path),
+//!   executed via PJRT. One call transforms, updates moments,
+//!   normalizes, and inverse transforms entirely inside the compiled
+//!   computation. Input literals are built from *borrowed* state, so
+//!   a failed runtime call leaves the moments intact; on any failure
+//!   the optimizer logs, disables the artifact, and falls back to
+//!   the rust path instead of aborting training.
 //! * **rust fallback** — bit-close reimplementation used when no
-//!   artifact exists for the (shape, level), e.g. the high-level
-//!   sweeps of Fig 5 (l up to 7) and unit tests without artifacts.
-//!   Rows are independent, so this path is row-sharded through the
-//!   parallel step engine (`pool::scoped_chunks_mut`) when `threads`
-//!   > 1 — bit-identical to the serial loop (same per-row code, fixed
-//!   chunk boundaries, no cross-row reduction).
+//!   artifact exists for the (basis, shape, level), e.g. every DB4
+//!   run, the high-level sweeps of Fig 5 (l up to 7), and unit tests
+//!   without artifacts. Rows are independent, so this path is
+//!   row-sharded through the parallel step engine
+//!   (`pool::scoped_chunks_mut`) when `threads` > 1 — bit-identical
+//!   to the serial loop (same per-row code, fixed chunk boundaries,
+//!   no cross-row reduction) for every basis.
+//!
+//! Path selection (HLO vs rust) is the caller's decision: pass
+//! `runtime: None` to force the rust path. `build_optimizers`
+//! resolves `TrainConfig::gwt_path` (with the legacy `GWT_OPT_PATH`
+//! env var as fallback) once per bank and routes accordingly — the
+//! env var is no longer read here, per-parameter.
 
 use std::sync::Arc;
 
@@ -27,12 +46,13 @@ use crate::runtime::{
     literal_f32, literal_f32_from, tensor_from_literal, Runtime,
 };
 use crate::tensor::Tensor;
-use crate::wavelet;
+use crate::wavelet::WaveletBasis;
 
 pub struct GwtAdam {
     rows: usize,
     cols: usize,
     level: usize,
+    basis: WaveletBasis,
     hp: AdamHp,
     /// First/second moments over the approximation band (rows x q).
     m: Vec<f32>,
@@ -51,6 +71,8 @@ pub struct GwtAdam {
 }
 
 impl GwtAdam {
+    /// Haar-basis constructor (the paper's configuration). See
+    /// [`GwtAdam::new_with_basis`] for the basis-generic form.
     pub fn new(
         rows: usize,
         cols: usize,
@@ -58,30 +80,42 @@ impl GwtAdam {
         hp: AdamHp,
         runtime: Option<Arc<Runtime>>,
     ) -> Result<Self> {
-        wavelet::check_level(cols, level)?;
-        let q = cols >> level;
-        // Path selection (§Perf L3-5): the compiled artifact is the
-        // TPU-shaped hot path; on the CPU PJRT client its per-call
-        // overhead loses to the tight rust loop at every preset shape
-        // (see perf_hotpaths). GWT_OPT_PATH=rust opts out of the HLO
-        // path; default keeps it (numerics are pinned identical by
-        // rust/tests/runtime_roundtrip.rs either way).
-        let force_rust = std::env::var("GWT_OPT_PATH")
-            .map(|v| v == "rust")
-            .unwrap_or(false);
-        let exec = if force_rust {
-            None
-        } else {
-            runtime.and_then(|rt| {
-                rt.manifest
-                    .gwt_adam_key(rows, cols, level)
-                    .map(|key| (rt, key))
-            })
-        };
+        Self::new_with_basis(rows, cols, level, WaveletBasis::Haar, hp, runtime)
+    }
+
+    /// Build a GWT-Adam state machine over an arbitrary wavelet
+    /// basis. `runtime: Some(..)` enables the AOT HLO hot path when
+    /// the manifest carries an artifact for this (basis, shape,
+    /// level) — on the CPU PJRT client the tight rust loop usually
+    /// wins anyway (§Perf L3-5, see perf_hotpaths); numerics are
+    /// pinned identical by rust/tests/runtime_roundtrip.rs either
+    /// way. Bases without AOT lowering (everything but Haar today)
+    /// cleanly resolve to the rust path.
+    pub fn new_with_basis(
+        rows: usize,
+        cols: usize,
+        level: usize,
+        basis: WaveletBasis,
+        hp: AdamHp,
+        runtime: Option<Arc<Runtime>>,
+    ) -> Result<Self> {
+        basis.check_level(cols, level)?;
+        // State shape is basis-independent by construction (the
+        // approximation band is n >> level for every family) — the
+        // invariant that makes `gwt-2` and `gwt-db4-2` byte-identical
+        // in optimizer-state footprint.
+        let q = basis.approx_width(cols, level);
+        debug_assert_eq!(q, cols >> level);
+        let exec = runtime.and_then(|rt| {
+            rt.manifest
+                .gwt_adam_key(basis, rows, cols, level)
+                .map(|key| (rt, key))
+        });
         Ok(GwtAdam {
             rows,
             cols,
             level,
+            basis,
             hp,
             m: vec![0.0; rows * q],
             v: vec![0.0; rows * q],
@@ -110,6 +144,10 @@ impl GwtAdam {
 
     pub fn level(&self) -> usize {
         self.level
+    }
+
+    pub fn basis(&self) -> WaveletBasis {
+        self.basis
     }
 
     /// Test/bench seam: force the HLO path onto an arbitrary artifact
@@ -151,6 +189,7 @@ impl GwtAdam {
     /// over `self.threads` workers; bit-identical at every count.
     fn rust_direction(&mut self, g: &Tensor) -> Vec<f32> {
         let (rows, n, level) = (self.rows, self.cols, self.level);
+        let basis = self.basis;
         let q = n >> level;
         let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
         let mut out = vec![0.0f32; rows * n];
@@ -170,6 +209,7 @@ impl GwtAdam {
                     &mut mstate[r * q..(r + 1) * q],
                     &mut vstate[r * q..(r + 1) * q],
                     level,
+                    basis,
                     coeffs,
                     scratch,
                     b1,
@@ -196,8 +236,8 @@ impl GwtAdam {
             |(coeffs, scratch), _, chunk| {
                 for (gr, orow, mrow, vrow) in chunk.iter_mut() {
                     gwt_adam_row(
-                        gr, orow, mrow, vrow, level, coeffs, scratch, b1, b2,
-                        eps,
+                        gr, orow, mrow, vrow, level, basis, coeffs, scratch,
+                        b1, b2, eps,
                     );
                 }
             },
@@ -206,11 +246,13 @@ impl GwtAdam {
     }
 }
 
-/// One row of the fused rust kernel: forward Haar into `coeffs`,
-/// moment update on the approximation band, band-wise normalize into
-/// `orow`, inverse Haar back to weight space. Both the serial and the
-/// row-sharded path run exactly this code — which is what makes the
-/// parallel output bit-identical to the serial one.
+/// One row of the fused rust kernel: forward transform (through the
+/// selected basis) into `coeffs`, moment update on the approximation
+/// band, band-wise normalize into `orow`, inverse transform back to
+/// weight space. Both the serial and the row-sharded path run
+/// exactly this code — which is what makes the parallel output
+/// bit-identical to the serial one for every basis (the dispatch is
+/// a pure function of the basis value, shared by all workers).
 #[allow(clippy::too_many_arguments)]
 fn gwt_adam_row(
     gr: &[f32],
@@ -218,6 +260,7 @@ fn gwt_adam_row(
     mrow: &mut [f32],
     vrow: &mut [f32],
     level: usize,
+    basis: WaveletBasis,
     coeffs: &mut [f32],
     scratch: &mut [f32],
     b1: f32,
@@ -228,7 +271,7 @@ fn gwt_adam_row(
     let q = mrow.len();
     // Forward transform this row into the coefficient buffer.
     coeffs[..n].copy_from_slice(gr);
-    wavelet::haar_fwd_row(&mut coeffs[..n], level, scratch);
+    basis.fwd_row(&mut coeffs[..n], level, scratch);
     // Moment update on the approximation band.
     for j in 0..q {
         let a = coeffs[j];
@@ -252,7 +295,7 @@ fn gwt_adam_row(
         off += w;
     }
     // Inverse transform back to weight space.
-    wavelet::haar_inv_row(orow, level, scratch);
+    basis.inv_row(orow, level, scratch);
 }
 
 impl MatrixOpt for GwtAdam {
@@ -273,9 +316,12 @@ impl MatrixOpt for GwtAdam {
                     // the artifact and continue on the rust path for
                     // this and all future steps.
                     eprintln!(
-                        "gwt-adam[{}x{} l={}]: HLO step failed ({e:#}); \
+                        "gwt-adam[{}x{} l={} {}]: HLO step failed ({e:#}); \
                          falling back to the rust path",
-                        self.rows, self.cols, self.level
+                        self.rows,
+                        self.cols,
+                        self.level,
+                        self.basis.token()
                     );
                     self.exec = None;
                 }
@@ -295,8 +341,8 @@ impl MatrixOpt for GwtAdam {
 
     fn label(&self) -> String {
         format!(
-            "GWT-{}{}",
-            self.level,
+            "{}{}",
+            self.basis.gwt_label(self.level),
             if self.uses_hlo() { " (HLO)" } else { " (rust)" }
         )
     }
@@ -364,6 +410,176 @@ mod tests {
         approx_eq_slice(u.data(), &want, 1e-4);
         approx_eq_slice(&o.m, &m, 1e-5);
         approx_eq_slice(&o.v, &v, 1e-5);
+    }
+
+    #[test]
+    fn db4_level1_matches_manual_algorithm1() {
+        // Mirror of `level1_matches_manual_algorithm1` for the DB4
+        // basis: hand-execute Algorithm 1 for a 1x4 gradient at level
+        // 1 using the periodic 4-tap filters directly.
+        use crate::wavelet::db4::{G, H};
+        let hp = AdamHp::default();
+        let mut o = GwtAdam::new_with_basis(
+            1,
+            4,
+            1,
+            WaveletBasis::Db4,
+            hp,
+            None,
+        )
+        .unwrap();
+        let gd = [1.0f32, 2.0, 3.0, 4.0];
+        let g = Tensor::new(&[1, 4], gd.to_vec());
+        let u = o.direction(&g, 0.0);
+        // Forward, periodic: A[i] = Σ_k H[k]·g[(2i+k)%4], same with G.
+        let mut a = [0.0f32; 2];
+        let mut d = [0.0f32; 2];
+        for i in 0..2 {
+            for k in 0..4 {
+                a[i] += H[k] * gd[(2 * i + k) % 4];
+                d[i] += G[k] * gd[(2 * i + k) % 4];
+            }
+        }
+        let m: Vec<f32> = a.iter().map(|x| 0.1 * x).collect();
+        let v: Vec<f32> = a.iter().map(|x| 0.001 * x * x).collect();
+        let at: Vec<f32> =
+            (0..2).map(|i| m[i] / (v[i].sqrt() + hp.eps)).collect();
+        let dt: Vec<f32> =
+            (0..2).map(|i| d[i] / (v[i].sqrt() + hp.eps)).collect();
+        // Inverse, periodic scatter: out[(2i+k)%4] += H[k]·â + G[k]·d̂.
+        let bc = hp.bias_correction(1);
+        let mut want = [0.0f32; 4];
+        for i in 0..2 {
+            for k in 0..4 {
+                want[(2 * i + k) % 4] += H[k] * at[i] + G[k] * dt[i];
+            }
+        }
+        for w in &mut want {
+            *w *= bc;
+        }
+        approx_eq_slice(u.data(), &want, 1e-4);
+        approx_eq_slice(&o.m, &m, 1e-5);
+        approx_eq_slice(&o.v, &v, 1e-5);
+    }
+
+    #[test]
+    fn db4_row_sharded_path_bit_identical_to_serial() {
+        // The determinism contract must hold for every basis, not
+        // just the paper's Haar: worker counts {1,2,4,7} all yield
+        // exactly the serial bits — update, m, and v alike.
+        let hp = AdamHp::default();
+        for threads in [1usize, 2, 4, 7] {
+            let mut serial = GwtAdam::new_with_basis(
+                13,
+                32,
+                2,
+                WaveletBasis::Db4,
+                hp,
+                None,
+            )
+            .unwrap();
+            let mut sharded = GwtAdam::new_with_basis(
+                13,
+                32,
+                2,
+                WaveletBasis::Db4,
+                hp,
+                None,
+            )
+            .unwrap()
+            .with_threads(threads);
+            let mut rng = Rng::new(43);
+            for step in 0..4 {
+                let g = Tensor::randn(&[13, 32], 1.0, &mut rng);
+                let a = serial.direction(&g, 0.0);
+                let b = sharded.direction(&g, 0.0);
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "db4 threads={threads} step={step}"
+                );
+                assert_eq!(serial.m, sharded.m, "db4 threads={threads} m");
+                assert_eq!(serial.v, sharded.v, "db4 threads={threads} v");
+            }
+        }
+    }
+
+    #[test]
+    fn state_bytes_identical_across_bases() {
+        // The basis axis changes numerics, never state shape: `gwt-l`
+        // and `gwt-db4-l` carry byte-identical moment buffers.
+        for level in 1..=3 {
+            let haar = GwtAdam::new_with_basis(
+                8,
+                64,
+                level,
+                WaveletBasis::Haar,
+                AdamHp::default(),
+                None,
+            )
+            .unwrap();
+            let db4 = GwtAdam::new_with_basis(
+                8,
+                64,
+                level,
+                WaveletBasis::Db4,
+                AdamHp::default(),
+                None,
+            )
+            .unwrap();
+            assert_eq!(haar.state_bytes(), db4.state_bytes(), "level {level}");
+            assert_eq!(db4.state_bytes(), 2 * 8 * (64 >> level) * 4);
+        }
+    }
+
+    #[test]
+    fn basis_labels_and_bad_levels() {
+        let hp = AdamHp::default();
+        let haar = GwtAdam::new(8, 64, 2, hp, None).unwrap();
+        assert_eq!(haar.basis(), WaveletBasis::Haar);
+        assert_eq!(haar.label(), "GWT-2 (rust)");
+        let db4 =
+            GwtAdam::new_with_basis(8, 64, 2, WaveletBasis::Db4, hp, None)
+                .unwrap();
+        assert_eq!(db4.basis(), WaveletBasis::Db4);
+        assert_eq!(db4.label(), "GWT-DB4-2 (rust)");
+        // Both bases share the admissibility rule (2^level | n).
+        for b in WaveletBasis::ALL {
+            assert!(
+                GwtAdam::new_with_basis(8, 60, 3, b, hp, None).is_err(),
+                "{b:?}"
+            );
+            // ...including the level >= usize::BITS regression guard.
+            assert!(
+                GwtAdam::new_with_basis(8, 64, 64, b, hp, None).is_err(),
+                "{b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn db4_direction_decays_moments_on_zero_gradient() {
+        // The Adam moment algebra is basis-independent: zero gradient
+        // pure-decays m and v exactly as under Haar.
+        let mut o = GwtAdam::new_with_basis(
+            4,
+            16,
+            2,
+            WaveletBasis::Db4,
+            AdamHp::default(),
+            None,
+        )
+        .unwrap();
+        o.m.fill(1.0);
+        o.v.fill(1.0);
+        let g = Tensor::zeros(&[4, 16]);
+        o.direction(&g, 0.0);
+        for &m in &o.m {
+            assert!((m - 0.9).abs() < 1e-6);
+        }
+        for &v in &o.v {
+            assert!((v - 0.999).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use lora::LoraSim;
 pub use muon::Muon;
 pub use sgdm::SgdM;
 
-use crate::config::{OptSpec, TrainConfig};
+use crate::config::{GwtPath, OptSpec, TrainConfig};
 use crate::memory::ParamShape;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -133,6 +133,9 @@ impl ParamOptimizer {
 /// paper's module-wise routing. `runtime` enables the AOT HLO hot
 /// path for GWT/Adam steps where an artifact exists; `None` forces
 /// the pure-rust path (used by tests and high-level sweeps).
+/// `cfg.gwt_path` (with the legacy `GWT_OPT_PATH` env var as
+/// fallback) is resolved here, exactly once per bank — not per
+/// parameter inside `GwtAdam::new`.
 pub fn build_optimizers(
     params: &[ParamShape],
     cfg: &TrainConfig,
@@ -145,6 +148,12 @@ pub fn build_optimizers(
     // threads²). A single-param bank has no bank-level parallelism to
     // exploit, so the whole budget goes to GwtAdam's row sharding.
     let threads = if params.len() == 1 { cfg.resolve_threads() } else { 1 };
+    // Forcing the rust path simply withholds the runtime from GwtAdam
+    // (no artifact lookup happens at all).
+    let gwt_runtime = match cfg.resolve_gwt_path() {
+        GwtPath::Rust => None,
+        GwtPath::Auto => runtime,
+    };
     params
         .iter()
         .map(|p| {
@@ -154,9 +163,16 @@ pub fn build_optimizers(
                 let alpha = if cfg.modulewise_lr { cfg.alpha } else { 1.0 };
                 let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
                     OptSpec::Adam => Box::new(Adam::new(&p.shape, hp)),
-                    OptSpec::Gwt { level } => Box::new(
-                        GwtAdam::new(m, n, level, hp, runtime.clone())?
-                            .with_threads(threads),
+                    OptSpec::Gwt { level, basis } => Box::new(
+                        GwtAdam::new_with_basis(
+                            m,
+                            n,
+                            level,
+                            basis,
+                            hp,
+                            gwt_runtime.clone(),
+                        )?
+                        .with_threads(threads),
                     ),
                     OptSpec::Galore { rank_denom } => Box::new(Galore::new(
                         m,
@@ -269,7 +285,8 @@ mod tests {
     fn build_bank_for_every_method() {
         for opt in [
             OptSpec::Adam,
-            OptSpec::Gwt { level: 2 },
+            OptSpec::gwt(2),
+            OptSpec::gwt_basis(crate::wavelet::WaveletBasis::Db4, 2),
             OptSpec::Galore { rank_denom: 4 },
             OptSpec::Apollo { rank_denom: 4 },
             OptSpec::Lora { rank_denom: 4 },
@@ -288,10 +305,10 @@ mod tests {
     fn gwt_bank_uses_less_state_than_adam() {
         let adam = build_optimizers(&nano_params(), &cfg_with(OptSpec::Adam), None).unwrap();
         let gwt2 =
-            build_optimizers(&nano_params(), &cfg_with(OptSpec::Gwt { level: 2 }), None)
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::gwt(2)), None)
                 .unwrap();
         let gwt3 =
-            build_optimizers(&nano_params(), &cfg_with(OptSpec::Gwt { level: 3 }), None)
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::gwt(3)), None)
                 .unwrap();
         let (a, g2, g3) = (
             total_state_bytes(&adam),
@@ -303,8 +320,40 @@ mod tests {
     }
 
     #[test]
+    fn bank_state_bytes_identical_across_bases() {
+        // Acceptance invariant for the basis axis: a `gwt-db4-2` bank
+        // measures *exactly* the bytes of the Haar `gwt-2` bank.
+        let haar =
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::gwt(2)), None)
+                .unwrap();
+        let db4 = build_optimizers(
+            &nano_params(),
+            &cfg_with(OptSpec::gwt_basis(crate::wavelet::WaveletBasis::Db4, 2)),
+            None,
+        )
+        .unwrap();
+        assert_eq!(total_state_bytes(&haar), total_state_bytes(&db4));
+    }
+
+    #[test]
+    fn gwt_path_rust_builds_rust_bank() {
+        // `gwt_path = rust` withholds the runtime from GwtAdam: with
+        // no runtime in play the bank builds identically, and the
+        // setting shows up in the config summary (resolved once per
+        // bank, not read per parameter from the environment).
+        let mut cfg = cfg_with(OptSpec::gwt(2));
+        cfg.gwt_path = crate::config::GwtPath::Rust;
+        let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
+        assert_eq!(bank.len(), nano_params().len());
+        for p in bank.iter().filter(|p| p.label().starts_with("GWT")) {
+            assert!(p.label().ends_with("(rust)"), "{}", p.label());
+        }
+        assert_eq!(cfg.summary()["gwt_path"], "rust");
+    }
+
+    #[test]
     fn modulewise_alpha_routing() {
-        let cfg = cfg_with(OptSpec::Gwt { level: 2 });
+        let cfg = cfg_with(OptSpec::gwt(2));
         let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
         for (p, o) in nano_params().iter().zip(&bank) {
             if p.eligible {
@@ -320,7 +369,8 @@ mod tests {
         // Quadratic bowl: g = w. Every optimizer must shrink ||w||.
         for opt in [
             OptSpec::Adam,
-            OptSpec::Gwt { level: 2 },
+            OptSpec::gwt(2),
+            OptSpec::gwt_basis(crate::wavelet::WaveletBasis::Db4, 2),
             OptSpec::Galore { rank_denom: 4 },
             OptSpec::Apollo { rank_denom: 4 },
             OptSpec::AdamMini,
@@ -402,7 +452,7 @@ mod tests {
     #[test]
     fn step_bank_matches_serial_apply() {
         for threads in [0usize, 1, 2, 4, 7] {
-            let cfg = cfg_with(OptSpec::Gwt { level: 2 });
+            let cfg = cfg_with(OptSpec::gwt(2));
             let shapes = nano_params();
             let mut serial = build_optimizers(&shapes, &cfg, None).unwrap();
             let mut sharded = build_optimizers(&shapes, &cfg, None).unwrap();

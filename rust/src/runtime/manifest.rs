@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::presets::ModelPreset;
 use crate::jsonx::Json;
+use crate::wavelet::WaveletBasis;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct IoSpec {
@@ -153,9 +154,23 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("preset '{name}' not in manifest"))
     }
 
-    /// Key of the GWT-Adam step artifact for a shape/level, if AOT'd.
-    pub fn gwt_adam_key(&self, m: usize, n: usize, level: usize) -> Option<String> {
-        let key = format!("gwt_adam_l{level}_{m}x{n}");
+    /// Key of the GWT-Adam step artifact for a (basis, shape, level),
+    /// if AOT'd. Haar keeps the legacy basis-less key spelling that
+    /// `aot.py` emits; every other basis gets a basis-qualified key
+    /// (`gwt_adam_db4_l2_64x160`), which — since no non-Haar lowering
+    /// exists yet — cleanly resolves to `None`, routing those
+    /// optimizers onto the rust path instead of erroring.
+    pub fn gwt_adam_key(
+        &self,
+        basis: WaveletBasis,
+        m: usize,
+        n: usize,
+        level: usize,
+    ) -> Option<String> {
+        let key = match basis {
+            WaveletBasis::Haar => format!("gwt_adam_l{level}_{m}x{n}"),
+            b => format!("gwt_adam_{}_l{level}_{m}x{n}", b.token()),
+        };
         self.artifacts.contains_key(&key).then_some(key)
     }
 
@@ -244,8 +259,38 @@ mod tests {
         assert_eq!(a.inputs[0].numel(), 16);
         assert_eq!(m.adam_key(4, 4), Some("adam_4x4".into()));
         assert_eq!(m.adam_key(5, 5), None);
-        assert!(m.gwt_adam_key(4, 4, 1).is_none());
+        assert!(m.gwt_adam_key(WaveletBasis::Haar, 4, 4, 1).is_none());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn gwt_keys_are_basis_qualified() {
+        let dir = std::env::temp_dir().join("gwt_manifest_basis_test");
+        let dir = dir.to_str().unwrap();
+        std::fs::create_dir_all(dir).unwrap();
+        // A manifest carrying a Haar artifact for (l=1, 4x4): the Haar
+        // lookup hits the legacy key, the DB4 lookup must cleanly miss
+        // (no AOT DB4 lowering exists) so the optimizer takes the rust
+        // path rather than erroring.
+        let json = tiny_manifest_json().replace(
+            r#""adam_4x4": {"#,
+            r#""gwt_adam_l1_4x4": {
+              "file": "g.hlo.txt", "kind": "gwt_adam", "level": 1,
+              "rows": 4, "cols": 4,
+              "inputs": [{"dtype": "float32", "shape": [4, 4]}],
+              "outputs": [{"dtype": "float32", "shape": [4, 4]}]
+            },
+            "adam_4x4": {"#,
+        );
+        std::fs::write(format!("{dir}/manifest.json"), json).unwrap();
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(
+            m.gwt_adam_key(WaveletBasis::Haar, 4, 4, 1),
+            Some("gwt_adam_l1_4x4".into())
+        );
+        assert_eq!(m.gwt_adam_key(WaveletBasis::Db4, 4, 4, 1), None);
+        // A future DB4 lowering would land under the qualified key.
+        assert_eq!(m.gwt_adam_key(WaveletBasis::Db4, 9, 9, 2), None);
     }
 
     #[test]

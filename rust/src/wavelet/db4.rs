@@ -6,10 +6,13 @@
 //!
 //! Periodic (circular) boundary handling keeps the transform
 //! orthonormal and exactly invertible at every width divisible by 2,
-//! matching the Haar module's contract, so `GwtAdam` could swap
-//! filters without changing state shapes. Exposed as a library
-//! extension + ablation tests; the shipped optimizer keeps Haar (the
-//! paper's choice).
+//! matching the Haar module's contract — same `[A_l | D_l | ... |
+//! D_1]` layout, same `2^level | n` admissibility, same `n >> level`
+//! approximation width — so `GwtAdam` swaps filters without changing
+//! state shapes. Reachable end-to-end as
+//! `WaveletBasis::Db4` (optimizer spec `gwt-db4-<level>`); the
+//! per-row entry points [`db4_fwd_row`] / [`db4_inv_row`] are what
+//! the basis dispatch calls on the optimizer hot path.
 
 /// db4 low-pass decomposition filter (orthonormal).
 pub const H: [f32; 4] = [
@@ -56,6 +59,30 @@ pub fn db4_inv_level(row: &mut [f32], scratch: &mut [f32]) {
     row.copy_from_slice(&scratch[..n]);
 }
 
+/// Multi-level forward transform of one row, in place, using
+/// `scratch` (len >= row.len()) — the db4 arm of
+/// `WaveletBasis::fwd_row`, mirroring `haar_fwd_row`'s contract.
+pub fn db4_fwd_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n;
+    for _ in 0..level {
+        db4_fwd_level(&mut row[..w], scratch);
+        w /= 2;
+    }
+}
+
+/// Multi-level inverse transform of one row, in place.
+pub fn db4_inv_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n >> level;
+    for _ in 0..level {
+        w *= 2;
+        db4_inv_level(&mut row[..w], scratch);
+    }
+}
+
 /// Multi-level forward over an (m, n) matrix; layout matches the Haar
 /// module: [A_l | D_l | ... | D_1].
 pub fn db4_fwd(x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
@@ -64,12 +91,7 @@ pub fn db4_fwd(x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
     let mut out = x.to_vec();
     let mut scratch = vec![0.0f32; n];
     for r in 0..m {
-        let row = &mut out[r * n..(r + 1) * n];
-        let mut w = n;
-        for _ in 0..level {
-            db4_fwd_level(&mut row[..w], &mut scratch);
-            w /= 2;
-        }
+        db4_fwd_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
     }
     out
 }
@@ -81,12 +103,7 @@ pub fn db4_inv(c: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
     let mut out = c.to_vec();
     let mut scratch = vec![0.0f32; n];
     for r in 0..m {
-        let row = &mut out[r * n..(r + 1) * n];
-        let mut w = n >> level;
-        for _ in 0..level {
-            w *= 2;
-            db4_inv_level(&mut row[..w], &mut scratch);
-        }
+        db4_inv_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
     }
     out
 }
@@ -156,6 +173,27 @@ mod tests {
             let back = db4_inv(&db4_fwd(&x, m, n, level), m, n, level);
             approx_eq_slice(&back, &x, 1e-4);
         }
+    }
+
+    #[test]
+    fn row_functions_match_matrix_functions() {
+        // The in-place row entry points (the optimizer hot path) are
+        // bit-identical to the out-of-place matrix transforms.
+        let mut rng = Rng::new(11);
+        let (m, n, level) = (3, 32, 2);
+        let x = rng.normal_vec(m * n, 1.0);
+        let via_matrix = db4_fwd(&x, m, n, level);
+        let mut via_rows = x.clone();
+        let mut scratch = vec![0.0f32; n];
+        for r in 0..m {
+            db4_fwd_row(&mut via_rows[r * n..(r + 1) * n], level, &mut scratch);
+        }
+        assert_eq!(via_matrix, via_rows);
+        let back_matrix = db4_inv(&via_matrix, m, n, level);
+        for r in 0..m {
+            db4_inv_row(&mut via_rows[r * n..(r + 1) * n], level, &mut scratch);
+        }
+        assert_eq!(back_matrix, via_rows);
     }
 
     #[test]

@@ -1,14 +1,149 @@
-//! Multi-level discrete Haar wavelet transform (rust mirror of
-//! `python/compile/kernels/ref.py`).
+//! Wavelet-basis subsystem: the transforms GWT-Adam compresses
+//! gradients through, behind one selectable [`WaveletBasis`] axis.
 //!
-//! Used by (a) the pure-rust GWT-Adam fallback path for levels without
-//! an AOT artifact, (b) the memory accountant's sanity checks, and
-//! (c) the Theorem-1 verification tests. Layout convention matches the
-//! Python oracle exactly: `[A_l | D_l | D_{l-1} | ... | D_1]` along
-//! rows of length `n`.
+//! Two orthonormal families are implemented today — the paper's
+//! 2-tap Haar filters (this file, a rust mirror of
+//! `python/compile/kernels/ref.py`) and the 4-tap Daubechies pair
+//! ([`db4`], the paper's open problem (a)). Both share one contract:
+//!
+//! * coefficient layout `[A_l | D_l | D_{l-1} | ... | D_1]` along
+//!   rows of length `n`, exactly matching the Python oracle;
+//! * an `level`-level transform is defined iff `2^level` divides `n`
+//!   ([`check_level`], identical for every basis);
+//! * the approximation band after `level` levels has width
+//!   `n >> level` ([`approx_width`]), *independent of the basis* —
+//!   which is what keeps GWT optimizer-state shapes identical when
+//!   the basis is swapped;
+//! * perfect reconstruction and energy preservation (orthonormality),
+//!   pinned by each family's tests.
+//!
+//! Consumers dispatch through [`WaveletBasis::fwd_row`] /
+//! [`WaveletBasis::inv_row`]: the GWT-Adam rust path (serial and
+//! row-sharded — the per-row code is basis-dispatched but identical
+//! across workers, preserving the bit-identical determinism
+//! contract), the memory accountant's sanity checks, and the
+//! Theorem-1 verification tests. The free `haar_*` functions remain
+//! as the Haar implementation and for callers pinned to the paper's
+//! basis.
 
 pub mod db4;
 pub mod theory;
+
+/// A selectable wavelet family for the GWT subsystem.
+///
+/// Deliberately a small closed enum (not a trait object): every
+/// basis must guarantee the module contract above — same layout,
+/// same admissibility rule, same `n >> level` approximation width —
+/// so optimizer state built for one basis has exactly the shape of
+/// any other. Adding a family means adding a variant plus its
+/// `fwd_row`/`inv_row` arms, and every layer (config specs, manifest
+/// keys, accountant labels, benches) picks it up through this type.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WaveletBasis {
+    /// 2-tap orthonormal Haar pair — the paper's choice: strictly
+    /// local, exact on piecewise-constant (blocky) gradients.
+    #[default]
+    Haar,
+    /// 4-tap Daubechies pair (periodic boundaries): one extra
+    /// vanishing moment, so the approximation band also absorbs
+    /// linear trends within blocks.
+    Db4,
+}
+
+impl WaveletBasis {
+    /// Every supported basis, in spec order (ablation sweeps).
+    pub const ALL: [WaveletBasis; 2] = [WaveletBasis::Haar, WaveletBasis::Db4];
+
+    /// Canonical lowercase token used in optimizer specs
+    /// (`gwt-db4-2`) and manifest artifact keys.
+    pub const fn token(self) -> &'static str {
+        match self {
+            WaveletBasis::Haar => "haar",
+            WaveletBasis::Db4 => "db4",
+        }
+    }
+
+    /// Human-facing label fragment (`GWT-DB4-2`).
+    pub const fn label(self) -> &'static str {
+        match self {
+            WaveletBasis::Haar => "Haar",
+            WaveletBasis::Db4 => "DB4",
+        }
+    }
+
+    /// The one GWT label-spelling rule, shared by `OptSpec::label`,
+    /// `memory::Method::label`, and `GwtAdam::label`: Haar keeps the
+    /// paper's bare `GWT-l`; every other basis is qualified
+    /// (`GWT-DB4-l`) so labels parse back to the same spec.
+    pub fn gwt_label(self, level: usize) -> String {
+        match self {
+            WaveletBasis::Haar => format!("GWT-{level}"),
+            b => format!("GWT-{}-{level}", b.label()),
+        }
+    }
+
+    /// Parse a basis token, case-insensitive. `None` for unknown
+    /// tokens (callers decide whether that is an error or "no basis
+    /// segment present").
+    pub fn parse(s: &str) -> Option<WaveletBasis> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "haar" => Some(WaveletBasis::Haar),
+            "db4" | "daub4" | "daubechies4" => Some(WaveletBasis::Db4),
+            _ => None,
+        }
+    }
+
+    /// Validate that an `level`-level transform is defined for width
+    /// `n`. The admissibility rule (`2^level` divides `n`) is part of
+    /// the basis contract and identical for every family.
+    pub fn check_level(self, n: usize, level: usize) -> anyhow::Result<()> {
+        check_level(n, level)
+    }
+
+    /// Width of the approximation band after `level` levels —
+    /// basis-independent by construction (each level halves the
+    /// band), which is what keeps GWT optimizer-state shapes
+    /// identical across bases.
+    pub const fn approx_width(self, n: usize, level: usize) -> usize {
+        n >> level
+    }
+
+    /// Multi-level forward transform of one row, in place, using
+    /// `scratch` (len >= row.len()).
+    pub fn fwd_row(self, row: &mut [f32], level: usize, scratch: &mut [f32]) {
+        match self {
+            WaveletBasis::Haar => haar_fwd_row(row, level, scratch),
+            WaveletBasis::Db4 => db4::db4_fwd_row(row, level, scratch),
+        }
+    }
+
+    /// Multi-level inverse transform of one row, in place.
+    pub fn inv_row(self, row: &mut [f32], level: usize, scratch: &mut [f32]) {
+        match self {
+            WaveletBasis::Haar => haar_inv_row(row, level, scratch),
+            WaveletBasis::Db4 => db4::db4_inv_row(row, level, scratch),
+        }
+    }
+
+    /// Forward transform over an `(m, n)` row-major matrix, out of
+    /// place (tests / analysis; the optimizer hot path uses
+    /// [`WaveletBasis::fwd_row`] with persistent buffers).
+    pub fn fwd(self, x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
+        match self {
+            WaveletBasis::Haar => haar_fwd(x, m, n, level),
+            WaveletBasis::Db4 => db4::db4_fwd(x, m, n, level),
+        }
+    }
+
+    /// Inverse transform over an `(m, n)` row-major matrix, out of
+    /// place.
+    pub fn inv(self, c: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
+        match self {
+            WaveletBasis::Haar => haar_inv(c, m, n, level),
+            WaveletBasis::Db4 => db4::db4_inv(c, m, n, level),
+        }
+    }
+}
 
 pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
 
@@ -221,6 +356,73 @@ mod tests {
         assert_eq!(max_level(96), 5);
         assert_eq!(max_level(7), 0);
         assert_eq!(max_level(0), 0);
+    }
+
+    #[test]
+    fn basis_token_label_parse_roundtrip() {
+        for b in WaveletBasis::ALL {
+            assert_eq!(WaveletBasis::parse(b.token()), Some(b));
+            assert_eq!(WaveletBasis::parse(b.label()), Some(b));
+            assert_eq!(WaveletBasis::parse(&b.token().to_uppercase()), Some(b));
+        }
+        assert_eq!(WaveletBasis::parse("db4"), Some(WaveletBasis::Db4));
+        assert_eq!(WaveletBasis::parse("morlet"), None);
+        assert_eq!(WaveletBasis::parse(""), None);
+        assert_eq!(WaveletBasis::default(), WaveletBasis::Haar);
+    }
+
+    #[test]
+    fn basis_dispatch_matches_free_functions() {
+        let x = randmat(4, 64, 17);
+        let (m, n, level) = (4, 64, 3);
+        assert_eq!(WaveletBasis::Haar.fwd(&x, m, n, level), haar_fwd(&x, m, n, level));
+        let c = haar_fwd(&x, m, n, level);
+        assert_eq!(WaveletBasis::Haar.inv(&c, m, n, level), haar_inv(&c, m, n, level));
+        assert_eq!(WaveletBasis::Db4.fwd(&x, m, n, level), db4::db4_fwd(&x, m, n, level));
+        let c = db4::db4_fwd(&x, m, n, level);
+        assert_eq!(WaveletBasis::Db4.inv(&c, m, n, level), db4::db4_inv(&c, m, n, level));
+    }
+
+    #[test]
+    fn every_basis_reconstructs_and_preserves_energy() {
+        for b in WaveletBasis::ALL {
+            for &(m, n) in &[(1, 8), (3, 32), (5, 96)] {
+                let x = randmat(m, n, (m * n) as u64 ^ 0xb5);
+                for level in 0..=max_level(n).min(3) {
+                    let back = b.inv(&b.fwd(&x, m, n, level), m, n, level);
+                    approx_eq_slice(&back, &x, 1e-4);
+                    let c = b.fwd(&x, m, n, level);
+                    let ex: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+                    let ec: f64 = c.iter().map(|v| (*v as f64).powi(2)).sum();
+                    assert!(
+                        ((ex - ec) / ex).abs() < 1e-5,
+                        "{b:?} {m}x{n} level {level}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn approx_width_is_basis_independent() {
+        // The property that makes GWT state shapes identical across
+        // bases: every family halves the approximation band per level.
+        for b in WaveletBasis::ALL {
+            assert_eq!(b.approx_width(160, 2), 40);
+            assert_eq!(b.approx_width(64, 0), 64);
+            assert_eq!(b.approx_width(64, 6), 1);
+        }
+    }
+
+    #[test]
+    fn basis_check_level_rejects_like_free_function() {
+        for b in WaveletBasis::ALL {
+            assert!(b.check_level(12, 2).is_ok());
+            assert!(b.check_level(12, 3).is_err());
+            // Shift-overflow guard holds through the dispatch too.
+            assert!(b.check_level(8, 64).is_err());
+            assert!(b.check_level(8, usize::MAX).is_err());
+        }
     }
 
     #[test]

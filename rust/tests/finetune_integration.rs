@@ -44,7 +44,7 @@ fn gwt_finetune_beats_chance() {
     let Some(rt) = runtime() else { return };
     let task = easy_task(4, 11);
     let mut ft =
-        FineTuner::new(rt, ft_cfg(OptSpec::Gwt { level: 2 }), 4, None).unwrap();
+        FineTuner::new(rt, ft_cfg(OptSpec::gwt(2)), 4, None).unwrap();
     let out = ft.run(&task, 3).unwrap();
     assert!(
         out.accuracy > 0.45,

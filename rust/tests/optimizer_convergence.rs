@@ -8,12 +8,14 @@ use gwt::memory::ParamShape;
 use gwt::optim::{build_optimizers, total_state_bytes};
 use gwt::rng::Rng;
 use gwt::tensor::Tensor;
+use gwt::wavelet::WaveletBasis;
 
 const METHODS: &[OptSpec] = &[
     OptSpec::Adam,
-    OptSpec::Gwt { level: 1 },
-    OptSpec::Gwt { level: 2 },
-    OptSpec::Gwt { level: 3 },
+    OptSpec::gwt(1),
+    OptSpec::gwt(2),
+    OptSpec::gwt(3),
+    OptSpec::gwt_basis(WaveletBasis::Db4, 2),
     OptSpec::Galore { rank_denom: 4 },
     OptSpec::Apollo { rank_denom: 4 },
     OptSpec::AdamMini,
@@ -117,8 +119,13 @@ fn state_memory_ordering_matches_table1() {
         total_state_bytes(&bank)
     };
     let adam = bytes(OptSpec::Adam);
-    assert_eq!(bytes(OptSpec::Gwt { level: 1 }), adam / 2);
-    assert_eq!(bytes(OptSpec::Gwt { level: 2 }), adam / 4);
+    assert_eq!(bytes(OptSpec::gwt(1)), adam / 2);
+    assert_eq!(bytes(OptSpec::gwt(2)), adam / 4);
+    // Same footprint whichever basis carries the transform.
+    assert_eq!(
+        bytes(OptSpec::gwt_basis(WaveletBasis::Db4, 2)),
+        bytes(OptSpec::gwt(2))
+    );
     assert_eq!(bytes(OptSpec::SgdM), adam / 2);
     assert_eq!(
         bytes(OptSpec::Galore { rank_denom: 4 }),
@@ -134,7 +141,7 @@ fn gwt_without_limiter_diverges_on_quadratic() {
     // quadratic -> detail updates divided by vanishing sqrt(V̂)
     // explode. If this starts converging, the design note is stale.
     let shape = eligible_shape(8, 16);
-    let mut c = cfg(OptSpec::Gwt { level: 1 });
+    let mut c = cfg(OptSpec::gwt(1));
     c.nl_gamma = 0.0;
     let mut bank =
         build_optimizers(std::slice::from_ref(&shape), &c, None).unwrap();
@@ -158,7 +165,7 @@ fn nl_limiter_tames_spiky_sequences() {
     // Feed a gradient sequence with a 100x magnitude spike; with the
     // limiter the applied update norm must grow by <= gamma per step.
     let shape = eligible_shape(8, 16);
-    let mut c = cfg(OptSpec::Gwt { level: 2 });
+    let mut c = cfg(OptSpec::gwt(2));
     c.nl_gamma = 1.01;
     let mut bank =
         build_optimizers(std::slice::from_ref(&shape), &c, None).unwrap();
@@ -187,38 +194,41 @@ fn gwt_rust_path_levels_sweep() {
     // (see regression_loss_after for why) with the NL limiter on.
     let (m, n) = (8, 256);
     let steps = 60usize;
-    for level in 1..=8 {
-        let shape = eligible_shape(m, n);
-        let mut bank = build_optimizers(
-            std::slice::from_ref(&shape),
-            &cfg(OptSpec::Gwt { level }),
-            None,
-        )
-        .unwrap();
-        let mut rng = Rng::new(level as u64);
-        let mut w = Tensor::randn(&[m, n], 1.0, &mut rng);
-        let before = w.frob_norm();
-        for t in 0..steps {
-            let g = w.clone(); // quadratic bowl
-            let progress = t as f32 / steps as f32;
-            let lr_t =
-                0.05 * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
-            bank[0].apply(&mut w, &g, lr_t);
+    for basis in WaveletBasis::ALL {
+        for level in 1..=8 {
+            let shape = eligible_shape(m, n);
+            let mut bank = build_optimizers(
+                std::slice::from_ref(&shape),
+                &cfg(OptSpec::gwt_basis(basis, level)),
+                None,
+            )
+            .unwrap();
+            let mut rng = Rng::new(level as u64);
+            let mut w = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let before = w.frob_norm();
+            for t in 0..steps {
+                let g = w.clone(); // quadratic bowl
+                let progress = t as f32 / steps as f32;
+                let lr_t = 0.05
+                    * 0.5
+                    * (1.0 + (std::f32::consts::PI * progress).cos());
+                bank[0].apply(&mut w, &g, lr_t);
+            }
+            assert!(
+                w.frob_norm() < before,
+                "{basis:?} level {level}: {before} -> {}",
+                w.frob_norm()
+            );
         }
-        assert!(
-            w.frob_norm() < before,
-            "level {level}: {before} -> {}",
-            w.frob_norm()
-        );
     }
 }
 
 #[test]
 fn modulewise_alpha_scales_updates() {
     let shape = eligible_shape(8, 8);
-    let mut full = cfg(OptSpec::Gwt { level: 1 });
+    let mut full = cfg(OptSpec::gwt(1));
     full.alpha = 1.0;
-    let mut quarter = cfg(OptSpec::Gwt { level: 1 });
+    let mut quarter = cfg(OptSpec::gwt(1));
     quarter.alpha = 0.25;
     let mut bank_full =
         build_optimizers(std::slice::from_ref(&shape), &full, None).unwrap();

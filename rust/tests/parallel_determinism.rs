@@ -14,6 +14,7 @@ use gwt::optim::{build_optimizers, step_bank};
 use gwt::pool::{chunk_bounds, scoped_chunks_mut};
 use gwt::rng::Rng;
 use gwt::tensor::Tensor;
+use gwt::wavelet::WaveletBasis;
 
 fn nano_shapes() -> Vec<ParamShape> {
     gwt::config::presets::find("nano").unwrap().param_shapes()
@@ -21,8 +22,10 @@ fn nano_shapes() -> Vec<ParamShape> {
 
 const ALL_SPECS: &[OptSpec] = &[
     OptSpec::Adam,
-    OptSpec::Gwt { level: 2 },
-    OptSpec::Gwt { level: 3 },
+    OptSpec::gwt(2),
+    OptSpec::gwt(3),
+    OptSpec::gwt_basis(WaveletBasis::Db4, 2),
+    OptSpec::gwt_basis(WaveletBasis::Db4, 3),
     OptSpec::Galore { rank_denom: 4 },
     OptSpec::Apollo { rank_denom: 4 },
     OptSpec::Lora { rank_denom: 4 },
@@ -100,32 +103,36 @@ fn parallel_bank_bit_identical_for_every_optimizer() {
 fn single_param_row_sharding_matches_serial() {
     // With a one-param bank, build_optimizers routes the thread
     // budget into GwtAdam's row sharding instead of the bank level;
-    // the result must still match the serial run bit-for-bit.
-    let shape = ParamShape {
-        name: "layers.00.attn.wq".into(),
-        shape: vec![32, 64],
-        eligible: true,
-    };
-    let mk = |threads: usize| {
-        let cfg = TrainConfig {
-            optimizer: OptSpec::Gwt { level: 3 },
-            threads,
-            ..Default::default()
+    // the result must still match the serial run bit-for-bit — for
+    // every wavelet basis (the row kernel is basis-dispatched but
+    // identical across workers).
+    for basis in WaveletBasis::ALL {
+        let shape = ParamShape {
+            name: "layers.00.attn.wq".into(),
+            shape: vec![32, 64],
+            eligible: true,
         };
-        build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap()
-    };
-    let mut serial = mk(1);
-    let mut sharded = mk(4);
-    let mut rng = Rng::new(9);
-    let mut w1 = vec![Tensor::randn(&[32, 64], 1.0, &mut rng)];
-    let mut w2 = w1.clone();
-    for step in 0..3u64 {
-        let mut grng = Rng::new(70 + step);
-        let g = vec![Tensor::randn(&[32, 64], 1.0, &mut grng)];
-        step_bank(&mut serial, &mut w1, &g, 0.01, 1);
-        step_bank(&mut sharded, &mut w2, &g, 0.01, 1);
+        let mk = |threads: usize| {
+            let cfg = TrainConfig {
+                optimizer: OptSpec::gwt_basis(basis, 3),
+                threads,
+                ..Default::default()
+            };
+            build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap()
+        };
+        let mut serial = mk(1);
+        let mut sharded = mk(4);
+        let mut rng = Rng::new(9);
+        let mut w1 = vec![Tensor::randn(&[32, 64], 1.0, &mut rng)];
+        let mut w2 = w1.clone();
+        for step in 0..3u64 {
+            let mut grng = Rng::new(70 + step);
+            let g = vec![Tensor::randn(&[32, 64], 1.0, &mut grng)];
+            step_bank(&mut serial, &mut w1, &g, 0.01, 1);
+            step_bank(&mut sharded, &mut w2, &g, 0.01, 1);
+        }
+        assert_eq!(w1[0].data(), w2[0].data(), "{basis:?}");
     }
-    assert_eq!(w1[0].data(), w2[0].data());
 }
 
 #[test]
@@ -148,7 +155,7 @@ fn zero_workers_and_one_param_edge_cases() {
         eligible: true,
     };
     let cfg = TrainConfig {
-        optimizer: OptSpec::Gwt { level: 2 },
+        optimizer: OptSpec::gwt(2),
         ..Default::default()
     };
     let mut bank =
@@ -170,7 +177,7 @@ fn zero_workers_and_one_param_edge_cases() {
 fn step_bank_zero_threads_is_serial() {
     let shapes = nano_shapes();
     let cfg = TrainConfig {
-        optimizer: OptSpec::Gwt { level: 2 },
+        optimizer: OptSpec::gwt(2),
         ..Default::default()
     };
     let mut a_bank = build_optimizers(&shapes, &cfg, None).unwrap();

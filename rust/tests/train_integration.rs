@@ -37,7 +37,7 @@ fn cfg(opt: OptSpec, steps: usize) -> TrainConfig {
 fn gwt_training_reduces_loss() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 1);
-    let mut t = Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 30), &loader).unwrap();
+    let mut t = Trainer::new(rt, cfg(OptSpec::gwt(2), 30), &loader).unwrap();
     let first = t.train_step().unwrap();
     for _ in 0..29 {
         t.train_step().unwrap();
@@ -65,7 +65,7 @@ fn adam_training_reduces_loss() {
 fn dp_workers_and_grad_accum_run() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 3);
-    let mut c = cfg(OptSpec::Gwt { level: 2 }, 6);
+    let mut c = cfg(OptSpec::gwt(2), 6);
     c.dp_workers = 2;
     c.grad_accum = 2;
     let mut t = Trainer::new(rt, c, &loader).unwrap();
@@ -84,7 +84,7 @@ fn deterministic_given_seed() {
     let loader = loader_for("nano", 4);
     let run = |rt: Arc<Runtime>| {
         let mut t =
-            Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 5), &loader).unwrap();
+            Trainer::new(rt, cfg(OptSpec::gwt(2), 5), &loader).unwrap();
         for _ in 0..5 {
             t.train_step().unwrap();
         }
@@ -105,7 +105,7 @@ fn checkpoint_roundtrip_preserves_eval() {
         .unwrap()
         .to_string();
     let mut t =
-        Trainer::new(rt.clone(), cfg(OptSpec::Gwt { level: 2 }, 8), &loader)
+        Trainer::new(rt.clone(), cfg(OptSpec::gwt(2), 8), &loader)
             .unwrap();
     for _ in 0..8 {
         t.train_step().unwrap();
@@ -114,7 +114,7 @@ fn checkpoint_roundtrip_preserves_eval() {
     t.save_checkpoint(&path).unwrap();
 
     let mut t2 =
-        Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 8), &loader).unwrap();
+        Trainer::new(rt, cfg(OptSpec::gwt(2), 8), &loader).unwrap();
     t2.load_checkpoint(&path).unwrap();
     let loss_after = t2.eval_loss(&loader, 4).unwrap();
     assert_eq!(loss_before, loss_after);
@@ -125,7 +125,7 @@ fn eval_loss_decreases_vs_init() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 6);
     let mut t =
-        Trainer::new(rt, cfg(OptSpec::Gwt { level: 2 }, 25), &loader).unwrap();
+        Trainer::new(rt, cfg(OptSpec::gwt(2), 25), &loader).unwrap();
     let init_eval = t.eval_loss(&loader, 4).unwrap();
     for _ in 0..25 {
         t.train_step().unwrap();
@@ -138,12 +138,34 @@ fn eval_loss_decreases_vs_init() {
 }
 
 #[test]
+fn db4_trains_end_to_end_with_haar_state_parity() {
+    // The basis-axis acceptance run: `gwt-db4-2` trains on nano via
+    // the rust path (no DB4 AOT artifact exists, so the manifest
+    // lookup must cleanly miss, not error) and its live
+    // optimizer-state bytes equal the Haar `gwt-2` run exactly.
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 9);
+    let db4_spec = OptSpec::parse("gwt-db4-2").unwrap();
+    let mut t =
+        Trainer::new(rt.clone(), cfg(db4_spec, 10), &loader).unwrap();
+    let haar =
+        Trainer::new(rt, cfg(OptSpec::gwt(2), 1), &loader).unwrap();
+    assert_eq!(t.optimizer_state_bytes(), haar.optimizer_state_bytes());
+    let first = t.train_step().unwrap();
+    for _ in 0..9 {
+        t.train_step().unwrap();
+    }
+    let last = t.curve.final_loss().unwrap();
+    assert!(last < first, "db4 did not learn: {first} -> {last}");
+}
+
+#[test]
 fn gwt_state_smaller_than_adam_in_live_trainers() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 7);
     let adam =
         Trainer::new(rt.clone(), cfg(OptSpec::Adam, 1), &loader).unwrap();
-    let gwt3 = Trainer::new(rt, cfg(OptSpec::Gwt { level: 3 }, 1), &loader)
+    let gwt3 = Trainer::new(rt, cfg(OptSpec::gwt(3), 1), &loader)
         .unwrap();
     assert!(gwt3.optimizer_state_bytes() < adam.optimizer_state_bytes());
 }
@@ -153,7 +175,7 @@ fn alternate_architectures_train() {
     let Some(rt) = runtime() else { return };
     for preset in ["gpt-nano", "bert-nano", "qwen-nano"] {
         let loader = loader_for(preset, 8);
-        let mut c = cfg(OptSpec::Gwt { level: 2 }, 10);
+        let mut c = cfg(OptSpec::gwt(2), 10);
         c.preset = preset.into();
         let mut t = Trainer::new(rt.clone(), c, &loader).unwrap();
         let first = t.train_step().unwrap();
