@@ -3,7 +3,8 @@
 //! reduces optimizer state by up to 75% (on eligible matrices).
 
 use gwt::bench_harness::{write_result, TableView};
-use gwt::memory::{account, Method, MemoryReport, PAPER_MODELS};
+use gwt::config::OptSpec;
+use gwt::memory::{account, MemoryReport, PAPER_MODELS};
 
 fn bar(frac: f64, width: usize) -> String {
     let fill = (frac * width as f64).round() as usize;
@@ -18,9 +19,9 @@ fn main() -> anyhow::Result<()> {
     println!("\nFig 1 bars (state memory relative to Adam):");
     for pm in PAPER_MODELS {
         let ps = pm.params();
-        let adam = account(&ps, Method::Adam).state_bytes;
+        let adam = account(&ps, OptSpec::adam()).state_bytes;
         let levels: Vec<usize> = (1..=3)
-            .map(|l| account(&ps, Method::gwt(l)).state_bytes)
+            .map(|l| account(&ps, OptSpec::gwt(l)).state_bytes)
             .collect();
         println!(
             "  {:>5} Adam  |{}| {:.2}G",

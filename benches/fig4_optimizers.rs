@@ -17,9 +17,9 @@ fn main() -> anyhow::Result<()> {
     // matrices through the wavelet path; the plain variants are the
     // full-state baselines the figure compares against.
     let runs: Vec<(&str, OptSpec)> = vec![
-        ("Adam", OptSpec::Adam),
+        ("Adam", OptSpec::adam()),
         ("Adam+GWT-2", OptSpec::gwt(2)),
-        ("Adam-mini", OptSpec::AdamMini),
+        ("Adam-mini", OptSpec::adam_mini()),
         ("MUON", OptSpec::Muon),
     ];
 

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         &["config", "valid PPL", "state KB", "state vs Adam"],
     );
     let mut curves = Vec::new();
-    let adam_spec = RunSpec::paper_defaults("nano", OptSpec::Adam, steps);
+    let adam_spec = RunSpec::paper_defaults("nano", OptSpec::adam(), steps);
     let adam = pretrain(rt.clone(), &adam_spec, &loader);
     println!("  Adam   ppl {:.2}", adam.valid_ppl);
     table.row(vec![

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
             "Adam uniform lr",
             RunSpec {
                 preset: "nano".into(),
-                optimizer: OptSpec::Adam,
+                optimizer: OptSpec::adam(),
                 lr: 0.0025,
                 alpha: 1.0,
                 steps,
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
             "Adam module-wise lr",
             RunSpec {
                 preset: "nano".into(),
-                optimizer: OptSpec::Adam,
+                optimizer: OptSpec::adam(),
                 lr: 0.01,
                 alpha: 0.25,
                 steps,

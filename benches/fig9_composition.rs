@@ -1,0 +1,106 @@
+//! Fig 9 (ours) — the composition ablation the redesigned optimizer
+//! API exists for: GWT basis × level × inner optimizer, as a grid of
+//! one-line spec strings instead of hand-written monoliths.
+//!
+//! Entirely artifact-free (pure-rust optimizer paths, synthetic
+//! gradients), so ci.sh smoke-invokes it on a fresh checkout:
+//! * **state bytes** — analytic (implementation units) per
+//!   composition, asserted equal to the measured bytes of a live
+//!   bank (`optim::total_state_bytes`), plus the reduction vs the
+//!   paper's `gwt-l+adam` row;
+//! * **step time** — one full-bank optimizer step on the micro
+//!   preset via the same `step_bank` call the trainer makes.
+
+use gwt::bench_harness::{bench_scale, time_bank_step, write_result, TableView};
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::memory::measured_account;
+use gwt::optim::{build_optimizers, total_state_bytes};
+
+const BASES: &[&str] = &["haar", "db4"];
+const LEVELS: &[usize] = &[1, 2, 3];
+const INNERS: &[&str] = &["adam", "adam8bit", "sgdm"];
+
+fn spec_string(basis: &str, level: usize, inner: &str) -> String {
+    match basis {
+        "haar" => format!("gwt-{level}+{inner}"),
+        b => format!("gwt-{b}-{level}+{inner}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let preset = "micro";
+    let shapes = gwt::config::presets::find(preset)?.param_shapes();
+    let iters = ((8.0 * bench_scale()).round() as usize).max(3);
+
+    let mut table = TableView::new(
+        &format!(
+            "Fig 9 — GWT composition grid on {preset}: state bytes + step time"
+        ),
+        &[
+            "spec",
+            "state KB",
+            "vs gwt-l+adam",
+            "vs adam",
+            "step ms",
+        ],
+    );
+
+    let adam_state = {
+        let cfg = TrainConfig {
+            preset: preset.into(),
+            optimizer: OptSpec::adam(),
+            ..Default::default()
+        };
+        total_state_bytes(&build_optimizers(&shapes, &cfg, None)?)
+    };
+
+    for &level in LEVELS {
+        // The Adam-inner row of this level is the reduction baseline.
+        let mut level_adam_state = 0usize;
+        for &basis in BASES {
+            for &inner in INNERS {
+                let name = spec_string(basis, level, inner);
+                let opt = OptSpec::parse(&name)?;
+                let cfg = TrainConfig {
+                    preset: preset.into(),
+                    optimizer: opt,
+                    ..Default::default()
+                };
+                let bank = build_optimizers(&shapes, &cfg, None)?;
+                let state = total_state_bytes(&bank);
+                // Analytic accountant must predict the live bank.
+                assert_eq!(
+                    state,
+                    measured_account(&shapes, opt).state_bytes,
+                    "{name}: accountant drifted from measured bytes"
+                );
+                if basis == "haar" && inner == "adam" {
+                    level_adam_state = state;
+                }
+                let timing = time_bank_step(preset, opt, 1, 1, iters);
+                table.row(vec![
+                    name,
+                    format!("{:.1}", state as f64 / 1e3),
+                    format!(
+                        "-{:.0}%",
+                        100.0 * (1.0 - state as f64 / level_adam_state as f64)
+                    ),
+                    format!(
+                        "-{:.0}%",
+                        100.0 * (1.0 - state as f64 / adam_state as f64)
+                    ),
+                    format!("{:.2}", timing.per_iter_ms()),
+                ]);
+            }
+        }
+    }
+    table.print();
+
+    println!(
+        "composition grid: {} specs, every one a parseable CLI string \
+         (state bytes analytic == measured, rust path)",
+        BASES.len() * LEVELS.len() * INNERS.len()
+    );
+    write_result("fig9_composition", &table, vec![])?;
+    Ok(())
+}

@@ -119,7 +119,7 @@ fn main() -> anyhow::Result<()> {
     for (preset, opt) in [
         ("nano", OptSpec::gwt(2)),
         ("small", OptSpec::gwt(2)),
-        ("small", OptSpec::Adam),
+        ("small", OptSpec::adam()),
     ] {
         let t1 = time_bank_step(preset, opt, 1, 2, 9);
         let t4 = time_bank_step(preset, opt, 4, 2, 9);

@@ -3,7 +3,8 @@
 //! paper's published numbers row by row.
 
 use gwt::bench_harness::{write_result, TableView};
-use gwt::memory::{account, Method, MemoryReport, PAPER_MODELS};
+use gwt::config::OptSpec;
+use gwt::memory::{account, MemoryReport, PAPER_MODELS};
 
 /// Paper Table XI state-memory values (GB) per model, in column order
 /// 60M / 130M / 350M / 1B.
@@ -18,16 +19,16 @@ const PAPER_STATES: &[(&str, [f64; 4])] = &[
     ("GWT-3", [0.14, 0.25, 0.41, 1.20]),
 ];
 
-fn method_for(name: &str) -> Method {
+fn method_for(name: &str) -> OptSpec {
     match name {
-        "Full-Rank Adam" => Method::Adam,
-        "MUON" => Method::Muon,
-        "GaLore-1/4" => Method::Galore { rank_denom: 4 },
-        "APOLLO-1/4" => Method::Apollo { rank_denom: 4 },
-        "GWT-2" => Method::gwt(2),
-        "GaLore-1/8" => Method::Galore { rank_denom: 8 },
-        "APOLLO-1/8" => Method::Apollo { rank_denom: 8 },
-        "GWT-3" => Method::gwt(3),
+        "Full-Rank Adam" => OptSpec::adam(),
+        "MUON" => OptSpec::Muon,
+        "GaLore-1/4" => OptSpec::galore(4),
+        "APOLLO-1/4" => OptSpec::apollo(4),
+        "GWT-2" => OptSpec::gwt(2),
+        "GaLore-1/8" => OptSpec::galore(8),
+        "APOLLO-1/8" => OptSpec::apollo(8),
+        "GWT-3" => OptSpec::gwt(3),
         _ => unreachable!(),
     }
 }
@@ -74,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     );
     let paper_weights = [0.11f64, 0.26, 0.68, 2.60];
     for (pm, pw) in PAPER_MODELS.iter().take(4).zip(paper_weights) {
-        let gb = MemoryReport::gb(account(&pm.params(), Method::Adam).weight_bytes);
+        let gb = MemoryReport::gb(account(&pm.params(), OptSpec::adam()).weight_bytes);
         wtable.row(vec![
             pm.name.to_string(),
             format!("{gb:.2}"),

@@ -101,6 +101,43 @@ fn main() -> anyhow::Result<()> {
         measured.push((name.to_string(), ppls));
         table.row(cells);
     }
+
+    // Composition rows (the transform+inner grammar): wavelet domain
+    // with an 8-bit or momentum-only inner. No paper reference exists
+    // (the paper composes GWT with heavy optimizers in prose, not in
+    // Table II), so those cells stay blank; state bytes must undercut
+    // the corresponding plain-Adam-inner GWT rows.
+    for (name, base) in [
+        ("GWT-2+8bit-Adam", "GWT-2"),
+        ("GWT-2+SGD-M", "GWT-2"),
+        ("GWT-DB4-2+SGD-M", "GWT-2"),
+        ("GWT-3+8bit-Adam", "GWT-3"),
+    ] {
+        let opt = spec_for(name);
+        let base_state = &states.iter().find(|(n, _)| n == base).unwrap().1;
+        let mut cells = vec![name.to_string()];
+        let mut ppls = Vec::new();
+        for (pi, preset) in presets.iter().enumerate() {
+            let loader = bench_loader(preset, steps, 1);
+            let spec = RunSpec::paper_defaults(preset, opt, steps);
+            let out = pretrain(rt.clone(), &spec, &loader);
+            println!("  {preset:<6} {name:<16} valid ppl {:.2}", out.valid_ppl);
+            assert!(
+                out.state_bytes < base_state[pi],
+                "{name} must undercut {base} state on {preset}: {} vs {}",
+                out.state_bytes,
+                base_state[pi]
+            );
+            cells.push(format!("{:.2}", out.valid_ppl));
+            cells.push(format!("{:.1}", out.state_bytes as f64 / 1e3));
+            ppls.push(out.valid_ppl);
+        }
+        cells.push("—".into());
+        cells.push("—".into());
+        rows.push(cells.clone());
+        measured.push((name.to_string(), ppls));
+        table.row(cells);
+    }
     table.print();
 
     // Shape checks (the reproduction claims, not absolute numbers):

@@ -32,6 +32,28 @@ GWT_OPT_PATH=rust cargo test -q
 echo "== basis ablation bench (smoke) =="
 GWT_BENCH_SCALE=0.2 cargo bench --bench fig8_basis_ablation
 
+# Smoke the composition grid (transform+inner grammar): fully
+# artifact-free — asserts analytic state bytes == measured for every
+# gwt-{haar,db4}-l x {adam,adam8bit,sgdm} pair and times the bank step.
+echo "== composition bench (smoke) =="
+GWT_BENCH_SCALE=0.2 cargo bench --bench fig9_composition
+
+# Composed-spec e2e: one previously unreachable composition
+# (wavelet-compressed 8-bit Adam) trains via its CLI spec string,
+# under both gwt_path settings (the knob must be inert for non-Adam
+# inners — no HLO artifact exists for them — but both routes must
+# train). Needs compiled artifacts for the train_step executable.
+if [[ -f artifacts/manifest.json ]]; then
+    for path in auto rust; do
+        echo "== composed e2e: gwt-db4-1+adam8bit (gwt_path=$path) =="
+        cargo run --release -- train \
+            -s preset=nano -s optimizer=gwt-db4-1+adam8bit \
+            -s steps=20 -s eval_every=10 -s gwt_path="$path"
+    done
+else
+    echo "== composed e2e skipped (no artifacts/; run 'make artifacts') =="
+fi
+
 if [[ "$fast" == 0 ]]; then
     echo "== cargo fmt --check =="
     cargo fmt --check

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut summaries = Vec::new();
     for (opt, lr, alpha, modulewise) in [
         (gwt_spec, 0.01, 0.25, true),
-        (OptSpec::Adam, 0.005, 1.0, false),
+        (OptSpec::adam(), 0.005, 1.0, false),
     ] {
         let cfg = TrainConfig {
             preset: preset.clone(),
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         let out = t.run(&loader, true)?;
 
         // Checkpoint round-trip on the GWT run.
-        if matches!(opt, OptSpec::Gwt { .. }) {
+        if opt.wavelet().is_some() {
             let path = format!("results/e2e_{preset}.ckpt");
             t.save_checkpoint(&path)?;
             let mut t2 = Trainer::new(

@@ -24,10 +24,10 @@ fn main() -> anyhow::Result<()> {
     // with the rank-(min_dim/64) low-rank baselines (the paper aligns
     // level 8 with rank 8 on billion-scale models).
     let methods: Vec<OptSpec> = vec![
-        OptSpec::Adam,
+        OptSpec::adam(),
         OptSpec::Lora { rank_denom: 64 },
-        OptSpec::Galore { rank_denom: 64 },
-        OptSpec::Apollo { rank_denom: 64 },
+        OptSpec::galore(64),
+        OptSpec::apollo(64),
         OptSpec::gwt(5),
     ];
 

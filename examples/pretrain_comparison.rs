@@ -32,15 +32,19 @@ fn main() -> anyhow::Result<()> {
     // (method, lr, alpha) following the paper's Appendix C: full Adam
     // uses a smaller single lr; projection methods use lr=0.01 + alpha.
     let methods: Vec<(OptSpec, f32, f32)> = vec![
-        (OptSpec::Adam, 0.005, 1.0),
+        (OptSpec::adam(), 0.005, 1.0),
         (OptSpec::Muon, 0.005, 1.0),
-        (OptSpec::Galore { rank_denom: 4 }, 0.01, 0.25),
-        (OptSpec::Apollo { rank_denom: 4 }, 0.01, 1.0),
+        (OptSpec::galore(4), 0.01, 0.25),
+        (OptSpec::apollo(4), 0.01, 1.0),
         (OptSpec::gwt(2), 0.01, 0.25),
         (OptSpec::gwt(3), 0.01, 0.25),
         // Basis ablation (open problem (a)): DB4-backed GWT rides the
         // same hyperparameters; identical state bytes, rust path.
         (OptSpec::gwt_basis(gwt::wavelet::WaveletBasis::Db4, 2), 0.01, 0.25),
+        // Composed specs (the transform+inner grammar): wavelet
+        // domain with an 8-bit / momentum-only inner optimizer.
+        (OptSpec::parse("gwt-2+adam8bit")?, 0.01, 0.25),
+        (OptSpec::parse("gwt-db4-2+sgdm")?, 0.01, 0.25),
     ];
 
     let mut table = TableView::new(

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let outcome = trainer.run(&loader, true)?;
 
     // 5. Compare the live optimizer-state footprint against Adam.
-    let adam_cfg = TrainConfig { optimizer: OptSpec::Adam, ..cfg };
+    let adam_cfg = TrainConfig { optimizer: OptSpec::adam(), ..cfg };
     let adam_state =
         Trainer::new(runtime, adam_cfg, &loader)?.optimizer_state_bytes();
 

@@ -156,17 +156,24 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Paper Appendix C defaults per method family: full Adam and
-    /// MUON use a smaller single lr; projection/wavelet methods use
-    /// lr=0.01 with their alpha (0.25 GWT/GaLore, 1.0 APOLLO).
+    /// Paper Appendix C defaults per method family, keyed by the
+    /// *transform* (the axis that decides module-wise routing):
+    /// untransformed methods (full Adam, 8-bit, Adam-mini, SGD-M,
+    /// MUON) use a smaller single lr; wavelet/SVD subspaces use
+    /// lr=0.01 with alpha 0.25; APOLLO's random projection uses
+    /// lr=0.01 with alpha 1.0. An inner swap (`gwt-2+adam8bit`)
+    /// keeps its transform's schedule.
     pub fn paper_defaults(preset: &str, optimizer: OptSpec, steps: usize) -> RunSpec {
+        use crate::config::TransformSpec;
         let (lr, alpha, modulewise) = match optimizer {
-            OptSpec::Adam | OptSpec::AdamMini | OptSpec::Adam8bit => {
-                (0.005, 1.0, false)
-            }
-            OptSpec::Muon | OptSpec::SgdM => (0.005, 1.0, false),
-            OptSpec::Apollo { .. } => (0.01, 1.0, true),
-            _ => (0.01, 0.25, true),
+            OptSpec::Muon => (0.005, 1.0, false),
+            OptSpec::Lora { .. } => (0.01, 0.25, true),
+            OptSpec::Composed { transform, .. } => match transform {
+                TransformSpec::Identity => (0.005, 1.0, false),
+                TransformSpec::RandomProj { .. } => (0.01, 1.0, true),
+                TransformSpec::Wavelet { .. }
+                | TransformSpec::LowRank { .. } => (0.01, 0.25, true),
+            },
         };
         RunSpec {
             preset: preset.into(),

@@ -4,6 +4,16 @@
 //! Presets mirror `python/compile/model.py::PRESETS` exactly — the
 //! manifest emitted by `aot.py` is the authority at runtime, and
 //! `runtime::Manifest::check_preset` cross-validates the two.
+//!
+//! Optimizer specs are a two-axis grammar, `<transform>+<inner>`:
+//! a [`TransformSpec`] picks the compact domain the optimizer state
+//! lives in (wavelet approximation band, SVD subspace, random
+//! projection, or none) and an [`InnerSpec`] picks the state machine
+//! that runs there (Adam, 8-bit Adam, Adam-mini, SGD-M). Every
+//! legacy single-token spelling parses as an alias of a composition
+//! (`gwt-2` ≡ `gwt-2+adam`, `adam8bit` ≡ the identity transform with
+//! an 8-bit inner), so the paper's original method set and the
+//! composition ablations share one grammar.
 
 pub mod presets;
 
@@ -15,49 +25,52 @@ pub use presets::{ModelPreset, PRESETS};
 
 use crate::wavelet::WaveletBasis;
 
-/// Which optimizer drives the eligible (attention/MLP) matrices.
-/// Non-eligible parameters always use full Adam, matching the paper.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum OptSpec {
-    Adam,
+/// The gradient-compression stage of an optimizer composition: how an
+/// eligible matrix's gradient is down-projected into the compact
+/// domain the inner optimizer runs in (and the update up-projected
+/// back). Non-eligible parameters never carry a transform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformSpec {
+    /// No compression: the inner optimizer runs full-rank.
+    Identity,
     /// Gradient Wavelet Transform at `level` over `basis`
     /// (spec syntax `gwt-2` = Haar, `gwt-db4-2` = DB4).
-    Gwt { level: usize, basis: WaveletBasis },
-    /// GaLore with rank = min_dim / rank_denom, SVD every `update_gap`.
-    Galore { rank_denom: usize },
-    /// APOLLO: random projection, rank = min_dim / rank_denom.
-    Apollo { rank_denom: usize },
-    /// LoRA-style adapter training (rank = min_dim / rank_denom).
-    Lora { rank_denom: usize },
-    /// Adam-mini: one shared second-moment scalar per parameter block.
-    AdamMini,
-    /// MUON: momentum + Newton–Schulz orthogonalization.
-    Muon,
-    /// Block-quantized 8-bit Adam.
+    Wavelet { basis: WaveletBasis, level: usize },
+    /// GaLore-style top-r SVD subspace, rank = min_dim / rank_denom.
+    LowRank { rank_denom: usize },
+    /// APOLLO-style random projection, rank = min_dim / rank_denom.
+    RandomProj { rank_denom: usize },
+}
+
+/// The inner optimizer of a composition: the state machine that runs
+/// in the transform's compact domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InnerSpec {
+    Adam,
+    /// Block-quantized 8-bit Adam states.
     Adam8bit,
-    /// SGD with momentum (memory floor reference).
+    /// Adam-mini: one shared second-moment scalar per domain.
+    AdamMini,
+    /// SGD with momentum (no second moment).
     SgdM,
 }
 
-impl OptSpec {
-    /// Haar-basis GWT at `level` — the paper's configuration.
-    pub const fn gwt(level: usize) -> OptSpec {
-        OptSpec::Gwt { level, basis: WaveletBasis::Haar }
+impl TransformSpec {
+    pub const fn wavelet(basis: WaveletBasis, level: usize) -> TransformSpec {
+        TransformSpec::Wavelet { basis, level }
     }
 
-    /// GWT at `level` over an explicit wavelet basis.
-    pub const fn gwt_basis(basis: WaveletBasis, level: usize) -> OptSpec {
-        OptSpec::Gwt { level, basis }
-    }
-
-    /// Parse `adam`, `gwt-2`, `gwt-db4-2` (basis-qualified GWT;
-    /// `gwt-haar-2` is accepted too), `galore-1/4`, `apollo-1/8`,
-    /// `lora-1/4`, `adam-mini`, `muon`, `adam8bit`, `sgdm`.
-    pub fn parse(s: &str) -> Result<OptSpec> {
-        let s = s.trim().to_lowercase();
+    /// Try to parse a transform token. `Ok(None)` when the token is
+    /// not transform-shaped at all (the caller decides what that
+    /// means); `Err` when it is transform-shaped but carries an
+    /// invalid payload (`gwt-x`, `galore-0`).
+    fn parse_token(s: &str) -> Result<Option<TransformSpec>> {
+        if matches!(s, "id" | "identity" | "full") {
+            return Ok(Some(TransformSpec::Identity));
+        }
         if let Some(rest) = s.strip_prefix("gwt-") {
-            // Optional basis segment between `gwt-` and the level:
-            // an unrecognized token falls through to level parsing so
+            // Optional basis segment between `gwt-` and the level: an
+            // unrecognized token falls through to level parsing so
             // `gwt-3` stays the Haar spelling and `gwt-x` still
             // errors on the level.
             let (basis, lvl) = match rest.split_once('-') {
@@ -67,65 +80,299 @@ impl OptSpec {
                 },
                 None => (WaveletBasis::Haar, rest),
             };
-            return Ok(OptSpec::Gwt {
+            return Ok(Some(TransformSpec::Wavelet {
                 level: lvl.parse().context("gwt level")?,
                 basis,
-            });
+            }));
         }
-        for (prefix, ctor) in [
-            ("galore-1/", OptSpec::Galore { rank_denom: 0 }),
-            ("apollo-1/", OptSpec::Apollo { rank_denom: 0 }),
-            ("lora-1/", OptSpec::Lora { rank_denom: 0 }),
-        ] {
+        for prefix in ["galore-", "apollo-"] {
             if let Some(rest) = s.strip_prefix(prefix) {
-                let d: usize = rest.parse().context("rank denom")?;
+                // Both the paper's `galore-1/4` spelling and the
+                // compact `galore-4` are accepted.
+                let denom = rest.strip_prefix("1/").unwrap_or(rest);
+                let d: usize = denom
+                    .parse()
+                    .with_context(|| format!("{prefix}<denom>: rank denominator"))?;
                 if d == 0 {
                     bail!("rank denominator must be positive");
                 }
-                return Ok(match ctor {
-                    OptSpec::Galore { .. } => OptSpec::Galore { rank_denom: d },
-                    OptSpec::Apollo { .. } => OptSpec::Apollo { rank_denom: d },
-                    _ => OptSpec::Lora { rank_denom: d },
-                });
+                return Ok(Some(if prefix == "galore-" {
+                    TransformSpec::LowRank { rank_denom: d }
+                } else {
+                    TransformSpec::RandomProj { rank_denom: d }
+                }));
             }
         }
-        Ok(match s.as_str() {
-            "adam" => OptSpec::Adam,
-            "adam-mini" | "adammini" => OptSpec::AdamMini,
-            "muon" => OptSpec::Muon,
-            "adam8bit" | "8bit-adam" => OptSpec::Adam8bit,
-            "sgdm" | "sgd-m" | "sgd" => OptSpec::SgdM,
-            other => bail!("unknown optimizer spec '{other}'"),
-        })
+        Ok(None)
     }
 
+    /// Spec-token spelling (lowercase); also the left half of every
+    /// composed label. Identity has no token of its own in legacy
+    /// labels — callers special-case it.
     pub fn label(&self) -> String {
         match self {
-            OptSpec::Adam => "Adam".into(),
-            OptSpec::Gwt { level, basis } => basis.gwt_label(*level),
-            OptSpec::Galore { rank_denom } => format!("GaLore-1/{rank_denom}"),
-            OptSpec::Apollo { rank_denom } => format!("APOLLO-1/{rank_denom}"),
-            OptSpec::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
-            OptSpec::AdamMini => "Adam-mini".into(),
-            OptSpec::Muon => "MUON".into(),
-            OptSpec::Adam8bit => "8bit-Adam".into(),
-            OptSpec::SgdM => "SGD-M".into(),
+            TransformSpec::Identity => "Identity".into(),
+            TransformSpec::Wavelet { basis, level } => basis.gwt_label(*level),
+            TransformSpec::LowRank { rank_denom } => {
+                format!("GaLore-1/{rank_denom}")
+            }
+            TransformSpec::RandomProj { rank_denom } => {
+                format!("APOLLO-1/{rank_denom}")
+            }
+        }
+    }
+}
+
+impl InnerSpec {
+    /// Parse an inner-optimizer token (`None` if unknown).
+    fn parse_token(s: &str) -> Option<InnerSpec> {
+        match s {
+            "adam" => Some(InnerSpec::Adam),
+            "adam8bit" | "8bit-adam" => Some(InnerSpec::Adam8bit),
+            "adam-mini" | "adammini" => Some(InnerSpec::AdamMini),
+            "sgdm" | "sgd-m" | "sgd" => Some(InnerSpec::SgdM),
+            _ => None,
         }
     }
 
-    /// Memory-model counterpart for the accountant.
-    pub fn memory_method(&self) -> crate::memory::Method {
-        use crate::memory::Method;
-        match *self {
-            OptSpec::Adam => Method::Adam,
-            OptSpec::Gwt { level, basis } => Method::Gwt { level, basis },
-            OptSpec::Galore { rank_denom } => Method::Galore { rank_denom },
-            OptSpec::Apollo { rank_denom } => Method::Apollo { rank_denom },
-            OptSpec::Lora { rank_denom } => Method::Lora { rank_denom },
-            OptSpec::AdamMini => Method::Adam, // states differ in count, not span
-            OptSpec::Muon => Method::Muon,
-            OptSpec::Adam8bit => Method::Adam8bit,
-            OptSpec::SgdM => Method::SgdM,
+    pub const fn label(self) -> &'static str {
+        match self {
+            InnerSpec::Adam => "Adam",
+            InnerSpec::Adam8bit => "8bit-Adam",
+            InnerSpec::AdamMini => "Adam-mini",
+            InnerSpec::SgdM => "SGD-M",
+        }
+    }
+}
+
+/// Which optimizer drives the eligible (attention/MLP) matrices.
+///
+/// Almost everything is a [`TransformSpec`] × [`InnerSpec`]
+/// composition; MUON and LoRA are standalone (their update rules are
+/// not a project/step/back-project pipeline) and refuse to compose.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptSpec {
+    /// `<transform>+<inner>` composition (covers the legacy Adam,
+    /// GWT, GaLore, APOLLO, 8-bit Adam, Adam-mini and SGD-M specs).
+    Composed { transform: TransformSpec, inner: InnerSpec },
+    /// MUON: momentum + Newton–Schulz orthogonalization.
+    Muon,
+    /// LoRA-style adapter training (rank = min_dim / rank_denom).
+    Lora { rank_denom: usize },
+}
+
+impl OptSpec {
+    pub const fn composed(transform: TransformSpec, inner: InnerSpec) -> OptSpec {
+        OptSpec::Composed { transform, inner }
+    }
+
+    /// Full-rank Adam (identity transform).
+    pub const fn adam() -> OptSpec {
+        OptSpec::composed(TransformSpec::Identity, InnerSpec::Adam)
+    }
+
+    /// Block-quantized 8-bit Adam, full-rank.
+    pub const fn adam8bit() -> OptSpec {
+        OptSpec::composed(TransformSpec::Identity, InnerSpec::Adam8bit)
+    }
+
+    /// Adam-mini, full-rank.
+    pub const fn adam_mini() -> OptSpec {
+        OptSpec::composed(TransformSpec::Identity, InnerSpec::AdamMini)
+    }
+
+    /// SGD with momentum, full-rank (memory floor reference).
+    pub const fn sgdm() -> OptSpec {
+        OptSpec::composed(TransformSpec::Identity, InnerSpec::SgdM)
+    }
+
+    /// Haar-basis GWT at `level` — the paper's configuration.
+    pub const fn gwt(level: usize) -> OptSpec {
+        OptSpec::gwt_basis(WaveletBasis::Haar, level)
+    }
+
+    /// GWT at `level` over an explicit wavelet basis, Adam inner.
+    pub const fn gwt_basis(basis: WaveletBasis, level: usize) -> OptSpec {
+        OptSpec::composed(TransformSpec::wavelet(basis, level), InnerSpec::Adam)
+    }
+
+    /// GaLore with rank = min_dim / rank_denom, Adam inner.
+    pub const fn galore(rank_denom: usize) -> OptSpec {
+        OptSpec::composed(TransformSpec::LowRank { rank_denom }, InnerSpec::Adam)
+    }
+
+    /// APOLLO with rank = min_dim / rank_denom, Adam inner.
+    pub const fn apollo(rank_denom: usize) -> OptSpec {
+        OptSpec::composed(
+            TransformSpec::RandomProj { rank_denom },
+            InnerSpec::Adam,
+        )
+    }
+
+    pub const fn lora(rank_denom: usize) -> OptSpec {
+        OptSpec::Lora { rank_denom }
+    }
+
+    /// The transform half of a composition (`None` for MUON/LoRA).
+    pub const fn transform(&self) -> Option<TransformSpec> {
+        match self {
+            OptSpec::Composed { transform, .. } => Some(*transform),
+            _ => None,
+        }
+    }
+
+    /// The inner half of a composition (`None` for MUON/LoRA).
+    pub const fn inner(&self) -> Option<InnerSpec> {
+        match self {
+            OptSpec::Composed { inner, .. } => Some(*inner),
+            _ => None,
+        }
+    }
+
+    /// Wavelet parameters when the transform is a GWT (any inner).
+    pub const fn wavelet(&self) -> Option<(WaveletBasis, usize)> {
+        match self {
+            OptSpec::Composed {
+                transform: TransformSpec::Wavelet { basis, level },
+                ..
+            } => Some((*basis, *level)),
+            _ => None,
+        }
+    }
+
+    /// The inner optimizer a *non-eligible* parameter runs under this
+    /// spec. State *format* is system-wide (8-bit / SGD-M change the
+    /// representation everywhere), state *span* is always full:
+    /// transforms never apply off the eligible set, and Adam-mini's
+    /// shared-denominator approximation is aimed at large matrices,
+    /// so vectors/embeddings keep plain Adam (the paper's routing).
+    pub const fn non_eligible_inner(&self) -> InnerSpec {
+        match self {
+            OptSpec::Composed { inner: InnerSpec::Adam8bit, .. } => {
+                InnerSpec::Adam8bit
+            }
+            OptSpec::Composed { inner: InnerSpec::SgdM, .. } => InnerSpec::SgdM,
+            _ => InnerSpec::Adam,
+        }
+    }
+
+    /// Parse an optimizer spec. The grammar is `<transform>+<inner>`
+    /// (`gwt-db4-2+adam8bit`, `galore-4+sgdm`, `id+adam-mini`); every
+    /// legacy single-token spelling is an alias: bare transforms get
+    /// an Adam inner (`gwt-2` ≡ `gwt-2+adam`, `galore-1/4` ≡
+    /// `galore-4+adam`), bare inners get the identity transform
+    /// (`adam8bit`, `sgdm`, `adam-mini`, `adam`). `muon` and
+    /// `lora-1/r` are standalone and refuse to compose.
+    pub fn parse(s: &str) -> Result<OptSpec> {
+        let s = s.trim().to_lowercase();
+        if let Some((t_raw, i_raw)) = s.split_once('+') {
+            let (t_raw, i_raw) = (t_raw.trim(), i_raw.trim());
+            if t_raw.is_empty() {
+                bail!(
+                    "'{s}': missing gradient transform before '+' \
+                     (expected <transform>+<inner>, e.g. gwt-db4-2+adam8bit)"
+                );
+            }
+            if i_raw.is_empty() {
+                bail!(
+                    "'{s}': missing inner optimizer after '+' \
+                     (expected one of: adam, adam8bit, adam-mini, sgdm)"
+                );
+            }
+            if i_raw.contains('+') {
+                bail!("'{s}': expected exactly one '+' (<transform>+<inner>)");
+            }
+            let transform = match TransformSpec::parse_token(t_raw)? {
+                Some(t) => t,
+                None => {
+                    if InnerSpec::parse_token(t_raw).is_some() {
+                        bail!(
+                            "'{t_raw}' is an inner optimizer, not a gradient \
+                             transform (inner optimizers go on the right: \
+                             <transform>+<inner>)"
+                        );
+                    }
+                    if t_raw == "muon" || t_raw.starts_with("lora") {
+                        bail!(
+                            "'{t_raw}' is a standalone optimizer and cannot \
+                             be composed with an inner optimizer"
+                        );
+                    }
+                    bail!(
+                        "unknown gradient transform '{t_raw}' (known: \
+                         gwt-[<basis>-]<level>, galore-<denom>, \
+                         apollo-<denom>, identity)"
+                    );
+                }
+            };
+            let inner = match InnerSpec::parse_token(i_raw) {
+                Some(i) => i,
+                None => {
+                    if TransformSpec::parse_token(i_raw)
+                        .unwrap_or(None)
+                        .is_some()
+                    {
+                        bail!(
+                            "'{i_raw}' is a gradient transform, not an inner \
+                             optimizer (transforms go on the left: \
+                             <transform>+<inner>)"
+                        );
+                    }
+                    if i_raw == "muon" || i_raw.starts_with("lora") {
+                        bail!(
+                            "'{i_raw}' is a standalone optimizer and cannot \
+                             run as an inner optimizer"
+                        );
+                    }
+                    bail!(
+                        "unknown inner optimizer '{i_raw}' (known: adam, \
+                         adam8bit, adam-mini, sgdm)"
+                    );
+                }
+            };
+            return Ok(OptSpec::Composed { transform, inner });
+        }
+
+        // Standalone (non-composable) specs.
+        if s == "muon" {
+            return Ok(OptSpec::Muon);
+        }
+        if let Some(rest) = s.strip_prefix("lora-") {
+            let denom = rest.strip_prefix("1/").unwrap_or(rest);
+            let d: usize = denom.parse().context("lora rank denom")?;
+            if d == 0 {
+                bail!("rank denominator must be positive");
+            }
+            return Ok(OptSpec::Lora { rank_denom: d });
+        }
+        // Legacy aliases: bare inner => identity transform; bare
+        // transform => Adam inner.
+        if let Some(i) = InnerSpec::parse_token(&s) {
+            return Ok(OptSpec::composed(TransformSpec::Identity, i));
+        }
+        if let Some(t) = TransformSpec::parse_token(&s)? {
+            return Ok(OptSpec::composed(t, InnerSpec::Adam));
+        }
+        bail!("unknown optimizer spec '{s}'")
+    }
+
+    /// Human/checkpoint/CLI-facing label; parses back to the same
+    /// spec. Legacy compositions keep the paper's spellings (`Adam`,
+    /// `GWT-2`, `GaLore-1/4`, `8bit-Adam`); genuinely new pairs are
+    /// spelled `<transform>+<inner>` (`GWT-DB4-2+8bit-Adam`).
+    pub fn label(&self) -> String {
+        match self {
+            OptSpec::Composed { transform: TransformSpec::Identity, inner } => {
+                inner.label().into()
+            }
+            OptSpec::Composed { transform, inner: InnerSpec::Adam } => {
+                transform.label()
+            }
+            OptSpec::Composed { transform, inner } => {
+                format!("{}+{}", transform.label(), inner.label())
+            }
+            OptSpec::Muon => "MUON".into(),
+            OptSpec::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
         }
     }
 }
@@ -189,10 +436,16 @@ pub struct TrainConfig {
     /// Apply module-wise lr (α on eligible modules) — paper default.
     pub modulewise_lr: bool,
     pub eval_every: usize,
-    /// Betas / eps shared across Adam-family methods.
+    /// Betas / eps shared across Adam-family inner optimizers.
     pub beta1: f32,
     pub beta2: f32,
     pub eps: f32,
+    /// SGD-M inner momentum (was hardcoded 0.9).
+    pub sgd_momentum: f32,
+    /// MUON momentum (was hardcoded 0.95).
+    pub muon_momentum: f32,
+    /// MUON Newton–Schulz iterations (was hardcoded 5).
+    pub muon_ns_iters: usize,
     /// GaLore subspace refresh interval (paper: 200).
     pub galore_update_gap: usize,
     /// GWT execution-path selection (`auto` = HLO artifact when
@@ -222,6 +475,9 @@ impl Default for TrainConfig {
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-6,
+            sgd_momentum: 0.9,
+            muon_momentum: 0.95,
+            muon_ns_iters: 5,
             galore_update_gap: 50,
             gwt_path: GwtPath::Auto,
             artifacts_dir: "artifacts".into(),
@@ -250,6 +506,15 @@ impl TrainConfig {
             "beta1" => self.beta1 = v.parse().context("beta1")?,
             "beta2" => self.beta2 = v.parse().context("beta2")?,
             "eps" => self.eps = v.parse().context("eps")?,
+            "sgd_momentum" => {
+                self.sgd_momentum = v.parse().context("sgd_momentum")?
+            }
+            "muon_momentum" => {
+                self.muon_momentum = v.parse().context("muon_momentum")?
+            }
+            "muon_ns_iters" => {
+                self.muon_ns_iters = v.parse().context("muon_ns_iters")?
+            }
             "galore_update_gap" => {
                 self.galore_update_gap = v.parse().context("galore_update_gap")?
             }
@@ -299,7 +564,16 @@ impl TrainConfig {
         if !(0.0..=1.0).contains(&self.warmup_frac) {
             bail!("warmup_frac must be in [0,1]");
         }
-        if let OptSpec::Gwt { level, basis } = self.optimizer {
+        if !(0.0..1.0).contains(&self.sgd_momentum) {
+            bail!("sgd_momentum must be in [0,1)");
+        }
+        if !(0.0..1.0).contains(&self.muon_momentum) {
+            bail!("muon_momentum must be in [0,1)");
+        }
+        if self.muon_ns_iters == 0 {
+            bail!("muon_ns_iters must be positive");
+        }
+        if let Some((basis, level)) = self.optimizer.wavelet() {
             let p = presets::find(&self.preset)?;
             for (m, n) in p.gwt_shapes() {
                 // Route through the basis contract's admissibility
@@ -361,6 +635,9 @@ impl TrainConfig {
         m.insert("dp_workers".into(), format!("{}", self.dp_workers));
         m.insert("threads".into(), format!("{}", self.threads));
         m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
+        m.insert("sgd_momentum".into(), format!("{}", self.sgd_momentum));
+        m.insert("muon_momentum".into(), format!("{}", self.muon_momentum));
+        m.insert("muon_ns_iters".into(), format!("{}", self.muon_ns_iters));
         // Show the *resolved* path so an env-var fallback is visible.
         m.insert("gwt_path".into(), self.resolve_gwt_path().label().into());
         m
@@ -381,18 +658,12 @@ mod tests {
 
     #[test]
     fn parse_opt_specs() {
-        assert_eq!(OptSpec::parse("adam").unwrap(), OptSpec::Adam);
+        assert_eq!(OptSpec::parse("adam").unwrap(), OptSpec::adam());
         assert_eq!(OptSpec::parse("GWT-3").unwrap(), OptSpec::gwt(3));
-        assert_eq!(
-            OptSpec::parse("galore-1/4").unwrap(),
-            OptSpec::Galore { rank_denom: 4 }
-        );
-        assert_eq!(
-            OptSpec::parse("apollo-1/8").unwrap(),
-            OptSpec::Apollo { rank_denom: 8 }
-        );
+        assert_eq!(OptSpec::parse("galore-1/4").unwrap(), OptSpec::galore(4));
+        assert_eq!(OptSpec::parse("apollo-1/8").unwrap(), OptSpec::apollo(8));
         assert_eq!(OptSpec::parse("muon").unwrap(), OptSpec::Muon);
-        assert_eq!(OptSpec::parse("adam-mini").unwrap(), OptSpec::AdamMini);
+        assert_eq!(OptSpec::parse("adam-mini").unwrap(), OptSpec::adam_mini());
         assert!(OptSpec::parse("magic").is_err());
         assert!(OptSpec::parse("galore-1/0").is_err());
         assert!(OptSpec::parse("gwt-x").is_err());
@@ -417,24 +688,105 @@ mod tests {
     }
 
     #[test]
+    fn parse_composed_specs() {
+        assert_eq!(
+            OptSpec::parse("gwt-db4-2+adam8bit").unwrap(),
+            OptSpec::composed(
+                TransformSpec::wavelet(WaveletBasis::Db4, 2),
+                InnerSpec::Adam8bit
+            )
+        );
+        assert_eq!(
+            OptSpec::parse("galore-4+sgdm").unwrap(),
+            OptSpec::composed(
+                TransformSpec::LowRank { rank_denom: 4 },
+                InnerSpec::SgdM
+            )
+        );
+        assert_eq!(
+            OptSpec::parse("id+adam-mini").unwrap(),
+            OptSpec::adam_mini()
+        );
+        // Legacy aliases are exactly the Adam-inner compositions.
+        assert_eq!(
+            OptSpec::parse("gwt-2").unwrap(),
+            OptSpec::parse("gwt-2+adam").unwrap()
+        );
+        assert_eq!(
+            OptSpec::parse("galore-4").unwrap(),
+            OptSpec::parse("galore-1/4").unwrap()
+        );
+        assert_eq!(
+            OptSpec::parse("galore-4+adam").unwrap(),
+            OptSpec::galore(4)
+        );
+    }
+
+    #[test]
+    fn composed_parse_errors_are_precise() {
+        let err = |s: &str| format!("{:#}", OptSpec::parse(s).unwrap_err());
+        assert!(err("gwt-2+").contains("missing inner optimizer"));
+        assert!(err("+adam").contains("missing gradient transform"));
+        assert!(err("gwt-2+galore-4").contains("not an inner optimizer"));
+        assert!(err("adam+gwt-2").contains("not a gradient transform"));
+        assert!(err("gwt-2+muon").contains("standalone"));
+        assert!(err("lora-1/4+adam").contains("standalone"));
+        assert!(err("gwt-2+adam+sgdm").contains("exactly one '+'"));
+        assert!(err("gwt-2+magic").contains("unknown inner optimizer"));
+        assert!(err("magic+adam").contains("unknown gradient transform"));
+    }
+
+    #[test]
     fn labels_roundtrip_via_parse() {
         for spec in [
-            OptSpec::Adam,
+            OptSpec::adam(),
             OptSpec::gwt(2),
             OptSpec::gwt_basis(WaveletBasis::Db4, 2),
             OptSpec::gwt_basis(WaveletBasis::Db4, 7),
-            OptSpec::Galore { rank_denom: 8 },
-            OptSpec::Apollo { rank_denom: 4 },
+            OptSpec::galore(8),
+            OptSpec::apollo(4),
             OptSpec::Muon,
+            OptSpec::composed(
+                TransformSpec::wavelet(WaveletBasis::Db4, 2),
+                InnerSpec::Adam8bit,
+            ),
+            OptSpec::composed(
+                TransformSpec::LowRank { rank_denom: 4 },
+                InnerSpec::SgdM,
+            ),
         ] {
             assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
         }
-        // Label spelling: Haar stays bare, other bases are qualified.
+        // Label spelling: legacy pairs keep the paper's names, new
+        // pairs are '+'-qualified, Haar stays bare.
         assert_eq!(OptSpec::gwt(2).label(), "GWT-2");
         assert_eq!(
             OptSpec::gwt_basis(WaveletBasis::Db4, 2).label(),
             "GWT-DB4-2"
         );
+        assert_eq!(OptSpec::adam8bit().label(), "8bit-Adam");
+        assert_eq!(
+            OptSpec::composed(
+                TransformSpec::wavelet(WaveletBasis::Db4, 2),
+                InnerSpec::Adam8bit
+            )
+            .label(),
+            "GWT-DB4-2+8bit-Adam"
+        );
+    }
+
+    #[test]
+    fn non_eligible_inner_routing() {
+        // Format-wide inners reach non-eligible params; transforms
+        // and Adam-mini never do.
+        assert_eq!(
+            OptSpec::parse("gwt-2+adam8bit").unwrap().non_eligible_inner(),
+            InnerSpec::Adam8bit
+        );
+        assert_eq!(OptSpec::sgdm().non_eligible_inner(), InnerSpec::SgdM);
+        assert_eq!(OptSpec::gwt(2).non_eligible_inner(), InnerSpec::Adam);
+        assert_eq!(OptSpec::adam_mini().non_eligible_inner(), InnerSpec::Adam);
+        assert_eq!(OptSpec::Muon.non_eligible_inner(), InnerSpec::Adam);
     }
 
     #[test]
@@ -470,6 +822,36 @@ mod tests {
             assert_eq!(cfg.resolve_gwt_path(), GwtPath::Auto);
             assert_eq!(cfg.summary()["gwt_path"], "auto");
         }
+    }
+
+    #[test]
+    fn config_accepts_composed_specs_and_inner_knobs() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text(
+            "optimizer = gwt-db4-2+adam8bit\nsgd_momentum = 0.8\nmuon_momentum = 0.9\nmuon_ns_iters = 7\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.optimizer,
+            OptSpec::composed(
+                TransformSpec::wavelet(WaveletBasis::Db4, 2),
+                InnerSpec::Adam8bit
+            )
+        );
+        assert_eq!(cfg.sgd_momentum, 0.8);
+        assert_eq!(cfg.muon_momentum, 0.9);
+        assert_eq!(cfg.muon_ns_iters, 7);
+        assert_eq!(cfg.summary()["optimizer"], "GWT-DB4-2+8bit-Adam");
+        assert_eq!(cfg.summary()["sgd_momentum"], "0.8");
+        assert_eq!(cfg.summary()["muon_momentum"], "0.9");
+        assert_eq!(cfg.summary()["muon_ns_iters"], "7");
+        cfg.validate().unwrap();
+        // Knob validation.
+        cfg.sgd_momentum = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.sgd_momentum = 0.9;
+        cfg.muon_ns_iters = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -510,11 +892,14 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.optimizer = OptSpec::gwt(5);
         cfg.validate().unwrap();
-        // The same admissibility rule applies to every basis.
+        // The same admissibility rule applies to every basis — and to
+        // every inner optimizer riding the wavelet transform.
         cfg.optimizer = OptSpec::gwt_basis(WaveletBasis::Db4, 6);
         assert!(cfg.validate().is_err());
         cfg.optimizer = OptSpec::gwt_basis(WaveletBasis::Db4, 2);
         cfg.validate().unwrap();
+        cfg.optimizer = OptSpec::parse("gwt-6+adam8bit").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

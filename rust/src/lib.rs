@@ -10,9 +10,10 @@
 //! - **L2** JAX models (`python/compile/model.py`): LLaMA/GPT/encoder
 //!   transformers, fwd+bwd lowered once to HLO text.
 //! - **L3** this crate: the training coordinator — config, launcher,
-//!   data pipeline, data-parallel runtime, optimizer routing (GWT +
-//!   all paper baselines), metrics, checkpoints, and the bench
-//!   harness that regenerates every table/figure of the paper.
+//!   data pipeline, data-parallel runtime, the composable optimizer
+//!   suite (`<transform>+<inner>` compositions covering GWT and all
+//!   paper baselines), metrics, checkpoints, and the bench harness
+//!   that regenerates every table/figure of the paper.
 //!
 //! Python never runs on the training path: `make artifacts` AOT-lowers
 //! everything; the binary loads `artifacts/*.hlo.txt` via PJRT.

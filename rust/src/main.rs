@@ -10,6 +10,8 @@
 //! Examples:
 //!   gwt train -s preset=nano -s optimizer=gwt-2 -s steps=200
 //!   gwt train -s optimizer=gwt-db4-2 -s gwt_path=rust  # DB4 basis ablation
+//!   gwt train -s optimizer=gwt-db4-2+adam8bit  # composed: wavelet x 8-bit
+//!   gwt train -s optimizer=galore-4+sgdm       # composed: subspace x SGD-M
 //!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
 //!   gwt train --threads 4 -s preset=small      # parallel step engine
 //!   gwt memory
@@ -20,11 +22,11 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use gwt::cli::Args;
-use gwt::config::TrainConfig;
+use gwt::config::{OptSpec, TrainConfig};
 use gwt::coordinator::Trainer;
 use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
 use gwt::eval::{tasks, FineTuner};
-use gwt::memory::{account, Method, MemoryReport, PAPER_MODELS};
+use gwt::memory::{account, MemoryReport, PAPER_MODELS};
 use gwt::runtime::Runtime;
 
 fn main() {
@@ -184,26 +186,36 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 fn cmd_memory() -> Result<()> {
     println!("== Optimizer-state memory (paper Table XI reproduction) ==");
     println!(
-        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
-        "model", "weights", "Adam", "MUON", "GaLore-1/4", "GWT-2", "GWT-3"
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "model",
+        "weights",
+        "Adam",
+        "MUON",
+        "GaLore-1/4",
+        "GWT-2",
+        "GWT-3",
+        "GWT-2+8bit",
+        "GWT-2+SGD-M"
     );
     for pm in PAPER_MODELS {
         let ps = pm.params();
-        let gb = |m: Method| {
-            format!("{:.2}G", MemoryReport::gb(account(&ps, m).state_bytes))
+        let gb = |spec: OptSpec| {
+            format!("{:.2}G", MemoryReport::gb(account(&ps, spec).state_bytes))
         };
         println!(
-            "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+            "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12} {:>14} {:>14}",
             pm.name,
             format!(
                 "{:.2}G",
-                MemoryReport::gb(account(&ps, Method::Adam).weight_bytes)
+                MemoryReport::gb(account(&ps, OptSpec::adam()).weight_bytes)
             ),
-            gb(Method::Adam),
-            gb(Method::Muon),
-            gb(Method::Galore { rank_denom: 4 }),
-            gb(Method::gwt(2)),
-            gb(Method::gwt(3)),
+            gb(OptSpec::adam()),
+            gb(OptSpec::Muon),
+            gb(OptSpec::galore(4)),
+            gb(OptSpec::gwt(2)),
+            gb(OptSpec::gwt(3)),
+            gb(OptSpec::parse("gwt-2+adam8bit")?),
+            gb(OptSpec::parse("gwt-2+sgdm")?),
         );
     }
     Ok(())

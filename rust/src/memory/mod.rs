@@ -1,15 +1,34 @@
 //! Analytic memory accountant (paper Table I, Table XI, Fig 1).
 //!
 //! Optimizer-state memory is a pure function of parameter shapes and
-//! the method's state layout, so the paper's memory columns can be
-//! reproduced *exactly* rather than simulated. The formulas follow
-//! paper Table I and the Appendix D worked example (LLaMA-60M,
-//! GWT-2 => 0.27 GB total), which this module's tests pin.
+//! the optimizer composition, so the paper's memory columns can be
+//! reproduced *exactly* rather than simulated. The accounting is
+//! compositional, mirroring the `optim` layer's transform/inner
+//! factorization: for an eligible matrix,
 //!
-//! All byte counts assume BF16 (2 bytes/element) like the paper,
-//! except 8-bit Adam states (1 byte + per-block f32 scale).
+//! ```text
+//! state = transform-owned state            (projection matrices)
+//!       + transform-domain size × inner per-element cost
+//! ```
+//!
+//! so every `<transform>+<inner>` spec — including pairs the paper
+//! never tabulates, like `gwt-2+adam8bit` — gets a footprint from the
+//! same two tables rather than a hand-written formula. Non-eligible
+//! parameters carry the spec's format-wide inner
+//! (`OptSpec::non_eligible_inner`) at full span, matching
+//! `build_optimizers` routing. The formulas reduce to paper Table I
+//! and the Appendix D worked example (LLaMA-60M, GWT-2 => 0.27 GB
+//! total) for the legacy specs, which this module's tests pin.
+//!
+//! Two unit systems share the layout logic:
+//! * [`state_bytes`] / [`account`] — BF16 (2 bytes/element) like the
+//!   paper, except 8-bit Adam states (1 byte + per-block f32 scale).
+//! * [`measured_state_bytes`] / [`measured_account`] — the
+//!   implementation's units (f32 states, the same int8+scale blocks),
+//!   asserted equal to the live `optim::total_state_bytes` for every
+//!   composition by `rust/tests/memory_parity.rs`.
 
-use crate::wavelet::WaveletBasis;
+use crate::config::{InnerSpec, OptSpec, TransformSpec};
 
 /// One weight matrix (or vector) with its GWT/low-rank eligibility.
 /// Eligible = attention + MLP 2D matrices (paper §IV-A).
@@ -26,53 +45,14 @@ impl ParamShape {
     }
 }
 
-/// Memory-efficiency method, mirroring the paper's comparison set.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Method {
-    /// Full-rank Adam: M + V, full size.
-    Adam,
-    /// GWT at level l: M + V on the approximation band (1/2^l cols).
-    /// The basis is carried for labeling only — state bytes are
-    /// basis-independent by construction (every family's
-    /// approximation band is n >> level), asserted by
-    /// `gwt_state_bytes_are_basis_independent`.
-    Gwt { level: usize, basis: WaveletBasis },
-    /// GaLore with rank = min_dim / denom: P (m x r) + M,V (r x n).
-    Galore { rank_denom: usize },
-    /// APOLLO: same state layout as GaLore (random P instead of SVD).
-    Apollo { rank_denom: usize },
-    /// LoRA rank r: extra adapters A,B trainable; Adam states on them.
-    Lora { rank_denom: usize },
-    /// MUON: momentum only on eligible 2D params; Adam elsewhere.
-    Muon,
-    /// Adam with 8-bit states (block size 2048 + f32 scale per block).
-    Adam8bit,
-    /// SGD with momentum: M only, full size (reference floor).
-    SgdM,
-}
-
-impl Method {
-    /// Haar-basis GWT at `level` (the paper's configuration).
-    pub const fn gwt(level: usize) -> Method {
-        Method::Gwt { level, basis: WaveletBasis::Haar }
-    }
-
-    pub fn label(&self) -> String {
-        match self {
-            Method::Adam => "Full-Rank Adam".into(),
-            Method::Gwt { level, basis } => basis.gwt_label(*level),
-            Method::Galore { rank_denom } => format!("GaLore-1/{rank_denom}"),
-            Method::Apollo { rank_denom } => format!("APOLLO-1/{rank_denom}"),
-            Method::Lora { rank_denom } => format!("LoRA-1/{rank_denom}"),
-            Method::Muon => "MUON".into(),
-            Method::Adam8bit => "8bit-Adam".into(),
-            Method::SgdM => "SGD-M".into(),
-        }
-    }
-}
-
 pub const BF16: usize = 2;
-pub const QUANT_BLOCK: usize = 2048;
+/// The implementation keeps full-precision states in f32.
+pub const F32: usize = 4;
+/// 8-bit quantization block size — aliased to the live
+/// `Adam8bitCore` constant so the analytic formula and the
+/// implementation cannot drift apart (the measured==analytic parity
+/// contract depends on them agreeing).
+pub const QUANT_BLOCK: usize = crate::optim::adam8bit::BLOCK;
 
 /// Low-rank r for a matrix under rank = min(m,n)/denom, at least 1.
 pub fn lowrank_r(shape: &[usize], denom: usize) -> usize {
@@ -80,49 +60,86 @@ pub fn lowrank_r(shape: &[usize], denom: usize) -> usize {
     (min_dim / denom).max(1)
 }
 
-/// Optimizer-state bytes for one parameter under `method`.
-/// Non-eligible parameters always carry full Adam state (paper setup).
-pub fn state_bytes(p: &ParamShape, method: Method) -> usize {
-    let full_adam = 2 * p.numel() * BF16;
-    if !p.eligible || p.shape.len() < 2 {
-        return match method {
-            // System-wide state formats still apply to non-eligible
-            // params (they change Adam's representation, not its span).
-            Method::Adam8bit => adam8bit_bytes(p.numel()),
-            Method::SgdM => p.numel() * BF16,
-            _ => full_adam,
-        };
-    }
-    let (m, n) = (p.shape[0], p.shape[1]);
-    match method {
-        Method::Adam => full_adam,
-        Method::Gwt { level, .. } => {
-            // M + V over the approximation band; no projection matrix
-            // stored, and no basis dependence (every family halves
-            // the band per level). Odd widths are padded per level
-            // (ptwt behaviour, matching the paper's estimates on
-            // LLaMA's odd d_ff).
+/// Transform-domain element count and transform-owned state elements
+/// for an eligible 2D parameter under `transform`.
+///
+/// * `Identity` — the domain is the parameter itself; nothing owned.
+/// * `Wavelet` — the approximation band `m × ⌈n/2^level⌉` (odd widths
+///   padded per level, ptwt behaviour, matching the paper's estimates
+///   on LLaMA's odd d_ff); no projection stored, and no basis
+///   dependence (every family halves the band per level).
+/// * `LowRank` (GaLore) — projection along the smaller dim:
+///   P (lo × r) owned, domain r × hi.
+/// * `RandomProj` (APOLLO) — P (n × r) owned, domain m × r (the
+///   projection is always on the right, mirroring the implementation).
+pub fn transform_layout(shape: &[usize], transform: TransformSpec) -> (usize, usize) {
+    let (m, n) = (shape[0], shape[1]);
+    match transform {
+        TransformSpec::Identity => (m * n, 0),
+        TransformSpec::Wavelet { level, .. } => {
             let mut w = n;
             for _ in 0..level {
                 w = w.div_ceil(2);
             }
-            2 * (m * w) * BF16
+            (m * w, 0)
         }
-        Method::Galore { rank_denom } | Method::Apollo { rank_denom } => {
-            let r = lowrank_r(&p.shape, rank_denom);
-            // Project along the smaller dim: P (min x r) + M,V (r x max).
+        TransformSpec::LowRank { rank_denom } => {
+            let r = lowrank_r(shape, rank_denom);
             let (lo, hi) = (m.min(n), m.max(n));
-            (lo * r + 2 * r * hi) * BF16
+            (r * hi, lo * r)
         }
-        Method::Lora { rank_denom } => {
+        TransformSpec::RandomProj { rank_denom } => {
+            let r = lowrank_r(shape, rank_denom);
+            (m * r, n * r)
+        }
+    }
+}
+
+/// Inner-optimizer state bytes over a `domain`-element compact
+/// domain, with full-precision elements costing `elem` bytes.
+pub fn inner_state_bytes(domain: usize, inner: InnerSpec, elem: usize) -> usize {
+    match inner {
+        InnerSpec::Adam => 2 * domain * elem,
+        InnerSpec::AdamMini => (domain + 1) * elem,
+        // Quantized states are unit-system independent: int8 codes +
+        // f32 absmax scale per block, exactly as implemented.
+        InnerSpec::Adam8bit => adam8bit_bytes(domain),
+        InnerSpec::SgdM => domain * elem,
+    }
+}
+
+fn state_bytes_units(p: &ParamShape, spec: OptSpec, elem: usize) -> usize {
+    if !p.eligible || p.shape.len() < 2 {
+        // Non-eligible params: the spec's format-wide inner at full
+        // span (paper setup; mirrors build_optimizers).
+        return inner_state_bytes(p.numel(), spec.non_eligible_inner(), elem);
+    }
+    match spec {
+        OptSpec::Composed { transform, inner } => {
+            let (domain, owned) = transform_layout(&p.shape, transform);
+            owned * elem + inner_state_bytes(domain, inner, elem)
+        }
+        OptSpec::Muon => p.numel() * elem, // momentum only
+        OptSpec::Lora { rank_denom } => {
             let r = lowrank_r(&p.shape, rank_denom);
             // Adam states over both adapters: 2(mr) + 2(nr).
-            (2 * m * r + 2 * n * r) * BF16
+            (2 * p.shape[0] * r + 2 * p.shape[1] * r) * elem
         }
-        Method::Muon => p.numel() * BF16, // momentum only
-        Method::Adam8bit => adam8bit_bytes(p.numel()),
-        Method::SgdM => p.numel() * BF16,
     }
+}
+
+/// Optimizer-state bytes for one parameter under `spec`, in the
+/// paper's BF16 units (Tables I/XI).
+pub fn state_bytes(p: &ParamShape, spec: OptSpec) -> usize {
+    state_bytes_units(p, spec, BF16)
+}
+
+/// Optimizer-state bytes for one parameter under `spec`, in the
+/// implementation's units (f32 states). Matches the live
+/// `MatrixOpt::state_bytes` of the optimizer `build_optimizers`
+/// constructs for this (parameter, spec) pair.
+pub fn measured_state_bytes(p: &ParamShape, spec: OptSpec) -> usize {
+    state_bytes_units(p, spec, F32)
 }
 
 fn adam8bit_bytes(numel: usize) -> usize {
@@ -131,12 +148,16 @@ fn adam8bit_bytes(numel: usize) -> usize {
 }
 
 /// Weight bytes (LoRA adds trainable adapters on eligible params).
-pub fn weight_bytes(p: &ParamShape, method: Method) -> usize {
-    let base = p.numel() * BF16;
-    match method {
-        Method::Lora { rank_denom } if p.eligible && p.shape.len() == 2 => {
+pub fn weight_bytes(p: &ParamShape, spec: OptSpec) -> usize {
+    weight_bytes_units(p, spec, BF16)
+}
+
+fn weight_bytes_units(p: &ParamShape, spec: OptSpec, elem: usize) -> usize {
+    let base = p.numel() * elem;
+    match spec {
+        OptSpec::Lora { rank_denom } if p.eligible && p.shape.len() == 2 => {
             let r = lowrank_r(&p.shape, rank_denom);
-            base + (p.shape[0] * r + p.shape[1] * r) * BF16
+            base + (p.shape[0] * r + p.shape[1] * r) * elem
         }
         _ => base,
     }
@@ -144,7 +165,7 @@ pub fn weight_bytes(p: &ParamShape, method: Method) -> usize {
 
 #[derive(Clone, Debug)]
 pub struct MemoryReport {
-    pub method: Method,
+    pub spec: OptSpec,
     pub weight_bytes: usize,
     pub state_bytes: usize,
 }
@@ -159,11 +180,26 @@ impl MemoryReport {
     }
 }
 
-pub fn account(params: &[ParamShape], method: Method) -> MemoryReport {
+/// Paper-unit (BF16) account of a parameter set under `spec`.
+pub fn account(params: &[ParamShape], spec: OptSpec) -> MemoryReport {
     MemoryReport {
-        method,
-        weight_bytes: params.iter().map(|p| weight_bytes(p, method)).sum(),
-        state_bytes: params.iter().map(|p| state_bytes(p, method)).sum(),
+        spec,
+        weight_bytes: params.iter().map(|p| weight_bytes(p, spec)).sum(),
+        state_bytes: params.iter().map(|p| state_bytes(p, spec)).sum(),
+    }
+}
+
+/// Implementation-unit (f32) account: the analytic prediction of
+/// `optim::total_state_bytes` for a bank built with `spec` (weights
+/// include LoRA's trainable adapters, like the BF16-unit account).
+pub fn measured_account(params: &[ParamShape], spec: OptSpec) -> MemoryReport {
+    MemoryReport {
+        spec,
+        weight_bytes: params
+            .iter()
+            .map(|p| weight_bytes_units(p, spec, F32))
+            .sum(),
+        state_bytes: params.iter().map(|p| measured_state_bytes(p, spec)).sum(),
     }
 }
 
@@ -246,6 +282,8 @@ pub fn table1_row(method: &str, m: usize, n: usize, r: usize, l: usize) -> (Stri
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::InnerSpec;
+    use crate::wavelet::WaveletBasis;
 
     fn m60() -> PaperModel {
         PAPER_MODELS[0]
@@ -264,7 +302,7 @@ mod tests {
     #[test]
     fn paper_60m_adam_memory() {
         // Table XI: weights 0.11G, Adam states 0.23G.
-        let rep = account(&m60().params(), Method::Adam);
+        let rep = account(&m60().params(), OptSpec::adam());
         assert!((MemoryReport::gb(rep.weight_bytes) - 0.108).abs() < 0.01);
         assert!((MemoryReport::gb(rep.state_bytes) - 0.216).abs() < 0.02);
     }
@@ -273,7 +311,7 @@ mod tests {
     fn paper_60m_gwt2_total_memory() {
         // Appendix D worked example: GWT-2 total ≈ 0.27 GB
         // (25.3 MB states on eligible + 131.1 MB on rest + 116.1 MB weights).
-        let rep = account(&m60().params(), Method::gwt(2));
+        let rep = account(&m60().params(), OptSpec::gwt(2));
         let total_mb = rep.total() as f64 / 1e6;
         assert!((total_mb - 272.5).abs() < 5.0, "total {total_mb} MB");
     }
@@ -281,7 +319,7 @@ mod tests {
     #[test]
     fn paper_60m_galore_quarter() {
         // Table XI: GaLore-1/4 states ≈ 0.17G (weights 0.11G).
-        let rep = account(&m60().params(), Method::Galore { rank_denom: 4 });
+        let rep = account(&m60().params(), OptSpec::galore(4));
         let gb = MemoryReport::gb(rep.state_bytes);
         assert!((gb - 0.155).abs() < 0.02, "states {gb}G");
     }
@@ -292,11 +330,11 @@ mod tests {
         // GWT-3 (Table XI column ordering).
         for pm in PAPER_MODELS {
             let ps = pm.params();
-            let adam = account(&ps, Method::Adam).state_bytes;
-            let muon = account(&ps, Method::Muon).state_bytes;
-            let galore4 = account(&ps, Method::Galore { rank_denom: 4 }).state_bytes;
-            let gwt2 = account(&ps, Method::gwt(2)).state_bytes;
-            let gwt3 = account(&ps, Method::gwt(3)).state_bytes;
+            let adam = account(&ps, OptSpec::adam()).state_bytes;
+            let muon = account(&ps, OptSpec::Muon).state_bytes;
+            let galore4 = account(&ps, OptSpec::galore(4)).state_bytes;
+            let gwt2 = account(&ps, OptSpec::gwt(2)).state_bytes;
+            let gwt3 = account(&ps, OptSpec::gwt(3)).state_bytes;
             assert!(adam > muon, "{}", pm.name);
             assert!(muon > galore4, "{}", pm.name);
             assert!(galore4 >= gwt2, "{}: galore {galore4} gwt2 {gwt2}", pm.name);
@@ -305,14 +343,43 @@ mod tests {
     }
 
     #[test]
+    fn composed_states_stack_their_savings() {
+        // The composition the paper motivates but never tabulates:
+        // wavelet domain × cheaper inner representation. The analytic
+        // ordering must reflect both axes on every paper model.
+        for pm in PAPER_MODELS {
+            let ps = pm.params();
+            let bytes = |s: &str| {
+                account(&ps, OptSpec::parse(s).unwrap()).state_bytes
+            };
+            let gwt2 = bytes("gwt-2");
+            assert_eq!(gwt2, bytes("gwt-2+adam"), "{}", pm.name);
+            assert!(bytes("gwt-2+adam8bit") < gwt2, "{}", pm.name);
+            assert!(bytes("gwt-2+sgdm") < gwt2, "{}", pm.name);
+            assert!(bytes("gwt-2+adam-mini") < gwt2, "{}", pm.name);
+            assert!(
+                bytes("gwt-3+adam8bit") < bytes("gwt-2+adam8bit"),
+                "{}",
+                pm.name
+            );
+            // 8-bit also composes with the projection transforms.
+            assert!(
+                bytes("galore-4+adam8bit") < bytes("galore-4"),
+                "{}",
+                pm.name
+            );
+        }
+    }
+
+    #[test]
     fn gwt_halves_per_level() {
         let p = ParamShape { name: "w".into(), shape: vec![64, 256], eligible: true };
-        let s1 = state_bytes(&p, Method::gwt(1));
-        let s2 = state_bytes(&p, Method::gwt(2));
-        let s3 = state_bytes(&p, Method::gwt(3));
+        let s1 = state_bytes(&p, OptSpec::gwt(1));
+        let s2 = state_bytes(&p, OptSpec::gwt(2));
+        let s3 = state_bytes(&p, OptSpec::gwt(3));
         assert_eq!(s1, 2 * s2);
         assert_eq!(s2, 2 * s3);
-        let adam = state_bytes(&p, Method::Adam);
+        let adam = state_bytes(&p, OptSpec::adam());
         assert_eq!(adam, 2 * s1);
     }
 
@@ -327,18 +394,18 @@ mod tests {
         for shape in [vec![64, 256], vec![512, 1376], vec![8, 96], vec![8, 100]] {
             let p = ParamShape { name: "w".into(), shape, eligible: true };
             for level in 1..=3 {
-                let haar = state_bytes(&p, Method::gwt(level));
+                let haar = state_bytes(&p, OptSpec::gwt(level));
                 let db4 = state_bytes(
                     &p,
-                    Method::Gwt { level, basis: WaveletBasis::Db4 },
+                    OptSpec::gwt_basis(WaveletBasis::Db4, level),
                 );
                 assert_eq!(haar, db4, "{:?} level {level}", p.shape);
             }
         }
         // Labels stay distinguishable (and Haar keeps the bare form).
-        assert_eq!(Method::gwt(2).label(), "GWT-2");
+        assert_eq!(OptSpec::gwt(2).label(), "GWT-2");
         assert_eq!(
-            Method::Gwt { level: 2, basis: WaveletBasis::Db4 }.label(),
+            OptSpec::gwt_basis(WaveletBasis::Db4, 2).label(),
             "GWT-DB4-2"
         );
     }
@@ -346,19 +413,19 @@ mod tests {
     #[test]
     fn adam8bit_roughly_quarter_of_bf16() {
         let p = ParamShape { name: "w".into(), shape: vec![1024, 1024], eligible: true };
-        let a = state_bytes(&p, Method::Adam) as f64;
-        let q = state_bytes(&p, Method::Adam8bit) as f64;
+        let a = state_bytes(&p, OptSpec::adam()) as f64;
+        let q = state_bytes(&p, OptSpec::adam8bit()) as f64;
         assert!(q / a < 0.51 && q / a > 0.49, "ratio {}", q / a);
     }
 
     #[test]
     fn lora_adds_adapter_weights() {
         let p = ParamShape { name: "w".into(), shape: vec![512, 512], eligible: true };
-        let lora = Method::Lora { rank_denom: 4 };
-        assert!(weight_bytes(&p, lora) > weight_bytes(&p, Method::Adam));
+        let lora = OptSpec::lora(4);
+        assert!(weight_bytes(&p, lora) > weight_bytes(&p, OptSpec::adam()));
         // Non-eligible params unchanged.
         let v = ParamShape { name: "n".into(), shape: vec![512], eligible: false };
-        assert_eq!(weight_bytes(&v, lora), weight_bytes(&v, Method::Adam));
+        assert_eq!(weight_bytes(&v, lora), weight_bytes(&v, OptSpec::adam()));
     }
 
     #[test]
@@ -376,8 +443,61 @@ mod tests {
     fn sgd_momentum_is_half_adam() {
         let p = ParamShape { name: "w".into(), shape: vec![128, 128], eligible: true };
         assert_eq!(
-            2 * state_bytes(&p, Method::SgdM),
-            state_bytes(&p, Method::Adam)
+            2 * state_bytes(&p, OptSpec::sgdm()),
+            state_bytes(&p, OptSpec::adam())
         );
+    }
+
+    #[test]
+    fn transform_layout_shapes() {
+        // Wavelet: domain m·(n>>l), nothing owned.
+        let w2 = TransformSpec::wavelet(WaveletBasis::Haar, 2);
+        assert_eq!(transform_layout(&[16, 64], w2), (16 * 16, 0));
+        // GaLore: domain r·hi, P lo·r owned (either orientation).
+        let lr = TransformSpec::LowRank { rank_denom: 4 };
+        assert_eq!(transform_layout(&[16, 64], lr), (4 * 64, 16 * 4));
+        assert_eq!(transform_layout(&[64, 16], lr), (4 * 64, 16 * 4));
+        // APOLLO: domain m·r, P n·r owned (always right-projected).
+        let rp = TransformSpec::RandomProj { rank_denom: 4 };
+        assert_eq!(transform_layout(&[16, 64], rp), (16 * 4, 64 * 4));
+        assert_eq!(transform_layout(&[64, 16], rp), (64 * 4, 16 * 4));
+    }
+
+    #[test]
+    fn measured_units_match_live_banks() {
+        // The f32-unit accountant must predict the live measured
+        // bytes exactly; the preset-wide sweep lives in
+        // rust/tests/memory_parity.rs — this pins two shapes inline.
+        use crate::config::TrainConfig;
+        use crate::optim::{build_optimizers, total_state_bytes};
+        let params = [
+            ParamShape { name: "layers.00.attn.wq".into(), shape: vec![16, 64], eligible: true },
+            ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+        ];
+        for spec in ["gwt-2+adam8bit", "galore-4+sgdm", "adam", "muon"] {
+            let opt = OptSpec::parse(spec).unwrap();
+            let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+            let bank = build_optimizers(&params, &cfg, None).unwrap();
+            assert_eq!(
+                total_state_bytes(&bank),
+                measured_account(&params, opt).state_bytes,
+                "{spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_eligible_follow_format_wide_inner() {
+        let v = ParamShape { name: "norm".into(), shape: vec![512], eligible: false };
+        // 8-bit inner reaches non-eligible params even under a
+        // wavelet transform; plain-Adam inners leave them at 2·numel.
+        assert_eq!(
+            state_bytes(&v, OptSpec::parse("gwt-2+adam8bit").unwrap()),
+            inner_state_bytes(512, InnerSpec::Adam8bit, BF16)
+        );
+        assert_eq!(state_bytes(&v, OptSpec::gwt(2)), 2 * 512 * BF16);
+        assert_eq!(state_bytes(&v, OptSpec::sgdm()), 512 * BF16);
+        // Adam-mini stays Adam off the eligible set (legacy routing).
+        assert_eq!(state_bytes(&v, OptSpec::adam_mini()), 2 * 512 * BF16);
     }
 }

@@ -1,46 +1,53 @@
-//! Full-rank Adam (Kingma & Ba) — the paper's primary baseline and
-//! the default optimizer for non-eligible parameters.
+//! Adam core (Kingma & Ba): the default inner optimizer of every
+//! composition — full M + V over whatever domain the transform hands
+//! it (the whole parameter under `Identity`, the approximation band
+//! under `Wavelet`, the subspace under `LowRank`/`RandomProj`).
 
-use super::{AdamHp, MatrixOpt};
-use crate::tensor::Tensor;
+use super::compose::InnerOpt;
+use super::AdamHp;
 
-pub struct Adam {
+pub struct AdamCore {
     hp: AdamHp,
     m: Vec<f32>,
     v: Vec<f32>,
     t: usize,
-    shape: Vec<usize>,
 }
 
-impl Adam {
-    pub fn new(shape: &[usize], hp: AdamHp) -> Self {
-        let n: usize = shape.iter().product();
-        Adam { hp, m: vec![0.0; n], v: vec![0.0; n], t: 0, shape: shape.to_vec() }
+impl AdamCore {
+    pub fn new(len: usize, hp: AdamHp) -> AdamCore {
+        AdamCore { hp, m: vec![0.0; len], v: vec![0.0; len], t: 0 }
     }
 }
 
-impl MatrixOpt for Adam {
-    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
-        assert_eq!(g.shape(), &self.shape[..]);
+impl InnerOpt for AdamCore {
+    fn step(&mut self, c: &[f32], out: &mut [f32], denoms: Option<&mut [f32]>) -> f32 {
         self.t += 1;
-        let bc = self.hp.bias_correction(self.t);
         let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
-        let mut out = vec![0.0f32; g.len()];
-        for i in 0..g.len() {
-            let gi = g.data()[i];
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * gi;
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * gi * gi;
-            out[i] = bc * self.m[i] / (self.v[i].sqrt() + eps);
+        match denoms {
+            Some(d) => {
+                for i in 0..c.len() {
+                    let gi = c[i];
+                    self.m[i] = b1 * self.m[i] + (1.0 - b1) * gi;
+                    self.v[i] = b2 * self.v[i] + (1.0 - b2) * gi * gi;
+                    let denom = self.v[i].sqrt() + eps;
+                    d[i] = denom;
+                    out[i] = self.m[i] / denom;
+                }
+            }
+            None => {
+                for i in 0..c.len() {
+                    let gi = c[i];
+                    self.m[i] = b1 * self.m[i] + (1.0 - b1) * gi;
+                    self.v[i] = b2 * self.v[i] + (1.0 - b2) * gi * gi;
+                    out[i] = self.m[i] / (self.v[i].sqrt() + eps);
+                }
+            }
         }
-        Tensor::new(&self.shape, out)
+        self.hp.bias_correction(self.t)
     }
 
     fn state_bytes(&self) -> usize {
         (self.m.len() + self.v.len()) * 4
-    }
-
-    fn label(&self) -> String {
-        "Adam".into()
     }
 }
 
@@ -53,12 +60,13 @@ mod tests {
     fn first_step_is_signlike() {
         // With zero state, step 1 direction ~ bc·g/(sqrt((1-b2)g²)+eps)
         // ≈ sign(g) for |g| >> eps.
-        let mut a = Adam::new(&[4], AdamHp::default());
-        let g = Tensor::new(&[4], vec![3.0, -2.0, 0.5, -0.1]);
-        let u = a.direction(&g, 0.0);
-        for (ui, gi) in u.data().iter().zip(g.data()) {
+        let mut a = AdamCore::new(4, AdamHp::default());
+        let g = [3.0, -2.0, 0.5, -0.1];
+        let mut u = [0.0f32; 4];
+        let bc = a.step(&g, &mut u, None);
+        for (ui, gi) in u.iter().zip(&g) {
             assert!(
-                (ui - gi.signum()).abs() < 0.01,
+                (bc * ui - gi.signum()).abs() < 0.01,
                 "u={ui} for g={gi}"
             );
         }
@@ -66,18 +74,44 @@ mod tests {
 
     #[test]
     fn state_accumulates() {
-        let mut a = Adam::new(&[2], AdamHp::default());
-        let g = Tensor::new(&[2], vec![1.0, 1.0]);
-        a.direction(&g, 0.0);
+        let mut a = AdamCore::new(2, AdamHp::default());
+        let g = [1.0, 1.0];
+        let mut u = [0.0f32; 2];
+        a.step(&g, &mut u, None);
         approx_eq(a.m[0], 0.1, 1e-6);
         approx_eq(a.v[0], 0.001, 1e-6);
-        a.direction(&g, 0.0);
+        a.step(&g, &mut u, None);
         approx_eq(a.m[0], 0.19, 1e-6);
     }
 
     #[test]
+    fn denoms_match_update_denominators() {
+        let mut a = AdamCore::new(3, AdamHp::default());
+        let g = [1.0, -4.0, 0.25];
+        let mut u = [0.0f32; 3];
+        let mut d = [0.0f32; 3];
+        a.step(&g, &mut u, Some(&mut d));
+        for i in 0..3 {
+            approx_eq(d[i], a.v[i].sqrt() + AdamHp::default().eps, 1e-7);
+            approx_eq(u[i] * d[i], a.m[i], 1e-6);
+        }
+    }
+
+    #[test]
     fn state_bytes_full_rank() {
-        let a = Adam::new(&[8, 16], AdamHp::default());
+        let a = AdamCore::new(128, AdamHp::default());
         assert_eq!(a.state_bytes(), 2 * 128 * 4);
+    }
+
+    #[test]
+    fn bias_correction_is_returned_not_baked_in() {
+        // The engine applies bc after up-projection; the core's own
+        // output must be the raw m/(sqrt(v)+eps).
+        let mut a = AdamCore::new(1, AdamHp::default());
+        let mut u = [0.0f32];
+        let bc = a.step(&[2.0], &mut u, None);
+        approx_eq(bc, AdamHp::default().bias_correction(1), 1e-6);
+        let want = a.m[0] / (a.v[0].sqrt() + AdamHp::default().eps);
+        approx_eq(u[0], want, 1e-7);
     }
 }

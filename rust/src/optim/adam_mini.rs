@@ -1,57 +1,47 @@
-//! Adam-mini (Zhang et al. 2024): full first moment, a *single*
-//! shared second-moment scalar per parameter block (here: per
-//! parameter tensor, the coarsest variant). Roughly halves Adam's
-//! state. The paper shows GWT composes with it (Fig 4).
+//! Adam-mini core (Zhang et al. 2024): full first moment, a *single*
+//! shared second-moment scalar per domain (here: per composition
+//! domain, the coarsest variant). Roughly halves Adam's state. The
+//! paper shows GWT composes with it (Fig 4) — in this codebase that
+//! composition is literally `gwt-2+adam-mini`.
 
-use super::{AdamHp, MatrixOpt};
-use crate::tensor::Tensor;
+use super::compose::InnerOpt;
+use super::AdamHp;
 
-pub struct AdamMini {
+pub struct AdamMiniCore {
     hp: AdamHp,
     m: Vec<f32>,
-    /// One shared v for the whole block.
+    /// One shared v for the whole domain.
     v: f32,
     t: usize,
-    shape: Vec<usize>,
 }
 
-impl AdamMini {
-    pub fn new(shape: &[usize], hp: AdamHp) -> Self {
-        AdamMini {
-            hp,
-            m: vec![0.0; shape.iter().product()],
-            v: 0.0,
-            t: 0,
-            shape: shape.to_vec(),
-        }
+impl AdamMiniCore {
+    pub fn new(len: usize, hp: AdamHp) -> AdamMiniCore {
+        AdamMiniCore { hp, m: vec![0.0; len], v: 0.0, t: 0 }
     }
 }
 
-impl MatrixOpt for AdamMini {
-    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
-        assert_eq!(g.shape(), &self.shape[..]);
+impl InnerOpt for AdamMiniCore {
+    fn step(&mut self, c: &[f32], out: &mut [f32], denoms: Option<&mut [f32]>) -> f32 {
         self.t += 1;
-        let bc = self.hp.bias_correction(self.t);
         let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
-        // Shared v <- EMA of mean(g^2) over the block.
-        let mean_sq = g.data().iter().map(|x| x * x).sum::<f32>()
-            / g.len().max(1) as f32;
+        // Shared v <- EMA of mean(g^2) over the domain.
+        let mean_sq =
+            c.iter().map(|x| x * x).sum::<f32>() / c.len().max(1) as f32;
         self.v = b2 * self.v + (1.0 - b2) * mean_sq;
         let denom = self.v.sqrt() + eps;
-        let mut out = vec![0.0f32; g.len()];
-        for i in 0..g.len() {
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g.data()[i];
-            out[i] = bc * self.m[i] / denom;
+        for i in 0..c.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * c[i];
+            out[i] = self.m[i] / denom;
         }
-        Tensor::new(&self.shape, out)
+        if let Some(d) = denoms {
+            d.fill(denom);
+        }
+        self.hp.bias_correction(self.t)
     }
 
     fn state_bytes(&self) -> usize {
         (self.m.len() + 1) * 4
-    }
-
-    fn label(&self) -> String {
-        "Adam-mini".into()
     }
 }
 
@@ -61,31 +51,37 @@ mod tests {
 
     #[test]
     fn state_is_half_adam_plus_one() {
-        let a = AdamMini::new(&[16, 16], AdamHp::default());
+        let a = AdamMiniCore::new(256, AdamHp::default());
         assert_eq!(a.state_bytes(), (256 + 1) * 4);
     }
 
     #[test]
     fn uniform_gradient_matches_adam_direction() {
-        // If |g| is constant across the block, mean(g²) = g² and
+        // If |g| is constant across the domain, mean(g²) = g² and
         // Adam-mini == Adam elementwise.
-        let mut mini = AdamMini::new(&[8], AdamHp::default());
-        let mut full = super::super::Adam::new(&[8], AdamHp::default());
-        let g = Tensor::new(&[8], vec![0.5; 8]);
-        let u1 = mini.direction(&g, 0.0);
-        let u2 = full.direction(&g, 0.0);
-        crate::testing::approx_eq_slice(u1.data(), u2.data(), 1e-5);
+        let mut mini = AdamMiniCore::new(8, AdamHp::default());
+        let mut full = super::super::AdamCore::new(8, AdamHp::default());
+        let g = [0.5f32; 8];
+        let (mut u1, mut u2) = ([0.0f32; 8], [0.0f32; 8]);
+        let bc1 = mini.step(&g, &mut u1, None);
+        let bc2 = full.step(&g, &mut u2, None);
+        assert_eq!(bc1, bc2);
+        crate::testing::approx_eq_slice(&u1, &u2, 1e-5);
     }
 
     #[test]
     fn shared_denominator() {
-        let mut mini = AdamMini::new(&[4], AdamHp::default());
-        let g = Tensor::new(&[4], vec![1.0, -1.0, 2.0, 0.0]);
-        let u = mini.direction(&g, 0.0);
-        // Same denominator => u proportional to m (i.e. to g at t=1).
-        let ratio = u.data()[0] / g.data()[0];
+        let mut mini = AdamMiniCore::new(4, AdamHp::default());
+        let g = [1.0, -1.0, 2.0, 0.0];
+        let mut u = [0.0f32; 4];
+        let mut d = [0.0f32; 4];
+        mini.step(&g, &mut u, Some(&mut d));
+        // Same denominator => u proportional to m (i.e. to g at t=1),
+        // and every denominator entry is the shared scalar.
+        let ratio = u[0] / g[0];
         for i in [1, 2] {
-            assert!((u.data()[i] / g.data()[i] - ratio).abs() < 1e-5);
+            assert!((u[i] / g[i] - ratio).abs() < 1e-5);
         }
+        assert!(d.iter().all(|x| *x == d[0]));
     }
 }

@@ -1,77 +1,77 @@
-//! APOLLO (Zhu et al. 2024): SVD-free memory-efficient Adam baseline.
+//! APOLLO-style random projection (Zhu et al. 2024), as a
+//! [`GradientTransform`].
 //!
-//! Maintains Adam states on a *random* low-rank projection of the
-//! gradient (no SVD => no O(mn^2) stalls => the throughput advantage
-//! Table III shows), then scales the *full-rank* gradient channel-wise
-//! by the ratio between the adapted low-rank update norm and the raw
-//! projected-gradient norm. This reproduces APOLLO's structure:
-//! SGD-like memory + Adam-like per-channel learning rates + full-rank
-//! update direction.
+//! SVD-free: the compact domain is a *random* low-rank projection of
+//! the gradient (no O(mn^2) stalls => the throughput advantage Table
+//! III shows). The inner optimizer adapts moments there; the
+//! up-projection scales the *full-rank* gradient channel-wise by the
+//! ratio between the adapted compact-update norm and the raw
+//! projected-gradient norm. This reproduces APOLLO's structure —
+//! SGD-like memory + Adam-like per-channel learning rates +
+//! full-rank update direction — for any inner the grammar composes
+//! (`apollo-4+sgdm` gives momentum-shaped channel scales).
 
-use super::{AdamHp, MatrixOpt};
+use super::compose::GradientTransform;
 use crate::linalg::{gaussian_projection, matmul};
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
-pub struct Apollo {
+pub struct RandomProj {
     m: usize,
     n: usize,
     rank: usize,
-    hp: AdamHp,
-    /// Random projection P (n x r); states live in (m x r).
+    /// Random projection P (n x r); the compact domain is (m x r).
     proj: Vec<f32>,
-    mom: Vec<f32>,
-    vel: Vec<f32>,
-    t: usize,
+    /// Compact gradient saved by `down` for `up`'s channel norms
+    /// (transient, excluded from state accounting).
+    rg: Vec<f32>,
 }
 
-impl Apollo {
-    pub fn new(m: usize, n: usize, rank: usize, hp: AdamHp, seed: u64) -> Self {
-        let rank = rank.min(m.min(n)).max(1);
+impl RandomProj {
+    /// Rank is `min(m, n) / rank_denom`, at least 1 — delegated to
+    /// `memory::lowrank_r` to keep the live transform and the
+    /// accountant's analytic layout on one formula.
+    pub fn new(m: usize, n: usize, rank_denom: usize, seed: u64) -> Self {
+        let rank = crate::memory::lowrank_r(&[m, n], rank_denom);
         let mut rng = Rng::with_stream(seed, 0xa901);
-        Apollo {
+        RandomProj {
             m,
             n,
             rank,
-            hp,
             proj: gaussian_projection(n, rank, &mut rng),
-            mom: vec![0.0; m * rank],
-            vel: vec![0.0; m * rank],
-            t: 0,
+            rg: vec![0.0; m * rank],
         }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
     }
 }
 
-impl MatrixOpt for Apollo {
-    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+impl GradientTransform for RandomProj {
+    fn domain_len(&self) -> usize {
+        self.m * self.rank
+    }
+
+    fn down(&mut self, g: &Tensor, out: &mut [f32]) {
         assert_eq!(g.shape(), &[self.m, self.n]);
-        self.t += 1;
-        let bc = self.hp.bias_correction(self.t);
-        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
-        let (m, n, r) = (self.m, self.n, self.rank);
-
         // R = G P  (m x r): compressed gradient.
-        let rg = matmul(g.data(), &self.proj, m, n, r);
+        let rg = matmul(g.data(), &self.proj, self.m, self.n, self.rank);
+        out.copy_from_slice(&rg);
+        self.rg = rg;
+    }
 
-        // Adam in compressed space.
-        let mut upd_low = vec![0.0f32; m * r];
-        for i in 0..m * r {
-            let gi = rg[i];
-            self.mom[i] = b1 * self.mom[i] + (1.0 - b1) * gi;
-            self.vel[i] = b2 * self.vel[i] + (1.0 - b2) * gi * gi;
-            upd_low[i] = bc * self.mom[i] / (self.vel[i].sqrt() + eps);
-        }
-
-        // Per-row (channel) scaling: s_i = ||upd_low_i|| / ||rg_i||.
+    fn up(&mut self, g: &Tensor, u: &[f32], _denoms: Option<&[f32]>, out: &mut [f32]) {
+        let (m, n, r) = (self.m, self.n, self.rank);
+        // Per-row (channel) scaling: s_i = ||u_i|| / ||rg_i||.
         // Full-rank update = diag(s) G — gradient direction kept,
-        // Adam-style magnitude adaptation applied.
-        let mut out = vec![0.0f32; m * n];
+        // inner-optimizer magnitude adaptation applied.
         for i in 0..m {
-            let un: f64 = upd_low[i * r..(i + 1) * r]
+            let un: f64 = u[i * r..(i + 1) * r]
                 .iter()
                 .map(|x| (*x as f64) * (*x as f64))
                 .sum();
-            let gn: f64 = rg[i * r..(i + 1) * r]
+            let gn: f64 = self.rg[i * r..(i + 1) * r]
                 .iter()
                 .map(|x| (*x as f64) * (*x as f64))
                 .sum();
@@ -80,26 +80,41 @@ impl MatrixOpt for Apollo {
                 out[i * n + j] = s * g.data()[i * n + j];
             }
         }
-        Tensor::new(&[m, n], out)
     }
 
     fn state_bytes(&self) -> usize {
-        (self.proj.len() + self.mom.len() + self.vel.len()) * 4
-    }
-
-    fn label(&self) -> String {
-        format!("APOLLO(r={})", self.rank)
+        self.proj.len() * 4
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{InnerSpec, TransformSpec};
+    use crate::optim::compose::{ComposeOpts, Composed};
+    use crate::optim::{AdamHp, MatrixOpt};
+
+    fn apollo(m: usize, n: usize, denom: usize, seed: u64) -> Composed {
+        Composed::build(
+            &[m, n],
+            TransformSpec::RandomProj { rank_denom: denom },
+            InnerSpec::Adam,
+            &ComposeOpts {
+                hp: AdamHp::default(),
+                sgd_momentum: 0.9,
+                galore_update_gap: 50,
+                seed,
+                runtime: None,
+                threads: 1,
+            },
+        )
+        .unwrap()
+    }
 
     #[test]
     fn update_is_rowwise_scaled_gradient() {
         let mut rng = Rng::new(1);
-        let mut opt = Apollo::new(6, 16, 2, AdamHp::default(), 7);
+        let mut opt = apollo(6, 16, 3, 7); // r = 2
         let g = Tensor::randn(&[6, 16], 1.0, &mut rng);
         let u = opt.direction(&g, 0.0);
         // Each row of u is a non-negative multiple of the same row of g.
@@ -127,17 +142,17 @@ mod tests {
     fn deterministic_per_seed() {
         let mut rng = Rng::new(2);
         let g = Tensor::randn(&[4, 8], 1.0, &mut rng);
-        let mut a = Apollo::new(4, 8, 2, AdamHp::default(), 5);
-        let mut b = Apollo::new(4, 8, 2, AdamHp::default(), 5);
+        let mut a = apollo(4, 8, 2, 5);
+        let mut b = apollo(4, 8, 2, 5);
         assert_eq!(a.direction(&g, 0.0), b.direction(&g, 0.0));
-        let mut c = Apollo::new(4, 8, 2, AdamHp::default(), 6);
+        let mut c = apollo(4, 8, 2, 6);
         assert_ne!(a.direction(&g, 0.0), c.direction(&g, 0.0));
     }
 
     #[test]
     fn no_svd_state_footprint() {
-        // Same state layout class as GaLore: P + M,V low-rank.
-        let opt = Apollo::new(16, 32, 4, AdamHp::default(), 1);
+        // P (n x r) + inner M,V over (m x r).
+        let opt = apollo(16, 32, 4, 1); // r = 4
         assert_eq!(opt.state_bytes(), (32 * 4 + 2 * 16 * 4) * 4);
     }
 }

@@ -1,0 +1,485 @@
+//! The composition engine: one `MatrixOpt` built from two orthogonal
+//! parts.
+//!
+//! * A [`GradientTransform`] down-projects the gradient into a
+//!   compact domain (wavelet approximation band, SVD subspace, random
+//!   projection, or nothing) and up-projects the inner update back to
+//!   weight space. Transforms own their projection state (counted in
+//!   `state_bytes`) and any transient scratch (not counted, matching
+//!   the monolith accounting this engine replaced).
+//! * An [`InnerOpt`] is the optimizer state machine that runs in that
+//!   domain: it consumes the compact gradient, refreshes its moments,
+//!   and emits the *unscaled* compact update plus (on request) its
+//!   adaptive per-element denominators — which is how the wavelet
+//!   transform scales its pass-through detail bands exactly the way
+//!   the fused GWT-Adam kernel does.
+//!
+//! [`Composed`] glues the two together behind `MatrixOpt`, so the
+//! NL-limiter/α pipeline in `ParamOptimizer` and the `Send` +
+//! bit-identical sharding contracts of the step engine apply to every
+//! pair. One pair is special-cased: Wavelet × Adam routes onto the
+//! pre-existing fused `GwtAdam` engine (same math, verified
+//! bit-identical by the tests below), which keeps the HLO manifest
+//! hot path (`gwt_adam_key`) and the row-sharded rust path unchanged
+//! for the paper's headline configuration.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::adam::AdamCore;
+use super::adam8bit::Adam8bitCore;
+use super::adam_mini::AdamMiniCore;
+use super::apollo::RandomProj;
+use super::galore::LowRankSvd;
+use super::gwt::{GwtAdam, Wavelet};
+use super::sgdm::SgdMCore;
+use super::{AdamHp, MatrixOpt};
+use crate::config::{InnerSpec, OptSpec, TransformSpec};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Down-project gradients into a compact domain / up-project updates
+/// back. Implementations must be deterministic pure functions of
+/// their internal state (the step-engine bit-identity contract).
+pub trait GradientTransform: Send {
+    /// Number of elements in the compact domain.
+    fn domain_len(&self) -> usize;
+
+    /// Whether [`GradientTransform::up`] consumes the inner
+    /// optimizer's per-element denominators (wavelet detail-band
+    /// scaling). When false the engine skips the denominator buffer.
+    fn wants_denoms(&self) -> bool {
+        false
+    }
+
+    /// Down-project gradient `g` into `out` (len == `domain_len`).
+    /// May refresh internal projection state (GaLore's periodic SVD).
+    fn down(&mut self, g: &Tensor, out: &mut [f32]);
+
+    /// Up-project the compact update `u` into full space. `g` is the
+    /// same gradient passed to `down` (APOLLO-style transforms
+    /// re-scale it directly); `denoms` is present iff
+    /// `wants_denoms()` and holds the inner's `sqrt(v̂)+eps` per
+    /// compact element.
+    fn up(&mut self, g: &Tensor, u: &[f32], denoms: Option<&[f32]>, out: &mut [f32]);
+
+    /// Bytes of transform-owned state (projection matrices; transient
+    /// coefficient scratch excluded).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Optimizer state machine over a flat compact domain.
+pub trait InnerOpt: Send {
+    /// One step: consume the compact gradient `c`, refresh state,
+    /// write the *unscaled* update direction into `out` and — when
+    /// `denoms` is provided — the adaptive per-element denominator
+    /// (`sqrt(v̂)+eps`; `1.0` for methods without a second moment).
+    /// Returns the global scale the engine applies to the final
+    /// full-space update (Adam-family bias correction; `1.0`
+    /// otherwise).
+    fn step(&mut self, c: &[f32], out: &mut [f32], denoms: Option<&mut [f32]>) -> f32;
+
+    /// Bytes of optimizer state currently held (measured).
+    fn state_bytes(&self) -> usize;
+}
+
+/// The no-op transform: the inner optimizer runs full-rank.
+///
+/// `Composed::build` never boxes this — identity compositions (every
+/// non-eligible parameter, the legacy `adam`/`adam8bit`/`adam-mini`/
+/// `sgdm` specs) take the buffer-free `Engine::Direct` path instead,
+/// feeding the gradient straight to the inner optimizer. `Identity`
+/// exists for the `Composed::generic` seam (custom pipelines, tests)
+/// where a uniform `GradientTransform` box is wanted.
+pub struct Identity {
+    len: usize,
+}
+
+impl Identity {
+    pub fn new(shape: &[usize]) -> Identity {
+        Identity { len: shape.iter().product() }
+    }
+}
+
+impl GradientTransform for Identity {
+    fn domain_len(&self) -> usize {
+        self.len
+    }
+
+    fn down(&mut self, g: &Tensor, out: &mut [f32]) {
+        out.copy_from_slice(g.data());
+    }
+
+    fn up(&mut self, _g: &Tensor, u: &[f32], _denoms: Option<&[f32]>, out: &mut [f32]) {
+        out.copy_from_slice(u);
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Everything `Composed::build` needs besides the two specs.
+pub struct ComposeOpts {
+    pub hp: AdamHp,
+    /// SGD-M inner momentum (`TrainConfig::sgd_momentum`).
+    pub sgd_momentum: f32,
+    /// GaLore subspace refresh interval.
+    pub galore_update_gap: usize,
+    /// Per-parameter seed for randomized transforms (APOLLO).
+    pub seed: u64,
+    /// Runtime for the fused Wavelet×Adam HLO hot path; `None`
+    /// forces the pure-rust path.
+    pub runtime: Option<Arc<Runtime>>,
+    /// Row-shard workers for the fused Wavelet×Adam rust path.
+    pub threads: usize,
+}
+
+enum Engine {
+    /// Wavelet × Adam: the pre-refactor fused GWT-Adam engine —
+    /// bit-identical math, HLO artifact routing, row sharding.
+    Fused(GwtAdam),
+    /// Identity × inner: the inner optimizer consumes the gradient
+    /// directly — no compact buffers, no down/up copies. This is the
+    /// path every non-eligible parameter takes (embeddings are the
+    /// largest tensors in a bank; a generic Identity round-trip would
+    /// cost two dead parameter-sized buffers and two full copies per
+    /// step for nothing).
+    Direct(Box<dyn InnerOpt>),
+    /// Any other pair: transform ∘ inner ∘ transform⁻¹.
+    Generic {
+        transform: Box<dyn GradientTransform>,
+        inner: Box<dyn InnerOpt>,
+        /// Compact gradient / compact update / denominator buffers,
+        /// persistent across steps (no per-step allocs beyond the
+        /// output tensor).
+        cbuf: Vec<f32>,
+        ubuf: Vec<f32>,
+        dbuf: Vec<f32>,
+    },
+}
+
+/// A `<transform>+<inner>` optimizer composition behind `MatrixOpt`.
+pub struct Composed {
+    shape: Vec<usize>,
+    label: String,
+    engine: Engine,
+}
+
+impl Composed {
+    /// Build the composition for one parameter. Non-identity
+    /// transforms require a 2D shape (the eligibility rule enforced
+    /// by `build_optimizers`).
+    pub fn build(
+        shape: &[usize],
+        transform: TransformSpec,
+        inner: InnerSpec,
+        opts: &ComposeOpts,
+    ) -> Result<Composed> {
+        if transform != TransformSpec::Identity && shape.len() != 2 {
+            bail!("transform {transform:?} requires a 2D parameter, got {shape:?}");
+        }
+        // The paper's pair keeps its fused engine: same per-row math
+        // (pinned bit-identical below), plus the HLO manifest path
+        // and row sharding the generic engine doesn't carry.
+        if let (TransformSpec::Wavelet { basis, level }, InnerSpec::Adam) =
+            (transform, inner)
+        {
+            let fused = GwtAdam::new_with_basis(
+                shape[0],
+                shape[1],
+                level,
+                basis,
+                opts.hp,
+                opts.runtime.clone(),
+            )?
+            .with_threads(opts.threads);
+            return Ok(Composed {
+                shape: shape.to_vec(),
+                label: String::new(), // fused engine labels itself
+                engine: Engine::Fused(fused),
+            });
+        }
+        let label = OptSpec::composed(transform, inner).label();
+        let t: Box<dyn GradientTransform> = match transform {
+            TransformSpec::Identity => {
+                let len: usize = shape.iter().product();
+                return Ok(Composed {
+                    shape: shape.to_vec(),
+                    label,
+                    engine: Engine::Direct(build_inner(len, inner, opts)),
+                });
+            }
+            TransformSpec::Wavelet { basis, level } => {
+                Box::new(Wavelet::new(shape[0], shape[1], level, basis)?)
+            }
+            TransformSpec::LowRank { rank_denom } => Box::new(LowRankSvd::new(
+                shape[0],
+                shape[1],
+                rank_denom,
+                opts.galore_update_gap,
+            )),
+            TransformSpec::RandomProj { rank_denom } => Box::new(
+                RandomProj::new(shape[0], shape[1], rank_denom, opts.seed),
+            ),
+        };
+        Ok(Composed::generic(shape, t, inner, label, opts))
+    }
+
+    /// Assemble a generic (non-fused) composition from a transform
+    /// box — the seam custom transforms plug into.
+    pub fn generic(
+        shape: &[usize],
+        transform: Box<dyn GradientTransform>,
+        inner: InnerSpec,
+        label: String,
+        opts: &ComposeOpts,
+    ) -> Composed {
+        let len = transform.domain_len();
+        let inner = build_inner(len, inner, opts);
+        let dlen = if transform.wants_denoms() { len } else { 0 };
+        Composed {
+            shape: shape.to_vec(),
+            label,
+            engine: Engine::Generic {
+                transform,
+                inner,
+                cbuf: vec![0.0; len],
+                ubuf: vec![0.0; len],
+                dbuf: vec![0.0; dlen],
+            },
+        }
+    }
+
+    /// Whether this composition runs on the fused Wavelet×Adam HLO
+    /// artifact (false for every generic pair and the rust path).
+    pub fn uses_hlo(&self) -> bool {
+        match &self.engine {
+            Engine::Fused(g) => g.uses_hlo(),
+            Engine::Direct(_) | Engine::Generic { .. } => false,
+        }
+    }
+}
+
+fn build_inner(len: usize, inner: InnerSpec, opts: &ComposeOpts) -> Box<dyn InnerOpt> {
+    match inner {
+        InnerSpec::Adam => Box::new(AdamCore::new(len, opts.hp)),
+        InnerSpec::Adam8bit => Box::new(Adam8bitCore::new(len, opts.hp)),
+        InnerSpec::AdamMini => Box::new(AdamMiniCore::new(len, opts.hp)),
+        InnerSpec::SgdM => Box::new(SgdMCore::new(len, opts.sgd_momentum)),
+    }
+}
+
+impl MatrixOpt for Composed {
+    fn direction(&mut self, g: &Tensor, lr_eff: f32) -> Tensor {
+        match &mut self.engine {
+            Engine::Fused(fused) => fused.direction(g, lr_eff),
+            Engine::Direct(inner) => {
+                assert_eq!(g.shape(), &self.shape[..]);
+                let mut out = vec![0.0f32; g.len()];
+                let bc = inner.step(g.data(), &mut out, None);
+                if bc != 1.0 {
+                    for x in &mut out {
+                        *x *= bc;
+                    }
+                }
+                Tensor::new(&self.shape, out)
+            }
+            Engine::Generic { transform, inner, cbuf, ubuf, dbuf } => {
+                assert_eq!(g.shape(), &self.shape[..]);
+                transform.down(g, cbuf);
+                let want = !dbuf.is_empty();
+                let bc = inner.step(
+                    cbuf,
+                    ubuf,
+                    if want { Some(&mut dbuf[..]) } else { None },
+                );
+                let mut out = vec![0.0f32; g.len()];
+                transform.up(
+                    g,
+                    ubuf,
+                    if want { Some(&dbuf[..]) } else { None },
+                    &mut out,
+                );
+                // Bias correction is a global scale on the applied
+                // update, exactly where the fused kernel applies it.
+                if bc != 1.0 {
+                    for x in &mut out {
+                        *x *= bc;
+                    }
+                }
+                Tensor::new(&self.shape, out)
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        match &self.engine {
+            Engine::Fused(f) => f.state_bytes(),
+            Engine::Direct(inner) => inner.state_bytes(),
+            Engine::Generic { transform, inner, .. } => {
+                transform.state_bytes() + inner.state_bytes()
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        match &self.engine {
+            Engine::Fused(f) => f.label(),
+            Engine::Direct(_) | Engine::Generic { .. } => self.label.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{InnerSpec, TransformSpec};
+    use crate::rng::Rng;
+    use crate::wavelet::WaveletBasis;
+
+    fn opts() -> ComposeOpts {
+        ComposeOpts {
+            hp: AdamHp::default(),
+            sgd_momentum: 0.9,
+            galore_update_gap: 50,
+            seed: 7,
+            runtime: None,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn wavelet_adam_routes_to_fused_engine() {
+        let c = Composed::build(
+            &[8, 32],
+            TransformSpec::wavelet(WaveletBasis::Haar, 2),
+            InnerSpec::Adam,
+            &opts(),
+        )
+        .unwrap();
+        // The fused engine labels itself with the execution path.
+        assert_eq!(c.label(), "GWT-2 (rust)");
+        assert!(!c.uses_hlo());
+        // 8-bit inner drops off the fused engine onto the generic one.
+        let c8 = Composed::build(
+            &[8, 32],
+            TransformSpec::wavelet(WaveletBasis::Haar, 2),
+            InnerSpec::Adam8bit,
+            &opts(),
+        )
+        .unwrap();
+        assert_eq!(c8.label(), "GWT-2+8bit-Adam");
+    }
+
+    #[test]
+    fn generic_wavelet_adam_bit_identical_to_fused() {
+        // The extraction proof: running the Wavelet transform through
+        // the generic engine with an AdamCore reproduces the fused
+        // GWT-Adam kernel bit-for-bit — same forward transform, same
+        // approximation-band moments, same detail-band denominators,
+        // same post-inverse bias correction.
+        for basis in WaveletBasis::ALL {
+            let o = opts();
+            let mut fused = Composed::build(
+                &[13, 32],
+                TransformSpec::wavelet(basis, 2),
+                InnerSpec::Adam,
+                &o,
+            )
+            .unwrap();
+            let t = Wavelet::new(13, 32, 2, basis).unwrap();
+            let mut generic = Composed::generic(
+                &[13, 32],
+                Box::new(t),
+                InnerSpec::Adam,
+                "generic-wavelet-adam".into(),
+                &o,
+            );
+            let mut rng = Rng::new(31);
+            for step in 0..4 {
+                let g = Tensor::randn(&[13, 32], 1.0, &mut rng);
+                let a = fused.direction(&g, 0.0);
+                let b = generic.direction(&g, 0.0);
+                assert_eq!(a.data(), b.data(), "{basis:?} step {step}");
+            }
+            assert_eq!(fused.state_bytes(), generic.state_bytes());
+        }
+    }
+
+    #[test]
+    fn identity_sgdm_is_plain_momentum() {
+        let mut c = Composed::build(
+            &[4],
+            TransformSpec::Identity,
+            InnerSpec::SgdM,
+            &ComposeOpts { sgd_momentum: 0.5, ..opts() },
+        )
+        .unwrap();
+        let g = Tensor::new(&[4], vec![1.0, -2.0, 0.5, 0.0]);
+        c.direction(&g, 0.0);
+        c.direction(&g, 0.0);
+        let u = c.direction(&g, 0.0);
+        // Geometric momentum sum: 1 + 0.5 + 0.25 = 1.75 per unit g.
+        for (ui, gi) in u.data().iter().zip(g.data()) {
+            assert!((ui - 1.75 * gi).abs() < 1e-6, "{ui} vs {gi}");
+        }
+        assert_eq!(c.state_bytes(), 4 * 4);
+        assert_eq!(c.label(), "SGD-M");
+    }
+
+    #[test]
+    fn composed_state_bytes_sum_their_parts() {
+        let shape = [16, 64];
+        let bytes = |t: TransformSpec, i: InnerSpec| {
+            Composed::build(&shape, t, i, &opts()).unwrap().state_bytes()
+        };
+        let w2 = TransformSpec::wavelet(WaveletBasis::Haar, 2);
+        let adam = bytes(TransformSpec::Identity, InnerSpec::Adam);
+        let gwt2 = bytes(w2, InnerSpec::Adam);
+        let gwt2_8bit = bytes(w2, InnerSpec::Adam8bit);
+        let gwt2_sgdm = bytes(w2, InnerSpec::SgdM);
+        // Wavelet quarters the domain at level 2; 8-bit quarters the
+        // per-element cost on top; SGD-M halves it (one moment).
+        assert_eq!(gwt2, adam / 4);
+        assert_eq!(gwt2_sgdm, gwt2 / 2);
+        assert!(gwt2_8bit < gwt2 / 3, "{gwt2_8bit} vs {gwt2}");
+        // Transform-owned state shows up for projection methods.
+        let lr = bytes(TransformSpec::LowRank { rank_denom: 4 }, InnerSpec::Adam);
+        assert_eq!(lr, (16 * 4 + 2 * 4 * 64) * 4);
+        let rp =
+            bytes(TransformSpec::RandomProj { rank_denom: 4 }, InnerSpec::Adam);
+        assert_eq!(rp, (64 * 4 + 2 * 16 * 4) * 4);
+    }
+
+    #[test]
+    fn wavelet_sgdm_details_pass_through_unscaled() {
+        // With no second moment the denominators are 1.0, so the
+        // detail bands reconstruct exactly (momentum applies only to
+        // the approximation band): a first step over a detail-only
+        // gradient returns it unchanged.
+        let mut c = Composed::build(
+            &[1, 4],
+            TransformSpec::wavelet(WaveletBasis::Haar, 1),
+            InnerSpec::SgdM,
+            &opts(),
+        )
+        .unwrap();
+        // [1, -1, 2, -2] has zero block means: pure detail signal.
+        let g = Tensor::new(&[1, 4], vec![1.0, -1.0, 2.0, -2.0]);
+        let u = c.direction(&g, 0.0);
+        crate::testing::approx_eq_slice(u.data(), g.data(), 1e-5);
+    }
+
+    #[test]
+    fn non_identity_transform_rejects_1d_params() {
+        assert!(Composed::build(
+            &[16],
+            TransformSpec::wavelet(WaveletBasis::Haar, 1),
+            InnerSpec::Adam,
+            &opts(),
+        )
+        .is_err());
+    }
+}

@@ -1,46 +1,49 @@
-//! GaLore (Zhao et al. 2024): gradient low-rank projection baseline.
+//! GaLore-style low-rank SVD projection (Zhao et al. 2024), as a
+//! [`GradientTransform`].
 //!
 //! Projects the gradient onto the top-r singular subspace (recomputed
-//! every `update_gap` steps via the in-repo Jacobi SVD), runs Adam in
-//! the subspace, projects back. The O(m n^2)-ish SVD cost is exactly
-//! the throughput penalty the paper's Table III measures.
+//! every `update_gap` steps via the in-repo Jacobi SVD); the inner
+//! optimizer — Adam for the paper's baseline `galore-1/4`, anything
+//! else via the composition grammar (`galore-4+adam8bit`, …) — runs
+//! in the subspace, and the update is projected back. The
+//! O(m n^2)-ish SVD cost is exactly the throughput penalty the
+//! paper's Table III measures.
 
-use super::{AdamHp, MatrixOpt};
+use super::compose::GradientTransform;
 use crate::linalg::{matmul, matmul_tn, svd_jacobi_sweeps, transpose};
 use crate::tensor::Tensor;
 
-pub struct Galore {
+pub struct LowRankSvd {
     m: usize,
     n: usize,
     rank: usize,
     update_gap: usize,
-    hp: AdamHp,
-    /// Projection: if `left`, P is (m x r) and state lives in (r x n);
-    /// else P is (n x r) and state lives in (m x r).
+    /// Projection: if `left`, P is (m x r) and the compact domain is
+    /// (r x n); else P is (n x r) and the domain is (m x r).
     proj: Option<Vec<f32>>,
     left: bool,
-    mom: Vec<f32>,
-    vel: Vec<f32>,
     t: usize,
 }
 
-impl Galore {
-    pub fn new(m: usize, n: usize, rank: usize, update_gap: usize, hp: AdamHp) -> Self {
-        let rank = rank.min(m.min(n)).max(1);
-        let left = m <= n;
-        let state = if left { rank * n } else { m * rank };
-        Galore {
+impl LowRankSvd {
+    /// Rank is `min(m, n) / rank_denom`, at least 1 — delegated to
+    /// `memory::lowrank_r` so the accountant's analytic layout and
+    /// the live transform can never disagree on the rank formula.
+    pub fn new(m: usize, n: usize, rank_denom: usize, update_gap: usize) -> Self {
+        let rank = crate::memory::lowrank_r(&[m, n], rank_denom);
+        LowRankSvd {
             m,
             n,
             rank,
             update_gap: update_gap.max(1),
-            hp,
             proj: None,
-            left,
-            mom: vec![0.0; state],
-            vel: vec![0.0; state],
+            left: m <= n,
             t: 0,
         }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
     }
 
     fn refresh_projection(&mut self, g: &Tensor) {
@@ -54,81 +57,99 @@ impl Galore {
             transpose(&svd.vt, r, n) // (n x r)
         });
         // GaLore keeps subspace states across refreshes (its published
-        // implementation does not reset M/V), so we keep them too.
+        // implementation does not reset M/V), so the inner optimizer
+        // is *not* told about the refresh.
     }
 }
 
-impl MatrixOpt for Galore {
-    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
+impl GradientTransform for LowRankSvd {
+    fn domain_len(&self) -> usize {
+        if self.left {
+            self.rank * self.n
+        } else {
+            self.m * self.rank
+        }
+    }
+
+    fn down(&mut self, g: &Tensor, out: &mut [f32]) {
         assert_eq!(g.shape(), &[self.m, self.n]);
         if self.proj.is_none() || self.t % self.update_gap == 0 {
             self.refresh_projection(g);
         }
         self.t += 1;
-        let bc = self.hp.bias_correction(self.t);
-        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
         let p = self.proj.as_ref().unwrap();
         let (m, n, r) = (self.m, self.n, self.rank);
-
         // Project: R = P^T G (r x n)  or  R = G P (m x r).
         let proj_g = if self.left {
             matmul_tn(p, g.data(), m, r, n)
         } else {
             matmul(g.data(), p, m, n, r)
         };
+        out.copy_from_slice(&proj_g);
+    }
 
-        // Adam in the subspace.
-        let mut upd_low = vec![0.0f32; proj_g.len()];
-        for i in 0..proj_g.len() {
-            let gi = proj_g[i];
-            self.mom[i] = b1 * self.mom[i] + (1.0 - b1) * gi;
-            self.vel[i] = b2 * self.vel[i] + (1.0 - b2) * gi * gi;
-            upd_low[i] = bc * self.mom[i] / (self.vel[i].sqrt() + eps);
-        }
-
+    fn up(&mut self, _g: &Tensor, u: &[f32], _denoms: Option<&[f32]>, out: &mut [f32]) {
+        let p = self.proj.as_ref().expect("up before down");
+        let (m, n, r) = (self.m, self.n, self.rank);
         // Project back: U = P R  or  U = R P^T.
         let full = if self.left {
-            matmul(p, &upd_low, m, r, n)
+            matmul(p, u, m, r, n)
         } else {
             let pt = transpose(p, n, r);
-            matmul(&upd_low, &pt, m, r, n)
+            matmul(u, &pt, m, r, n)
         };
-        Tensor::new(&[m, n], full)
+        out.copy_from_slice(&full);
     }
 
     fn state_bytes(&self) -> usize {
-        let proj = self
-            .proj
-            .as_ref()
-            .map(|p| p.len())
-            .unwrap_or(if self.left { self.m * self.rank } else { self.n * self.rank });
-        (proj + self.mom.len() + self.vel.len()) * 4
-    }
-
-    fn label(&self) -> String {
-        format!("GaLore(r={})", self.rank)
+        let proj = self.proj.as_ref().map(|p| p.len()).unwrap_or(if self.left {
+            self.m * self.rank
+        } else {
+            self.n * self.rank
+        });
+        proj * 4
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{InnerSpec, TransformSpec};
+    use crate::optim::compose::{ComposeOpts, Composed};
+    use crate::optim::{AdamHp, MatrixOpt};
     use crate::rng::Rng;
+
+    fn galore(m: usize, n: usize, denom: usize, gap: usize) -> Composed {
+        Composed::build(
+            &[m, n],
+            TransformSpec::LowRank { rank_denom: denom },
+            InnerSpec::Adam,
+            &ComposeOpts {
+                hp: AdamHp::default(),
+                sgd_momentum: 0.9,
+                galore_update_gap: gap,
+                seed: 0,
+                runtime: None,
+                threads: 1,
+            },
+        )
+        .unwrap()
+    }
 
     #[test]
     fn state_layout_matches_table1() {
-        // m <= n: P (m x r) + M,V (r x n) => (mr + 2rn) floats.
-        let g = Galore::new(8, 32, 2, 10, AdamHp::default());
+        // m <= n, r = min/denom: P (m x r) + M,V (r x n).
+        let g = galore(8, 32, 4, 10); // r = 2
         assert_eq!(g.state_bytes(), (8 * 2 + 2 * 2 * 32) * 4);
         // m > n: projection on the right.
-        let g2 = Galore::new(32, 8, 2, 10, AdamHp::default());
+        let g2 = galore(32, 8, 4, 10);
         assert_eq!(g2.state_bytes(), (8 * 2 + 2 * 32 * 2) * 4);
     }
 
     #[test]
     fn update_lies_in_projected_subspace() {
         let mut rng = Rng::new(2);
-        let mut opt = Galore::new(12, 20, 3, 100, AdamHp::default());
+        let mut opt = galore(12, 20, 4, 100); // r = 3
         let g = Tensor::randn(&[12, 20], 1.0, &mut rng);
         let u = opt.direction(&g, 0.0);
         // u = P (something): each column of u is in span(P) (rank r).
@@ -140,18 +161,19 @@ mod tests {
     #[test]
     fn projection_refresh_interval() {
         let mut rng = Rng::new(4);
-        let mut opt = Galore::new(8, 8, 2, 3, AdamHp::default());
+        let mut tx = LowRankSvd::new(8, 8, 4, 3); // r = 2
+        let mut out = vec![0.0f32; tx.domain_len()];
         let g1 = Tensor::randn(&[8, 8], 1.0, &mut rng);
-        opt.direction(&g1, 0.0);
-        let p1 = opt.proj.clone().unwrap();
+        tx.down(&g1, &mut out);
+        let p1 = tx.proj.clone().unwrap();
         // Steps 2,3 keep the projection (t=1,2 not divisible by 3).
-        opt.direction(&g1, 0.0);
-        opt.direction(&g1, 0.0);
-        assert_eq!(opt.proj.clone().unwrap(), p1);
+        tx.down(&g1, &mut out);
+        tx.down(&g1, &mut out);
+        assert_eq!(tx.proj.clone().unwrap(), p1);
         // Step 4 (t=3) refreshes.
         let g2 = Tensor::randn(&[8, 8], 5.0, &mut rng);
-        opt.direction(&g2, 0.0);
-        assert_ne!(opt.proj.clone().unwrap(), p1);
+        tx.down(&g2, &mut out);
+        assert_ne!(tx.proj.clone().unwrap(), p1);
     }
 
     #[test]
@@ -163,7 +185,7 @@ mod tests {
         let v = Tensor::randn(&[1, 14], 1.0, &mut rng);
         let g_full = matmul(u.data(), v.data(), 10, 1, 14);
         let g = Tensor::new(&[10, 14], g_full);
-        let mut opt = Galore::new(10, 14, 2, 10, AdamHp::default());
+        let mut opt = galore(10, 14, 5, 10); // r = 2
         let upd = opt.direction(&g, 0.0);
         let dot: f64 = upd
             .data()
@@ -172,5 +194,13 @@ mod tests {
             .map(|(a, b)| (*a as f64) * (*b as f64))
             .sum();
         assert!(dot > 0.0, "update anti-correlated with gradient");
+    }
+
+    #[test]
+    fn state_counted_before_first_projection() {
+        // The projection is SVD-lazy but the accountant isn't: the
+        // expected P footprint is reported even before step 1.
+        let tx = LowRankSvd::new(8, 32, 4, 10);
+        assert_eq!(tx.state_bytes(), 8 * 2 * 4);
     }
 }

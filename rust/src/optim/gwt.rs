@@ -41,12 +41,120 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::compose::GradientTransform;
 use super::{AdamHp, MatrixOpt};
 use crate::runtime::{
     literal_f32, literal_f32_from, tensor_from_literal, Runtime,
 };
 use crate::tensor::Tensor;
 use crate::wavelet::WaveletBasis;
+
+/// The wavelet half of GWT, as a standalone [`GradientTransform`]:
+/// down-projection keeps the approximation band (rows × n≫level) for
+/// the inner optimizer; up-projection rebuilds the full coefficient
+/// row — inner update on the approximation band, saved detail bands
+/// divided by the inner's denominators (nearest-upsampled per band,
+/// exactly like the fused kernel) — and inverse-transforms it.
+///
+/// This is the engine behind every Wavelet × non-Adam composition
+/// (`gwt-2+adam8bit`, `gwt-db4-2+sgdm`, …). The Wavelet × Adam pair
+/// keeps the fused [`GwtAdam`] below (same math — pinned
+/// bit-identical by `compose::tests` — plus HLO routing and row
+/// sharding).
+pub struct Wavelet {
+    rows: usize,
+    cols: usize,
+    level: usize,
+    basis: WaveletBasis,
+    q: usize,
+    /// One row of coefficients (O(cols), like the fused kernel's row
+    /// buffers — `up` recomputes each row's forward transform from
+    /// the gradient it receives rather than persisting a full
+    /// rows×cols matrix, which would dwarf the optimizer-state bytes
+    /// the composition saves). Transient, excluded from accounting.
+    row_buf: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl Wavelet {
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        level: usize,
+        basis: WaveletBasis,
+    ) -> Result<Wavelet> {
+        basis.check_level(cols, level)?;
+        let q = basis.approx_width(cols, level);
+        Ok(Wavelet {
+            rows,
+            cols,
+            level,
+            basis,
+            q,
+            row_buf: vec![0.0; cols],
+            scratch: vec![0.0; cols],
+        })
+    }
+}
+
+impl GradientTransform for Wavelet {
+    fn domain_len(&self) -> usize {
+        self.rows * self.q
+    }
+
+    fn wants_denoms(&self) -> bool {
+        true
+    }
+
+    fn down(&mut self, g: &Tensor, out: &mut [f32]) {
+        assert_eq!(g.shape(), &[self.rows, self.cols]);
+        let (q, level) = (self.q, self.level);
+        for r in 0..self.rows {
+            self.row_buf.copy_from_slice(g.row(r));
+            self.basis.fwd_row(&mut self.row_buf, level, &mut self.scratch);
+            out[r * q..(r + 1) * q].copy_from_slice(&self.row_buf[..q]);
+        }
+    }
+
+    fn up(&mut self, g: &Tensor, u: &[f32], denoms: Option<&[f32]>, out: &mut [f32]) {
+        assert_eq!(g.shape(), &[self.rows, self.cols]);
+        let (n, q, level) = (self.cols, self.q, self.level);
+        for r in 0..self.rows {
+            // Recompute this row's coefficients from the gradient —
+            // deterministic, so bitwise the same values `down` saw —
+            // to avoid persisting a rows×cols coefficient matrix.
+            self.row_buf.copy_from_slice(g.row(r));
+            self.basis.fwd_row(&mut self.row_buf, level, &mut self.scratch);
+            let crow = &self.row_buf;
+            let orow = &mut out[r * n..(r + 1) * n];
+            orow[..q].copy_from_slice(&u[r * q..(r + 1) * q]);
+            match denoms {
+                Some(d) => {
+                    // Band-wise normalization of the pass-through
+                    // details, identical to the fused kernel: D_k is
+                    // divided by the approximation denominators
+                    // nearest-upsampled to width n>>k.
+                    let drow = &d[r * q..(r + 1) * q];
+                    let mut off = q;
+                    for k in (1..=level).rev() {
+                        let w = n >> k;
+                        let rep = 1usize << (level - k);
+                        for j in 0..w {
+                            orow[off + j] = crow[off + j] / drow[j / rep];
+                        }
+                        off += w;
+                    }
+                }
+                None => orow[q..].copy_from_slice(&crow[q..]),
+            }
+            self.basis.inv_row(orow, level, &mut self.scratch);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
 
 pub struct GwtAdam {
     rows: usize,

@@ -1,11 +1,33 @@
-//! Optimizer suite: GWT-Adam (the paper's contribution) plus every
-//! baseline its evaluation compares against.
+//! Optimizer suite, factored as *gradient transform × inner
+//! optimizer* compositions.
+//!
+//! The paper's claim is that GWT "can be seamlessly integrated with
+//! memory-intensive optimizers" — so integration is the API here,
+//! not a per-method monolith. Two orthogonal traits compose:
+//!
+//! * [`GradientTransform`] (see `compose.rs`) — down-project the
+//!   gradient into a compact domain and up-project the update back.
+//!   Impls: [`Wavelet`] (the paper's GWT), [`LowRankSvd`] (GaLore),
+//!   [`RandomProj`] (APOLLO), [`Identity`] (full-rank).
+//! * [`InnerOpt`] — the state machine running in that domain:
+//!   [`AdamCore`], [`Adam8bitCore`], [`AdamMiniCore`], [`SgdMCore`].
+//!
+//! [`Composed`] glues any pair behind the [`MatrixOpt`] contract, so
+//! `gwt-db4-2+adam8bit` (wavelet-compressed 8-bit Adam) is one spec
+//! string away instead of a new struct. The Wavelet × Adam pair is
+//! routed onto the fused [`GwtAdam`] engine — bit-identical math
+//! (pinned by `compose::tests`) plus the AOT/HLO manifest hot path
+//! and the row-sharded rust path. [`Muon`] and [`LoraSim`] stay
+//! standalone `MatrixOpt`s: their update rules are not a
+//! project/step/back-project pipeline.
 //!
 //! Routing follows the paper's module-wise strategy (§IV-A, App. E):
-//! *eligible* parameters (2D attention/MLP matrices) run the selected
-//! memory-efficient method at effective lr `lr·α`; all other
-//! parameters run plain full-rank Adam at lr. The Norm-growth Limiter
-//! (Fira) wraps each eligible parameter's update.
+//! *eligible* parameters (2D attention/MLP matrices) run the full
+//! composition at effective lr `lr·α`; all other parameters run the
+//! identity transform with the spec's format-wide inner
+//! (`OptSpec::non_eligible_inner`: 8-bit/SGD-M change representation
+//! everywhere, everything else falls back to plain Adam). The
+//! Norm-growth Limiter (Fira) wraps each eligible parameter's update.
 //!
 //! The trait contract: `direction(g, lr_eff)` returns the update
 //! direction `u` (bias correction included where the method defines
@@ -17,6 +39,7 @@ pub mod adam;
 pub mod adam8bit;
 pub mod adam_mini;
 pub mod apollo;
+pub mod compose;
 pub mod galore;
 pub mod gwt;
 pub mod limiter;
@@ -28,23 +51,24 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use adam::Adam;
-pub use adam8bit::Adam8bit;
-pub use adam_mini::AdamMini;
-pub use apollo::Apollo;
-pub use galore::Galore;
-pub use gwt::GwtAdam;
+pub use adam::AdamCore;
+pub use adam8bit::Adam8bitCore;
+pub use adam_mini::AdamMiniCore;
+pub use apollo::RandomProj;
+pub use compose::{ComposeOpts, Composed, GradientTransform, Identity, InnerOpt};
+pub use galore::LowRankSvd;
+pub use gwt::{GwtAdam, Wavelet};
 pub use limiter::NormGrowthLimiter;
 pub use lora::LoraSim;
 pub use muon::Muon;
-pub use sgdm::SgdM;
+pub use sgdm::SgdMCore;
 
-use crate::config::{GwtPath, OptSpec, TrainConfig};
+use crate::config::{GwtPath, OptSpec, TrainConfig, TransformSpec};
 use crate::memory::ParamShape;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
-/// Hyperparameters shared by the Adam family.
+/// Hyperparameters shared by the Adam-family inner optimizers.
 #[derive(Clone, Copy, Debug)]
 pub struct AdamHp {
     pub beta1: f32,
@@ -130,12 +154,14 @@ impl ParamOptimizer {
 }
 
 /// Build the per-parameter optimizer bank for a model, following the
-/// paper's module-wise routing. `runtime` enables the AOT HLO hot
-/// path for GWT/Adam steps where an artifact exists; `None` forces
-/// the pure-rust path (used by tests and high-level sweeps).
+/// paper's module-wise routing. Eligible 2D matrices get the full
+/// `<transform>+<inner>` composition (or the standalone MUON/LoRA
+/// rules); everything else runs the identity transform with the
+/// spec's format-wide inner. `runtime` enables the AOT HLO hot path
+/// for fused Wavelet×Adam steps where an artifact exists; `None`
+/// forces the pure-rust path (used by tests and high-level sweeps).
 /// `cfg.gwt_path` (with the legacy `GWT_OPT_PATH` env var as
-/// fallback) is resolved here, exactly once per bank — not per
-/// parameter inside `GwtAdam::new`.
+/// fallback) is resolved here, exactly once per bank.
 pub fn build_optimizers(
     params: &[ParamShape],
     cfg: &TrainConfig,
@@ -144,12 +170,12 @@ pub fn build_optimizers(
     let hp = AdamHp::from_config(cfg);
     // Thread-budget routing: a multi-param bank is sharded across
     // parameters by `step_bank`, so the per-row engine inside each
-    // GwtAdam stays serial (nesting the two would oversubscribe
+    // fused GwtAdam stays serial (nesting the two would oversubscribe
     // threads²). A single-param bank has no bank-level parallelism to
     // exploit, so the whole budget goes to GwtAdam's row sharding.
     let threads = if params.len() == 1 { cfg.resolve_threads() } else { 1 };
-    // Forcing the rust path simply withholds the runtime from GwtAdam
-    // (no artifact lookup happens at all).
+    // Forcing the rust path simply withholds the runtime from the
+    // fused engine (no artifact lookup happens at all).
     let gwt_runtime = match cfg.resolve_gwt_path() {
         GwtPath::Rust => None,
         GwtPath::Auto => runtime,
@@ -158,35 +184,26 @@ pub fn build_optimizers(
         .iter()
         .map(|p| {
             let eligible = p.eligible && p.shape.len() == 2;
+            let opts = ComposeOpts {
+                hp,
+                sgd_momentum: cfg.sgd_momentum,
+                galore_update_gap: cfg.galore_update_gap,
+                seed: cfg.seed ^ hash_name(&p.name),
+                runtime: gwt_runtime.clone(),
+                threads,
+            };
             let (inner, alpha): (Box<dyn MatrixOpt>, f32) = if eligible {
                 let (m, n) = (p.shape[0], p.shape[1]);
                 let alpha = if cfg.modulewise_lr { cfg.alpha } else { 1.0 };
                 let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
-                    OptSpec::Adam => Box::new(Adam::new(&p.shape, hp)),
-                    OptSpec::Gwt { level, basis } => Box::new(
-                        GwtAdam::new_with_basis(
-                            m,
-                            n,
-                            level,
-                            basis,
-                            hp,
-                            gwt_runtime.clone(),
-                        )?
-                        .with_threads(threads),
-                    ),
-                    OptSpec::Galore { rank_denom } => Box::new(Galore::new(
+                    OptSpec::Composed { transform, inner } => {
+                        Box::new(Composed::build(&p.shape, transform, inner, &opts)?)
+                    }
+                    OptSpec::Muon => Box::new(Muon::new(
                         m,
                         n,
-                        (m.min(n) / rank_denom).max(1),
-                        cfg.galore_update_gap,
-                        hp,
-                    )),
-                    OptSpec::Apollo { rank_denom } => Box::new(Apollo::new(
-                        m,
-                        n,
-                        (m.min(n) / rank_denom).max(1),
-                        hp,
-                        cfg.seed ^ hash_name(&p.name),
+                        cfg.muon_momentum,
+                        cfg.muon_ns_iters,
                     )),
                     OptSpec::Lora { rank_denom } => Box::new(LoraSim::new(
                         m,
@@ -195,20 +212,17 @@ pub fn build_optimizers(
                         hp,
                         cfg.seed ^ hash_name(&p.name),
                     )),
-                    OptSpec::AdamMini => Box::new(AdamMini::new(&p.shape, hp)),
-                    OptSpec::Muon => Box::new(Muon::new(m, n, 0.95, 5)),
-                    OptSpec::Adam8bit => Box::new(Adam8bit::new(&p.shape, hp)),
-                    OptSpec::SgdM => Box::new(SgdM::new(&p.shape, 0.9)),
                 };
                 (opt, alpha)
             } else {
                 // Non-eligible params: representation may change
                 // (8-bit / sgd are format-wide), span never does.
-                let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
-                    OptSpec::Adam8bit => Box::new(Adam8bit::new(&p.shape, hp)),
-                    OptSpec::SgdM => Box::new(SgdM::new(&p.shape, 0.9)),
-                    _ => Box::new(Adam::new(&p.shape, hp)),
-                };
+                let opt: Box<dyn MatrixOpt> = Box::new(Composed::build(
+                    &p.shape,
+                    TransformSpec::Identity,
+                    cfg.optimizer.non_eligible_inner(),
+                    &opts,
+                )?);
                 (opt, 1.0)
             };
             let limiter = (eligible && cfg.nl_gamma > 0.0)
@@ -284,16 +298,21 @@ mod tests {
     #[test]
     fn build_bank_for_every_method() {
         for opt in [
-            OptSpec::Adam,
+            OptSpec::adam(),
             OptSpec::gwt(2),
             OptSpec::gwt_basis(crate::wavelet::WaveletBasis::Db4, 2),
-            OptSpec::Galore { rank_denom: 4 },
-            OptSpec::Apollo { rank_denom: 4 },
-            OptSpec::Lora { rank_denom: 4 },
-            OptSpec::AdamMini,
+            OptSpec::galore(4),
+            OptSpec::apollo(4),
+            OptSpec::lora(4),
+            OptSpec::adam_mini(),
             OptSpec::Muon,
-            OptSpec::Adam8bit,
-            OptSpec::SgdM,
+            OptSpec::adam8bit(),
+            OptSpec::sgdm(),
+            OptSpec::parse("gwt-2+adam8bit").unwrap(),
+            OptSpec::parse("gwt-db4-2+sgdm").unwrap(),
+            OptSpec::parse("galore-4+adam8bit").unwrap(),
+            OptSpec::parse("apollo-4+sgdm").unwrap(),
+            OptSpec::parse("gwt-3+adam-mini").unwrap(),
         ] {
             let bank =
                 build_optimizers(&nano_params(), &cfg_with(opt), None).unwrap();
@@ -303,7 +322,9 @@ mod tests {
 
     #[test]
     fn gwt_bank_uses_less_state_than_adam() {
-        let adam = build_optimizers(&nano_params(), &cfg_with(OptSpec::Adam), None).unwrap();
+        let adam =
+            build_optimizers(&nano_params(), &cfg_with(OptSpec::adam()), None)
+                .unwrap();
         let gwt2 =
             build_optimizers(&nano_params(), &cfg_with(OptSpec::gwt(2)), None)
                 .unwrap();
@@ -317,6 +338,28 @@ mod tests {
         );
         assert!(g2 < a, "gwt2 {g2} vs adam {a}");
         assert!(g3 < g2, "gwt3 {g3} vs gwt2 {g2}");
+    }
+
+    #[test]
+    fn composed_inners_stack_their_savings() {
+        // The acceptance compositions: wavelet-compressed 8-bit Adam
+        // and wavelet-compressed SGD-M must undercut wavelet-Adam.
+        let bytes = |spec: &str| {
+            total_state_bytes(
+                &build_optimizers(
+                    &nano_params(),
+                    &cfg_with(OptSpec::parse(spec).unwrap()),
+                    None,
+                )
+                .unwrap(),
+            )
+        };
+        let gwt2_adam = bytes("gwt-2+adam");
+        assert_eq!(gwt2_adam, bytes("gwt-2"), "legacy alias parity");
+        let gwt2_8bit = bytes("gwt-2+adam8bit");
+        let gwt2_sgdm = bytes("gwt-db4-2+sgdm");
+        assert!(gwt2_8bit < gwt2_adam, "{gwt2_8bit} vs {gwt2_adam}");
+        assert!(gwt2_sgdm < gwt2_adam, "{gwt2_sgdm} vs {gwt2_adam}");
     }
 
     #[test]
@@ -337,10 +380,10 @@ mod tests {
 
     #[test]
     fn gwt_path_rust_builds_rust_bank() {
-        // `gwt_path = rust` withholds the runtime from GwtAdam: with
-        // no runtime in play the bank builds identically, and the
-        // setting shows up in the config summary (resolved once per
-        // bank, not read per parameter from the environment).
+        // `gwt_path = rust` withholds the runtime from the fused
+        // engine: with no runtime in play the bank builds identically,
+        // and the setting shows up in the config summary (resolved
+        // once per bank, not read per parameter from the environment).
         let mut cfg = cfg_with(OptSpec::gwt(2));
         cfg.gwt_path = crate::config::GwtPath::Rust;
         let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
@@ -365,18 +408,77 @@ mod tests {
     }
 
     #[test]
+    fn non_eligible_params_follow_format_wide_inner() {
+        // A wavelet-8bit composition quantizes the *whole* bank's
+        // states: non-eligible params run Identity+Adam8bit.
+        let cfg = cfg_with(OptSpec::parse("gwt-2+adam8bit").unwrap());
+        let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
+        for (p, o) in nano_params().iter().zip(&bank) {
+            if p.eligible {
+                assert_eq!(o.label(), "GWT-2+8bit-Adam", "{}", p.name);
+            } else {
+                assert_eq!(o.label(), "8bit-Adam", "{}", p.name);
+            }
+        }
+        // ...while transform-only specs leave them on plain Adam.
+        let cfg = cfg_with(OptSpec::gwt(2));
+        let bank = build_optimizers(&nano_params(), &cfg, None).unwrap();
+        for (p, o) in nano_params().iter().zip(&bank) {
+            if !p.eligible {
+                assert_eq!(o.label(), "Adam", "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_and_muon_knobs_reach_the_optimizers() {
+        // The previously hardcoded hyperparameters now come from the
+        // config: a momentum of 0 turns SGD-M into plain SGD
+        // (first-step direction == gradient, second unchanged by
+        // history? no — with momentum 0, u == g always).
+        let shape = ParamShape {
+            name: "layers.00.attn.wq".into(),
+            shape: vec![8, 8],
+            eligible: true,
+        };
+        let mut cfg = cfg_with(OptSpec::sgdm());
+        cfg.sgd_momentum = 0.0;
+        cfg.nl_gamma = 0.0;
+        cfg.alpha = 1.0;
+        let mut bank =
+            build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap();
+        let mut rng = Rng::new(5);
+        let g = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let mut w = Tensor::zeros(&[8, 8]);
+        bank[0].apply(&mut w, &g, 1.0);
+        bank[0].apply(&mut w, &g, 1.0);
+        // Two unit-lr steps of momentum-less SGD: w == -2g exactly.
+        for (wi, gi) in w.data().iter().zip(g.data()) {
+            assert!((wi + 2.0 * gi).abs() < 1e-6, "{wi} vs {gi}");
+        }
+        // MUON knobs flow through construction (smoke: builds + steps).
+        let mut cfg = cfg_with(OptSpec::Muon);
+        cfg.muon_momentum = 0.5;
+        cfg.muon_ns_iters = 3;
+        let mut bank =
+            build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap();
+        let s = bank[0].apply(&mut w, &g, 0.01);
+        assert!(s.update_norm > 0.0);
+    }
+
+    #[test]
     fn applying_updates_moves_weights_downhill() {
         // Quadratic bowl: g = w. Every optimizer must shrink ||w||.
         for opt in [
-            OptSpec::Adam,
+            OptSpec::adam(),
             OptSpec::gwt(2),
             OptSpec::gwt_basis(crate::wavelet::WaveletBasis::Db4, 2),
-            OptSpec::Galore { rank_denom: 4 },
-            OptSpec::Apollo { rank_denom: 4 },
-            OptSpec::AdamMini,
+            OptSpec::galore(4),
+            OptSpec::apollo(4),
+            OptSpec::adam_mini(),
             OptSpec::Muon,
-            OptSpec::Adam8bit,
-            OptSpec::SgdM,
+            OptSpec::adam8bit(),
+            OptSpec::sgdm(),
         ] {
             let shape = ParamShape {
                 name: "layers.00.attn.wq".into(),
@@ -398,6 +500,44 @@ mod tests {
             assert!(
                 w.frob_norm() < before * 0.8,
                 "{opt:?}: {} -> {}",
+                before,
+                w.frob_norm()
+            );
+        }
+    }
+
+    #[test]
+    fn composed_specs_move_weights_downhill_with_limiter() {
+        // The new compositions under the paper-faithful pipeline
+        // (NL limiter on): same quadratic bowl, looser bound — the
+        // claim is stable progress, not Adam-rate convergence.
+        for spec in [
+            "gwt-2+adam8bit",
+            "gwt-db4-2+sgdm",
+            "galore-4+sgdm",
+            "apollo-4+adam8bit",
+            "gwt-2+adam-mini",
+        ] {
+            let shape = ParamShape {
+                name: "layers.00.attn.wq".into(),
+                shape: vec![16, 16],
+                eligible: true,
+            };
+            let mut cfg = cfg_with(OptSpec::parse(spec).unwrap());
+            cfg.alpha = 1.0;
+            cfg.nl_gamma = 1.01;
+            let mut bank =
+                build_optimizers(std::slice::from_ref(&shape), &cfg, None).unwrap();
+            let mut rng = Rng::new(2);
+            let mut w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+            let before = w.frob_norm();
+            for _ in 0..60 {
+                let g = w.clone();
+                bank[0].apply(&mut w, &g, 0.05);
+            }
+            assert!(
+                w.frob_norm() < before,
+                "{spec}: {} -> {}",
                 before,
                 w.frob_norm()
             );

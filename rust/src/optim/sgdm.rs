@@ -1,40 +1,39 @@
-//! SGD with momentum — the memory floor every method is compared
-//! against (the paper: "GWT at high l approaches SGD-level memory").
+//! SGD-with-momentum core — the memory floor every method is
+//! compared against (the paper: "GWT at high l approaches SGD-level
+//! memory"). As an inner optimizer it composes with any transform:
+//! `gwt-db4-2+sgdm` keeps a single momentum buffer over the wavelet
+//! approximation band while the detail bands pass through raw (the
+//! core has no second moment, so its reported denominators are 1).
 
-use super::MatrixOpt;
-use crate::tensor::Tensor;
+use super::compose::InnerOpt;
 
-pub struct SgdM {
+pub struct SgdMCore {
     momentum: f32,
     buf: Vec<f32>,
-    shape: Vec<usize>,
 }
 
-impl SgdM {
-    pub fn new(shape: &[usize], momentum: f32) -> Self {
-        SgdM {
-            momentum,
-            buf: vec![0.0; shape.iter().product()],
-            shape: shape.to_vec(),
-        }
+impl SgdMCore {
+    pub fn new(len: usize, momentum: f32) -> SgdMCore {
+        SgdMCore { momentum, buf: vec![0.0; len] }
     }
 }
 
-impl MatrixOpt for SgdM {
-    fn direction(&mut self, g: &Tensor, _lr_eff: f32) -> Tensor {
-        assert_eq!(g.shape(), &self.shape[..]);
-        for (b, gi) in self.buf.iter_mut().zip(g.data()) {
+impl InnerOpt for SgdMCore {
+    fn step(&mut self, c: &[f32], out: &mut [f32], denoms: Option<&mut [f32]>) -> f32 {
+        for (b, gi) in self.buf.iter_mut().zip(c) {
             *b = self.momentum * *b + *gi;
         }
-        Tensor::new(&self.shape, self.buf.clone())
+        out.copy_from_slice(&self.buf);
+        if let Some(d) = denoms {
+            // No adaptive second moment: pass-through channels are
+            // left unscaled.
+            d.fill(1.0);
+        }
+        1.0
     }
 
     fn state_bytes(&self) -> usize {
         self.buf.len() * 4
-    }
-
-    fn label(&self) -> String {
-        "SGD-M".into()
     }
 }
 
@@ -44,18 +43,30 @@ mod tests {
 
     #[test]
     fn zero_momentum_is_plain_sgd() {
-        let mut o = SgdM::new(&[3], 0.0);
-        let g = Tensor::new(&[3], vec![1.0, -2.0, 0.5]);
-        assert_eq!(o.direction(&g, 0.0).data(), g.data());
+        let mut o = SgdMCore::new(3, 0.0);
+        let g = [1.0, -2.0, 0.5];
+        let mut u = [0.0f32; 3];
+        assert_eq!(o.step(&g, &mut u, None), 1.0);
+        assert_eq!(u, g);
     }
 
     #[test]
     fn momentum_geometric_sum() {
-        let mut o = SgdM::new(&[1], 0.5);
-        let g = Tensor::new(&[1], vec![1.0]);
-        o.direction(&g, 0.0);
-        o.direction(&g, 0.0);
-        let u = o.direction(&g, 0.0);
-        assert!((u.data()[0] - 1.75).abs() < 1e-6);
+        let mut o = SgdMCore::new(1, 0.5);
+        let g = [1.0];
+        let mut u = [0.0f32];
+        o.step(&g, &mut u, None);
+        o.step(&g, &mut u, None);
+        o.step(&g, &mut u, None);
+        assert!((u[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn denominators_are_unit() {
+        let mut o = SgdMCore::new(2, 0.9);
+        let mut u = [0.0f32; 2];
+        let mut d = [0.0f32; 2];
+        o.step(&[3.0, -1.0], &mut u, Some(&mut d));
+        assert_eq!(d, [1.0, 1.0]);
     }
 }

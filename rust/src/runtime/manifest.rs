@@ -160,6 +160,12 @@ impl Manifest {
     /// (`gwt_adam_db4_l2_64x160`), which — since no non-Haar lowering
     /// exists yet — cleanly resolves to `None`, routing those
     /// optimizers onto the rust path instead of erroring.
+    ///
+    /// Only the fused Wavelet × Adam composition consumes these keys:
+    /// the artifact bakes Adam's moment update into the kernel, so a
+    /// composed spec with any other inner (`gwt-2+adam8bit`,
+    /// `gwt-db4-2+sgdm`) never performs a lookup and always runs the
+    /// generic transform/inner engine in rust.
     pub fn gwt_adam_key(
         &self,
         basis: WaveletBasis,

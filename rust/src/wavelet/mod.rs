@@ -71,10 +71,11 @@ impl WaveletBasis {
         }
     }
 
-    /// The one GWT label-spelling rule, shared by `OptSpec::label`,
-    /// `memory::Method::label`, and `GwtAdam::label`: Haar keeps the
-    /// paper's bare `GWT-l`; every other basis is qualified
-    /// (`GWT-DB4-l`) so labels parse back to the same spec.
+    /// The one GWT label-spelling rule, shared by
+    /// `config::TransformSpec::label` (hence every spec/accountant
+    /// label) and `GwtAdam::label`: Haar keeps the paper's bare
+    /// `GWT-l`; every other basis is qualified (`GWT-DB4-l`) so
+    /// labels parse back to the same spec.
     pub fn gwt_label(self, level: usize) -> String {
         match self {
             WaveletBasis::Haar => format!("GWT-{level}"),

@@ -57,7 +57,7 @@ fn gwt_finetune_beats_chance() {
 fn adam_finetune_beats_chance_binary() {
     let Some(rt) = runtime() else { return };
     let task = easy_task(2, 12);
-    let mut ft = FineTuner::new(rt, ft_cfg(OptSpec::Adam), 2, None).unwrap();
+    let mut ft = FineTuner::new(rt, ft_cfg(OptSpec::adam()), 2, None).unwrap();
     let out = ft.run(&task, 2).unwrap();
     assert!(out.accuracy > 0.7, "adam acc {}", out.accuracy);
 }
@@ -66,7 +66,7 @@ fn adam_finetune_beats_chance_binary() {
 fn zero_head_starts_at_chance() {
     let Some(rt) = runtime() else { return };
     let task = easy_task(4, 13);
-    let ft = FineTuner::new(rt, ft_cfg(OptSpec::Adam), 4, None).unwrap();
+    let ft = FineTuner::new(rt, ft_cfg(OptSpec::adam()), 4, None).unwrap();
     let acc = ft.accuracy(&task).unwrap();
     // Untrained zero head: argmax is constant => accuracy ~ class
     // prior of one label (chance-ish).
@@ -79,7 +79,7 @@ fn lora_and_galore_paths_run() {
     let task = easy_task(3, 14);
     for opt in [
         OptSpec::Lora { rank_denom: 64 },
-        OptSpec::Galore { rank_denom: 64 },
+        OptSpec::galore(64),
     ] {
         let mut ft = FineTuner::new(rt.clone(), ft_cfg(opt), 3, None).unwrap();
         let out = ft.run(&task, 1).unwrap();

@@ -1,0 +1,133 @@
+//! Measured-vs-analytic memory parity: for every optimizer
+//! composition, the accountant's implementation-unit prediction
+//! (`memory::measured_account`) must equal the live
+//! `optim::total_state_bytes` of a freshly built bank, parameter set
+//! by parameter set. This is what makes the memory columns of the
+//! benches trustworthy — they are analytic, but pinned to the bytes
+//! the optimizer actually holds.
+
+use gwt::config::{InnerSpec, OptSpec, TrainConfig, TransformSpec};
+use gwt::memory::{measured_account, ParamShape};
+use gwt::optim::{build_optimizers, total_state_bytes};
+use gwt::wavelet::WaveletBasis;
+
+/// The full composition grid plus the standalone specs.
+fn all_specs() -> Vec<OptSpec> {
+    let mut transforms = vec![TransformSpec::Identity];
+    for basis in WaveletBasis::ALL {
+        for level in 1..=3 {
+            transforms.push(TransformSpec::wavelet(basis, level));
+        }
+    }
+    for denom in [4, 8] {
+        transforms.push(TransformSpec::LowRank { rank_denom: denom });
+        transforms.push(TransformSpec::RandomProj { rank_denom: denom });
+    }
+    let inners = [
+        InnerSpec::Adam,
+        InnerSpec::Adam8bit,
+        InnerSpec::AdamMini,
+        InnerSpec::SgdM,
+    ];
+    let mut specs = Vec::new();
+    for t in transforms {
+        for i in inners {
+            specs.push(OptSpec::composed(t, i));
+        }
+    }
+    specs.push(OptSpec::Muon);
+    specs.push(OptSpec::lora(4));
+    specs.push(OptSpec::lora(8));
+    specs
+}
+
+fn preset_shapes(name: &str) -> Vec<ParamShape> {
+    gwt::config::presets::find(name).unwrap().param_shapes()
+}
+
+#[test]
+fn measured_equals_analytic_for_every_spec_on_presets() {
+    for preset in ["nano", "micro", "gpt-nano"] {
+        let shapes = preset_shapes(preset);
+        for spec in all_specs() {
+            let cfg = TrainConfig {
+                preset: preset.into(),
+                optimizer: spec,
+                ..Default::default()
+            };
+            let bank = build_optimizers(&shapes, &cfg, None)
+                .unwrap_or_else(|e| panic!("{preset} {spec:?}: {e:#}"));
+            let live = total_state_bytes(&bank);
+            let analytic = measured_account(&shapes, spec).state_bytes;
+            assert_eq!(
+                live, analytic,
+                "{preset} {spec:?}: measured {live} != analytic {analytic}"
+            );
+        }
+    }
+}
+
+#[test]
+fn measured_parity_survives_training_steps() {
+    // State bytes are static for every method except GaLore's lazily
+    // materialized projection — which the accountant anticipates.
+    // After stepping, measured and analytic must still agree.
+    use gwt::rng::Rng;
+    use gwt::tensor::Tensor;
+    let shapes = preset_shapes("nano");
+    for spec in ["gwt-2+adam8bit", "galore-4+sgdm", "apollo-4", "gwt-db4-2+sgdm"] {
+        let opt = OptSpec::parse(spec).unwrap();
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut rng = Rng::new(3);
+        let mut ws: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        for _ in 0..2 {
+            let grads: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            gwt::optim::step_bank(&mut bank, &mut ws, &grads, 0.01, 1);
+        }
+        assert_eq!(
+            total_state_bytes(&bank),
+            measured_account(&shapes, opt).state_bytes,
+            "{spec}"
+        );
+    }
+}
+
+#[test]
+fn acceptance_compositions_report_their_savings() {
+    // The two acceptance pairs: state-byte reductions vs `gwt-2+adam`
+    // reported by the accountant AND verified against the measured
+    // bank, on the trainable nano preset.
+    let shapes = preset_shapes("nano");
+    let bytes = |s: &str| {
+        let opt = OptSpec::parse(s).unwrap();
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        let live = total_state_bytes(&build_optimizers(&shapes, &cfg, None).unwrap());
+        let analytic = measured_account(&shapes, opt).state_bytes;
+        assert_eq!(live, analytic, "{s}");
+        live
+    };
+    let baseline = bytes("gwt-2+adam");
+    let with_8bit = bytes("gwt-2+adam8bit");
+    let with_sgdm = bytes("gwt-db4-2+sgdm");
+    assert!(
+        with_8bit < baseline,
+        "gwt-2+adam8bit {with_8bit} must undercut gwt-2+adam {baseline}"
+    );
+    assert!(
+        with_sgdm < baseline,
+        "gwt-db4-2+sgdm {with_sgdm} must undercut gwt-2+adam {baseline}"
+    );
+    println!(
+        "state bytes: gwt-2+adam {baseline}, gwt-2+adam8bit {with_8bit} \
+         (-{:.0}%), gwt-db4-2+sgdm {with_sgdm} (-{:.0}%)",
+        100.0 * (1.0 - with_8bit as f64 / baseline as f64),
+        100.0 * (1.0 - with_sgdm as f64 / baseline as f64),
+    );
+}

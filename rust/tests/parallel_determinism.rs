@@ -8,7 +8,7 @@
 //! Runs entirely on the pure-rust optimizer paths (no artifacts
 //! needed), so it exercises the full bank: GWT row sharding included.
 
-use gwt::config::{OptSpec, TrainConfig};
+use gwt::config::{InnerSpec, OptSpec, TrainConfig, TransformSpec};
 use gwt::memory::ParamShape;
 use gwt::optim::{build_optimizers, step_bank};
 use gwt::pool::{chunk_bounds, scoped_chunks_mut};
@@ -21,18 +21,37 @@ fn nano_shapes() -> Vec<ParamShape> {
 }
 
 const ALL_SPECS: &[OptSpec] = &[
-    OptSpec::Adam,
+    OptSpec::adam(),
     OptSpec::gwt(2),
     OptSpec::gwt(3),
     OptSpec::gwt_basis(WaveletBasis::Db4, 2),
     OptSpec::gwt_basis(WaveletBasis::Db4, 3),
-    OptSpec::Galore { rank_denom: 4 },
-    OptSpec::Apollo { rank_denom: 4 },
-    OptSpec::Lora { rank_denom: 4 },
-    OptSpec::AdamMini,
+    OptSpec::galore(4),
+    OptSpec::apollo(4),
+    OptSpec::lora(4),
+    OptSpec::adam_mini(),
     OptSpec::Muon,
-    OptSpec::Adam8bit,
-    OptSpec::SgdM,
+    OptSpec::adam8bit(),
+    OptSpec::sgdm(),
+    // Composed specs: every generic transform x inner pairing class
+    // must honor the same bank-level bit-identity contract.
+    OptSpec::composed(
+        TransformSpec::wavelet(WaveletBasis::Haar, 2),
+        InnerSpec::Adam8bit,
+    ),
+    OptSpec::composed(
+        TransformSpec::wavelet(WaveletBasis::Db4, 2),
+        InnerSpec::SgdM,
+    ),
+    OptSpec::composed(
+        TransformSpec::wavelet(WaveletBasis::Haar, 3),
+        InnerSpec::AdamMini,
+    ),
+    OptSpec::composed(TransformSpec::LowRank { rank_denom: 4 }, InnerSpec::SgdM),
+    OptSpec::composed(
+        TransformSpec::RandomProj { rank_denom: 4 },
+        InnerSpec::Adam8bit,
+    ),
 ];
 
 fn init_weights(shapes: &[ParamShape], seed: u64) -> Vec<Tensor> {

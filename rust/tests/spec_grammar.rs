@@ -1,0 +1,157 @@
+//! The `<transform>+<inner>` spec grammar: parse/label round-trip
+//! over the full composition grid, legacy-alias equivalence, and
+//! precise parse errors on junk. These strings are user-facing at
+//! three surfaces — CLI `-s optimizer=...`, config files, and
+//! checkpoint/curve labels — so the round-trip property is a
+//! compatibility contract, not a convenience.
+
+use gwt::config::{InnerSpec, OptSpec, TransformSpec};
+use gwt::wavelet::WaveletBasis;
+
+fn all_transforms() -> Vec<TransformSpec> {
+    let mut out = vec![TransformSpec::Identity];
+    for basis in WaveletBasis::ALL {
+        for level in 1..=3 {
+            out.push(TransformSpec::wavelet(basis, level));
+        }
+    }
+    for denom in [4, 8] {
+        out.push(TransformSpec::LowRank { rank_denom: denom });
+        out.push(TransformSpec::RandomProj { rank_denom: denom });
+    }
+    out
+}
+
+const ALL_INNERS: [InnerSpec; 4] = [
+    InnerSpec::Adam,
+    InnerSpec::Adam8bit,
+    InnerSpec::AdamMini,
+    InnerSpec::SgdM,
+];
+
+#[test]
+fn label_parse_roundtrip_over_the_full_grid() {
+    for t in all_transforms() {
+        for i in ALL_INNERS {
+            let spec = OptSpec::composed(t, i);
+            let label = spec.label();
+            let back = OptSpec::parse(&label)
+                .unwrap_or_else(|e| panic!("label '{label}' did not parse: {e:#}"));
+            assert_eq!(back, spec, "round-trip failed for '{label}'");
+            // Labels are also case-stable through the parser.
+            assert_eq!(OptSpec::parse(&label.to_lowercase()).unwrap(), spec);
+            assert_eq!(OptSpec::parse(&label.to_uppercase()).unwrap(), spec);
+        }
+    }
+    // Standalone specs round-trip too.
+    for spec in [OptSpec::Muon, OptSpec::lora(4), OptSpec::lora(64)] {
+        assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
+    }
+}
+
+#[test]
+fn explicit_plus_form_always_parses() {
+    // Even when the label uses a legacy spelling (`GWT-2`, `Adam`),
+    // the fully explicit `<transform>+<inner>` spelling is accepted.
+    for t in all_transforms() {
+        for i in ALL_INNERS {
+            let t_tok = match t {
+                TransformSpec::Identity => "id".to_string(),
+                other => other.label().to_lowercase(),
+            };
+            let i_tok = i.label().to_lowercase();
+            let s = format!("{t_tok}+{i_tok}");
+            assert_eq!(
+                OptSpec::parse(&s).unwrap(),
+                OptSpec::composed(t, i),
+                "explicit form '{s}'"
+            );
+        }
+    }
+}
+
+#[test]
+fn legacy_aliases_equal_adam_inner_compositions() {
+    for (legacy, explicit) in [
+        ("gwt-2", "gwt-2+adam"),
+        ("gwt-db4-3", "gwt-db4-3+adam"),
+        ("gwt-haar-2", "gwt-2+adam"),
+        ("galore-4", "galore-4+adam"),
+        ("galore-1/4", "galore-4+adam"),
+        ("apollo-8", "apollo-1/8+adam"),
+        ("adam", "id+adam"),
+        ("adam8bit", "identity+adam8bit"),
+        ("8bit-adam", "id+8bit-adam"),
+        ("adam-mini", "id+adammini"),
+        ("sgdm", "full+sgd-m"),
+        ("sgd", "id+sgdm"),
+    ] {
+        assert_eq!(
+            OptSpec::parse(legacy).unwrap(),
+            OptSpec::parse(explicit).unwrap(),
+            "{legacy} vs {explicit}"
+        );
+    }
+    // And the aliases hit the intended constructors.
+    assert_eq!(OptSpec::parse("gwt-2").unwrap(), OptSpec::gwt(2));
+    assert_eq!(
+        OptSpec::parse("gwt-db4-2").unwrap(),
+        OptSpec::gwt_basis(WaveletBasis::Db4, 2)
+    );
+    assert_eq!(OptSpec::parse("galore-1/4").unwrap(), OptSpec::galore(4));
+    assert_eq!(OptSpec::parse("apollo-1/4").unwrap(), OptSpec::apollo(4));
+    assert_eq!(OptSpec::parse("adam").unwrap(), OptSpec::adam());
+    assert_eq!(OptSpec::parse("lora-1/4").unwrap(), OptSpec::lora(4));
+}
+
+#[test]
+fn junk_specs_fail_with_precise_messages() {
+    let err = |s: &str| format!("{:#}", OptSpec::parse(s).unwrap_err());
+
+    // Dangling '+' on either side.
+    assert!(err("gwt-2+").contains("missing inner optimizer"), "{}", err("gwt-2+"));
+    assert!(err("+adam").contains("missing gradient transform"), "{}", err("+adam"));
+    assert!(err("+").contains("missing gradient transform"));
+
+    // A transform in inner position names the mistake.
+    let e = err("gwt-2+galore-4");
+    assert!(e.contains("'galore-4'") && e.contains("not an inner optimizer"), "{e}");
+    let e = err("gwt-2+gwt-3");
+    assert!(e.contains("not an inner optimizer"), "{e}");
+
+    // An inner in transform position names the mistake the other way.
+    let e = err("adam+adam8bit");
+    assert!(e.contains("'adam'") && e.contains("not a gradient transform"), "{e}");
+
+    // Standalone optimizers refuse to compose, in either position.
+    assert!(err("gwt-2+muon").contains("standalone"));
+    assert!(err("muon+adam").contains("standalone"));
+    assert!(err("lora-1/4+adam").contains("standalone"));
+    assert!(err("gwt-2+lora-1/4").contains("standalone"));
+
+    // Arity and payload errors.
+    assert!(err("gwt-2+adam+sgdm").contains("exactly one '+'"));
+    assert!(err("gwt-x+adam").contains("gwt level"));
+    assert!(err("galore-0+adam").contains("positive"));
+    assert!(err("gwt-2+frobnicate").contains("unknown inner optimizer"));
+    assert!(err("frobnicate+adam").contains("unknown gradient transform"));
+    assert!(err("frobnicate").contains("unknown optimizer spec"));
+}
+
+#[test]
+fn summary_and_trainer_labels_roundtrip() {
+    // The `summary()` / checkpoint-facing spelling is the label — it
+    // must parse back to the configured spec for every composition.
+    use gwt::config::TrainConfig;
+    for spec in [
+        OptSpec::gwt(2),
+        OptSpec::parse("gwt-db4-2+adam8bit").unwrap(),
+        OptSpec::parse("galore-4+sgdm").unwrap(),
+        OptSpec::adam8bit(),
+        OptSpec::Muon,
+    ] {
+        let cfg = TrainConfig { optimizer: spec, ..Default::default() };
+        let shown = cfg.summary()["optimizer"].clone();
+        assert_eq!(OptSpec::parse(&shown).unwrap(), spec, "summary '{shown}'");
+    }
+}

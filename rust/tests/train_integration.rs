@@ -53,7 +53,7 @@ fn gwt_training_reduces_loss() {
 fn adam_training_reduces_loss() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 2);
-    let mut t = Trainer::new(rt, cfg(OptSpec::Adam, 20), &loader).unwrap();
+    let mut t = Trainer::new(rt, cfg(OptSpec::adam(), 20), &loader).unwrap();
     let first = t.train_step().unwrap();
     for _ in 0..19 {
         t.train_step().unwrap();
@@ -164,7 +164,7 @@ fn gwt_state_smaller_than_adam_in_live_trainers() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 7);
     let adam =
-        Trainer::new(rt.clone(), cfg(OptSpec::Adam, 1), &loader).unwrap();
+        Trainer::new(rt.clone(), cfg(OptSpec::adam(), 1), &loader).unwrap();
     let gwt3 = Trainer::new(rt, cfg(OptSpec::gwt(3), 1), &loader)
         .unwrap();
     assert!(gwt3.optimizer_state_bytes() < adam.optimizer_state_bytes());
