@@ -1,0 +1,323 @@
+//! Fig 10 (ours) — adaptive compression vs static GWT: does letting
+//! each matrix pick its own (basis, level) online buy state bytes
+//! without wrecking optimization?
+//!
+//! Entirely artifact-free (pure-rust optimizer paths, synthetic
+//! gradients, the same `step_bank`/`probe_bank`/controller pipeline
+//! the trainer runs), so ci.sh smoke-invokes it on a fresh checkout.
+//! Three sections per preset (micro / small):
+//!
+//! * **loss proxy** — quadratic bowl (g = w) over the preset's
+//!   parameter inventory: final ‖w‖ ratio per spec. Static gwt-1/2
+//!   rows vs the three adapt policies; adapt-fixed must match gwt-2's
+//!   state bytes exactly.
+//! * **adaptation dynamics** — a gradient stream whose noise decays
+//!   over training (blocky signal + σ_t·noise, mirroring
+//!   AdaRankGrad's effective-rank decay): state bytes over time,
+//!   migrations/resets, final (basis, level) histogram, and a
+//!   budgeted greedy row asserting the `adapt_budget_mb` hard cap.
+//! * **probe overhead** — step time with and without the cadence
+//!   probe pass.
+
+use gwt::adapt::{selection_histogram, AdaptController};
+use gwt::bench_harness::{
+    bench_scale, scaled, time_fn, write_result, TableView,
+};
+use gwt::config::{presets, OptSpec, TrainConfig};
+use gwt::memory::{measured_account, ParamShape};
+use gwt::metrics::AdaptTrace;
+use gwt::optim::{
+    build_optimizers, probe_bank, step_bank, total_state_bytes,
+};
+use gwt::rng::Rng;
+use gwt::tensor::Tensor;
+
+const SPECS: &[&str] = &[
+    "gwt-1+adam",
+    "gwt-2+adam",
+    "adapt-fixed+adam",
+    "adapt-greedy+adam",
+    "adapt-anneal+adam",
+];
+
+fn cfg_for(preset: &str, spec: &str, cadence: usize) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        preset: preset.into(),
+        optimizer: OptSpec::parse(spec).expect("spec"),
+        ..Default::default()
+    };
+    cfg.adapt_cadence = cadence;
+    cfg
+}
+
+/// Blocky signal (width-16 constant runs) + decaying noise: early
+/// steps look incompressible, late steps compress well — the regime
+/// adaptive selection exists for.
+fn stream_grads(shapes: &[ParamShape], step: usize, sigma: f32) -> Vec<Tensor> {
+    let mut rng = Rng::new(0xf1a + step as u64);
+    shapes
+        .iter()
+        .map(|s| {
+            if s.shape.len() == 2 {
+                let (m, n) = (s.shape[0], s.shape[1]);
+                let mut gd = vec![0.0f32; m * n];
+                for r in 0..m {
+                    for blk in 0..n / 16 {
+                        let v = rng.normal_f32();
+                        for j in 0..16 {
+                            gd[r * n + blk * 16 + j] = v;
+                        }
+                    }
+                }
+                for x in gd.iter_mut() {
+                    *x += sigma * rng.normal_f32();
+                }
+                Tensor::new(&s.shape, gd)
+            } else {
+                Tensor::randn(&s.shape, 1.0, &mut rng)
+            }
+        })
+        .collect()
+}
+
+/// One adaptive (or static) run over the decaying-noise stream;
+/// returns (trace, final state bytes, final histogram label).
+fn dynamics_run(
+    preset: &str,
+    spec: &str,
+    steps: usize,
+    cadence: usize,
+    budget_mb: f64,
+) -> (AdaptTrace, usize, String) {
+    let shapes = presets::find(preset).expect("preset").param_shapes();
+    let mut cfg = cfg_for(preset, spec, cadence);
+    cfg.adapt_budget_mb = budget_mb;
+    let mut bank = build_optimizers(&shapes, &cfg, None).expect("bank");
+    let mut ctl = AdaptController::from_config(&cfg);
+    let mut rng = Rng::new(1);
+    let mut w: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+        .collect();
+    let mut trace = AdaptTrace::new(spec);
+    for step in 1..=steps {
+        let sigma = 2.0 * 0.92f32.powi(step as i32);
+        let grads = stream_grads(&shapes, step, sigma);
+        step_bank(&mut bank, &mut w, &grads, 0.01, 1);
+        if let Some(ctl) = ctl.as_mut() {
+            if let Some(ev) = ctl.post_step(step, &mut bank, &grads, 1) {
+                trace.push(ev);
+            }
+        }
+    }
+    let hist = selection_histogram(&mut bank)
+        .iter()
+        .map(|(k, c)| format!("{k}:{c}"))
+        .collect::<Vec<_>>()
+        .join("|");
+    (trace, total_state_bytes(&bank), hist)
+}
+
+/// Quadratic-bowl loss proxy: g = w, cosine lr; returns final/initial
+/// ‖w‖ over the eligible matrices plus the bank's final state bytes.
+fn bowl_run(preset: &str, spec: &str, steps: usize, cadence: usize) -> (f64, usize) {
+    let shapes = presets::find(preset).expect("preset").param_shapes();
+    let cfg = cfg_for(preset, spec, cadence);
+    let mut bank = build_optimizers(&shapes, &cfg, None).expect("bank");
+    let mut ctl = AdaptController::from_config(&cfg);
+    let mut rng = Rng::new(2);
+    let mut w: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+        .collect();
+    let norm = |ws: &[Tensor]| -> f64 {
+        ws.iter()
+            .zip(&shapes)
+            .filter(|(_, s)| s.eligible)
+            .map(|(t, _)| (t.frob_norm() as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let before = norm(&w);
+    for step in 1..=steps {
+        let grads: Vec<Tensor> = w.clone();
+        let progress = step as f32 / steps as f32;
+        let lr_t = 0.02 * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        step_bank(&mut bank, &mut w, &grads, lr_t, 1);
+        if let Some(ctl) = ctl.as_mut() {
+            ctl.post_step(step, &mut bank, &grads, 1);
+        }
+    }
+    (norm(&w) / before, total_state_bytes(&bank))
+}
+
+fn main() -> anyhow::Result<()> {
+    let presets_under_test: &[(&str, usize)] =
+        &[("micro", scaled(120)), ("small", scaled(60))];
+    let cadence = 10;
+
+    let mut loss_table = TableView::new(
+        "Fig 10a — loss proxy (quadratic bowl): final/initial |w| + state",
+        &["preset", "spec", "|w| ratio", "state KB"],
+    );
+    let mut dyn_table = TableView::new(
+        "Fig 10b — adaptation dynamics on a decaying-noise stream",
+        &[
+            "preset",
+            "spec",
+            "events",
+            "migr",
+            "resets",
+            "state KB start>peak>final",
+            "final selection",
+        ],
+    );
+
+    for &(preset, steps) in presets_under_test {
+        // -------- 10a: loss proxy --------
+        let mut gwt2_state = 0usize;
+        for &spec in SPECS {
+            let (ratio, state) = bowl_run(preset, spec, steps, cadence);
+            if spec == "gwt-2+adam" {
+                gwt2_state = state;
+            }
+            if spec == "adapt-fixed+adam" {
+                assert_eq!(
+                    state, gwt2_state,
+                    "adapt-fixed must hold the gwt-2 footprint"
+                );
+            }
+            assert!(
+                ratio < 1.0,
+                "{preset}/{spec}: bowl did not shrink ({ratio})"
+            );
+            loss_table.row(vec![
+                preset.into(),
+                spec.into(),
+                format!("{ratio:.3}"),
+                format!("{:.1}", state as f64 / 1e3),
+            ]);
+        }
+
+        // -------- 10b: adaptation dynamics --------
+        let shapes = presets::find(preset)?.param_shapes();
+        let start_state = {
+            let cfg = cfg_for(preset, "adapt-greedy+adam", cadence);
+            total_state_bytes(&build_optimizers(&shapes, &cfg, None)?)
+        };
+        for &spec in &["adapt-fixed+adam", "adapt-greedy+adam", "adapt-anneal+adam"]
+        {
+            let (trace, final_state, hist) =
+                dynamics_run(preset, spec, steps, cadence, 0.0);
+            if spec != "adapt-fixed+adam" && steps >= 3 * cadence {
+                assert!(
+                    trace.total_migrations() > 0,
+                    "{preset}/{spec}: decaying-noise stream must migrate"
+                );
+            }
+            dyn_table.row(vec![
+                preset.into(),
+                spec.into(),
+                format!("{}", trace.events.len()),
+                format!("{}", trace.total_migrations()),
+                format!("{}", trace.total_resets()),
+                format!(
+                    "{:.1}>{:.1}>{:.1}",
+                    start_state as f64 / 1e3,
+                    trace.max_state_bytes().max(start_state) as f64 / 1e3,
+                    final_state as f64 / 1e3
+                ),
+                hist,
+            ]);
+        }
+        // Budgeted greedy: the cap must hold at every event. Budget =
+        // worst case of a static gwt-3 bank (comfortably between the
+        // level-1 ceiling and the floor).
+        let spec = OptSpec::parse("adapt-greedy+adam")?;
+        let budget_bytes =
+            measured_account(&shapes, OptSpec::parse("gwt-3+adam")?).state_bytes;
+        let budget_mb = budget_bytes as f64 / (1024.0 * 1024.0);
+        let (trace, final_state, hist) =
+            dynamics_run(preset, "adapt-greedy+adam", steps, cadence, budget_mb);
+        for ev in &trace.events {
+            assert!(
+                ev.state_bytes <= budget_bytes,
+                "{preset}: step {} bank {} over budget {budget_bytes}",
+                ev.step,
+                ev.state_bytes
+            );
+        }
+        let worst = measured_account(&shapes, spec).worst_state_bytes;
+        assert!(final_state <= worst, "live exceeds the worst-case column");
+        dyn_table.row(vec![
+            preset.into(),
+            format!("adapt-greedy+adam @{budget_mb:.2}MiB"),
+            format!("{}", trace.events.len()),
+            format!("{}", trace.total_migrations()),
+            format!("{}", trace.total_resets()),
+            format!(
+                "{:.1}>{:.1}>{:.1}",
+                start_state as f64 / 1e3,
+                trace.max_state_bytes().max(start_state) as f64 / 1e3,
+                final_state as f64 / 1e3
+            ),
+            hist,
+        ]);
+    }
+
+    // -------- 10c: probe overhead --------
+    let mut probe_table = TableView::new(
+        "Fig 10c — probe overhead per step (micro, adapt-greedy+adam)",
+        &["section", "ms/iter"],
+    );
+    {
+        let preset = "micro";
+        let shapes = presets::find(preset)?.param_shapes();
+        let cfg = cfg_for(preset, "adapt-greedy+adam", 1);
+        let mut bank = build_optimizers(&shapes, &cfg, None)?;
+        let mut rng = Rng::new(3);
+        let mut w: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let iters = ((12.0 * bench_scale()).round() as usize).max(4);
+        let step_only = time_fn(1, iters, || {
+            step_bank(&mut bank, &mut w, &grads, 0.001, 1);
+        });
+        let step_and_probe = time_fn(1, iters, || {
+            step_bank(&mut bank, &mut w, &grads, 0.001, 1);
+            probe_bank(&mut bank, &grads, 1);
+        });
+        probe_table
+            .row(vec!["step only".into(), format!("{:.3}", step_only.per_iter_ms())]);
+        probe_table.row(vec![
+            "step + probe".into(),
+            format!("{:.3}", step_and_probe.per_iter_ms()),
+        ]);
+        let overhead = (step_and_probe.median_ns - step_only.median_ns)
+            / step_only.median_ns.max(1.0)
+            * 100.0;
+        probe_table.row(vec![
+            "probe overhead".into(),
+            format!("{overhead:+.0}% (amortized /{cadence} at default cadence)"),
+        ]);
+    }
+
+    loss_table.print();
+    dyn_table.print();
+    probe_table.print();
+    println!(
+        "fig10: {} specs x {} presets, artifact-free; budget rows enforce \
+         adapt_budget_mb as a hard cap",
+        SPECS.len(),
+        presets_under_test.len()
+    );
+    write_result("fig10a_adaptive_loss", &loss_table, vec![])?;
+    write_result("fig10b_adaptive_dynamics", &dyn_table, vec![])?;
+    write_result("fig10c_probe_overhead", &probe_table, vec![])?;
+    Ok(())
+}

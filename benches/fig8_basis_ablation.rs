@@ -17,7 +17,6 @@ use gwt::bench_harness::{bench_loader, pretrain, scaled, write_result, RunSpec, 
 use gwt::config::OptSpec;
 use gwt::rng::Rng;
 use gwt::runtime::Runtime;
-use gwt::wavelet::db4::lowpass_error;
 use gwt::wavelet::WaveletBasis;
 
 /// Smooth periodic rows (no wrap discontinuity): DB4's regime.
@@ -66,8 +65,8 @@ fn main() -> anyhow::Result<()> {
             ("white noise", rng.normal_vec(m * n, 1.0)),
         ];
         for (name, x) in cases {
-            let e_haar = lowpass_error(&x, m, n, level, false);
-            let e_db4 = lowpass_error(&x, m, n, level, true);
+            let e_haar = WaveletBasis::Haar.lowpass_error(&x, m, n, level);
+            let e_db4 = WaveletBasis::Db4.lowpass_error(&x, m, n, level);
             let ratio = e_db4 / e_haar;
             table.row(vec![
                 name.into(),

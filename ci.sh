@@ -38,6 +38,13 @@ GWT_BENCH_SCALE=0.2 cargo bench --bench fig8_basis_ablation
 echo "== composition bench (smoke) =="
 GWT_BENCH_SCALE=0.2 cargo bench --bench fig9_composition
 
+# Smoke the adaptive-compression bench: artifact-free — static
+# gwt-{1,2} vs adapt-{fixed,greedy,anneal} (loss proxy, state bytes
+# over time, probe overhead), with in-bench asserts that adapt-fixed
+# holds the gwt-2 footprint and adapt_budget_mb is a hard cap.
+echo "== adaptive bench (smoke) =="
+GWT_BENCH_SCALE=0.2 cargo bench --bench fig10_adaptive
+
 # Composed-spec e2e: one previously unreachable composition
 # (wavelet-compressed 8-bit Adam) trains via its CLI spec string,
 # under both gwt_path settings (the knob must be inert for non-Adam
@@ -49,6 +56,18 @@ if [[ -f artifacts/manifest.json ]]; then
         cargo run --release -- train \
             -s preset=nano -s optimizer=gwt-db4-1+adam8bit \
             -s steps=20 -s eval_every=10 -s gwt_path="$path"
+    done
+    # Adaptive e2e: probe + policy + migration in a real training
+    # loop, under both gwt_path settings (the knob is inert for
+    # adaptive specs — they always run the rust paths, since HLO
+    # artifacts are keyed by the (basis, level) a migration changes —
+    # but both routes must train and report the adapt summary).
+    for path in auto rust; do
+        echo "== adaptive e2e: adapt-greedy+adam (gwt_path=$path) =="
+        cargo run --release -- train \
+            -s preset=nano -s optimizer=adapt-greedy+adam \
+            -s steps=30 -s adapt_cadence=10 -s eval_every=15 \
+            -s gwt_path="$path"
     done
 else
     echo "== composed e2e skipped (no artifacts/; run 'make artifacts') =="

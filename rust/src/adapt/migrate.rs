@@ -1,0 +1,188 @@
+//! State migration: carry optimizer moments across a change of
+//! decomposition.
+//!
+//! Moment buffers live in the approximation band of the *old*
+//! (basis, level). When the policy re-selects, each row's band is
+//! embedded as `[A | 0…]`, inverse-transformed to gradient domain
+//! under the old spec, forward-transformed under the new spec, and
+//! truncated to the new band ([`remap_band`]). Properties:
+//!
+//! * **Deterministic** — a pure function of the state bits, so
+//!   migrations preserve the step engine's bit-identity contract
+//!   (they run serially on the coordinator thread anyway).
+//! * **Exact for deepening within a basis** — the level-`l+k` band is
+//!   a further decomposition of the level-`l` band, so no information
+//!   is invented. Shallowing and basis switches zero-fill the unknown
+//!   detail coordinates: the result is the minimum-norm (best linear)
+//!   estimate consistent with the retained band.
+//! * **First moments** transform exactly (they are linear in the
+//!   gradient). **Second moments** are *not* linear in the gradient,
+//!   so the same band map is applied as a heuristic and the result is
+//!   clamped at 0 ([`clamp_nonneg`]) — the Adam denominator
+//!   `sqrt(v̂)+eps` stays well-defined. This mirrors the paper's
+//!   Algorithm 1 keeping moments only on the approximation band.
+//!
+//! **Reset fallback** (documented contract): inners whose state does
+//! not survive a linear band map — today the block-quantized 8-bit
+//! Adam, whose int8 codes + absmax scales would compound two
+//! quantization errors through a dequant→remap→requant round trip —
+//! decline `InnerOpt::remap_domain`; the engine then rebuilds the
+//! inner fresh (zero moments, bias-correction step count restarted)
+//! and reports [`MigrationKind::Reset`] so telemetry and tests can
+//! see which path fired.
+
+use crate::wavelet::WaveletBasis;
+
+/// What a migration did to the moment state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationKind {
+    /// Moments were carried across via the band remap.
+    Remapped,
+    /// Moments were reset (inner declined the remap).
+    Reset,
+    /// The requested spec is already held; nothing changed.
+    Noop,
+}
+
+/// Re-express a `rows × (cols >> from.1)` approximation band under
+/// `(to.0, to.1)`: per row, embed as `[A | 0…]`, inverse-transform
+/// under `from`, forward-transform under `to`, truncate to
+/// `cols >> to.1`. `out.len()` must equal `rows * (cols >> to.1)`.
+/// Allocates two transient row buffers — migrations are rare (policy
+/// cadence), so this is not on the steady-state path.
+pub fn remap_band(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    from: (WaveletBasis, usize),
+    to: (WaveletBasis, usize),
+    out: &mut [f32],
+) {
+    let (fb, fl) = from;
+    let (tb, tl) = to;
+    let qf = cols >> fl;
+    let qt = cols >> tl;
+    assert_eq!(data.len(), rows * qf, "source band shape");
+    assert_eq!(out.len(), rows * qt, "target band shape");
+    if from == to {
+        out.copy_from_slice(data);
+        return;
+    }
+    let mut row = vec![0.0f32; cols];
+    let mut scratch = vec![0.0f32; cols];
+    for r in 0..rows {
+        row[..qf].copy_from_slice(&data[r * qf..(r + 1) * qf]);
+        row[qf..].fill(0.0);
+        fb.inv_row(&mut row, fl, &mut scratch);
+        tb.fwd_row(&mut row, tl, &mut scratch);
+        out[r * qt..(r + 1) * qt].copy_from_slice(&row[..qt]);
+    }
+}
+
+/// Clamp a remapped second-moment buffer at 0 (the band map is
+/// signed; `v` must stay a valid squared-magnitude estimate).
+pub fn clamp_nonneg(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = x.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::approx_eq_slice;
+    use crate::wavelet::max_level;
+
+    #[test]
+    fn same_spec_is_identity() {
+        let data = Rng::new(1).normal_vec(4 * 16, 1.0);
+        let mut out = vec![0.0f32; 4 * 16];
+        let spec = (WaveletBasis::Haar, 2);
+        remap_band(&data, 4, 64, spec, spec, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn deepening_within_a_basis_is_exact() {
+        // The level-3 band of a gradient equals the level-1 band
+        // remapped two levels deeper: no information is invented when
+        // only deepening.
+        let (rows, cols) = (5, 64);
+        let g = Rng::new(7).normal_vec(rows * cols, 1.0);
+        for basis in WaveletBasis::ALL {
+            let c1 = basis.fwd(&g, rows, cols, 1);
+            let band1: Vec<f32> = (0..rows)
+                .flat_map(|r| c1[r * cols..r * cols + 32].to_vec())
+                .collect();
+            let c3 = basis.fwd(&g, rows, cols, 3);
+            let band3: Vec<f32> = (0..rows)
+                .flat_map(|r| c3[r * cols..r * cols + 8].to_vec())
+                .collect();
+            let mut out = vec![0.0f32; rows * 8];
+            remap_band(&band1, rows, cols, (basis, 1), (basis, 3), &mut out);
+            approx_eq_slice(&out, &band3, 1e-4);
+        }
+    }
+
+    #[test]
+    fn shallowing_roundtrip_preserves_the_retained_band() {
+        // Deep -> shallow -> deep recovers the original band exactly
+        // (the shallow band is a superset of the deep one's
+        // information; the zero-filled details drop back out).
+        let (rows, cols) = (3, 32);
+        let band3 = Rng::new(11).normal_vec(rows * (cols >> 3), 1.0);
+        let mut band1 = vec![0.0f32; rows * (cols >> 1)];
+        remap_band(
+            &band3,
+            rows,
+            cols,
+            (WaveletBasis::Haar, 3),
+            (WaveletBasis::Haar, 1),
+            &mut band1,
+        );
+        let mut back = vec![0.0f32; rows * (cols >> 3)];
+        remap_band(
+            &band1,
+            rows,
+            cols,
+            (WaveletBasis::Haar, 1),
+            (WaveletBasis::Haar, 3),
+            &mut back,
+        );
+        approx_eq_slice(&back, &band3, 1e-4);
+    }
+
+    #[test]
+    fn basis_switch_preserves_energy_bound() {
+        // Cross-basis remap can only lose energy (details are
+        // truncated), never invent it — both transforms are
+        // orthonormal.
+        let (rows, cols) = (4, 64);
+        let band = Rng::new(3).normal_vec(rows * (cols >> 2), 1.0);
+        for level in 1..=max_level(cols).min(3) {
+            let mut out = vec![0.0f32; rows * (cols >> level)];
+            remap_band(
+                &band,
+                rows,
+                cols,
+                (WaveletBasis::Haar, 2),
+                (WaveletBasis::Db4, level),
+                &mut out,
+            );
+            let e_in: f64 = band.iter().map(|v| (*v as f64).powi(2)).sum();
+            let e_out: f64 = out.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(
+                e_out <= e_in * (1.0 + 1e-5),
+                "level {level}: {e_out} > {e_in}"
+            );
+        }
+    }
+
+    #[test]
+    fn clamp_kills_negative_second_moments() {
+        let mut v = vec![0.5f32, -0.1, 0.0, -1e-9];
+        clamp_nonneg(&mut v);
+        assert_eq!(v, vec![0.5, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,422 @@
+//! Adaptive compression subsystem: per-parameter online
+//! (basis, level) selection with state migration.
+//!
+//! The paper fixes one wavelet level and basis for every eligible
+//! matrix, but gradient compressibility varies sharply across layers
+//! and over training (AdaRankGrad: effective rank decays; APOLLO:
+//! per-channel structure is worth tracking online). This subsystem
+//! turns the static composition grid into a self-tuning optimizer.
+//! Three layers:
+//!
+//! * **Probe** ([`probe`]) — on the controller's cadence, cheap
+//!   per-parameter compressibility statistics from live gradients:
+//!   the relative detail-energy of every candidate (basis, level),
+//!   from one forward transform per basis (the unified
+//!   `WaveletBasis::lowpass_error_profile` entry point), EMA-smoothed,
+//!   into engine-owned scratch — probing adds no steady-state
+//!   allocation. Sharded across the bank by [`optim::probe_bank`]
+//!   under the same fixed-boundary determinism contract as
+//!   `step_bank`.
+//! * **Policy** ([`policy`]) — `fixed | greedy | anneal` pick each
+//!   matrix's (basis, level) from those statistics under a global
+//!   state-byte budget (hard cap with deterministic repair) and a
+//!   hysteresis band against churn. Pure serial function — identical
+//!   selections at every thread count.
+//! * **Migration** ([`migrate`]) — re-shapes a `ParamOptimizer`'s
+//!   moment state when its decomposition changes mid-run:
+//!   inverse-transform the approximation band to gradient domain,
+//!   re-transform under the new spec (exact for linear first moments
+//!   and for within-basis deepening; clamped heuristic for second
+//!   moments), with a documented reset fallback for inners whose
+//!   state does not survive a linear map (8-bit Adam).
+//!
+//! The per-parameter engine ([`engine::AdaptiveWavelet`]) is the
+//! static machinery between migrations — Adam inners ride the fused
+//! `GwtAdam`, so `adapt-fixed+adam` is bit-identical to the paper's
+//! `gwt-2+adam`. The [`AdaptController`] is the trainer hook: after
+//! each optimizer step it probes (on cadence), selects, migrates, and
+//! emits a `metrics::AdaptEvent` with the live (basis, level)
+//! histogram. Contexts without the controller (fine-tuning, plain
+//! `step_bank` callers) run adaptive specs at their init selection —
+//! i.e. as `adapt-fixed`.
+//!
+//! [`optim::probe_bank`]: crate::optim::probe_bank
+
+pub mod engine;
+pub mod migrate;
+pub mod policy;
+pub mod probe;
+
+use std::collections::BTreeMap;
+
+pub use engine::{init_level, level_cap, AdaptiveWavelet, INIT_BASIS, INIT_LEVEL, MAX_LEVEL};
+pub use migrate::{clamp_nonneg, remap_band, MigrationKind};
+pub use policy::{select, AdaptPolicy, Candidate, ParamView, PolicyKnobs};
+pub use probe::{candidate_errors, ProbeEma};
+
+use crate::config::{TrainConfig, TransformSpec};
+use crate::metrics::AdaptEvent;
+use crate::optim::{probe_bank, total_state_bytes, ParamOptimizer};
+use crate::tensor::Tensor;
+use crate::wavelet::WaveletBasis;
+
+/// The seam between per-parameter adaptive engines and the serial
+/// controller. `MatrixOpt::adaptive()` returns this for engines that
+/// support online re-selection (`None`, the default, for everything
+/// else).
+pub trait AdaptiveOpt {
+    /// Currently held (basis, level).
+    fn selected(&self) -> (WaveletBasis, usize);
+
+    /// Selectable decompositions, level-major with
+    /// `WaveletBasis::ALL` order within a level.
+    fn candidates(&self) -> &[Candidate];
+
+    /// EMA-smoothed relative detail-energy per candidate (parallel to
+    /// `candidates()`); `None` until the first probe.
+    fn errors(&self) -> Option<Vec<f64>>;
+
+    /// Fold one gradient's compressibility statistics into the EMA.
+    /// Read-only on the optimizer state — never changes step math.
+    fn probe(&mut self, g: &Tensor);
+
+    /// Re-target the decomposition, migrating moment state per
+    /// `adapt::migrate`. The target must be one of `candidates()`.
+    fn migrate(&mut self, basis: WaveletBasis, level: usize) -> MigrationKind;
+
+    /// Lifetime (remapped, reset) migration counters for telemetry.
+    fn migration_counts(&self) -> (usize, usize);
+}
+
+/// Serial coordinator-side driver: owns the cadence and the policy
+/// knobs, runs between optimizer steps (after `step_bank`), and is
+/// the only thing that mutates selections — so the parallel step
+/// engine stays a pure throughput knob.
+pub struct AdaptController {
+    policy: AdaptPolicy,
+    cadence: usize,
+    threshold: f64,
+    hysteresis: f64,
+    budget_bytes: usize,
+    /// Cadence events seen so far: the first is probe-only warmup.
+    events_seen: usize,
+}
+
+/// Probe samples the EMA must hold before the first selection runs —
+/// the first cadence event only warms the statistics up, so a single
+/// unrepresentative microbatch can never trigger a migration (and,
+/// for 8-bit inners, a moment-wiping reset) on its own.
+pub const MIN_PROBE_SAMPLES: usize = 2;
+
+impl AdaptController {
+    /// Build from a config; `None` when the spec has no adaptive
+    /// transform (the trainer then skips the hook entirely).
+    pub fn from_config(cfg: &TrainConfig) -> Option<AdaptController> {
+        let policy = match cfg.optimizer.transform() {
+            Some(TransformSpec::Adaptive { policy }) => policy,
+            _ => return None,
+        };
+        Some(AdaptController {
+            policy,
+            cadence: cfg.adapt_cadence.max(1),
+            threshold: cfg.adapt_threshold,
+            hysteresis: cfg.adapt_hysteresis,
+            budget_bytes: (cfg.adapt_budget_mb * 1024.0 * 1024.0) as usize,
+            events_seen: 0,
+        })
+    }
+
+    pub fn policy(&self) -> AdaptPolicy {
+        self.policy
+    }
+
+    /// Trainer hook, called after every optimizer step with that
+    /// step's (combined) gradients. On cadence boundaries: probe the
+    /// bank (sharded over `threads`), run the policy, apply the
+    /// migrations, and report the event. `step` is the 1-based count
+    /// of completed steps. Off-cadence (and always under the `fixed`
+    /// policy) this is a no-op — zero steady-state overhead. The
+    /// first cadence event is probe-only warmup (`None` returned):
+    /// selections start once the EMA holds [`MIN_PROBE_SAMPLES`].
+    pub fn post_step(
+        &mut self,
+        step: usize,
+        bank: &mut [ParamOptimizer],
+        grads: &[Tensor],
+        threads: usize,
+    ) -> Option<AdaptEvent> {
+        if self.policy == AdaptPolicy::Fixed || step % self.cadence != 0 {
+            return None;
+        }
+        probe_bank(bank, grads, threads);
+        self.events_seen += 1;
+        if self.events_seen < MIN_PROBE_SAMPLES {
+            return None;
+        }
+        // Gather views (and the budget's immovable share) in bank
+        // order — the deterministic order the policy tie-breaks on.
+        let mut views = Vec::new();
+        let mut fixed_bytes = 0usize;
+        for (index, p) in bank.iter_mut().enumerate() {
+            let bytes = p.state_bytes();
+            match p.adaptive() {
+                Some(a) => match a.errors() {
+                    Some(err) => views.push(ParamView {
+                        index,
+                        selected: a.selected(),
+                        candidates: a.candidates().to_vec(),
+                        err,
+                    }),
+                    None => fixed_bytes += bytes,
+                },
+                None => fixed_bytes += bytes,
+            }
+        }
+        let knobs = PolicyKnobs {
+            threshold: self.threshold,
+            hysteresis: self.hysteresis,
+            budget_bytes: self.budget_bytes,
+            fixed_bytes,
+        };
+        let moves = select(self.policy, &views, &knobs);
+        let mut migrations = 0usize;
+        let mut resets = 0usize;
+        for (index, basis, level) in moves {
+            let a = bank[index]
+                .adaptive()
+                .expect("policy only proposes moves for adaptive params");
+            match a.migrate(basis, level) {
+                MigrationKind::Remapped => migrations += 1,
+                MigrationKind::Reset => {
+                    migrations += 1;
+                    resets += 1;
+                }
+                MigrationKind::Noop => {}
+            }
+        }
+        let histogram = selection_histogram(bank);
+        Some(AdaptEvent {
+            step,
+            migrations,
+            resets,
+            state_bytes: total_state_bytes(bank),
+            histogram,
+        })
+    }
+}
+
+/// Count of adaptive parameters per held (basis, level), as sorted
+/// `("haar-2", count)` pairs — the telemetry histogram.
+pub fn selection_histogram(bank: &mut [ParamOptimizer]) -> Vec<(String, usize)> {
+    let mut hist: BTreeMap<String, usize> = BTreeMap::new();
+    for p in bank.iter_mut() {
+        if let Some(a) = p.adaptive() {
+            let (b, l) = a.selected();
+            *hist.entry(format!("{}-{l}", b.token())).or_insert(0) += 1;
+        }
+    }
+    hist.into_iter().collect()
+}
+
+/// Current selections of every adaptive parameter in bank order —
+/// what `memory::adaptive_live_state_bytes` consumes for the
+/// live-vs-worst-case account.
+pub fn selections(bank: &mut [ParamOptimizer]) -> Vec<(WaveletBasis, usize)> {
+    bank.iter_mut()
+        .filter_map(|p| p.adaptive().map(|a| a.selected()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptSpec;
+    use crate::memory::ParamShape;
+    use crate::optim::build_optimizers;
+    use crate::rng::Rng;
+
+    fn shapes() -> Vec<ParamShape> {
+        vec![
+            ParamShape {
+                name: "layers.00.attn.wq".into(),
+                shape: vec![16, 64],
+                eligible: true,
+            },
+            ParamShape {
+                name: "layers.00.mlp.up".into(),
+                shape: vec![16, 32],
+                eligible: true,
+            },
+            ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+        ]
+    }
+
+    fn cfg(spec: &str) -> TrainConfig {
+        let mut c = TrainConfig {
+            optimizer: OptSpec::parse(spec).unwrap(),
+            ..Default::default()
+        };
+        c.adapt_cadence = 2;
+        c
+    }
+
+    fn block_grads(shapes: &[ParamShape], width: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        shapes
+            .iter()
+            .map(|s| {
+                if s.shape.len() == 2 {
+                    let (m, n) = (s.shape[0], s.shape[1]);
+                    let mut gd = vec![0.0f32; m * n];
+                    for r in 0..m {
+                        for blk in 0..n / width {
+                            let v = rng.normal_f32();
+                            for j in 0..width {
+                                gd[r * n + blk * width + j] = v;
+                            }
+                        }
+                    }
+                    Tensor::new(&s.shape, gd)
+                } else {
+                    Tensor::randn(&s.shape, 1.0, &mut rng)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn controller_only_exists_for_adaptive_specs() {
+        assert!(AdaptController::from_config(&cfg("adapt-greedy+adam")).is_some());
+        assert!(AdaptController::from_config(&cfg("gwt-2+adam")).is_none());
+        assert!(AdaptController::from_config(&cfg("adam")).is_none());
+    }
+
+    #[test]
+    fn greedy_controller_deepens_on_compressible_gradients() {
+        let shapes = shapes();
+        let c = cfg("adapt-greedy+adam");
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        let mut ctl = AdaptController::from_config(&c).unwrap();
+        // Block-constant width 16: zero Haar detail energy to level 4.
+        let grads = block_grads(&shapes, 16, 1);
+        assert!(ctl.post_step(1, &mut bank, &grads, 1).is_none(), "off cadence");
+        assert!(
+            ctl.post_step(2, &mut bank, &grads, 1).is_none(),
+            "first cadence event is probe-only warmup"
+        );
+        let ev = ctl.post_step(4, &mut bank, &grads, 1).expect("cadence event");
+        assert!(ev.migrations >= 2, "both eligible params should deepen");
+        assert_eq!(ev.resets, 0);
+        let sels = selections(&mut bank);
+        // Width-16 blocks have zero Haar detail energy through level
+        // 4, so greedy jumps at least there (level 5's error depends
+        // on the realized block draws and may or may not clear the
+        // threshold — either depth is a correct selection).
+        assert_eq!(sels.len(), 2);
+        for (basis, level) in &sels {
+            assert_eq!(*basis, WaveletBasis::Haar);
+            assert!(*level >= 4, "{sels:?}");
+        }
+        // The histogram is consistent with the selections.
+        let total: usize = ev.histogram.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 2);
+        assert!(ev.histogram.iter().all(|(k, _)| k.starts_with("haar-")));
+    }
+
+    #[test]
+    fn anneal_controller_moves_one_level_per_event() {
+        let shapes = shapes();
+        let c = cfg("adapt-anneal+adam");
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        let mut ctl = AdaptController::from_config(&c).unwrap();
+        let grads = block_grads(&shapes, 16, 2);
+        // Event 1 is warmup; events 2 and 3 each anneal one level.
+        assert!(ctl.post_step(2, &mut bank, &grads, 1).is_none());
+        ctl.post_step(4, &mut bank, &grads, 1).unwrap();
+        assert_eq!(
+            selections(&mut bank),
+            vec![(WaveletBasis::Haar, 3), (WaveletBasis::Haar, 3)]
+        );
+        ctl.post_step(6, &mut bank, &grads, 1).unwrap();
+        assert_eq!(
+            selections(&mut bank),
+            vec![(WaveletBasis::Haar, 4), (WaveletBasis::Haar, 4)]
+        );
+        // One more event: width-16 blocks guarantee feasibility only
+        // through level 4, so each param either holds or takes at
+        // most one more step — never jumps, never backs off.
+        ctl.post_step(8, &mut bank, &grads, 1).unwrap();
+        for (basis, level) in selections(&mut bank) {
+            assert_eq!(basis, WaveletBasis::Haar);
+            assert!((4..=5).contains(&level));
+        }
+    }
+
+    #[test]
+    fn fixed_controller_never_fires() {
+        let shapes = shapes();
+        let c = cfg("adapt-fixed+adam");
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        let mut ctl = AdaptController::from_config(&c).unwrap();
+        let grads = block_grads(&shapes, 16, 3);
+        for step in 1..=6 {
+            assert!(ctl.post_step(step, &mut bank, &grads, 1).is_none());
+        }
+        assert_eq!(
+            selections(&mut bank),
+            vec![(WaveletBasis::Haar, 2), (WaveletBasis::Haar, 2)]
+        );
+    }
+
+    #[test]
+    fn budget_caps_the_bank() {
+        let shapes = shapes();
+        let mut c = cfg("adapt-greedy+adam");
+        // Noisy gradients would pull everything to level 1; a budget
+        // just above the non-adaptive share + level-2-ish bytes
+        // forces depth instead.
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        let fixed: usize = bank
+            .iter()
+            .filter(|p| !p.label().starts_with("Adapt"))
+            .map(|p| p.state_bytes())
+            .sum();
+        // Eligible params at level 3: (16*8 + 16*4) * 2 moments * 4B.
+        let adaptive_l3 = (16 * 8 + 16 * 4) * 2 * 4;
+        let budget = fixed + adaptive_l3;
+        c.adapt_budget_mb = budget as f64 / (1024.0 * 1024.0);
+        let mut ctl = AdaptController::from_config(&c).unwrap();
+        let mut rng = Rng::new(5);
+        let grads: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        assert!(ctl.post_step(2, &mut bank, &grads, 1).is_none(), "warmup");
+        let ev = ctl.post_step(4, &mut bank, &grads, 1).unwrap();
+        assert!(
+            ev.state_bytes <= budget,
+            "bank {} exceeds budget {budget}",
+            ev.state_bytes
+        );
+        // White noise wants level 1; the budget forced ≥ level 3 on
+        // average — at least one param is deeper than the greedy pick.
+        assert!(selections(&mut bank).iter().any(|(_, l)| *l >= 3));
+    }
+
+    #[test]
+    fn controller_histogram_and_selection_order_are_bank_order() {
+        let shapes = shapes();
+        let c = cfg("adapt-greedy+adam8bit");
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        // Force distinct selections by hand.
+        bank[0].adaptive().unwrap().migrate(WaveletBasis::Db4, 3);
+        assert_eq!(
+            selections(&mut bank),
+            vec![(WaveletBasis::Db4, 3), (WaveletBasis::Haar, 2)]
+        );
+        assert_eq!(
+            selection_histogram(&mut bank),
+            vec![("db4-3".to_string(), 1), ("haar-2".to_string(), 1)]
+        );
+    }
+}

@@ -1,0 +1,453 @@
+//! Selection policies: turn probe statistics into per-parameter
+//! (basis, level) choices under a global state-byte budget.
+//!
+//! [`select`] is a *pure serial function* of the probe views — it
+//! runs on the coordinator thread between optimizer steps, so the
+//! step engine's fixed-boundary bit-identity contract is untouched
+//! (the same views produce the same moves at every thread count).
+//!
+//! The per-parameter statistic is the EMA-smoothed relative
+//! detail-energy fraction `err(b, l) = ||g − P_l g||² / ||g||²` in
+//! `[0, 1]` — monotone nondecreasing in `l` (deeper levels discard a
+//! superset of detail bands), which is what makes the threshold rule
+//! below well-posed.
+//!
+//! Three policies:
+//! * **Fixed** — never re-selects; every parameter keeps the init
+//!   decomposition. Bit-identical to the static `gwt-2+<inner>` spec
+//!   (the probe is skipped entirely).
+//! * **Greedy** (greedy-threshold) — each parameter independently
+//!   jumps to the deepest level whose error clears the threshold,
+//!   with a Schmitt-trigger hysteresis band so a statistic hovering
+//!   at the threshold doesn't churn migrations: deepening requires
+//!   `err <= threshold − hysteresis`, backing off requires the
+//!   current level's error to exceed `threshold + hysteresis`.
+//! * **Anneal** (anneal-up, à la AdaRankGrad's rank decay) — levels
+//!   only ever increase, one level per adapt event, as the gradient's
+//!   compressibility improves over training; never backs off.
+//!
+//! After the per-parameter pass, a **budget repair** loop enforces
+//! `adapt_budget_mb` as a hard cap: while the bank (fixed params
+//! included) is over budget, the parameter whose next-deeper
+//! candidate costs the least extra error is force-deepened —
+//! deterministic tie-break on (error, bank index). When even
+//! max-depth everywhere cannot meet the budget, the repair stops at
+//! best effort (the accountant's worst-case column shows the gap).
+
+use crate::wavelet::WaveletBasis;
+
+/// Online (basis, level) selection strategy — the `<policy>` half of
+/// the `adapt-<policy>+<inner>` spec token.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum AdaptPolicy {
+    /// Pin the init decomposition forever (probe disabled).
+    Fixed,
+    /// Greedy threshold rule with hysteresis; can move both ways.
+    #[default]
+    Greedy,
+    /// Monotone anneal-up: one level deeper per event, never back.
+    Anneal,
+}
+
+impl AdaptPolicy {
+    pub const ALL: [AdaptPolicy; 3] =
+        [AdaptPolicy::Fixed, AdaptPolicy::Greedy, AdaptPolicy::Anneal];
+
+    /// Canonical lowercase spec token (`adapt-greedy`).
+    pub const fn token(self) -> &'static str {
+        match self {
+            AdaptPolicy::Fixed => "fixed",
+            AdaptPolicy::Greedy => "greedy",
+            AdaptPolicy::Anneal => "anneal",
+        }
+    }
+
+    /// Human-facing label fragment (`Adapt-Greedy`).
+    pub const fn label(self) -> &'static str {
+        match self {
+            AdaptPolicy::Fixed => "Fixed",
+            AdaptPolicy::Greedy => "Greedy",
+            AdaptPolicy::Anneal => "Anneal",
+        }
+    }
+
+    /// Parse a policy token, case handled by the spec parser (which
+    /// lowercases). The ISSUE names `greedy-threshold` and `anneal-up`
+    /// in full; both long and short spellings are accepted.
+    pub fn parse(s: &str) -> Option<AdaptPolicy> {
+        match s {
+            "fixed" => Some(AdaptPolicy::Fixed),
+            "greedy" | "greedy-threshold" => Some(AdaptPolicy::Greedy),
+            "anneal" | "anneal-up" => Some(AdaptPolicy::Anneal),
+            _ => None,
+        }
+    }
+}
+
+/// One selectable decomposition for a parameter, with the inner
+/// optimizer's state cost at that depth (measured f32 units — the
+/// same units as `MatrixOpt::state_bytes`, so the budget is a cap on
+/// the bytes the bank actually holds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub basis: WaveletBasis,
+    pub level: usize,
+    pub state_bytes: usize,
+}
+
+/// The policy's read-only view of one adaptive parameter.
+#[derive(Clone, Debug)]
+pub struct ParamView {
+    /// Bank index (where to apply the resulting migration).
+    pub index: usize,
+    /// Currently held (basis, level).
+    pub selected: (WaveletBasis, usize),
+    /// All selectable decompositions, level-major with
+    /// `WaveletBasis::ALL` order within a level.
+    pub candidates: Vec<Candidate>,
+    /// EMA relative detail-energy per candidate (parallel to
+    /// `candidates`), each in `[0, 1]`.
+    pub err: Vec<f64>,
+}
+
+impl ParamView {
+    fn err_at(&self, basis: WaveletBasis, level: usize) -> f64 {
+        self.candidates
+            .iter()
+            .position(|c| c.basis == basis && c.level == level)
+            .map(|i| self.err[i])
+            .unwrap_or(f64::INFINITY)
+    }
+
+    fn bytes_at(&self, level: usize) -> usize {
+        // State bytes depend on the domain size only, never the basis.
+        self.candidates
+            .iter()
+            .find(|c| c.level == level)
+            .map(|c| c.state_bytes)
+            .unwrap_or(0)
+    }
+
+    fn max_level(&self) -> usize {
+        self.candidates.iter().map(|c| c.level).max().unwrap_or(1)
+    }
+
+    /// Best basis at `level`: argmin error, ties to `ALL` order
+    /// (Haar first) — a deterministic total order.
+    fn best_basis(&self, level: usize) -> (WaveletBasis, f64) {
+        let mut best = (WaveletBasis::ALL[0], f64::INFINITY);
+        for b in WaveletBasis::ALL {
+            let e = self.err_at(b, level);
+            if e < best.1 {
+                best = (b, e);
+            }
+        }
+        best
+    }
+}
+
+/// Global selection knobs (from `TrainConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyKnobs {
+    /// Max acceptable relative detail-energy fraction, in (0, 1).
+    pub threshold: f64,
+    /// Schmitt-trigger half-width around the threshold, in [0, 1).
+    pub hysteresis: f64,
+    /// Hard cap on total bank state bytes (0 = unbounded).
+    pub budget_bytes: usize,
+    /// Measured state bytes of the bank's *non-adaptive* parameters —
+    /// they count against the budget but cannot be re-selected.
+    pub fixed_bytes: usize,
+}
+
+/// Run `policy` over the probe views; returns the migrations to apply
+/// as `(bank index, basis, level)` triples. Pure and deterministic.
+pub fn select(
+    policy: AdaptPolicy,
+    views: &[ParamView],
+    knobs: &PolicyKnobs,
+) -> Vec<(usize, WaveletBasis, usize)> {
+    if policy == AdaptPolicy::Fixed || views.is_empty() {
+        return Vec::new();
+    }
+    let mut chosen: Vec<(WaveletBasis, usize)> =
+        views.iter().map(|v| desired(policy, v, knobs)).collect();
+    repair_budget(views, &mut chosen, knobs);
+    views
+        .iter()
+        .zip(&chosen)
+        .filter(|(v, c)| v.selected != **c)
+        .map(|(v, c)| (v.index, c.0, c.1))
+        .collect()
+}
+
+/// Per-parameter target under the threshold/hysteresis rule.
+fn desired(
+    policy: AdaptPolicy,
+    v: &ParamView,
+    knobs: &PolicyKnobs,
+) -> (WaveletBasis, usize) {
+    let (cur_basis, cur_level) = v.selected;
+    let err_cur = v.err_at(cur_basis, cur_level);
+    let cap = v.max_level();
+    // Deepest level clearing the deepen margin / the plain threshold
+    // (errors are monotone in level, so these are prefix maxima).
+    let deepest_with = |bound: f64| -> usize {
+        (1..=cap)
+            .filter(|&l| v.best_basis(l).1 <= bound)
+            .max()
+            .unwrap_or(0)
+    };
+    let l_deepen = deepest_with(knobs.threshold - knobs.hysteresis);
+    let target_level = if err_cur > knobs.threshold + knobs.hysteresis {
+        // Current depth is too lossy. Anneal-up never backs off;
+        // greedy retreats to the deepest level still under the
+        // threshold (level 1 when none is).
+        match policy {
+            AdaptPolicy::Anneal => cur_level,
+            _ => deepest_with(knobs.threshold).max(1).min(cur_level),
+        }
+    } else if l_deepen > cur_level {
+        match policy {
+            // Anneal moves one level per event (gradual, AdaRankGrad
+            // style); greedy jumps straight to the target.
+            AdaptPolicy::Anneal => cur_level + 1,
+            _ => l_deepen,
+        }
+    } else {
+        cur_level
+    };
+    if target_level == cur_level {
+        // Same depth: switch basis only when the other family is
+        // better by more than the hysteresis margin.
+        let (b, e) = v.best_basis(cur_level);
+        if b != cur_basis && e < err_cur - knobs.hysteresis {
+            (b, cur_level)
+        } else {
+            (cur_basis, cur_level)
+        }
+    } else {
+        (v.best_basis(target_level).0, target_level)
+    }
+}
+
+/// Force-deepen the cheapest-error parameters until the bank fits the
+/// budget (or no deeper candidates remain). Each loop iteration
+/// strictly increases one parameter's level, so it terminates.
+fn repair_budget(
+    views: &[ParamView],
+    chosen: &mut [(WaveletBasis, usize)],
+    knobs: &PolicyKnobs,
+) {
+    if knobs.budget_bytes == 0 {
+        return;
+    }
+    loop {
+        let total: usize = knobs.fixed_bytes
+            + views
+                .iter()
+                .zip(chosen.iter())
+                .map(|(v, c)| v.bytes_at(c.1))
+                .sum::<usize>();
+        if total <= knobs.budget_bytes {
+            return;
+        }
+        // The move with the smallest error at its destination wins;
+        // ties break on view order (bank index) — deterministic.
+        let mut best: Option<(usize, WaveletBasis, usize, f64)> = None;
+        for (vi, v) in views.iter().enumerate() {
+            let next = chosen[vi].1 + 1;
+            if next > v.max_level() {
+                continue;
+            }
+            let (b, e) = v.best_basis(next);
+            let better = match best {
+                Some((_, _, _, be)) => e < be,
+                None => true,
+            };
+            if better {
+                best = Some((vi, b, next, e));
+            }
+        }
+        match best {
+            Some((vi, b, l, _)) => chosen[vi] = (b, l),
+            None => return, // best effort: everyone is at max depth
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(
+        index: usize,
+        selected: (WaveletBasis, usize),
+        cap: usize,
+        // err for Haar per level; DB4 gets err + db4_delta.
+        haar_err: &[f64],
+        db4_delta: f64,
+        bytes_l1: usize,
+    ) -> ParamView {
+        let mut candidates = Vec::new();
+        let mut err = Vec::new();
+        for l in 1..=cap {
+            for b in WaveletBasis::ALL {
+                candidates.push(Candidate {
+                    basis: b,
+                    level: l,
+                    state_bytes: bytes_l1 >> (l - 1),
+                });
+                err.push(match b {
+                    WaveletBasis::Haar => haar_err[l - 1],
+                    WaveletBasis::Db4 => haar_err[l - 1] + db4_delta,
+                });
+            }
+        }
+        ParamView { index, selected, candidates, err }
+    }
+
+    fn knobs() -> PolicyKnobs {
+        PolicyKnobs {
+            threshold: 0.35,
+            hysteresis: 0.05,
+            budget_bytes: 0,
+            fixed_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let v = view(0, (WaveletBasis::Haar, 2), 4, &[0.0, 0.0, 0.0, 0.0], 0.1, 1024);
+        assert!(select(AdaptPolicy::Fixed, &[v], &knobs()).is_empty());
+    }
+
+    #[test]
+    fn greedy_jumps_to_deepest_feasible_level() {
+        // Smooth gradient: everything under threshold − hysteresis up
+        // to level 3, level 4 too lossy.
+        let v = view(
+            7,
+            (WaveletBasis::Haar, 2),
+            4,
+            &[0.01, 0.05, 0.20, 0.80],
+            0.1,
+            1024,
+        );
+        let moves = select(AdaptPolicy::Greedy, &[v], &knobs());
+        assert_eq!(moves, vec![(7, WaveletBasis::Haar, 3)]);
+    }
+
+    #[test]
+    fn greedy_backs_off_when_too_lossy() {
+        // Level 2 error above threshold + hysteresis: retreat to the
+        // deepest level under the plain threshold (level 1 here).
+        let v = view(
+            3,
+            (WaveletBasis::Haar, 2),
+            3,
+            &[0.30, 0.60, 0.90],
+            0.1,
+            1024,
+        );
+        let moves = select(AdaptPolicy::Greedy, &[v], &knobs());
+        assert_eq!(moves, vec![(3, WaveletBasis::Haar, 1)]);
+        // ...and to level 1 even when nothing is feasible.
+        let v = view(3, (WaveletBasis::Haar, 2), 3, &[0.9, 0.95, 0.99], 0.1, 1024);
+        let moves = select(AdaptPolicy::Greedy, &[v], &knobs());
+        assert_eq!(moves, vec![(3, WaveletBasis::Haar, 1)]);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_churn() {
+        // err(level 3) sits inside the hysteresis band around the
+        // threshold: neither a deepen (needs <= 0.30) nor a back-off
+        // (needs current > 0.40) fires.
+        let v = view(
+            0,
+            (WaveletBasis::Haar, 2),
+            3,
+            &[0.10, 0.20, 0.33],
+            0.1,
+            1024,
+        );
+        assert!(select(AdaptPolicy::Greedy, &[v.clone()], &knobs()).is_empty());
+        // With zero hysteresis the same statistic migrates.
+        let k = PolicyKnobs { hysteresis: 0.0, ..knobs() };
+        assert_eq!(
+            select(AdaptPolicy::Greedy, &[v], &k),
+            vec![(0, WaveletBasis::Haar, 3)]
+        );
+    }
+
+    #[test]
+    fn basis_switch_needs_margin() {
+        // DB4 clearly better at the held level => switch basis only.
+        let v = view(
+            1,
+            (WaveletBasis::Haar, 2),
+            2,
+            &[0.2, 0.34],
+            -0.2,
+            1024,
+        );
+        let moves = select(AdaptPolicy::Greedy, &[v], &knobs());
+        assert_eq!(moves, vec![(1, WaveletBasis::Db4, 2)]);
+        // Marginally better (< hysteresis): stay put.
+        let v = view(1, (WaveletBasis::Haar, 2), 2, &[0.2, 0.34], -0.01, 1024);
+        assert!(select(AdaptPolicy::Greedy, &[v], &knobs()).is_empty());
+    }
+
+    #[test]
+    fn anneal_moves_one_level_and_never_back() {
+        // Fully smooth: greedy would jump 2 -> 4; anneal takes 3.
+        let v = view(0, (WaveletBasis::Haar, 2), 4, &[0.0; 4], 0.1, 1024);
+        assert_eq!(
+            select(AdaptPolicy::Anneal, &[v], &knobs()),
+            vec![(0, WaveletBasis::Haar, 3)]
+        );
+        // Too lossy: anneal holds instead of retreating.
+        let v = view(0, (WaveletBasis::Haar, 3), 4, &[0.5, 0.7, 0.9, 0.95], 0.1, 1024);
+        assert!(select(AdaptPolicy::Anneal, &[v], &knobs()).is_empty());
+    }
+
+    #[test]
+    fn budget_repair_is_a_hard_cap() {
+        // Two params held at level 1 (1024 B each) + 512 fixed bytes;
+        // budget 1600 forces one (the smaller-error one, index 1) a
+        // level deeper even though its error is above the threshold.
+        let mk = |i: usize, e1: f64, e2: f64| {
+            view(i, (WaveletBasis::Haar, 1), 2, &[e1, e2], 0.1, 1024)
+        };
+        let views = [mk(0, 0.5, 0.9), mk(1, 0.5, 0.8)];
+        let k = PolicyKnobs {
+            budget_bytes: 1600 + 512,
+            fixed_bytes: 512,
+            ..knobs()
+        };
+        let moves = select(AdaptPolicy::Greedy, &views, &k);
+        assert_eq!(moves, vec![(1, WaveletBasis::Haar, 2)]);
+        // Unreachable budget: best effort = everyone at max depth.
+        let k = PolicyKnobs { budget_bytes: 100, fixed_bytes: 0, ..knobs() };
+        let moves = select(AdaptPolicy::Greedy, &views, &k);
+        assert_eq!(
+            moves,
+            vec![(0, WaveletBasis::Haar, 2), (1, WaveletBasis::Haar, 2)]
+        );
+    }
+
+    #[test]
+    fn policy_token_roundtrip() {
+        for p in AdaptPolicy::ALL {
+            assert_eq!(AdaptPolicy::parse(p.token()), Some(p));
+            assert_eq!(
+                AdaptPolicy::parse(&p.label().to_lowercase()),
+                Some(p)
+            );
+        }
+        assert_eq!(AdaptPolicy::parse("greedy-threshold"), Some(AdaptPolicy::Greedy));
+        assert_eq!(AdaptPolicy::parse("anneal-up"), Some(AdaptPolicy::Anneal));
+        assert_eq!(AdaptPolicy::parse("warp"), None);
+        assert_eq!(AdaptPolicy::default(), AdaptPolicy::Greedy);
+    }
+}

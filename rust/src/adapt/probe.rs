@@ -1,0 +1,174 @@
+//! Per-parameter compressibility probe: EMA-smoothed relative
+//! detail-energy per candidate (basis, level).
+//!
+//! The raw statistic comes from the unified
+//! [`WaveletBasis::lowpass_error_profile_into`] entry point — one
+//! forward transform per candidate *basis* covers every candidate
+//! *level* (the bands are nested), and the engine passes its
+//! persistent row/scratch buffers, so a probe allocates nothing in
+//! steady state. The EMA makes single noisy microbatches unable to
+//! flip a selection on their own; the policy's hysteresis band
+//! handles the remaining drift.
+//!
+//! Everything here is a pure function of the gradient bits, which is
+//! what lets `optim::probe_bank` shard probing across workers under
+//! the same fixed-boundary bit-identity contract as `step_bank`.
+
+use crate::wavelet::WaveletBasis;
+
+/// EMA decay for the probe statistic. High enough that one outlier
+/// microbatch cannot flip a selection, low enough that a regime
+/// change (e.g. gradient noise decaying over training) is visible
+/// within a few cadence windows.
+pub const EMA_DECAY: f64 = 0.75;
+
+/// EMA-smoothed per-candidate error fractions, parallel to the
+/// engine's candidate list.
+#[derive(Clone, Debug)]
+pub struct ProbeEma {
+    err: Vec<f64>,
+    samples: usize,
+}
+
+impl ProbeEma {
+    pub fn new(candidates: usize) -> ProbeEma {
+        ProbeEma { err: vec![0.0; candidates], samples: 0 }
+    }
+
+    /// Fold one fresh measurement in. The first sample initializes
+    /// the EMA directly (no zero-bias warmup to decay away).
+    pub fn observe(&mut self, fresh: &[f64]) {
+        assert_eq!(fresh.len(), self.err.len());
+        if self.samples == 0 {
+            self.err.copy_from_slice(fresh);
+        } else {
+            for (e, f) in self.err.iter_mut().zip(fresh) {
+                *e = EMA_DECAY * *e + (1.0 - EMA_DECAY) * *f;
+            }
+        }
+        self.samples += 1;
+    }
+
+    /// Smoothed errors — `None` until the first probe has landed (the
+    /// policy skips parameters it has no statistics for).
+    pub fn errors(&self) -> Option<Vec<f64>> {
+        (self.samples > 0).then(|| self.err.clone())
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+}
+
+/// Fresh (un-smoothed) relative detail-energy for every
+/// `(basis, level)` candidate of an `m × n` gradient, written into
+/// `fresh` laid out level-major with [`WaveletBasis::ALL`] order
+/// within a level (`fresh.len() == 2 * max_level`). `row_buf` and
+/// `scratch` (len >= n) and `profile` (len == max_level) are
+/// caller-owned so steady-state probing allocates nothing.
+///
+/// The fraction is `||g − P_l g||² / ||g||²` in `[0, 1]`; a zero
+/// gradient reports 0 everywhere (perfectly compressible).
+#[allow(clippy::too_many_arguments)]
+pub fn candidate_errors(
+    g: &[f32],
+    m: usize,
+    n: usize,
+    max_level: usize,
+    row_buf: &mut [f32],
+    scratch: &mut [f32],
+    profile: &mut [f64],
+    fresh: &mut [f64],
+) {
+    assert_eq!(fresh.len(), WaveletBasis::ALL.len() * max_level);
+    let total: f64 = g.iter().map(|v| (*v as f64).powi(2)).sum();
+    if total <= 0.0 {
+        fresh.fill(0.0);
+        return;
+    }
+    for (bi, b) in WaveletBasis::ALL.iter().enumerate() {
+        b.lowpass_error_profile_into(g, m, n, max_level, row_buf, scratch, profile);
+        for l in 1..=max_level {
+            let e = profile[l - 1];
+            fresh[(l - 1) * WaveletBasis::ALL.len() + bi] =
+                (e * e / total).min(1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn errors_for(g: &[f32], m: usize, n: usize, max_level: usize) -> Vec<f64> {
+        let mut row = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        let mut profile = vec![0.0f64; max_level];
+        let mut fresh = vec![0.0f64; 2 * max_level];
+        candidate_errors(
+            g, m, n, max_level, &mut row, &mut scratch, &mut profile, &mut fresh,
+        );
+        fresh
+    }
+
+    #[test]
+    fn block_constant_gradient_is_fully_compressible_under_haar() {
+        // Blocks of 2^3 identical values: zero Haar detail energy up
+        // to level 3, strictly positive at level 4.
+        let (m, n) = (4, 64);
+        let mut rng = Rng::new(5);
+        let mut g = vec![0.0f32; m * n];
+        for r in 0..m {
+            for blk in 0..n / 8 {
+                let v = rng.normal_f32();
+                for j in 0..8 {
+                    g[r * n + blk * 8 + j] = v;
+                }
+            }
+        }
+        let fresh = errors_for(&g, m, n, 4);
+        for l in 1..=3 {
+            let haar = fresh[(l - 1) * 2];
+            assert!(haar < 1e-9, "level {l}: {haar}");
+        }
+        assert!(fresh[3 * 2] > 0.01, "level 4 must lose energy");
+        // Errors are monotone in level for each basis.
+        for bi in 0..2 {
+            for l in 1..4 {
+                assert!(fresh[l * 2 + bi] >= fresh[(l - 1) * 2 + bi]);
+            }
+        }
+    }
+
+    #[test]
+    fn white_noise_loses_about_half_per_level() {
+        // E[detail fraction] at level l is 1 − 2^-l for white noise.
+        let (m, n) = (64, 128);
+        let g = Rng::new(9).normal_vec(m * n, 1.0);
+        let fresh = errors_for(&g, m, n, 2);
+        for bi in 0..2 {
+            assert!((fresh[bi] - 0.5).abs() < 0.05, "l1 {}", fresh[bi]);
+            assert!((fresh[2 + bi] - 0.75).abs() < 0.05, "l2 {}", fresh[2 + bi]);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_reports_zero() {
+        let g = vec![0.0f32; 32];
+        assert!(errors_for(&g, 2, 16, 2).iter().all(|e| *e == 0.0));
+    }
+
+    #[test]
+    fn ema_smooths_and_first_sample_initializes() {
+        let mut ema = ProbeEma::new(2);
+        assert!(ema.errors().is_none());
+        ema.observe(&[0.8, 0.4]);
+        assert_eq!(ema.errors().unwrap(), vec![0.8, 0.4]);
+        ema.observe(&[0.0, 0.0]);
+        let e = ema.errors().unwrap();
+        assert!((e[0] - 0.8 * EMA_DECAY).abs() < 1e-12);
+        assert!((e[1] - 0.4 * EMA_DECAY).abs() < 1e-12);
+        assert_eq!(ema.samples(), 2);
+    }
+}

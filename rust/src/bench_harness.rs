@@ -171,8 +171,11 @@ impl RunSpec {
             OptSpec::Composed { transform, .. } => match transform {
                 TransformSpec::Identity => (0.005, 1.0, false),
                 TransformSpec::RandomProj { .. } => (0.01, 1.0, true),
+                // Adaptive selections are wavelet decompositions at
+                // every instant: same schedule as the static GWT rows.
                 TransformSpec::Wavelet { .. }
-                | TransformSpec::LowRank { .. } => (0.01, 0.25, true),
+                | TransformSpec::LowRank { .. }
+                | TransformSpec::Adaptive { .. } => (0.01, 0.25, true),
             },
         };
         RunSpec {

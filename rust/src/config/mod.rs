@@ -14,6 +14,14 @@
 //! (`gwt-2` ≡ `gwt-2+adam`, `adam8bit` ≡ the identity transform with
 //! an 8-bit inner), so the paper's original method set and the
 //! composition ablations share one grammar.
+//!
+//! The transform axis includes the *adaptive* wavelet family:
+//! `adapt-<policy>+<inner>` with policy `fixed | greedy | anneal`
+//! (long spellings `greedy-threshold` / `anneal-up` accepted; bare
+//! `adapt` ≡ `adapt-greedy`). An adaptive spec starts every eligible
+//! matrix at the paper's (Haar, level 2) and lets the `crate::adapt`
+//! subsystem re-pick each matrix's (basis, level) online under the
+//! `adapt_*` knobs below.
 
 pub mod presets;
 
@@ -23,6 +31,7 @@ use anyhow::{bail, Context, Result};
 
 pub use presets::{ModelPreset, PRESETS};
 
+use crate::adapt::AdaptPolicy;
 use crate::wavelet::WaveletBasis;
 
 /// The gradient-compression stage of an optimizer composition: how an
@@ -40,6 +49,11 @@ pub enum TransformSpec {
     LowRank { rank_denom: usize },
     /// APOLLO-style random projection, rank = min_dim / rank_denom.
     RandomProj { rank_denom: usize },
+    /// Online per-parameter wavelet selection (`adapt-<policy>`):
+    /// every eligible matrix starts at the paper's (Haar, level 2)
+    /// and re-picks its own (basis, level) on the adapt subsystem's
+    /// cadence, under `adapt_budget_mb` (see `crate::adapt`).
+    Adaptive { policy: AdaptPolicy },
 }
 
 /// The inner optimizer of a composition: the state machine that runs
@@ -67,6 +81,20 @@ impl TransformSpec {
     fn parse_token(s: &str) -> Result<Option<TransformSpec>> {
         if matches!(s, "id" | "identity" | "full") {
             return Ok(Some(TransformSpec::Identity));
+        }
+        if s == "adapt" {
+            return Ok(Some(TransformSpec::Adaptive {
+                policy: AdaptPolicy::default(),
+            }));
+        }
+        if let Some(rest) = s.strip_prefix("adapt-") {
+            return match AdaptPolicy::parse(rest) {
+                Some(policy) => Ok(Some(TransformSpec::Adaptive { policy })),
+                None => bail!(
+                    "unknown adapt policy '{rest}' \
+                     (known: fixed, greedy, anneal)"
+                ),
+            };
         }
         if let Some(rest) = s.strip_prefix("gwt-") {
             // Optional basis segment between `gwt-` and the level: an
@@ -118,6 +146,9 @@ impl TransformSpec {
             }
             TransformSpec::RandomProj { rank_denom } => {
                 format!("APOLLO-1/{rank_denom}")
+            }
+            TransformSpec::Adaptive { policy } => {
+                format!("Adapt-{}", policy.label())
             }
         }
     }
@@ -213,6 +244,15 @@ impl OptSpec {
         OptSpec::Lora { rank_denom }
     }
 
+    /// Adaptive per-parameter wavelet selection under `policy`, Adam
+    /// inner (`adapt-greedy` ≡ `adapt-greedy+adam`).
+    pub const fn adaptive(policy: AdaptPolicy) -> OptSpec {
+        OptSpec::composed(
+            TransformSpec::Adaptive { policy },
+            InnerSpec::Adam,
+        )
+    }
+
     /// The transform half of a composition (`None` for MUON/LoRA).
     pub const fn transform(&self) -> Option<TransformSpec> {
         match self {
@@ -301,7 +341,7 @@ impl OptSpec {
                     bail!(
                         "unknown gradient transform '{t_raw}' (known: \
                          gwt-[<basis>-]<level>, galore-<denom>, \
-                         apollo-<denom>, identity)"
+                         apollo-<denom>, adapt-<policy>, identity)"
                     );
                 }
             };
@@ -448,6 +488,18 @@ pub struct TrainConfig {
     pub muon_ns_iters: usize,
     /// GaLore subspace refresh interval (paper: 200).
     pub galore_update_gap: usize,
+    /// Adaptive-compression probe/re-selection cadence in optimizer
+    /// steps (`adapt-*` specs only; see `crate::adapt`).
+    pub adapt_cadence: usize,
+    /// Global optimizer-state budget in MiB for adaptive specs
+    /// (hard cap enforced by the policy's repair pass; 0 = unbounded).
+    pub adapt_budget_mb: f64,
+    /// Max acceptable relative detail-energy fraction, in (0, 1):
+    /// the adaptive policy's compression/fidelity dial.
+    pub adapt_threshold: f64,
+    /// Schmitt-trigger half-width around `adapt_threshold`, in
+    /// [0, 1): suppresses selection churn near the threshold.
+    pub adapt_hysteresis: f64,
     /// GWT execution-path selection (`auto` = HLO artifact when
     /// available, `rust` = force the pure-rust path). Resolved via
     /// [`TrainConfig::resolve_gwt_path`], which keeps the legacy
@@ -479,6 +531,10 @@ impl Default for TrainConfig {
             muon_momentum: 0.95,
             muon_ns_iters: 5,
             galore_update_gap: 50,
+            adapt_cadence: 25,
+            adapt_budget_mb: 0.0,
+            adapt_threshold: 0.35,
+            adapt_hysteresis: 0.05,
             gwt_path: GwtPath::Auto,
             artifacts_dir: "artifacts".into(),
         }
@@ -517,6 +573,18 @@ impl TrainConfig {
             }
             "galore_update_gap" => {
                 self.galore_update_gap = v.parse().context("galore_update_gap")?
+            }
+            "adapt_cadence" => {
+                self.adapt_cadence = v.parse().context("adapt_cadence")?
+            }
+            "adapt_budget_mb" => {
+                self.adapt_budget_mb = v.parse().context("adapt_budget_mb")?
+            }
+            "adapt_threshold" => {
+                self.adapt_threshold = v.parse().context("adapt_threshold")?
+            }
+            "adapt_hysteresis" => {
+                self.adapt_hysteresis = v.parse().context("adapt_hysteresis")?
             }
             "gwt_path" => self.gwt_path = GwtPath::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
@@ -572,6 +640,32 @@ impl TrainConfig {
         }
         if self.muon_ns_iters == 0 {
             bail!("muon_ns_iters must be positive");
+        }
+        if let Some(TransformSpec::Adaptive { .. }) = self.optimizer.transform() {
+            if self.adapt_cadence == 0 {
+                bail!("adapt_cadence must be positive");
+            }
+            if self.adapt_threshold <= 0.0 || self.adapt_threshold >= 1.0 {
+                bail!("adapt_threshold must be in (0,1)");
+            }
+            if !(0.0..1.0).contains(&self.adapt_hysteresis) {
+                bail!("adapt_hysteresis must be in [0,1)");
+            }
+            if self.adapt_budget_mb < 0.0 {
+                bail!("adapt_budget_mb must be >= 0 (0 = unbounded)");
+            }
+            let p = presets::find(&self.preset)?;
+            for (m, n) in p.gwt_shapes() {
+                // The adaptive candidate set needs at least level 1
+                // (every deeper candidate is clamped per shape).
+                if crate::wavelet::max_level(n) == 0 {
+                    bail!(
+                        "preset {} shape {m}x{n} has an odd width — \
+                         adaptive wavelet selection needs level >= 1",
+                        p.name
+                    );
+                }
+            }
         }
         if let Some((basis, level)) = self.optimizer.wavelet() {
             let p = presets::find(&self.preset)?;
@@ -638,6 +732,30 @@ impl TrainConfig {
         m.insert("sgd_momentum".into(), format!("{}", self.sgd_momentum));
         m.insert("muon_momentum".into(), format!("{}", self.muon_momentum));
         m.insert("muon_ns_iters".into(), format!("{}", self.muon_ns_iters));
+        // Adaptive-compression knobs appear only when the spec is
+        // adaptive — they are inert (and would be noise) otherwise.
+        if matches!(
+            self.optimizer.transform(),
+            Some(TransformSpec::Adaptive { .. })
+        ) {
+            m.insert("adapt_cadence".into(), format!("{}", self.adapt_cadence));
+            m.insert(
+                "adapt_budget_mb".into(),
+                if self.adapt_budget_mb > 0.0 {
+                    format!("{}", self.adapt_budget_mb)
+                } else {
+                    "unbounded".into()
+                },
+            );
+            m.insert(
+                "adapt_threshold".into(),
+                format!("{}", self.adapt_threshold),
+            );
+            m.insert(
+                "adapt_hysteresis".into(),
+                format!("{}", self.adapt_hysteresis),
+            );
+        }
         // Show the *resolved* path so an env-var fallback is visible.
         m.insert("gwt_path".into(), self.resolve_gwt_path().label().into());
         m
@@ -867,6 +985,88 @@ mod tests {
         assert!(auto >= 1);
         let cap = presets::find(&cfg.preset).unwrap().max_step_workers();
         assert!(auto <= cap, "auto {auto} > cap {cap}");
+    }
+
+    #[test]
+    fn parse_adaptive_specs() {
+        use crate::adapt::AdaptPolicy;
+        assert_eq!(
+            OptSpec::parse("adapt-greedy").unwrap(),
+            OptSpec::adaptive(AdaptPolicy::Greedy)
+        );
+        // Bare `adapt` defaults to the greedy policy.
+        assert_eq!(
+            OptSpec::parse("adapt").unwrap(),
+            OptSpec::adaptive(AdaptPolicy::Greedy)
+        );
+        assert_eq!(
+            OptSpec::parse("adapt-anneal-up+sgdm").unwrap(),
+            OptSpec::composed(
+                TransformSpec::Adaptive { policy: AdaptPolicy::Anneal },
+                InnerSpec::SgdM
+            )
+        );
+        assert_eq!(
+            OptSpec::parse("ADAPT-FIXED+ADAM8BIT").unwrap(),
+            OptSpec::composed(
+                TransformSpec::Adaptive { policy: AdaptPolicy::Fixed },
+                InnerSpec::Adam8bit
+            )
+        );
+        // Labels round-trip.
+        assert_eq!(OptSpec::adaptive(AdaptPolicy::Greedy).label(), "Adapt-Greedy");
+        for policy in AdaptPolicy::ALL {
+            let spec = OptSpec::adaptive(policy);
+            assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        assert!(OptSpec::parse("adapt-warp").is_err());
+        assert!(OptSpec::parse("adapt-+adam").is_err());
+    }
+
+    #[test]
+    fn adaptive_config_knobs_validate_and_summarize() {
+        use crate::adapt::AdaptPolicy;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_text(
+            "optimizer = adapt-greedy+adam\nadapt_cadence = 10\n\
+             adapt_budget_mb = 1.5\nadapt_threshold = 0.4\n\
+             adapt_hysteresis = 0.02\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.optimizer, OptSpec::adaptive(AdaptPolicy::Greedy));
+        assert_eq!(cfg.adapt_cadence, 10);
+        assert_eq!(cfg.adapt_budget_mb, 1.5);
+        cfg.validate().unwrap();
+        let s = cfg.summary();
+        assert_eq!(s["optimizer"], "Adapt-Greedy");
+        assert_eq!(s["adapt_cadence"], "10");
+        assert_eq!(s["adapt_budget_mb"], "1.5");
+        assert_eq!(s["adapt_threshold"], "0.4");
+        assert_eq!(s["adapt_hysteresis"], "0.02");
+        // Non-adaptive specs keep the summary free of adapt noise.
+        let plain = TrainConfig::default();
+        assert!(!plain.summary().contains_key("adapt_cadence"));
+        // Unbounded budget is spelled out.
+        cfg.adapt_budget_mb = 0.0;
+        assert_eq!(cfg.summary()["adapt_budget_mb"], "unbounded");
+        // Knob validation.
+        cfg.adapt_cadence = 0;
+        assert!(cfg.validate().is_err());
+        cfg.adapt_cadence = 25;
+        cfg.adapt_threshold = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.adapt_threshold = 0.35;
+        cfg.adapt_hysteresis = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.adapt_hysteresis = 0.05;
+        cfg.adapt_budget_mb = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.adapt_budget_mb = 0.0;
+        cfg.validate().unwrap();
+        // The knobs are inert (not validated) off the adaptive specs.
+        let mut plain = TrainConfig::default();
+        plain.adapt_threshold = 9.0;
+        plain.validate().unwrap();
     }
 
     #[test]

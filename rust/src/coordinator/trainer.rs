@@ -6,11 +6,12 @@ use anyhow::{Context, Result};
 
 use super::dp::{combine_grads, DpGroup};
 use super::schedule::CosineSchedule;
+use crate::adapt::AdaptController;
 use crate::checkpoint::Checkpoint;
 use crate::config::{presets, TrainConfig};
 use crate::data::DataLoader;
 use crate::memory::ParamShape;
-use crate::metrics::{LossCurve, Throughput};
+use crate::metrics::{AdaptTrace, LossCurve, Throughput};
 use crate::optim::{
     build_optimizers, step_bank, total_state_bytes, ParamOptimizer,
 };
@@ -31,6 +32,13 @@ pub struct Trainer {
     step: usize,
     pub curve: LossCurve,
     pub throughput: Throughput,
+    /// Adaptive-compression driver (`adapt-*` specs only): probes the
+    /// bank and re-selects (basis, level) on its cadence, after the
+    /// parallel step — serial, so the step engine stays a pure
+    /// throughput knob.
+    adapt: Option<AdaptController>,
+    /// Per-event adaptive telemetry (empty for static specs).
+    pub adapt_trace: AdaptTrace,
     tokens_seen: usize,
     /// Step-engine worker count (resolved once from `cfg.threads`).
     threads: usize,
@@ -78,6 +86,8 @@ impl Trainer {
         let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
         let eval_exec = runtime.exec(&format!("eval_loss_{}", cfg.preset))?;
         let threads = cfg.resolve_threads();
+        let adapt = AdaptController::from_config(&cfg);
+        let adapt_trace = AdaptTrace::new(&label);
         Ok(Trainer {
             cfg,
             runtime,
@@ -90,6 +100,8 @@ impl Trainer {
             step: 0,
             curve: LossCurve::new(&label),
             throughput: Throughput::new(),
+            adapt,
+            adapt_trace,
             tokens_seen: 0,
             threads,
             train_exec,
@@ -178,6 +190,18 @@ impl Trainer {
         step_bank(&mut self.bank, &mut self.params, &grads, lr_t, self.threads);
         let mean_loss = loss_sum / micro_count.max(1) as f32;
         self.step += 1;
+        // Adaptive-compression hook: on the controller's cadence,
+        // probe this step's combined gradients (sharded like the step
+        // itself), re-select decompositions, and record the event.
+        // The controller is serial and deterministic, so training
+        // stays bit-identical across thread counts.
+        if let Some(ctl) = self.adapt.as_mut() {
+            if let Some(ev) =
+                ctl.post_step(self.step, &mut self.bank, &grads, self.threads)
+            {
+                self.adapt_trace.push(ev);
+            }
+        }
         self.curve.push(
             self.step,
             mean_loss,

@@ -18,6 +18,7 @@
 //! Python never runs on the training path: `make artifacts` AOT-lowers
 //! everything; the binary loads `artifacts/*.hlo.txt` via PJRT.
 
+pub mod adapt;
 pub mod bench_harness;
 pub mod checkpoint;
 pub mod cli;

@@ -12,6 +12,8 @@
 //!   gwt train -s optimizer=gwt-db4-2 -s gwt_path=rust  # DB4 basis ablation
 //!   gwt train -s optimizer=gwt-db4-2+adam8bit  # composed: wavelet x 8-bit
 //!   gwt train -s optimizer=galore-4+sgdm       # composed: subspace x SGD-M
+//!   gwt train -s optimizer=adapt-greedy+adam \
+//!             -s adapt_cadence=25 -s adapt_budget_mb=64  # self-tuning GWT
 //!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
 //!   gwt train --threads 4 -s preset=small      # parallel step engine
 //!   gwt memory
@@ -122,12 +124,34 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.valid_ppl,
         outcome.tokens_per_sec
     );
+    let trace = &trainer.adapt_trace;
+    if !trace.events.is_empty() {
+        let hist = trace
+            .events
+            .last()
+            .map(|e| e.histogram_label())
+            .unwrap_or_default();
+        println!(
+            "adapt: {} migrations ({} resets) over {} events; \
+             final selection {hist}; live state {:.2} MB",
+            trace.total_migrations(),
+            trace.total_resets(),
+            trace.events.len(),
+            trainer.optimizer_state_bytes() as f64 / 1e6
+        );
+    }
     if let Some(path) = args.flag("checkpoint") {
         trainer.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
     }
     if let Some(dir) = args.flag("curve-dir") {
         gwt::metrics::write_curves(dir, &[outcome.curve])?;
+        if !trace.events.is_empty() {
+            std::fs::write(
+                format!("{dir}/adapt_trace.csv"),
+                trace.to_csv(),
+            )?;
+        }
         println!("curve written under {dir}/");
     }
     Ok(())

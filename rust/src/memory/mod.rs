@@ -72,6 +72,13 @@ pub fn lowrank_r(shape: &[usize], denom: usize) -> usize {
 ///   P (lo × r) owned, domain r × hi.
 /// * `RandomProj` (APOLLO) — P (n × r) owned, domain m × r (the
 ///   projection is always on the right, mirroring the implementation).
+/// * `Adaptive` — the *init* selection's band (`adapt::init_level`,
+///   i.e. the paper's level 2 clamped per shape): what a freshly
+///   built bank measures, keeping build-time measured==analytic
+///   parity. The number goes stale after a mid-run re-selection by
+///   design — live banks are accounted via
+///   [`adaptive_live_state_bytes`], budgets via the worst-case column
+///   of [`MemoryReport`].
 pub fn transform_layout(shape: &[usize], transform: TransformSpec) -> (usize, usize) {
     let (m, n) = (shape[0], shape[1]);
     match transform {
@@ -92,6 +99,29 @@ pub fn transform_layout(shape: &[usize], transform: TransformSpec) -> (usize, us
             let r = lowrank_r(shape, rank_denom);
             (m * r, n * r)
         }
+        TransformSpec::Adaptive { .. } => {
+            let mut w = n;
+            for _ in 0..crate::adapt::init_level(n) {
+                w = w.div_ceil(2);
+            }
+            (m * w, 0)
+        }
+    }
+}
+
+/// The worst-case (budget-facing) variant of [`transform_layout`]:
+/// identical for every static transform; for adaptive specs it is the
+/// *shallowest* candidate the policy can retreat to (level 1 — the
+/// most state bytes any selection can ever hold).
+pub fn transform_layout_worst(
+    shape: &[usize],
+    transform: TransformSpec,
+) -> (usize, usize) {
+    match transform {
+        TransformSpec::Adaptive { .. } => {
+            (shape[0] * shape[1].div_ceil(2), 0)
+        }
+        t => transform_layout(shape, t),
     }
 }
 
@@ -125,6 +155,18 @@ fn state_bytes_units(p: &ParamShape, spec: OptSpec, elem: usize) -> usize {
             // Adam states over both adapters: 2(mr) + 2(nr).
             (2 * p.shape[0] * r + 2 * p.shape[1] * r) * elem
         }
+    }
+}
+
+fn worst_state_bytes_units(p: &ParamShape, spec: OptSpec, elem: usize) -> usize {
+    match spec {
+        OptSpec::Composed { transform, inner }
+            if p.eligible && p.shape.len() == 2 =>
+        {
+            let (domain, owned) = transform_layout_worst(&p.shape, transform);
+            owned * elem + inner_state_bytes(domain, inner, elem)
+        }
+        _ => state_bytes_units(p, spec, elem),
     }
 }
 
@@ -167,7 +209,17 @@ fn weight_bytes_units(p: &ParamShape, spec: OptSpec, elem: usize) -> usize {
 pub struct MemoryReport {
     pub spec: OptSpec,
     pub weight_bytes: usize,
+    /// Build-time state bytes: for static specs the one (and only)
+    /// number; for adaptive specs the *init* selection — what a fresh
+    /// bank measures, and a number that goes stale once the policy
+    /// re-selects (use [`adaptive_live_state_bytes`] for live banks).
     pub state_bytes: usize,
+    /// Worst-case (budget-facing) state bytes: equals `state_bytes`
+    /// for every static spec; for adaptive specs the level-1
+    /// ceiling no re-selection can exceed. This is the compositional
+    /// worst-case-vs-live story: budget ≙ this column, live ≙ the
+    /// bank's measured bytes.
+    pub worst_state_bytes: usize,
 }
 
 impl MemoryReport {
@@ -186,6 +238,10 @@ pub fn account(params: &[ParamShape], spec: OptSpec) -> MemoryReport {
         spec,
         weight_bytes: params.iter().map(|p| weight_bytes(p, spec)).sum(),
         state_bytes: params.iter().map(|p| state_bytes(p, spec)).sum(),
+        worst_state_bytes: params
+            .iter()
+            .map(|p| worst_state_bytes_units(p, spec, BF16))
+            .sum(),
     }
 }
 
@@ -200,7 +256,52 @@ pub fn measured_account(params: &[ParamShape], spec: OptSpec) -> MemoryReport {
             .map(|p| weight_bytes_units(p, spec, F32))
             .sum(),
         state_bytes: params.iter().map(|p| measured_state_bytes(p, spec)).sum(),
+        worst_state_bytes: params
+            .iter()
+            .map(|p| worst_state_bytes_units(p, spec, F32))
+            .sum(),
     }
+}
+
+/// Analytic *live* state bytes (implementation units) for an adaptive
+/// bank, given each eligible 2D parameter's currently held
+/// (basis, level) in bank order — exactly what `adapt::selections`
+/// returns. Must equal `optim::total_state_bytes` after any sequence
+/// of migrations (pinned by `rust/tests/memory_parity.rs`); the basis
+/// half of a selection never changes bytes (band widths are
+/// basis-independent) but is carried so call sites stay honest about
+/// what a selection is.
+pub fn adaptive_live_state_bytes(
+    params: &[ParamShape],
+    spec: OptSpec,
+    selections: &[(crate::wavelet::WaveletBasis, usize)],
+) -> usize {
+    let inner = match spec {
+        OptSpec::Composed {
+            transform: TransformSpec::Adaptive { .. },
+            inner,
+        } => inner,
+        other => panic!("adaptive_live_state_bytes on static spec {other:?}"),
+    };
+    let mut sel = selections.iter();
+    let total = params
+        .iter()
+        .map(|p| {
+            if p.eligible && p.shape.len() == 2 {
+                let (_, level) =
+                    sel.next().expect("fewer selections than adaptive params");
+                inner_state_bytes(
+                    p.shape[0] * (p.shape[1] >> level),
+                    inner,
+                    F32,
+                )
+            } else {
+                inner_state_bytes(p.numel(), spec.non_eligible_inner(), F32)
+            }
+        })
+        .sum();
+    assert!(sel.next().is_none(), "more selections than adaptive params");
+    total
 }
 
 // ---------------------------------------------------------------------------
@@ -484,6 +585,46 @@ mod tests {
                 "{spec}"
             );
         }
+    }
+
+    #[test]
+    fn adaptive_account_worst_vs_init_vs_live() {
+        use crate::adapt::AdaptPolicy;
+        let params = [
+            ParamShape {
+                name: "layers.00.attn.wq".into(),
+                shape: vec![16, 64],
+                eligible: true,
+            },
+            ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+        ];
+        let spec = OptSpec::adaptive(AdaptPolicy::Greedy);
+        let rep = measured_account(&params, spec);
+        // Init = the paper's level 2 (clamped): same bytes as gwt-2.
+        assert_eq!(
+            rep.state_bytes,
+            measured_account(&params, OptSpec::gwt(2)).state_bytes
+        );
+        // Worst case = level 1: the ceiling no re-selection exceeds.
+        assert_eq!(
+            rep.worst_state_bytes,
+            measured_account(&params, OptSpec::gwt(1)).state_bytes
+        );
+        assert!(rep.worst_state_bytes > rep.state_bytes);
+        // Static specs: worst == state (one number, never stale).
+        for s in [OptSpec::adam(), OptSpec::gwt(3), OptSpec::Muon] {
+            let r = measured_account(&params, s);
+            assert_eq!(r.worst_state_bytes, r.state_bytes, "{s:?}");
+        }
+        // Live accounting follows the selections, basis-independent.
+        use crate::wavelet::WaveletBasis;
+        let live = |l: usize, b: WaveletBasis| {
+            adaptive_live_state_bytes(&params, spec, &[(b, l)])
+        };
+        assert_eq!(live(2, WaveletBasis::Haar), rep.state_bytes);
+        assert_eq!(live(1, WaveletBasis::Haar), rep.worst_state_bytes);
+        assert_eq!(live(3, WaveletBasis::Db4), live(3, WaveletBasis::Haar));
+        assert!(live(3, WaveletBasis::Haar) < rep.state_bytes);
     }
 
     #[test]

@@ -114,6 +114,86 @@ impl Throughput {
     }
 }
 
+/// One adaptive-compression event: a cadence boundary where the
+/// adapt subsystem probed and (possibly) re-selected decompositions.
+/// Emitted by `adapt::AdaptController::post_step`.
+#[derive(Clone, Debug)]
+pub struct AdaptEvent {
+    pub step: usize,
+    /// Migrations applied at this event (resets included).
+    pub migrations: usize,
+    /// How many of those took the reset fallback.
+    pub resets: usize,
+    /// Measured bank state bytes *after* the event — the live half of
+    /// the accountant's worst-case-vs-live story.
+    pub state_bytes: usize,
+    /// Adaptive parameters per held (basis, level), as sorted
+    /// `("haar-2", count)` pairs.
+    pub histogram: Vec<(String, usize)>,
+}
+
+impl AdaptEvent {
+    /// Compact `haar-2:5|db4-3:2` spelling for logs and CSV cells.
+    pub fn histogram_label(&self) -> String {
+        self.histogram
+            .iter()
+            .map(|(k, c)| format!("{k}:{c}"))
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// Per-run record of adaptive-compression events (state bytes over
+/// time, selection histograms) — the fig10 bench's raw material,
+/// written next to the loss curve by the trainer CLI.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptTrace {
+    pub label: String,
+    pub events: Vec<AdaptEvent>,
+}
+
+impl AdaptTrace {
+    pub fn new(label: &str) -> Self {
+        AdaptTrace { label: label.into(), events: Vec::new() }
+    }
+
+    pub fn push(&mut self, e: AdaptEvent) {
+        self.events.push(e);
+    }
+
+    pub fn total_migrations(&self) -> usize {
+        self.events.iter().map(|e| e.migrations).sum()
+    }
+
+    pub fn total_resets(&self) -> usize {
+        self.events.iter().map(|e| e.resets).sum()
+    }
+
+    /// Peak live state bytes across events (budget-compliance check).
+    pub fn max_state_bytes(&self) -> usize {
+        self.events.iter().map(|e| e.state_bytes).max().unwrap_or(0)
+    }
+
+    pub fn final_histogram(&self) -> Option<&[(String, usize)]> {
+        self.events.last().map(|e| e.histogram.as_slice())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,migrations,resets,state_bytes,histogram\n");
+        for e in &self.events {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                e.step,
+                e.migrations,
+                e.resets,
+                e.state_bytes,
+                e.histogram_label()
+            ));
+        }
+        s
+    }
+}
+
 /// Write a set of curves as one CSV per curve under `dir`.
 pub fn write_curves(dir: &str, curves: &[LossCurve]) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -176,6 +256,35 @@ mod tests {
         let csv = c.to_csv();
         assert!(csv.starts_with("step,loss"));
         assert!(csv.lines().count() == 2);
+    }
+
+    #[test]
+    fn adapt_trace_totals_and_csv() {
+        let mut t = AdaptTrace::new("adapt");
+        assert_eq!(t.max_state_bytes(), 0);
+        assert!(t.final_histogram().is_none());
+        t.push(AdaptEvent {
+            step: 10,
+            migrations: 3,
+            resets: 1,
+            state_bytes: 4096,
+            histogram: vec![("haar-2".into(), 2), ("haar-3".into(), 1)],
+        });
+        t.push(AdaptEvent {
+            step: 20,
+            migrations: 0,
+            resets: 0,
+            state_bytes: 2048,
+            histogram: vec![("haar-3".into(), 3)],
+        });
+        assert_eq!(t.total_migrations(), 3);
+        assert_eq!(t.total_resets(), 1);
+        assert_eq!(t.max_state_bytes(), 4096);
+        assert_eq!(t.final_histogram().unwrap(), &[("haar-3".to_string(), 3)]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("step,migrations"));
+        assert!(csv.contains("10,3,1,4096,haar-2:2|haar-3:1"));
+        assert_eq!(csv.lines().count(), 3);
     }
 
     #[test]

@@ -49,6 +49,25 @@ impl InnerOpt for AdamCore {
     fn state_bytes(&self) -> usize {
         (self.m.len() + self.v.len()) * 4
     }
+
+    fn remap_domain(
+        &mut self,
+        new_len: usize,
+        remap: &mut dyn FnMut(&[f32], &mut [f32]),
+    ) -> bool {
+        // First moment is linear in the gradient: the band map is
+        // exact. The second moment rides the same map as a heuristic,
+        // clamped at 0 so sqrt(v)+eps stays defined. `t` is kept —
+        // bias correction continues where it was.
+        let mut m = vec![0.0f32; new_len];
+        remap(&self.m, &mut m);
+        let mut v = vec![0.0f32; new_len];
+        remap(&self.v, &mut v);
+        crate::adapt::clamp_nonneg(&mut v);
+        self.m = m;
+        self.v = v;
+        true
+    }
 }
 
 #[cfg(test)]

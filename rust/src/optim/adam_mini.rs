@@ -43,6 +43,26 @@ impl InnerOpt for AdamMiniCore {
     fn state_bytes(&self) -> usize {
         (self.m.len() + 1) * 4
     }
+
+    fn remap_domain(
+        &mut self,
+        new_len: usize,
+        remap: &mut dyn FnMut(&[f32], &mut [f32]),
+    ) -> bool {
+        // First moment migrates exactly (linear). The shared scalar v
+        // is an EMA of mean(g²) over the domain: the band's total
+        // energy survives an orthonormal re-decomposition, but the
+        // *mean* is total/len — so v must be rescaled by the length
+        // ratio or the denominator is wrong by ~old/new after a
+        // migration (e.g. 2x-oversized updates after deepening two
+        // levels, persisting for ~1/(1-β2) steps). `t` is kept.
+        let old_len = self.m.len().max(1);
+        let mut m = vec![0.0f32; new_len];
+        remap(&self.m, &mut m);
+        self.m = m;
+        self.v *= old_len as f32 / new_len.max(1) as f32;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -67,6 +87,24 @@ mod tests {
         let bc2 = full.step(&g, &mut u2, None);
         assert_eq!(bc1, bc2);
         crate::testing::approx_eq_slice(&u1, &u2, 1e-5);
+    }
+
+    #[test]
+    fn remap_rescales_shared_v_by_length_ratio() {
+        // Halving the domain under an energy-preserving band map
+        // doubles the true mean square, so the carried v must double
+        // too (m migrates through the caller's map; identity here).
+        let mut mini = AdamMiniCore::new(8, AdamHp::default());
+        let g = [1.0f32; 8];
+        let mut u = [0.0f32; 8];
+        mini.step(&g, &mut u, None);
+        let v_before = mini.v;
+        let ok = mini.remap_domain(4, &mut |src, dst| {
+            dst.copy_from_slice(&src[..4]);
+        });
+        assert!(ok);
+        assert_eq!(mini.m.len(), 4);
+        assert!((mini.v - 2.0 * v_before).abs() < 1e-7);
     }
 
     #[test]

@@ -82,6 +82,23 @@ pub trait InnerOpt: Send {
 
     /// Bytes of optimizer state currently held (measured).
     fn state_bytes(&self) -> usize;
+
+    /// Migrate state buffers to a new domain of `new_len` elements
+    /// via `remap` (the adapt subsystem's linear band map, applied to
+    /// each moment buffer; see `adapt::migrate` for the semantics —
+    /// implementations clamp remapped second moments at 0 themselves
+    /// and must keep any step counter, so bias correction stays
+    /// continuous). Return `false` when the state representation does
+    /// not survive a linear map (the default): the caller then
+    /// rebuilds the inner fresh — the documented reset fallback.
+    fn remap_domain(
+        &mut self,
+        new_len: usize,
+        remap: &mut dyn FnMut(&[f32], &mut [f32]),
+    ) -> bool {
+        let _ = (new_len, remap);
+        false
+    }
 }
 
 /// The no-op transform: the inner optimizer runs full-rank.
@@ -223,6 +240,13 @@ impl Composed {
             TransformSpec::RandomProj { rank_denom } => Box::new(
                 RandomProj::new(shape[0], shape[1], rank_denom, opts.seed),
             ),
+            // An adaptive transform is not a fixed decomposition —
+            // `build_optimizers` routes it to `adapt::AdaptiveWavelet`
+            // before ever reaching this constructor.
+            TransformSpec::Adaptive { .. } => bail!(
+                "adaptive transforms are built by adapt::AdaptiveWavelet, \
+                 not Composed"
+            ),
         };
         Ok(Composed::generic(shape, t, inner, label, opts))
     }
@@ -262,7 +286,14 @@ impl Composed {
     }
 }
 
-fn build_inner(len: usize, inner: InnerSpec, opts: &ComposeOpts) -> Box<dyn InnerOpt> {
+/// Construct an inner optimizer over a `len`-element domain — shared
+/// with the adaptive engine (`adapt::AdaptiveWavelet`), which also
+/// uses it for the reset-fallback rebuild after a migration.
+pub(crate) fn build_inner(
+    len: usize,
+    inner: InnerSpec,
+    opts: &ComposeOpts,
+) -> Box<dyn InnerOpt> {
     match inner {
         InnerSpec::Adam => Box::new(AdamCore::new(len, opts.hp)),
         InnerSpec::Adam8bit => Box::new(Adam8bitCore::new(len, opts.hp)),

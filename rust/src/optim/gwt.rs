@@ -266,6 +266,36 @@ impl GwtAdam {
         self.exec = Some((runtime, key));
     }
 
+    /// Adapt-subsystem migration hook: re-target this optimizer to a
+    /// new (basis, level), carrying the moments across via the
+    /// approximation-band remap (`adapt::migrate::remap_band`) — `m`
+    /// exactly (it is linear in the gradient), `v` through the same
+    /// map clamped at 0 (heuristic; see the adapt::migrate docs). The
+    /// step count `t` is preserved, so bias correction stays
+    /// continuous. Any HLO artifact binding is dropped: artifact keys
+    /// are (basis, shape, level)-specific, so the optimizer continues
+    /// on the rust path after a migration (AOT re-binding is a
+    /// ROADMAP follow-on).
+    pub fn migrate(&mut self, basis: WaveletBasis, level: usize) -> Result<()> {
+        basis.check_level(self.cols, level)?;
+        if (basis, level) == (self.basis, self.level) {
+            return Ok(());
+        }
+        let from = (self.basis, self.level);
+        let q = self.cols >> level;
+        let mut m = vec![0.0f32; self.rows * q];
+        let mut v = vec![0.0f32; self.rows * q];
+        crate::adapt::remap_band(&self.m, self.rows, self.cols, from, (basis, level), &mut m);
+        crate::adapt::remap_band(&self.v, self.rows, self.cols, from, (basis, level), &mut v);
+        crate::adapt::clamp_nonneg(&mut v);
+        self.m = m;
+        self.v = v;
+        self.basis = basis;
+        self.level = level;
+        self.exec = None;
+        Ok(())
+    }
+
     /// HLO hot path for one step. Input literals are built from
     /// *borrowed* state (no `mem::take`), so any failure — missing
     /// artifact, compile/run error, marshalling error — leaves
@@ -747,6 +777,37 @@ mod tests {
                 assert_eq!(serial.v, sharded.v, "threads={threads} v state");
             }
         }
+    }
+
+    #[test]
+    fn migrate_retargets_moments_and_rejects_bad_levels() {
+        let hp = AdamHp::default();
+        let mut o = GwtAdam::new(4, 32, 2, hp, None).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..2 {
+            let g = Tensor::randn(&[4, 32], 1.0, &mut rng);
+            o.direction(&g, 0.0);
+        }
+        let t_before = o.t;
+        // Deepen within Haar: new band shapes, step count preserved,
+        // second moments remain nonnegative.
+        o.migrate(WaveletBasis::Haar, 4).unwrap();
+        assert_eq!((o.basis(), o.level()), (WaveletBasis::Haar, 4));
+        assert_eq!(o.m.len(), 4 * (32 >> 4));
+        assert_eq!(o.v.len(), 4 * (32 >> 4));
+        assert_eq!(o.t, t_before);
+        assert!(o.v.iter().all(|v| *v >= 0.0));
+        assert_eq!(o.state_bytes(), 2 * 4 * (32 >> 4) * 4);
+        // Same-spec migration is a no-op; inadmissible levels error
+        // and leave state untouched.
+        o.migrate(WaveletBasis::Haar, 4).unwrap();
+        assert!(o.migrate(WaveletBasis::Db4, 6).is_err());
+        assert_eq!((o.basis(), o.level()), (WaveletBasis::Haar, 4));
+        // Cross-basis migration keeps stepping finitely.
+        o.migrate(WaveletBasis::Db4, 1).unwrap();
+        let g = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let u = o.direction(&g, 0.0);
+        assert!(u.data().iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -108,6 +108,14 @@ pub trait MatrixOpt: Send {
     fn state_bytes(&self) -> usize;
 
     fn label(&self) -> String;
+
+    /// The adaptive-compression seam: engines whose decomposition can
+    /// be re-selected online (`adapt-*` specs) expose their probe /
+    /// migrate surface here for the serial `adapt::AdaptController`.
+    /// Default: not adaptive.
+    fn adaptive(&mut self) -> Option<&mut dyn crate::adapt::AdaptiveOpt> {
+        None
+    }
 }
 
 /// One parameter's full update pipeline: method + α + NL limiter.
@@ -150,6 +158,13 @@ impl ParamOptimizer {
 
     pub fn label(&self) -> String {
         self.inner.label()
+    }
+
+    /// The adaptive seam of the wrapped engine (`None` for every
+    /// static optimizer) — what `adapt::AdaptController` and
+    /// `probe_bank` drive.
+    pub fn adaptive(&mut self) -> Option<&mut dyn crate::adapt::AdaptiveOpt> {
+        self.inner.adaptive()
     }
 }
 
@@ -196,6 +211,14 @@ pub fn build_optimizers(
                 let (m, n) = (p.shape[0], p.shape[1]);
                 let alpha = if cfg.modulewise_lr { cfg.alpha } else { 1.0 };
                 let opt: Box<dyn MatrixOpt> = match cfg.optimizer {
+                    // Adaptive transforms build the adapt subsystem's
+                    // engine (Composed is a fixed decomposition).
+                    OptSpec::Composed {
+                        transform: TransformSpec::Adaptive { policy },
+                        inner,
+                    } => Box::new(crate::adapt::AdaptiveWavelet::new(
+                        m, n, policy, inner, &opts,
+                    )?),
                     OptSpec::Composed { transform, inner } => {
                         Box::new(Composed::build(&p.shape, transform, inner, &opts)?)
                     }
@@ -281,6 +304,25 @@ pub fn step_bank(
     stats
 }
 
+/// Probe every adaptive optimizer in the bank with this step's
+/// gradients — the adapt subsystem's parallel statistics pass, run by
+/// `adapt::AdaptController` on its cadence. Sharded exactly like
+/// [`step_bank`] (fixed contiguous chunks, per-parameter work, no
+/// cross-item reduction), so the EMA state it feeds is bit-identical
+/// at every worker count. Non-adaptive entries are skipped; a bank
+/// without adaptive parameters makes this a cheap no-op.
+pub fn probe_bank(bank: &mut [ParamOptimizer], grads: &[Tensor], threads: usize) {
+    assert_eq!(bank.len(), grads.len(), "bank/grads length mismatch");
+    let mut items: Vec<_> = bank.iter_mut().zip(grads.iter()).collect();
+    crate::pool::scoped_chunks_mut(&mut items, threads, |_| (), |_, _, chunk| {
+        for (opt, g) in chunk.iter_mut() {
+            if let Some(a) = opt.adaptive() {
+                a.probe(g);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,11 +355,82 @@ mod tests {
             OptSpec::parse("galore-4+adam8bit").unwrap(),
             OptSpec::parse("apollo-4+sgdm").unwrap(),
             OptSpec::parse("gwt-3+adam-mini").unwrap(),
+            OptSpec::parse("adapt-greedy+adam").unwrap(),
+            OptSpec::parse("adapt-anneal+sgdm").unwrap(),
+            OptSpec::parse("adapt-fixed+adam8bit").unwrap(),
         ] {
             let bank =
                 build_optimizers(&nano_params(), &cfg_with(opt), None).unwrap();
             assert_eq!(bank.len(), nano_params().len(), "{opt:?}");
         }
+    }
+
+    #[test]
+    fn adaptive_bank_matches_static_gwt2_until_a_migration() {
+        // The acceptance invariant: with no controller in the loop
+        // (or policy `fixed`), an adaptive bank steps bit-identically
+        // to the static `gwt-2+adam` bank — same fused engine, same
+        // init selection, same routing for non-eligible params.
+        let shapes = nano_params();
+        let mut adaptive = build_optimizers(
+            &shapes,
+            &cfg_with(OptSpec::parse("adapt-fixed+adam").unwrap()),
+            None,
+        )
+        .unwrap();
+        let mut fixed =
+            build_optimizers(&shapes, &cfg_with(OptSpec::gwt(2)), None).unwrap();
+        let mut rng = Rng::new(77);
+        let mut w1: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let mut w2 = w1.clone();
+        for step in 0..3u64 {
+            let mut grng = Rng::new(900 + step);
+            let grads: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
+                .collect();
+            step_bank(&mut adaptive, &mut w1, &grads, 0.01, 1);
+            step_bank(&mut fixed, &mut w2, &grads, 0.01, 1);
+        }
+        for (i, (a, b)) in w1.iter().zip(&w2).enumerate() {
+            assert_eq!(a.data(), b.data(), "param {i} ({})", shapes[i].name);
+        }
+        assert_eq!(total_state_bytes(&adaptive), total_state_bytes(&fixed));
+    }
+
+    #[test]
+    fn probe_bank_touches_only_adaptive_params_and_is_sharded_identically() {
+        let shapes = nano_params();
+        let cfg = cfg_with(OptSpec::parse("adapt-greedy+adam").unwrap());
+        let mut serial = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut sharded = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut grng = Rng::new(31);
+        let grads: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
+            .collect();
+        probe_bank(&mut serial, &grads, 1);
+        probe_bank(&mut sharded, &grads, 7);
+        for (i, (a, b)) in serial.iter_mut().zip(sharded.iter_mut()).enumerate()
+        {
+            match (a.adaptive(), b.adaptive()) {
+                (Some(sa), Some(sb)) => {
+                    // Bit-identical EMA state at every worker count.
+                    assert_eq!(sa.errors(), sb.errors(), "param {i}");
+                    assert!(sa.errors().is_some());
+                }
+                (None, None) => {}
+                _ => panic!("adaptive seam disagrees for param {i}"),
+            }
+        }
+        // A static bank makes probing a no-op (and must not panic).
+        let mut plain =
+            build_optimizers(&shapes, &cfg_with(OptSpec::adam()), None).unwrap();
+        probe_bank(&mut plain, &grads, 4);
+        assert!(plain.iter_mut().all(|p| p.adaptive().is_none()));
     }
 
     #[test]

@@ -35,6 +35,19 @@ impl InnerOpt for SgdMCore {
     fn state_bytes(&self) -> usize {
         self.buf.len() * 4
     }
+
+    fn remap_domain(
+        &mut self,
+        new_len: usize,
+        remap: &mut dyn FnMut(&[f32], &mut [f32]),
+    ) -> bool {
+        // Momentum is linear in the gradient, so the adapt
+        // subsystem's band map migrates it exactly.
+        let mut buf = vec![0.0f32; new_len];
+        remap(&self.buf, &mut buf);
+        self.buf = buf;
+        true
+    }
 }
 
 #[cfg(test)]

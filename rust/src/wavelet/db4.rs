@@ -108,44 +108,21 @@ pub fn db4_inv(c: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
     out
 }
 
-/// Approximation-band compression error `||x - inv(keep A only)||_F`
-/// for either family — the ablation statistic: db4 should beat Haar
-/// on signals with within-block linear trends.
-pub fn lowpass_error(
-    x: &[f32],
-    m: usize,
-    n: usize,
-    level: usize,
-    db4: bool,
-) -> f64 {
-    let mut c = if db4 {
-        db4_fwd(x, m, n, level)
-    } else {
-        super::haar_fwd(x, m, n, level)
-    };
-    let q = n >> level;
-    for r in 0..m {
-        for j in q..n {
-            c[r * n + j] = 0.0;
-        }
-    }
-    let back = if db4 {
-        db4_inv(&c, m, n, level)
-    } else {
-        super::haar_inv(&c, m, n, level)
-    };
-    x.iter()
-        .zip(&back)
-        .map(|(a, b)| ((a - b) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Rng;
     use crate::testing::approx_eq_slice;
+    use crate::wavelet::WaveletBasis;
+
+    // The ablation statistic (`||x - inv(keep A only)||_F`) used to
+    // live here behind a `db4: bool` flag; it is now the
+    // basis-dispatched `WaveletBasis::lowpass_error`, which the
+    // adaptive probe and these tests share.
+    fn lowpass_error(x: &[f32], m: usize, n: usize, level: usize, db4: bool) -> f64 {
+        let b = if db4 { WaveletBasis::Db4 } else { WaveletBasis::Haar };
+        b.lowpass_error(x, m, n, level)
+    }
 
     #[test]
     fn filters_are_orthonormal() {

@@ -144,6 +144,99 @@ impl WaveletBasis {
             WaveletBasis::Db4 => db4::db4_inv(c, m, n, level),
         }
     }
+
+    /// Approximation-band compression error `||x − P_l(x)||_F`, where
+    /// `P_l` reconstructs from the level-`level` approximation band
+    /// alone. This is the *single* basis-dispatched entry point behind
+    /// the adaptive probe, the Theorem-1 machinery
+    /// (`theory::lowpass_error`), and the basis-ablation tests — it
+    /// replaces two earlier per-family implementations (a Haar-only
+    /// block-mean form in `theory.rs` and a `db4: bool`-flagged form
+    /// in `db4.rs`).
+    ///
+    /// Because every supported basis is orthonormal, the
+    /// reconstruction error equals the energy of the zeroed detail
+    /// coefficients, so it is computed from one forward transform —
+    /// no inverse, no reconstruction diff. For Haar this equals
+    /// `||x − haar_lowpass(x)||_F` (block means; pinned by
+    /// `lowpass_equals_zeroed_details`).
+    pub fn lowpass_error(self, x: &[f32], m: usize, n: usize, level: usize) -> f64 {
+        self.lowpass_error_profile(x, m, n, level)
+            .last()
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// [`WaveletBasis::lowpass_error`] at *every* level `1..=max_level`
+    /// from a single forward pass per row: the level-`l` approximation
+    /// band is nested inside the level-`max_level` coefficients, so
+    /// `out[l-1] = ||x − P_l(x)||_F` falls out of one transform plus
+    /// band-energy prefix sums. This is the adaptive probe's
+    /// statistic — one call per candidate basis covers every candidate
+    /// level.
+    pub fn lowpass_error_profile(
+        self,
+        x: &[f32],
+        m: usize,
+        n: usize,
+        max_level: usize,
+    ) -> Vec<f64> {
+        let mut row_buf = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f64; max_level];
+        self.lowpass_error_profile_into(
+            x,
+            m,
+            n,
+            max_level,
+            &mut row_buf,
+            &mut scratch,
+            &mut out,
+        );
+        out
+    }
+
+    /// Scratch-reusing form of [`WaveletBasis::lowpass_error_profile`]
+    /// (`row_buf`/`scratch` len >= `n`, `out` len == `max_level`) —
+    /// what the adaptive probe calls with its persistent buffers, so
+    /// steady-state probing allocates nothing.
+    pub fn lowpass_error_profile_into(
+        self,
+        x: &[f32],
+        m: usize,
+        n: usize,
+        max_level: usize,
+        row_buf: &mut [f32],
+        scratch: &mut [f32],
+        out: &mut [f64],
+    ) {
+        assert_eq!(x.len(), m * n);
+        assert_eq!(out.len(), max_level);
+        check_level(n, max_level).expect("invalid level");
+        out.fill(0.0);
+        if max_level == 0 {
+            return;
+        }
+        for r in 0..m {
+            row_buf[..n].copy_from_slice(&x[r * n..(r + 1) * n]);
+            self.fwd_row(&mut row_buf[..n], max_level, scratch);
+            // Detail band D_l occupies [n>>l, n>>(l-1)); the level-L
+            // error energy is the union of bands D_1..D_L, accumulated
+            // below via a prefix sum over l.
+            for l in 1..=max_level {
+                let (lo, hi) = (n >> l, n >> (l - 1));
+                out[l - 1] += row_buf[lo..hi]
+                    .iter()
+                    .map(|v| (*v as f64).powi(2))
+                    .sum::<f64>();
+            }
+        }
+        let mut acc = 0.0f64;
+        for e in out.iter_mut() {
+            acc += *e;
+            *e = acc.sqrt();
+        }
+    }
 }
 
 pub const INV_SQRT2: f32 = std::f32::consts::FRAC_1_SQRT_2;
@@ -423,6 +516,62 @@ mod tests {
             // Shift-overflow guard holds through the dispatch too.
             assert!(b.check_level(8, 64).is_err());
             assert!(b.check_level(8, usize::MAX).is_err());
+        }
+    }
+
+    #[test]
+    fn unified_lowpass_error_matches_reconstruction_diff() {
+        // The single dispatched entry point must equal the
+        // reconstruct-and-diff definition it replaced, for every basis
+        // (orthonormality: detail energy == reconstruction error).
+        let (m, n) = (6, 64);
+        let x = randmat(m, n, 23);
+        for b in WaveletBasis::ALL {
+            for level in 1..=3usize {
+                let mut c = b.fwd(&x, m, n, level);
+                let q = n >> level;
+                for r in 0..m {
+                    for j in q..n {
+                        c[r * n + j] = 0.0;
+                    }
+                }
+                let back = b.inv(&c, m, n, level);
+                let direct: f64 = x
+                    .iter()
+                    .zip(&back)
+                    .map(|(a, v)| ((a - v) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let unified = b.lowpass_error(&x, m, n, level);
+                assert!(
+                    (unified - direct).abs() < 1e-4 * (1.0 + direct),
+                    "{b:?} level {level}: {unified} vs {direct}"
+                );
+            }
+        }
+        // Level 0 keeps everything: zero error.
+        assert_eq!(WaveletBasis::Haar.lowpass_error(&x, m, n, 0), 0.0);
+    }
+
+    #[test]
+    fn lowpass_error_profile_matches_per_level_calls() {
+        let (m, n, max) = (4, 96, 4);
+        let x = randmat(m, n, 31);
+        for b in WaveletBasis::ALL {
+            let prof = b.lowpass_error_profile(&x, m, n, max);
+            assert_eq!(prof.len(), max);
+            for l in 1..=max {
+                let single = b.lowpass_error(&x, m, n, l);
+                assert!(
+                    (prof[l - 1] - single).abs() < 1e-6 * (1.0 + single),
+                    "{b:?} level {l}: {} vs {single}",
+                    prof[l - 1]
+                );
+            }
+            // Errors are monotone in level (nested detail bands).
+            for w in prof.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
         }
     }
 

@@ -10,7 +10,7 @@
 //! where low-rank wins — the assumption is not vacuous.
 
 use crate::linalg::{rank_r_error, singular_values};
-use crate::wavelet::haar_lowpass;
+use crate::wavelet::WaveletBasis;
 
 /// `||ΔG||_F`: Frobenius norm of consecutive-column differences.
 pub fn column_diff_norm(g: &[f32], m: usize, n: usize) -> f64 {
@@ -26,17 +26,12 @@ pub fn column_diff_norm(g: &[f32], m: usize, n: usize) -> f64 {
     acc.sqrt()
 }
 
-/// `||G − P_l(G)||_F`: Haar low-pass approximation error.
+/// `||G − P_l(G)||_F`: Haar low-pass approximation error. Delegates
+/// to the basis-dispatched [`WaveletBasis::lowpass_error`] (for Haar,
+/// `P_l` is exactly the block-mean operator of Theorem 1 — pinned by
+/// `wavelet::tests::lowpass_equals_zeroed_details`).
 pub fn lowpass_error(g: &[f32], m: usize, n: usize, level: usize) -> f64 {
-    let p = haar_lowpass(g, m, n, level);
-    g.iter()
-        .zip(&p)
-        .map(|(x, y)| {
-            let d = (*x - *y) as f64;
-            d * d
-        })
-        .sum::<f64>()
-        .sqrt()
+    WaveletBasis::Haar.lowpass_error(g, m, n, level)
 }
 
 /// Lemma 1's Poincaré constant `κ_b = 1 / (2 sin(π/(2b)))`.

@@ -6,8 +6,9 @@
 //! benches trustworthy — they are analytic, but pinned to the bytes
 //! the optimizer actually holds.
 
+use gwt::adapt::{selections, AdaptPolicy};
 use gwt::config::{InnerSpec, OptSpec, TrainConfig, TransformSpec};
-use gwt::memory::{measured_account, ParamShape};
+use gwt::memory::{adaptive_live_state_bytes, measured_account, ParamShape};
 use gwt::optim::{build_optimizers, total_state_bytes};
 use gwt::wavelet::WaveletBasis;
 
@@ -22,6 +23,11 @@ fn all_specs() -> Vec<OptSpec> {
     for denom in [4, 8] {
         transforms.push(TransformSpec::LowRank { rank_denom: denom });
         transforms.push(TransformSpec::RandomProj { rank_denom: denom });
+    }
+    for policy in AdaptPolicy::ALL {
+        // Freshly built adaptive banks sit at the init selection,
+        // which is what the accountant's state_bytes column predicts.
+        transforms.push(TransformSpec::Adaptive { policy });
     }
     let inners = [
         InnerSpec::Adam,
@@ -96,6 +102,50 @@ fn measured_parity_survives_training_steps() {
             measured_account(&shapes, opt).state_bytes,
             "{spec}"
         );
+    }
+}
+
+#[test]
+fn adaptive_live_parity_after_forced_migrations() {
+    // The accountant row the adaptive subsystem adds: a single
+    // build-time number goes stale after a re-selection, so the live
+    // account is parameterized by the bank's current selections —
+    // and must equal the measured bank bytes after ANY migration
+    // sequence, remapped or reset, for every inner.
+    let shapes = preset_shapes("nano");
+    for spec in ["adapt-greedy+adam", "adapt-greedy+sgdm", "adapt-greedy+adam8bit"]
+    {
+        let opt = OptSpec::parse(spec).unwrap();
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        // Build-time parity (also covered by the grid test above).
+        assert_eq!(
+            total_state_bytes(&bank),
+            measured_account(&shapes, opt).state_bytes,
+            "{spec} at build"
+        );
+        // Force a mixed migration pattern: alternate targets across
+        // the adaptive params.
+        let mut i = 0usize;
+        for p in bank.iter_mut() {
+            if let Some(a) = p.adaptive() {
+                let (basis, level) = if i % 2 == 0 {
+                    (WaveletBasis::Db4, 3)
+                } else {
+                    (WaveletBasis::Haar, 1)
+                };
+                a.migrate(basis, level);
+                i += 1;
+            }
+        }
+        assert!(i > 0, "{spec}: no adaptive params found");
+        let live = total_state_bytes(&bank);
+        let analytic =
+            adaptive_live_state_bytes(&shapes, opt, &selections(&mut bank));
+        assert_eq!(live, analytic, "{spec} after migration");
+        // The worst-case (budget) column bounds every selection.
+        let worst = measured_account(&shapes, opt).worst_state_bytes;
+        assert!(live <= worst, "{spec}: live {live} > worst {worst}");
     }
 }
 

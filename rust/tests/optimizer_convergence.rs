@@ -32,6 +32,9 @@ const METHODS: &[OptSpec] = &[
         TransformSpec::wavelet(WaveletBasis::Db4, 2),
         InnerSpec::SgdM,
     ),
+    // Adaptive spec at its init selection (no controller in the
+    // loop): must clear the same bar as the static gwt-2 it equals.
+    OptSpec::adaptive(gwt::adapt::AdaptPolicy::Greedy),
 ];
 
 fn eligible_shape(m: usize, n: usize) -> ParamShape {

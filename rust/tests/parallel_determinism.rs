@@ -8,6 +8,7 @@
 //! Runs entirely on the pure-rust optimizer paths (no artifacts
 //! needed), so it exercises the full bank: GWT row sharding included.
 
+use gwt::adapt::{selections, AdaptController, AdaptPolicy};
 use gwt::config::{InnerSpec, OptSpec, TrainConfig, TransformSpec};
 use gwt::memory::ParamShape;
 use gwt::optim::{build_optimizers, step_bank};
@@ -51,6 +52,15 @@ const ALL_SPECS: &[OptSpec] = &[
     OptSpec::composed(
         TransformSpec::RandomProj { rank_denom: 4 },
         InnerSpec::Adam8bit,
+    ),
+    // Adaptive engines ride the same bank contract; without the
+    // controller in the loop they run at their init selection (the
+    // adaptive pipeline with live migrations is pinned separately
+    // below).
+    OptSpec::adaptive(AdaptPolicy::Greedy),
+    OptSpec::composed(
+        TransformSpec::Adaptive { policy: AdaptPolicy::Anneal },
+        InnerSpec::SgdM,
     ),
 ];
 
@@ -110,6 +120,88 @@ fn parallel_bank_bit_identical_for_every_optimizer() {
                     a.data(),
                     b.data(),
                     "{opt:?} threads={threads} param {} ({})",
+                    i,
+                    shapes[i].name
+                );
+            }
+        }
+    }
+}
+
+/// Block-constant gradients (width 16) drive the greedy/anneal
+/// policies to deepen from the init level 2 — a migration is
+/// guaranteed to fire within the run.
+fn compressible_grads(shapes: &[ParamShape], step: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(7000 + step);
+    shapes
+        .iter()
+        .map(|s| {
+            if s.shape.len() == 2 {
+                let (m, n) = (s.shape[0], s.shape[1]);
+                let mut gd = vec![0.0f32; m * n];
+                for r in 0..m {
+                    for blk in 0..n / 16 {
+                        let v = rng.normal_f32();
+                        for j in 0..16 {
+                            gd[r * n + blk * 16 + j] = v;
+                        }
+                    }
+                }
+                Tensor::new(&s.shape, gd)
+            } else {
+                Tensor::randn(&s.shape, 1.0, &mut rng)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn adaptive_pipeline_bit_identical_with_migrations() {
+    // The full adaptive pipeline — parallel step, sharded probe,
+    // serial policy, migration — must be bit-identical across worker
+    // counts, including the steps where migrations fire.
+    let shapes = nano_shapes();
+    for policy in [AdaptPolicy::Greedy, AdaptPolicy::Anneal] {
+        let mut cfg = TrainConfig {
+            optimizer: OptSpec::adaptive(policy),
+            ..Default::default()
+        };
+        cfg.adapt_cadence = 2;
+        let run = |threads: usize| {
+            let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut ctl = AdaptController::from_config(&cfg).unwrap();
+            let mut w = init_weights(&shapes, 3);
+            let mut migrations = 0usize;
+            for step in 1..=6u64 {
+                let grads = compressible_grads(&shapes, step);
+                step_bank(&mut bank, &mut w, &grads, 0.01, threads);
+                if let Some(ev) =
+                    ctl.post_step(step as usize, &mut bank, &grads, threads)
+                {
+                    migrations += ev.migrations;
+                }
+            }
+            (w, selections(&mut bank), migrations)
+        };
+        let (ser_w, ser_sel, ser_migs) = run(1);
+        assert!(
+            ser_migs > 0,
+            "{policy:?}: compressible gradients must trigger a migration"
+        );
+        // The selections actually moved off the init (Haar, 2).
+        assert!(
+            ser_sel.iter().any(|s| *s != (WaveletBasis::Haar, 2)),
+            "{policy:?}: {ser_sel:?}"
+        );
+        for threads in [2usize, 4, 7] {
+            let (w, sel, migs) = run(threads);
+            assert_eq!(sel, ser_sel, "{policy:?} threads={threads} selections");
+            assert_eq!(migs, ser_migs, "{policy:?} threads={threads} events");
+            for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{policy:?} threads={threads} param {} ({})",
                     i,
                     shapes[i].name
                 );

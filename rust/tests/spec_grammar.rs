@@ -5,6 +5,7 @@
 //! checkpoint/curve labels — so the round-trip property is a
 //! compatibility contract, not a convenience.
 
+use gwt::adapt::AdaptPolicy;
 use gwt::config::{InnerSpec, OptSpec, TransformSpec};
 use gwt::wavelet::WaveletBasis;
 
@@ -18,6 +19,9 @@ fn all_transforms() -> Vec<TransformSpec> {
     for denom in [4, 8] {
         out.push(TransformSpec::LowRank { rank_denom: denom });
         out.push(TransformSpec::RandomProj { rank_denom: denom });
+    }
+    for policy in AdaptPolicy::ALL {
+        out.push(TransformSpec::Adaptive { policy });
     }
     out
 }
@@ -136,6 +140,53 @@ fn junk_specs_fail_with_precise_messages() {
     assert!(err("gwt-2+frobnicate").contains("unknown inner optimizer"));
     assert!(err("frobnicate+adam").contains("unknown gradient transform"));
     assert!(err("frobnicate").contains("unknown optimizer spec"));
+
+    // Adaptive tokens: unknown policies are named precisely, and an
+    // adaptive transform in inner position points the right way.
+    let e = err("adapt-warp+adam");
+    assert!(e.contains("unknown adapt policy 'warp'"), "{e}");
+    assert!(e.contains("fixed, greedy, anneal"), "{e}");
+    assert!(err("adapt-+adam").contains("unknown adapt policy"), "{}", err("adapt-+adam"));
+    assert!(err("adapt-warp").contains("unknown adapt policy"));
+    let e = err("gwt-2+adapt-greedy");
+    assert!(e.contains("not an inner optimizer"), "{e}");
+    assert!(err("adapt-greedy+muon").contains("standalone"));
+}
+
+#[test]
+fn adaptive_spec_aliases_and_roundtrip() {
+    // `adapt` defaults to greedy; the policy's long spellings from
+    // the issue (`greedy-threshold`, `anneal-up`) are aliases.
+    for (legacy, explicit) in [
+        ("adapt", "adapt-greedy+adam"),
+        ("adapt-greedy", "adapt-greedy+adam"),
+        ("adapt-greedy-threshold", "adapt-greedy+adam"),
+        ("adapt-anneal-up+sgdm", "adapt-anneal+sgdm"),
+        ("adapt-fixed", "adapt-fixed+adam"),
+    ] {
+        assert_eq!(
+            OptSpec::parse(legacy).unwrap(),
+            OptSpec::parse(explicit).unwrap(),
+            "{legacy} vs {explicit}"
+        );
+    }
+    for policy in AdaptPolicy::ALL {
+        for inner in ALL_INNERS {
+            let spec = OptSpec::composed(
+                TransformSpec::Adaptive { policy },
+                inner,
+            );
+            assert_eq!(OptSpec::parse(&spec.label()).unwrap(), spec);
+        }
+    }
+    assert_eq!(
+        OptSpec::adaptive(AdaptPolicy::Greedy).label(),
+        "Adapt-Greedy"
+    );
+    assert_eq!(
+        OptSpec::parse("adapt-fixed+adam8bit").unwrap().label(),
+        "Adapt-Fixed+8bit-Adam"
+    );
 }
 
 #[test]
