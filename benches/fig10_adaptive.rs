@@ -29,6 +29,7 @@ use gwt::metrics::AdaptTrace;
 use gwt::optim::{
     build_optimizers, probe_bank, step_bank, total_state_bytes,
 };
+use gwt::pool::Sharding;
 use gwt::rng::Rng;
 use gwt::tensor::Tensor;
 
@@ -103,9 +104,9 @@ fn dynamics_run(
     for step in 1..=steps {
         let sigma = 2.0 * 0.92f32.powi(step as i32);
         let grads = stream_grads(&shapes, step, sigma);
-        step_bank(&mut bank, &mut w, &grads, 0.01, 1);
+        step_bank(&mut bank, &mut w, &grads, 0.01, &Sharding::Serial);
         if let Some(ctl) = ctl.as_mut() {
-            if let Some(ev) = ctl.post_step(step, &mut bank, &grads, 1) {
+            if let Some(ev) = ctl.post_step(step, &mut bank, &grads, &Sharding::Serial) {
                 trace.push(ev);
             }
         }
@@ -143,9 +144,9 @@ fn bowl_run(preset: &str, spec: &str, steps: usize, cadence: usize) -> (f64, usi
         let grads: Vec<Tensor> = w.clone();
         let progress = step as f32 / steps as f32;
         let lr_t = 0.02 * 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
-        step_bank(&mut bank, &mut w, &grads, lr_t, 1);
+        step_bank(&mut bank, &mut w, &grads, lr_t, &Sharding::Serial);
         if let Some(ctl) = ctl.as_mut() {
-            ctl.post_step(step, &mut bank, &grads, 1);
+            ctl.post_step(step, &mut bank, &grads, &Sharding::Serial);
         }
     }
     (norm(&w) / before, total_state_bytes(&bank))
@@ -286,11 +287,11 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let iters = ((12.0 * bench_scale()).round() as usize).max(4);
         let step_only = time_fn(1, iters, || {
-            step_bank(&mut bank, &mut w, &grads, 0.001, 1);
+            step_bank(&mut bank, &mut w, &grads, 0.001, &Sharding::Serial);
         });
         let step_and_probe = time_fn(1, iters, || {
-            step_bank(&mut bank, &mut w, &grads, 0.001, 1);
-            probe_bank(&mut bank, &grads, 1);
+            step_bank(&mut bank, &mut w, &grads, 0.001, &Sharding::Serial);
+            probe_bank(&mut bank, &grads, &Sharding::Serial);
         });
         probe_table
             .row(vec!["step only".into(), format!("{:.3}", step_only.per_iter_ms())]);

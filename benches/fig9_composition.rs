@@ -15,6 +15,7 @@ use gwt::bench_harness::{bench_scale, time_bank_step, write_result, TableView};
 use gwt::config::{OptSpec, TrainConfig};
 use gwt::memory::measured_account;
 use gwt::optim::{build_optimizers, total_state_bytes};
+use gwt::pool::Sharding;
 
 const BASES: &[&str] = &["haar", "db4"];
 const LEVELS: &[usize] = &[1, 2, 3];
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
                 if basis == "haar" && inner == "adam" {
                     level_adam_state = state;
                 }
-                let timing = time_bank_step(preset, opt, 1, 1, iters);
+                let timing = time_bank_step(preset, opt, &Sharding::Serial, 1, iters);
                 table.row(vec![
                     name,
                     format!("{:.1}", state as f64 / 1e3),

@@ -3,11 +3,12 @@
 //! bottlenecks recorded in EXPERIMENTS.md §Perf.
 
 use gwt::bench_harness::{
-    runtime_or_skip, time_bank_step, time_fn, write_result, TableView,
+    runtime_or_none, time_bank_step, time_fn, write_result, TableView,
 };
 use gwt::config::OptSpec;
 use gwt::linalg::{matmul, svd_jacobi};
 use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
+use gwt::pool::{accumulate_sharded, scoped_chunks_mut, Sharding, StepPool};
 use gwt::rng::Rng;
 use gwt::runtime::{literal_f32, literal_tokens};
 use gwt::tensor::Tensor;
@@ -73,7 +74,123 @@ fn main() -> anyhow::Result<()> {
         "4-tap filters vs Haar's 2".into(),
     ]);
 
-    let rt = runtime_or_skip();
+    // Step-engine dispatch comparison (artifact-free, so the CI smoke
+    // exercises these rows on a fresh checkout): the same full-bank
+    // optimizer step driven serial, through per-call scoped spawn
+    // (the pre-StepPool engine), and through one persistent pool
+    // reused across all iterations — the trainer's configuration.
+    // Output is bit-identical across all three; only dispatch cost
+    // differs, and at small presets that cost is mostly thread spawn.
+    for (preset, opt) in [
+        ("nano", OptSpec::gwt(2)),
+        ("small", OptSpec::gwt(2)),
+        ("small", OptSpec::adam()),
+    ] {
+        let t1 = time_bank_step(preset, opt, &Sharding::Serial, 2, 9);
+        let ts = time_bank_step(preset, opt, &Sharding::Scoped(4), 2, 9);
+        let pool = Sharding::pool(4);
+        let tp = time_bank_step(preset, opt, &pool, 2, 9);
+        table.row(vec![
+            format!("bank step {} serial", opt.label()),
+            preset.into(),
+            format!("{:.2} ms", t1.per_iter_ms()),
+            String::new(),
+        ]);
+        table.row(vec![
+            format!("bank step {} scoped-spawn x4", opt.label()),
+            preset.into(),
+            format!("{:.2} ms", ts.per_iter_ms()),
+            format!("{:.2}x vs serial", t1.median_ns / ts.median_ns),
+        ]);
+        table.row(vec![
+            format!("bank step {} pool x4 reused", opt.label()),
+            preset.into(),
+            format!("{:.2} ms", tp.per_iter_ms()),
+            format!(
+                "{:.2}x vs serial, {:.2}x vs scoped",
+                t1.median_ns / tp.median_ns,
+                ts.median_ns / tp.median_ns
+            ),
+        ]);
+    }
+
+    // Pure dispatch overhead: near-empty chunks make the per-call
+    // spawn/park-wake cost the entire measurement. This is the
+    // per-step tax the persistent pool removes.
+    {
+        let body = |_: &mut (), _off: usize, c: &mut [u64]| {
+            for x in c.iter_mut() {
+                *x = x.wrapping_add(1);
+            }
+        };
+        let mut tiny = vec![0u64; 8];
+        let t_scoped = time_fn(5, 50, || {
+            scoped_chunks_mut(&mut tiny, 4, |_| (), body);
+        });
+        let pool4 = StepPool::new(4);
+        let t_pool = time_fn(5, 50, || {
+            pool4.run_chunks_mut(&mut tiny, 4, |_| (), body);
+        });
+        table.row(vec![
+            "dispatch scoped-spawn x4".into(),
+            "8 trivial items".into(),
+            format!("{:.1} us", t_scoped.per_iter_us()),
+            "4 thread spawns + joins per call".into(),
+        ]);
+        table.row(vec![
+            "dispatch pool x4 reused".into(),
+            "8 trivial items".into(),
+            format!("{:.1} us", t_pool.per_iter_us()),
+            format!(
+                "{:.2}x vs scoped (parked workers, no spawns)",
+                t_scoped.median_ns / t_pool.median_ns
+            ),
+        ]);
+    }
+
+    // Gradient accumulation: the trainer's microbatch `acc += g`
+    // sum, serial vs sharded over the same reused pool (bit-identical
+    // — see tests/grad_accum_parity.rs — so this is purely a
+    // bandwidth/dispatch trade).
+    {
+        let n = 1 << 20;
+        let src = rng.normal_vec(n, 1.0);
+        let mut acc = vec![0.0f32; n];
+        let t_ser = time_fn(3, 15, || {
+            accumulate_sharded(&Sharding::Serial, &mut acc, &src);
+        });
+        let accum_pool = Sharding::pool(4);
+        let t_shard = time_fn(3, 15, || {
+            accumulate_sharded(&accum_pool, &mut acc, &src);
+        });
+        // Traffic per element: read acc + read src + write acc.
+        let bytes = (n * 3 * 4) as f64;
+        table.row(vec![
+            "grad accumulate serial".into(),
+            "1M f32".into(),
+            format!("{:.1} us", t_ser.per_iter_us()),
+            format!("{:.2} GB/s", bytes / t_ser.median_ns),
+        ]);
+        table.row(vec![
+            "grad accumulate pool x4".into(),
+            "1M f32".into(),
+            format!("{:.1} us", t_shard.per_iter_us()),
+            format!(
+                "{:.2} GB/s, {:.2}x vs serial",
+                bytes / t_shard.median_ns,
+                t_ser.median_ns / t_shard.median_ns
+            ),
+        ]);
+    }
+
+    // Everything below needs compiled artifacts; without them the
+    // table so far (transforms, dispatch, accumulation — the
+    // artifact-free §Perf rows CI smokes) is still reported.
+    let Some(rt) = runtime_or_none() else {
+        table.print();
+        write_result("perf_hotpaths", &table, vec![])?;
+        return Ok(());
+    };
     let mut hlo_opt = GwtAdam::new(64, 160, 2, hp, Some(rt.clone())).unwrap();
     assert!(hlo_opt.uses_hlo());
     let t = time_fn(3, 25, || {
@@ -112,33 +229,11 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    // Parallel step engine: full-bank optimizer step, serial vs
-    // sharded — the trainer's per-parameter loop driven through
-    // pool::scoped_chunks_mut (bit-identical output at every count;
-    // see tests/parallel_determinism.rs).
-    for (preset, opt) in [
-        ("nano", OptSpec::gwt(2)),
-        ("small", OptSpec::gwt(2)),
-        ("small", OptSpec::adam()),
-    ] {
-        let t1 = time_bank_step(preset, opt, 1, 2, 9);
-        let t4 = time_bank_step(preset, opt, 4, 2, 9);
-        table.row(vec![
-            format!("bank step {} serial", opt.label()),
-            preset.into(),
-            format!("{:.2} ms", t1.per_iter_ms()),
-            String::new(),
-        ]);
-        table.row(vec![
-            format!("bank step {} threads=4", opt.label()),
-            preset.into(),
-            format!("{:.2} ms", t4.per_iter_ms()),
-            format!("{:.2}x vs serial", t1.median_ns / t4.median_ns),
-        ]);
-    }
-
     // Row-sharded GwtAdam rust path at the largest preset shape (the
-    // step engine's row level, single-matrix regime).
+    // step engine's row level, single-matrix regime; `with_threads`
+    // now backs the sharding with this optimizer's own persistent
+    // pool, matching what `build_optimizers` gives single-param
+    // banks).
     let g_rows = Tensor::randn(&[672, 256], 1.0, &mut rng);
     let mut row_serial = GwtAdam::new(672, 256, 2, hp, None).unwrap();
     let tr1 = time_fn(2, 15, || {

@@ -26,6 +26,25 @@ cargo test -q
 echo "== cargo test -q (GWT_OPT_PATH=rust) =="
 GWT_OPT_PATH=rust cargo test -q
 
+# Thread-matrix pass: the step-engine determinism contract at pinned
+# worker counts. GWT_TEST_THREADS overrides the batteries' default
+# {1,2,4,7} grid, so every CI run exercises the persistent StepPool,
+# the legacy scoped-spawn baseline, and the sharded gradient
+# accumulation at an explicit serial and an explicit odd-parallel
+# count (odd counts catch uneven-chunk bugs).
+for t in 1 7; do
+    echo "== thread matrix (GWT_TEST_THREADS=$t) =="
+    GWT_TEST_THREADS=$t cargo test -q \
+        --test parallel_determinism --test grad_accum_parity
+done
+
+# Smoke the pool-reuse bench rows: perf_hotpaths' dispatch-overhead,
+# pool-vs-scoped bank-step, and serial-vs-sharded accumulation rows
+# are artifact-free and print before the HLO gate, so this is green
+# (and informative) on a fresh checkout.
+echo "== pool-reuse bench rows (smoke) =="
+GWT_BENCH_SCALE=0.2 cargo bench --bench perf_hotpaths
+
 # Smoke the Haar-vs-DB4 basis-ablation bench: its transform-level
 # section is artifact-free, so this runs green on a fresh checkout
 # and covers the end-to-end ablation when artifacts are present.

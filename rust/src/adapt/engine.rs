@@ -28,6 +28,7 @@ use crate::config::InnerSpec;
 use crate::memory::{inner_state_bytes, F32};
 use crate::optim::compose::build_inner;
 use crate::optim::{AdamHp, ComposeOpts, GwtAdam, InnerOpt, MatrixOpt, Wavelet};
+use crate::pool::Sharding;
 use crate::tensor::Tensor;
 use crate::wavelet::WaveletBasis;
 
@@ -136,7 +137,7 @@ impl AdaptiveWavelet {
             inner,
             opts.hp,
             opts.sgd_momentum,
-            opts.threads,
+            opts.sharding.clone(),
         )?;
         let n_cand = candidates.len();
         Ok(AdaptiveWavelet {
@@ -175,12 +176,12 @@ fn build_core(
     inner: InnerSpec,
     hp: AdamHp,
     sgd_momentum: f32,
-    threads: usize,
+    sharding: Sharding,
 ) -> Result<Core> {
     if inner == InnerSpec::Adam {
         return Ok(Core::Fused(
             GwtAdam::new_with_basis(rows, cols, level, basis, hp, None)?
-                .with_threads(threads),
+                .with_sharding(sharding),
         ));
     }
     let transform = Wavelet::new(rows, cols, level, basis)?;
@@ -207,7 +208,7 @@ fn fresh_inner(
         galore_update_gap: 1,
         seed: 0,
         runtime: None,
-        threads: 1,
+        sharding: Sharding::Serial,
     };
     build_inner(len, inner, &opts)
 }
@@ -359,7 +360,7 @@ mod tests {
             galore_update_gap: 50,
             seed: 7,
             runtime: None,
-            threads: 1,
+            sharding: Sharding::Serial,
         }
     }
 

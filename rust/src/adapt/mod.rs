@@ -57,6 +57,7 @@ pub use probe::{candidate_errors, ProbeEma};
 use crate::config::{TrainConfig, TransformSpec};
 use crate::metrics::AdaptEvent;
 use crate::optim::{probe_bank, total_state_bytes, ParamOptimizer};
+use crate::pool::Sharding;
 use crate::tensor::Tensor;
 use crate::wavelet::WaveletBasis;
 
@@ -132,23 +133,25 @@ impl AdaptController {
 
     /// Trainer hook, called after every optimizer step with that
     /// step's (combined) gradients. On cadence boundaries: probe the
-    /// bank (sharded over `threads`), run the policy, apply the
-    /// migrations, and report the event. `step` is the 1-based count
-    /// of completed steps. Off-cadence (and always under the `fixed`
-    /// policy) this is a no-op — zero steady-state overhead. The
-    /// first cadence event is probe-only warmup (`None` returned):
-    /// selections start once the EMA holds [`MIN_PROBE_SAMPLES`].
+    /// bank (sharded through the trainer's reused `sharding` handle —
+    /// probe passes ride the same persistent pool as the step
+    /// itself), run the policy, apply the migrations, and report the
+    /// event. `step` is the 1-based count of completed steps.
+    /// Off-cadence (and always under the `fixed` policy) this is a
+    /// no-op — zero steady-state overhead. The first cadence event is
+    /// probe-only warmup (`None` returned): selections start once the
+    /// EMA holds [`MIN_PROBE_SAMPLES`].
     pub fn post_step(
         &mut self,
         step: usize,
         bank: &mut [ParamOptimizer],
         grads: &[Tensor],
-        threads: usize,
+        sharding: &Sharding,
     ) -> Option<AdaptEvent> {
         if self.policy == AdaptPolicy::Fixed || step % self.cadence != 0 {
             return None;
         }
-        probe_bank(bank, grads, threads);
+        probe_bank(bank, grads, sharding);
         self.events_seen += 1;
         if self.events_seen < MIN_PROBE_SAMPLES {
             return None;
@@ -299,12 +302,12 @@ mod tests {
         let mut ctl = AdaptController::from_config(&c).unwrap();
         // Block-constant width 16: zero Haar detail energy to level 4.
         let grads = block_grads(&shapes, 16, 1);
-        assert!(ctl.post_step(1, &mut bank, &grads, 1).is_none(), "off cadence");
+        assert!(ctl.post_step(1, &mut bank, &grads, &Sharding::Serial).is_none(), "off cadence");
         assert!(
-            ctl.post_step(2, &mut bank, &grads, 1).is_none(),
+            ctl.post_step(2, &mut bank, &grads, &Sharding::Serial).is_none(),
             "first cadence event is probe-only warmup"
         );
-        let ev = ctl.post_step(4, &mut bank, &grads, 1).expect("cadence event");
+        let ev = ctl.post_step(4, &mut bank, &grads, &Sharding::Serial).expect("cadence event");
         assert!(ev.migrations >= 2, "both eligible params should deepen");
         assert_eq!(ev.resets, 0);
         let sels = selections(&mut bank);
@@ -331,13 +334,13 @@ mod tests {
         let mut ctl = AdaptController::from_config(&c).unwrap();
         let grads = block_grads(&shapes, 16, 2);
         // Event 1 is warmup; events 2 and 3 each anneal one level.
-        assert!(ctl.post_step(2, &mut bank, &grads, 1).is_none());
-        ctl.post_step(4, &mut bank, &grads, 1).unwrap();
+        assert!(ctl.post_step(2, &mut bank, &grads, &Sharding::Serial).is_none());
+        ctl.post_step(4, &mut bank, &grads, &Sharding::Serial).unwrap();
         assert_eq!(
             selections(&mut bank),
             vec![(WaveletBasis::Haar, 3), (WaveletBasis::Haar, 3)]
         );
-        ctl.post_step(6, &mut bank, &grads, 1).unwrap();
+        ctl.post_step(6, &mut bank, &grads, &Sharding::Serial).unwrap();
         assert_eq!(
             selections(&mut bank),
             vec![(WaveletBasis::Haar, 4), (WaveletBasis::Haar, 4)]
@@ -345,7 +348,7 @@ mod tests {
         // One more event: width-16 blocks guarantee feasibility only
         // through level 4, so each param either holds or takes at
         // most one more step — never jumps, never backs off.
-        ctl.post_step(8, &mut bank, &grads, 1).unwrap();
+        ctl.post_step(8, &mut bank, &grads, &Sharding::Serial).unwrap();
         for (basis, level) in selections(&mut bank) {
             assert_eq!(basis, WaveletBasis::Haar);
             assert!((4..=5).contains(&level));
@@ -360,7 +363,7 @@ mod tests {
         let mut ctl = AdaptController::from_config(&c).unwrap();
         let grads = block_grads(&shapes, 16, 3);
         for step in 1..=6 {
-            assert!(ctl.post_step(step, &mut bank, &grads, 1).is_none());
+            assert!(ctl.post_step(step, &mut bank, &grads, &Sharding::Serial).is_none());
         }
         assert_eq!(
             selections(&mut bank),
@@ -391,8 +394,8 @@ mod tests {
             .iter()
             .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
             .collect();
-        assert!(ctl.post_step(2, &mut bank, &grads, 1).is_none(), "warmup");
-        let ev = ctl.post_step(4, &mut bank, &grads, 1).unwrap();
+        assert!(ctl.post_step(2, &mut bank, &grads, &Sharding::Serial).is_none(), "warmup");
+        let ev = ctl.post_step(4, &mut bank, &grads, &Sharding::Serial).unwrap();
         assert!(
             ev.state_bytes <= budget,
             "bank {} exceeds budget {budget}",

@@ -219,26 +219,37 @@ pub fn pretrain(rt: Arc<Runtime>, spec: &RunSpec, loader: &DataLoader) -> TrainO
     t.run(loader, false).expect("run")
 }
 
-/// Load the runtime or exit 0 with a notice (benches must not fail
-/// the suite when artifacts are absent).
+/// Load the runtime or exit 0 (benches must not fail the suite when
+/// artifacts are absent); [`runtime_or_none`] prints the skip notice.
 pub fn runtime_or_skip() -> Arc<Runtime> {
+    runtime_or_none().unwrap_or_else(|| std::process::exit(0))
+}
+
+/// Load the runtime, or `None` with a notice — for benches whose
+/// artifact-free sections should still report (perf_hotpaths prints
+/// its pool/dispatch/accumulation rows before bailing on the
+/// HLO-dependent remainder).
+pub fn runtime_or_none() -> Option<Arc<Runtime>> {
     match Runtime::load("artifacts") {
-        Ok(rt) => Arc::new(rt),
+        Ok(rt) => Some(Arc::new(rt)),
         Err(e) => {
-            eprintln!("SKIP bench (run `make artifacts`): {e:#}");
-            std::process::exit(0);
+            eprintln!("SKIP artifact-dependent rows (run `make artifacts`): {e:#}");
+            None
         }
     }
 }
 
-/// Time one full-bank optimizer step at a given step-engine worker
-/// count: synthetic gradients, the pure-rust optimizer paths, and the
-/// same `step_bank` call the trainer makes. Used by the
-/// serial-vs-parallel comparison in `benches/perf_hotpaths.rs`.
+/// Time one full-bank optimizer step through a given step-engine
+/// dispatcher: synthetic gradients, the pure-rust optimizer paths,
+/// and the same `step_bank` call the trainer makes. Pass
+/// `Sharding::Serial`, `Sharding::Scoped(n)` (per-call spawn), or a
+/// reused `Sharding::pool(n)` — the pool-reuse-vs-scoped-spawn
+/// comparison in `benches/perf_hotpaths.rs` builds the pool once,
+/// outside the timed loop, exactly like a training run does.
 pub fn time_bank_step(
     preset: &str,
     optimizer: OptSpec,
-    threads: usize,
+    sharding: &crate::pool::Sharding,
     warmup: usize,
     iters: usize,
 ) -> Timing {
@@ -247,7 +258,6 @@ pub fn time_bank_step(
     let cfg = TrainConfig {
         preset: preset.into(),
         optimizer,
-        threads,
         ..Default::default()
     };
     let mut bank = crate::optim::build_optimizers(&shapes, &cfg, None)
@@ -262,7 +272,7 @@ pub fn time_bank_step(
         .map(|s| crate::tensor::Tensor::randn(&s.shape, 1.0, &mut rng))
         .collect();
     time_fn(warmup, iters, || {
-        crate::optim::step_bank(&mut bank, &mut params, &grads, 0.01, threads);
+        crate::optim::step_bank(&mut bank, &mut params, &grads, 0.01, sharding);
     })
 }
 

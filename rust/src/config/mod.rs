@@ -466,10 +466,11 @@ pub struct TrainConfig {
     /// Data-parallel worker count (thread-simulated GPUs).
     pub dp_workers: usize,
     /// Parallel step-engine worker threads for the optimizer bank /
-    /// GWT row sharding (`pool::scoped_chunks_mut`). `1` = serial,
-    /// `0` = auto-detect from the host, capped by the preset's
-    /// `max_step_workers`. Output is bit-identical at every setting
-    /// (fixed chunk boundaries, no cross-item reductions).
+    /// GWT row sharding / microbatch gradient accumulation — one
+    /// persistent `pool::StepPool` spawned per run (`pool::Sharding`).
+    /// `1` = serial, `0` = auto-detect from the host, capped by the
+    /// preset's `max_step_workers`. Output is bit-identical at every
+    /// setting (fixed chunk boundaries, no cross-item reductions).
     pub threads: usize,
     /// Norm-growth limiter threshold γ (0 disables, paper: 1.01).
     pub nl_gamma: f32,

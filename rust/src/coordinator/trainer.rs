@@ -13,8 +13,9 @@ use crate::data::DataLoader;
 use crate::memory::ParamShape;
 use crate::metrics::{AdaptTrace, LossCurve, Throughput};
 use crate::optim::{
-    build_optimizers, step_bank, total_state_bytes, ParamOptimizer,
+    build_optimizers_sharded, step_bank, total_state_bytes, ParamOptimizer,
 };
+use crate::pool::{accumulate_sharded, Sharding};
 use crate::runtime::{
     literal_f32, literal_tokens, scalar_from_literal, Runtime,
 };
@@ -40,8 +41,11 @@ pub struct Trainer {
     /// Per-event adaptive telemetry (empty for static specs).
     pub adapt_trace: AdaptTrace,
     tokens_seen: usize,
-    /// Step-engine worker count (resolved once from `cfg.threads`).
-    threads: usize,
+    /// Step-engine dispatcher, built once from `cfg.threads`: a
+    /// persistent `pool::StepPool` whose workers are spawned here and
+    /// reused by every `step_bank`/`probe_bank`/grad-accumulate call
+    /// of the run (`Serial` when the run is single-threaded).
+    sharding: Sharding,
     /// §Perf L3-2: executables resolved once at construction instead
     /// of a key-format + map lookup on every microbatch.
     train_exec: Arc<crate::runtime::Exec>,
@@ -79,13 +83,21 @@ impl Trainer {
             .iter()
             .map(|s| init_param(&s.name, &s.shape, &mut rng))
             .collect();
-        let bank = build_optimizers(&shapes, &cfg, Some(runtime.clone()))?;
+        // One pool for the whole run: bank stepping, probing, grad
+        // accumulation, and (single-param banks) row sharding all
+        // reuse these workers.
+        let sharding = Sharding::pool(cfg.resolve_threads());
+        let bank = build_optimizers_sharded(
+            &shapes,
+            &cfg,
+            Some(runtime.clone()),
+            sharding.clone(),
+        )?;
         let dp = DpGroup::new(loader, cfg.dp_workers);
         let schedule = CosineSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac);
         let label = format!("{}_{}", cfg.preset, cfg.optimizer.label());
         let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
         let eval_exec = runtime.exec(&format!("eval_loss_{}", cfg.preset))?;
-        let threads = cfg.resolve_threads();
         let adapt = AdaptController::from_config(&cfg);
         let adapt_trace = AdaptTrace::new(&label);
         Ok(Trainer {
@@ -103,7 +115,7 @@ impl Trainer {
             adapt,
             adapt_trace,
             tokens_seen: 0,
-            threads,
+            sharding,
             train_exec,
             eval_exec,
         })
@@ -166,10 +178,13 @@ impl Trainer {
                 worker_grads.push(grads);
             }
             let combined = combine_grads(worker_grads);
-            for (a, g) in acc.iter_mut().zip(combined) {
-                for (x, y) in a.iter_mut().zip(&g) {
-                    *x += *y;
-                }
+            // Microbatch accumulation rides the same reused pool as
+            // the optimizer step: chunked elementwise adds over the
+            // flat buffer, fixed boundaries, one writer per element —
+            // bit-identical to the serial sum at every worker count
+            // (pinned by tests/grad_accum_parity.rs).
+            for (a, g) in acc.iter_mut().zip(&combined) {
+                accumulate_sharded(&self.sharding, a, g);
             }
         }
         let inv = 1.0 / self.cfg.grad_accum as f32;
@@ -185,9 +200,9 @@ impl Trainer {
                 Tensor::new(&s.shape, gd)
             })
             .collect();
-        // Parallel step engine: shard the bank over the configured
-        // worker count (bit-identical to the serial loop).
-        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, self.threads);
+        // Parallel step engine: shard the bank through the run's
+        // persistent pool (bit-identical to the serial loop).
+        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, &self.sharding);
         let mean_loss = loss_sum / micro_count.max(1) as f32;
         self.step += 1;
         // Adaptive-compression hook: on the controller's cadence,
@@ -197,7 +212,7 @@ impl Trainer {
         // stays bit-identical across thread counts.
         if let Some(ctl) = self.adapt.as_mut() {
             if let Some(ev) =
-                ctl.post_step(self.step, &mut self.bank, &grads, self.threads)
+                ctl.post_step(self.step, &mut self.bank, &grads, &self.sharding)
             {
                 self.adapt_trace.push(ev);
             }

@@ -14,7 +14,8 @@ use crate::config::{presets, TrainConfig};
 use crate::coordinator::trainer::init_param;
 use crate::coordinator::CosineSchedule;
 use crate::memory::ParamShape;
-use crate::optim::{build_optimizers, step_bank, ParamOptimizer};
+use crate::optim::{build_optimizers_sharded, step_bank, ParamOptimizer};
+use crate::pool::Sharding;
 use crate::runtime::{
     literal_f32, literal_labels, literal_tokens, scalar_from_literal, Runtime,
 };
@@ -30,8 +31,9 @@ pub struct FineTuner {
     params: Vec<Tensor>,
     bank: Vec<ParamOptimizer>,
     classes: usize,
-    /// Step-engine worker count (resolved once from `cfg.threads`).
-    threads: usize,
+    /// Step-engine dispatcher (one persistent pool per fine-tuning
+    /// run, resolved once from `cfg.threads`).
+    sharding: Sharding,
 }
 
 #[derive(Clone, Debug)]
@@ -91,8 +93,15 @@ impl FineTuner {
         // Fine-tuning disables the NL limiter (paper uses it for
         // pretraining stability only).
         cfg.nl_gamma = 0.0;
-        let bank = build_optimizers(&shapes, &cfg, Some(runtime.clone()))?;
-        let threads = cfg.resolve_threads();
+        // One pool per fine-tuning run, shared with the bank (row
+        // sharding would use it if the bank were single-param).
+        let sharding = Sharding::pool(cfg.resolve_threads());
+        let bank = build_optimizers_sharded(
+            &shapes,
+            &cfg,
+            Some(runtime.clone()),
+            sharding.clone(),
+        )?;
         Ok(FineTuner {
             runtime,
             cfg,
@@ -101,7 +110,7 @@ impl FineTuner {
             params,
             bank,
             classes,
-            threads,
+            sharding,
         })
     }
 
@@ -138,7 +147,7 @@ impl FineTuner {
                 Ok(Tensor::new(&s.shape, outs[1 + i].to_vec::<f32>()?))
             })
             .collect::<Result<Vec<_>>>()?;
-        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, self.threads);
+        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, &self.sharding);
         Ok(loss)
     }
 

@@ -105,7 +105,7 @@ mod tests {
                 galore_update_gap: 50,
                 seed,
                 runtime: None,
-                threads: 1,
+                sharding: crate::pool::Sharding::Serial,
             },
         )
         .unwrap()

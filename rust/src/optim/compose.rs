@@ -149,8 +149,10 @@ pub struct ComposeOpts {
     /// Runtime for the fused Wavelet×Adam HLO hot path; `None`
     /// forces the pure-rust path.
     pub runtime: Option<Arc<Runtime>>,
-    /// Row-shard workers for the fused Wavelet×Adam rust path.
-    pub threads: usize,
+    /// Row-shard dispatcher for the fused Wavelet×Adam rust path
+    /// (`Sharding::Serial` in multi-param banks; a pool spawned once
+    /// by `build_optimizers` for single-param banks).
+    pub sharding: crate::pool::Sharding,
 }
 
 enum Engine {
@@ -211,7 +213,7 @@ impl Composed {
                 opts.hp,
                 opts.runtime.clone(),
             )?
-            .with_threads(opts.threads);
+            .with_sharding(opts.sharding.clone());
             return Ok(Composed {
                 shape: shape.to_vec(),
                 label: String::new(), // fused engine labels itself
@@ -377,7 +379,7 @@ mod tests {
             galore_update_gap: 50,
             seed: 7,
             runtime: None,
-            threads: 1,
+            sharding: crate::pool::Sharding::Serial,
         }
     }
 

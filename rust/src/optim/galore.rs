@@ -130,7 +130,7 @@ mod tests {
                 galore_update_gap: gap,
                 seed: 0,
                 runtime: None,
-                threads: 1,
+                sharding: crate::pool::Sharding::Serial,
             },
         )
         .unwrap()

@@ -26,10 +26,11 @@
 //!   artifact exists for the (basis, shape, level), e.g. every DB4
 //!   run, the high-level sweeps of Fig 5 (l up to 7), and unit tests
 //!   without artifacts. Rows are independent, so this path is
-//!   row-sharded through the parallel step engine
-//!   (`pool::scoped_chunks_mut`) when `threads` > 1 — bit-identical
-//!   to the serial loop (same per-row code, fixed chunk boundaries,
-//!   no cross-row reduction) for every basis.
+//!   row-sharded through the parallel step engine (a `pool::Sharding`
+//!   handle — in production a persistent `pool::StepPool` spawned
+//!   once per bank) when it carries more than one worker —
+//!   bit-identical to the serial loop (same per-row code, fixed chunk
+//!   boundaries, no cross-row reduction) for every basis.
 //!
 //! Path selection (HLO vs rust) is the caller's decision: pass
 //! `runtime: None` to force the rust path. `build_optimizers`
@@ -43,6 +44,7 @@ use anyhow::{Context, Result};
 
 use super::compose::GradientTransform;
 use super::{AdamHp, MatrixOpt};
+use crate::pool::Sharding;
 use crate::runtime::{
     literal_f32, literal_f32_from, tensor_from_literal, Runtime,
 };
@@ -168,8 +170,9 @@ pub struct GwtAdam {
     t: usize,
     /// Compiled fused artifact, if available.
     exec: Option<(Arc<Runtime>, String)>,
-    /// Row-shard worker count for the rust path (1 = serial).
-    threads: usize,
+    /// Row-shard dispatcher for the rust path (`Serial` by default;
+    /// a persistent `StepPool` handle in single-param banks).
+    sharding: Sharding,
     /// Scratch for the serial rust path (avoids per-step allocs).
     scratch: Vec<f32>,
     /// §Perf L3-3: persistent per-row coefficient buffer (the rust
@@ -229,21 +232,29 @@ impl GwtAdam {
             v: vec![0.0; rows * q],
             t: 0,
             exec,
-            threads: 1,
+            sharding: Sharding::Serial,
             scratch: vec![0.0; cols],
             row_buf: vec![0.0; cols],
         })
     }
 
     /// Set the row-shard worker count for the rust path (builder
-    /// form; `0` means serial, same as `1`).
-    pub fn with_threads(mut self, threads: usize) -> Self {
-        self.set_threads(threads);
+    /// form): spawns this optimizer's own persistent pool via
+    /// `Sharding::pool` (`0`/`1` mean serial — normalization lives in
+    /// that one constructor). Prefer [`GwtAdam::with_sharding`] when
+    /// a shared pool already exists.
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.with_sharding(Sharding::pool(threads))
+    }
+
+    /// Set the row-shard dispatcher for the rust path (builder form).
+    pub fn with_sharding(mut self, sharding: Sharding) -> Self {
+        self.set_sharding(sharding);
         self
     }
 
-    pub fn set_threads(&mut self, threads: usize) {
-        self.threads = threads.max(1);
+    pub fn set_sharding(&mut self, sharding: Sharding) {
+        self.sharding = sharding;
     }
 
     pub fn uses_hlo(&self) -> bool {
@@ -324,14 +335,15 @@ impl GwtAdam {
 
     /// Rust mirror of the fused kernel: returns the (pre-bias-corr)
     /// normalized update and refreshes moments in place. Row-sharded
-    /// over `self.threads` workers; bit-identical at every count.
+    /// through `self.sharding` (a reused pool in production);
+    /// bit-identical at every worker count.
     fn rust_direction(&mut self, g: &Tensor) -> Vec<f32> {
         let (rows, n, level) = (self.rows, self.cols, self.level);
         let basis = self.basis;
         let q = n >> level;
         let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
         let mut out = vec![0.0f32; rows * n];
-        if self.threads <= 1 || rows == 1 {
+        if !self.sharding.is_parallel() || rows == 1 {
             // Serial fast path: persistent buffers, zero allocs beyond
             // the output.
             let (mstate, vstate, scratch, coeffs) = (
@@ -367,9 +379,8 @@ impl GwtAdam {
             .zip(self.v.chunks_exact_mut(q))
             .map(|(((gr, orow), mrow), vrow)| (gr, orow, mrow, vrow))
             .collect();
-        crate::pool::scoped_chunks_mut(
+        self.sharding.run_chunks_mut(
             &mut items,
-            self.threads,
             |_| (vec![0.0f32; n], vec![0.0f32; n]),
             |(coeffs, scratch), _, chunk| {
                 for (gr, orow, mrow, vrow) in chunk.iter_mut() {
@@ -776,6 +787,29 @@ mod tests {
                 assert_eq!(serial.m, sharded.m, "threads={threads} m state");
                 assert_eq!(serial.v, sharded.v, "threads={threads} v state");
             }
+        }
+    }
+
+    #[test]
+    fn row_sharding_dispatchers_agree_bit_for_bit() {
+        // The pool dispatcher (reused across steps) and the legacy
+        // scoped-spawn dispatcher must both reproduce the serial row
+        // loop exactly — update, m, and v alike.
+        let hp = AdamHp::default();
+        let mk = || GwtAdam::new(13, 32, 2, hp, None).unwrap();
+        let mut serial = mk();
+        let mut scoped = mk().with_sharding(Sharding::Scoped(4));
+        let mut pooled = mk().with_sharding(Sharding::pool(4));
+        let mut rng = Rng::new(47);
+        for step in 0..4 {
+            let g = Tensor::randn(&[13, 32], 1.0, &mut rng);
+            let a = serial.direction(&g, 0.0);
+            let b = scoped.direction(&g, 0.0);
+            let c = pooled.direction(&g, 0.0);
+            assert_eq!(a.data(), b.data(), "scoped step={step}");
+            assert_eq!(a.data(), c.data(), "pool step={step}");
+            assert_eq!(serial.m, pooled.m, "pool m state");
+            assert_eq!(serial.v, pooled.v, "pool v state");
         }
     }
 

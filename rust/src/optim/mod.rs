@@ -65,6 +65,7 @@ pub use sgdm::SgdMCore;
 
 use crate::config::{GwtPath, OptSpec, TrainConfig, TransformSpec};
 use crate::memory::ParamShape;
+use crate::pool::Sharding;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -97,8 +98,9 @@ impl AdamHp {
 /// Per-parameter optimizer state machine.
 ///
 /// `Send` is part of the contract: the parallel step engine
-/// (`step_bank`, `pool::scoped_chunks_mut`) moves `&mut` bank entries
-/// onto worker threads, so every impl must be safe to hand off.
+/// (`step_bank` dispatching through `pool::Sharding` — a persistent
+/// `pool::StepPool` in production) moves `&mut` bank entries onto
+/// worker threads, so every impl must be safe to hand off.
 pub trait MatrixOpt: Send {
     /// Update internal state with gradient `g` and return the update
     /// direction (applied by the caller as `w -= lr_eff · scale · u`).
@@ -182,13 +184,35 @@ pub fn build_optimizers(
     cfg: &TrainConfig,
     runtime: Option<Arc<Runtime>>,
 ) -> Result<Vec<ParamOptimizer>> {
+    // Standalone construction (tests, benches, sweeps): the bank
+    // spawns its own pool iff row sharding calls for one (single
+    // param; multi-param banks row-shard serially, so no pool is ever
+    // built for them). Callers that already hold a run-wide pool
+    // (Trainer, FineTuner) go through `build_optimizers_sharded` so
+    // the same workers serve both levels instead of a duplicate pool
+    // being parked.
+    let row_sharding = if params.len() == 1 {
+        Sharding::pool(cfg.resolve_threads())
+    } else {
+        Sharding::Serial
+    };
+    build_optimizers_sharded(params, cfg, runtime, row_sharding)
+}
+
+/// [`build_optimizers`] with a caller-supplied step-engine handle for
+/// GwtAdam row sharding. The thread-budget routing still applies —
+/// the handle is used only by single-param banks (multi-param banks
+/// shard at the bank level in `step_bank`, and nesting the two would
+/// oversubscribe threads²) — so passing a shared pool is always safe.
+pub fn build_optimizers_sharded(
+    params: &[ParamShape],
+    cfg: &TrainConfig,
+    runtime: Option<Arc<Runtime>>,
+    sharding: Sharding,
+) -> Result<Vec<ParamOptimizer>> {
     let hp = AdamHp::from_config(cfg);
-    // Thread-budget routing: a multi-param bank is sharded across
-    // parameters by `step_bank`, so the per-row engine inside each
-    // fused GwtAdam stays serial (nesting the two would oversubscribe
-    // threads²). A single-param bank has no bank-level parallelism to
-    // exploit, so the whole budget goes to GwtAdam's row sharding.
-    let threads = if params.len() == 1 { cfg.resolve_threads() } else { 1 };
+    let row_sharding =
+        if params.len() == 1 { sharding } else { Sharding::Serial };
     // Forcing the rust path simply withholds the runtime from the
     // fused engine (no artifact lookup happens at all).
     let gwt_runtime = match cfg.resolve_gwt_path() {
@@ -205,7 +229,7 @@ pub fn build_optimizers(
                 galore_update_gap: cfg.galore_update_gap,
                 seed: cfg.seed ^ hash_name(&p.name),
                 runtime: gwt_runtime.clone(),
-                threads,
+                sharding: row_sharding.clone(),
             };
             let (inner, alpha): (Box<dyn MatrixOpt>, f32) = if eligible {
                 let (m, n) = (p.shape[0], p.shape[1]);
@@ -273,10 +297,13 @@ pub fn total_state_bytes(bank: &[ParamOptimizer]) -> usize {
 /// Step every parameter of a bank — the parallel step engine's bank
 /// level. Each `(optimizer, weight, gradient)` triple is independent
 /// (per-parameter state, disjoint weights), so the work is sharded
-/// over `threads` workers with `pool::scoped_chunks_mut`; the fixed
-/// chunk boundaries and the absence of any cross-parameter reduction
-/// make the result bit-identical to the serial loop for every worker
-/// count (`threads <= 1` runs inline with no spawn overhead).
+/// through the given [`Sharding`] handle — in production a persistent
+/// `pool::StepPool` spawned once per run, so stepping costs an
+/// enqueue + wake instead of per-call thread spawns. The fixed chunk
+/// boundaries and the absence of any cross-parameter reduction make
+/// the result bit-identical to the serial loop (and to the legacy
+/// scoped-spawn dispatcher, `Sharding::Scoped`) for every worker
+/// count; `Sharding::Serial` runs inline with no dispatch overhead.
 ///
 /// Returns per-parameter `StepStats` in bank order.
 pub fn step_bank(
@@ -284,7 +311,7 @@ pub fn step_bank(
     params: &mut [Tensor],
     grads: &[Tensor],
     lr_t: f32,
-    threads: usize,
+    sharding: &Sharding,
 ) -> Vec<StepStats> {
     assert_eq!(bank.len(), params.len(), "bank/params length mismatch");
     assert_eq!(bank.len(), grads.len(), "bank/grads length mismatch");
@@ -296,7 +323,7 @@ pub fn step_bank(
         .zip(stats.iter_mut())
         .map(|(((opt, w), g), s)| (opt, w, g, s))
         .collect();
-    crate::pool::scoped_chunks_mut(&mut items, threads, |_| (), |_, _, chunk| {
+    sharding.run_chunks_mut(&mut items, |_| (), |_, _, chunk| {
         for (opt, w, g, s) in chunk.iter_mut() {
             **s = opt.apply(w, g, lr_t);
         }
@@ -308,13 +335,15 @@ pub fn step_bank(
 /// gradients — the adapt subsystem's parallel statistics pass, run by
 /// `adapt::AdaptController` on its cadence. Sharded exactly like
 /// [`step_bank`] (fixed contiguous chunks, per-parameter work, no
-/// cross-item reduction), so the EMA state it feeds is bit-identical
-/// at every worker count. Non-adaptive entries are skipped; a bank
+/// cross-item reduction) through the same reused pool handle, so the
+/// EMA state it feeds is bit-identical at every worker count — and
+/// the probe passes adaptive schedules add no longer multiply
+/// per-step spawn overhead. Non-adaptive entries are skipped; a bank
 /// without adaptive parameters makes this a cheap no-op.
-pub fn probe_bank(bank: &mut [ParamOptimizer], grads: &[Tensor], threads: usize) {
+pub fn probe_bank(bank: &mut [ParamOptimizer], grads: &[Tensor], sharding: &Sharding) {
     assert_eq!(bank.len(), grads.len(), "bank/grads length mismatch");
     let mut items: Vec<_> = bank.iter_mut().zip(grads.iter()).collect();
-    crate::pool::scoped_chunks_mut(&mut items, threads, |_| (), |_, _, chunk| {
+    sharding.run_chunks_mut(&mut items, |_| (), |_, _, chunk| {
         for (opt, g) in chunk.iter_mut() {
             if let Some(a) = opt.adaptive() {
                 a.probe(g);
@@ -392,8 +421,8 @@ mod tests {
                 .iter()
                 .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
                 .collect();
-            step_bank(&mut adaptive, &mut w1, &grads, 0.01, 1);
-            step_bank(&mut fixed, &mut w2, &grads, 0.01, 1);
+            step_bank(&mut adaptive, &mut w1, &grads, 0.01, &Sharding::Serial);
+            step_bank(&mut fixed, &mut w2, &grads, 0.01, &Sharding::Serial);
         }
         for (i, (a, b)) in w1.iter().zip(&w2).enumerate() {
             assert_eq!(a.data(), b.data(), "param {i} ({})", shapes[i].name);
@@ -412,8 +441,8 @@ mod tests {
             .iter()
             .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
             .collect();
-        probe_bank(&mut serial, &grads, 1);
-        probe_bank(&mut sharded, &grads, 7);
+        probe_bank(&mut serial, &grads, &Sharding::Serial);
+        probe_bank(&mut sharded, &grads, &Sharding::pool(7));
         for (i, (a, b)) in serial.iter_mut().zip(sharded.iter_mut()).enumerate()
         {
             match (a.adaptive(), b.adaptive()) {
@@ -429,7 +458,7 @@ mod tests {
         // A static bank makes probing a no-op (and must not panic).
         let mut plain =
             build_optimizers(&shapes, &cfg_with(OptSpec::adam()), None).unwrap();
-        probe_bank(&mut plain, &grads, 4);
+        probe_bank(&mut plain, &grads, &Sharding::pool(4));
         assert!(plain.iter_mut().all(|p| p.adaptive().is_none()));
     }
 
@@ -704,7 +733,16 @@ mod tests {
 
     #[test]
     fn step_bank_matches_serial_apply() {
-        for threads in [0usize, 1, 2, 4, 7] {
+        // Every dispatcher — inline, legacy scoped spawn, and the
+        // persistent pool (reused across all steps) — must reproduce
+        // the hand-rolled serial loop bit-for-bit.
+        for sharding in [
+            Sharding::Serial,
+            Sharding::Scoped(2),
+            Sharding::Scoped(7),
+            Sharding::pool(4),
+            Sharding::pool(7),
+        ] {
             let cfg = cfg_with(OptSpec::gwt(2));
             let shapes = nano_params();
             let mut serial = build_optimizers(&shapes, &cfg, None).unwrap();
@@ -726,10 +764,10 @@ mod tests {
                 {
                     o.apply(w, g, 0.01);
                 }
-                step_bank(&mut sharded, &mut w2, &grads, 0.01, threads);
+                step_bank(&mut sharded, &mut w2, &grads, 0.01, &sharding);
             }
             for (i, (a, b)) in w1.iter().zip(&w2).enumerate() {
-                assert_eq!(a.data(), b.data(), "threads={threads} param {i}");
+                assert_eq!(a.data(), b.data(), "{sharding:?} param {i}");
             }
         }
     }

@@ -5,33 +5,60 @@
 //!
 //! The paper's pitch is that GWT makes memory-heavy optimizers cheap
 //! enough to scale; this module supplies the throughput half of that
-//! claim. Two loops in the training step are embarrassingly parallel
-//! and share one work-sharding layer:
+//! claim. Three loops in the training step are embarrassingly
+//! parallel and share one work-sharding layer:
 //!
 //! * **Bank level** — every `ParamOptimizer` in the bank owns its own
 //!   state and its own weight tensor, so per-parameter steps are
-//!   independent (`optim::step_bank` drives the coordinator and
-//!   fine-tuning loops through `scoped_chunks_mut`).
+//!   independent (`optim::step_bank` / `optim::probe_bank` drive the
+//!   coordinator and fine-tuning loops).
 //! * **Row level** — inside `GwtAdam::rust_direction`, each matrix row
 //!   is transformed/updated/inverse-transformed independently (the
-//!   per-row Haar + moment update touches only that row's slice of
-//!   `m`/`v`/`out`).
+//!   per-row transform + moment update touches only that row's slice
+//!   of `m`/`v`/`out`).
+//! * **Accumulation level** — `Trainer::train_step` sums microbatch
+//!   gradients elementwise; [`accumulate_sharded`] chunks the flat
+//!   buffer so each element is touched by exactly one worker.
 //!
-//! Sharding is **chunked and deterministic**: `chunk_bounds` cuts the
-//! item range into at most `workers` contiguous chunks with a fixed
-//! ceil-division boundary formula, every item is processed by exactly
-//! one worker with the same single-threaded code path as the serial
-//! loop, and there is no cross-item reduction — so the parallel step
-//! is *bit-identical* to the serial one for every worker count (the
-//! property tests in `tests/parallel_determinism.rs` pin this for all
-//! optimizer specs). Each worker gets a persistent per-worker scratch
-//! value (allocated once per call via the `init` hook, not once per
-//! item), which is what keeps the row-sharded GWT path alloc-free in
-//! the inner loop.
+//! Sharding is **chunked and deterministic**: [`chunk_bounds`] cuts
+//! the item range into at most `workers` contiguous chunks with a
+//! fixed ceil-division boundary formula, every item is processed by
+//! exactly one worker with the same single-threaded code path as the
+//! serial loop, and there is no cross-item reduction — so the
+//! parallel step is *bit-identical* to the serial one for every
+//! worker count (the property battery below and
+//! `tests/parallel_determinism.rs` pin this for all optimizer specs).
+//! Each worker gets a persistent per-worker scratch value (allocated
+//! once per chunk via the `init` hook, not once per item), which is
+//! what keeps the row-sharded GWT path alloc-free in the inner loop.
+//!
+//! ## Dispatch: persistent pool vs per-call scoped spawn
+//!
+//! Two interchangeable dispatchers execute those chunks, unified
+//! behind the [`Sharding`] handle every step-engine call site takes:
+//!
+//! * [`StepPool`] — the production path. Workers are **spawned once
+//!   per run** and parked on a condvar between calls; each
+//!   `run_chunks_mut` call enqueues one lifetime-erased job per chunk
+//!   and the caller runs chunk 0 inline, then helps drain the queue
+//!   before parking until the batch latch opens. This removes the
+//!   per-step thread-spawn cost that dominated small-preset bank
+//!   steps (measured in `benches/perf_hotpaths.rs`), and adaptive
+//!   probe passes no longer multiply spawn overhead.
+//! * [`scoped_chunks_mut`] — the original per-call scoped-spawn
+//!   engine, kept as the bit-identity baseline (the determinism tests
+//!   pin `StepPool` against both it and the serial loop) and as the
+//!   bench comparison point.
+//!
+//! Both dispatchers consume the same [`chunk_bounds`] boundaries and
+//! run the same per-chunk closure, so which one executes a chunk can
+//! never change a single bit of the result.
 //!
 //! Worker count comes from `TrainConfig::threads` (0 = auto-detect,
 //! capped by `ModelPreset::max_step_workers`; 1 = serial fast path
-//! with zero thread overhead).
+//! with zero thread overhead). Thread-count normalization lives in
+//! one place — [`clamp_workers`] — instead of each call site clamping
+//! its own way.
 //!
 //! `scoped_map`/`allreduce_*` below additionally stand in for the
 //! paper's multi-GPU DDP setup: each data-parallel worker is a thread
@@ -39,6 +66,21 @@
 //! allreduce (same reduction topology NCCL would use, so the
 //! coordinator logic is shaped correctly even though transport is
 //! shared memory).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The step engine's single thread-count normalization rule, shared
+/// by [`chunk_bounds`], [`scoped_chunks_mut`], [`StepPool`], and
+/// [`Sharding`] (previously each call site clamped its own way):
+/// at least one worker (`workers == 0` means serial), at most one
+/// worker per item (extra workers would own empty chunks), and at
+/// least one even for an empty item range (so the serial fast path
+/// stays well-defined).
+pub fn clamp_workers(len: usize, workers: usize) -> usize {
+    workers.max(1).min(len.max(1))
+}
 
 /// Deterministic contiguous chunk boundaries: `len` items split into
 /// at most `workers` chunks of ceil(len/workers) items each. The
@@ -49,7 +91,7 @@ pub fn chunk_bounds(len: usize, workers: usize) -> Vec<(usize, usize)> {
     if len == 0 {
         return Vec::new();
     }
-    let workers = workers.max(1).min(len);
+    let workers = clamp_workers(len, workers);
     let size = len.div_ceil(workers);
     let mut out = Vec::with_capacity(workers);
     let mut start = 0;
@@ -61,15 +103,20 @@ pub fn chunk_bounds(len: usize, workers: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// The step engine's sharding primitive: split `items` into
-/// `chunk_bounds(items.len(), workers)` contiguous chunks and run
-/// `f(&mut scratch, chunk_offset, chunk)` for each chunk on its own
-/// scoped thread. `init(worker_index)` builds the per-worker
-/// persistent scratch once per worker (not once per item).
+/// The legacy sharding primitive (per-call scoped spawn): split
+/// `items` into `chunk_bounds(items.len(), workers)` contiguous
+/// chunks and run `f(&mut scratch, chunk_offset, chunk)` for each
+/// chunk on its own scoped thread. `init(worker_index)` builds the
+/// per-worker persistent scratch once per worker (not once per item).
+///
+/// Production call sites now dispatch through [`Sharding`] (usually
+/// onto a reused [`StepPool`]); this stays as the spawn-per-call
+/// baseline the determinism tests and `perf_hotpaths` compare
+/// against.
 ///
 /// Serial fast path: with 0/1 workers, a single chunk, or an empty
-/// slice, everything runs on the calling thread — no spawn overhead,
-/// and `workers = 0` is treated as 1 (the zero-worker edge case).
+/// slice, everything runs on the calling thread — no spawn overhead
+/// (`workers` is normalized by [`clamp_workers`]).
 ///
 /// Determinism contract: each item is visited exactly once, by the
 /// same in-chunk loop a serial caller would run, and chunk boundaries
@@ -97,6 +144,384 @@ where
                 let mut scratch = init(w);
                 f(&mut scratch, start, chunk);
             });
+        }
+    });
+}
+
+/// A queued unit of work: one chunk's closure, lifetime-erased (see
+/// the SAFETY note in [`StepPool::run_chunks_mut`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolCore {
+    queue: Mutex<PoolQueue>,
+    /// Wakes parked workers when jobs are enqueued (or on shutdown).
+    available: Condvar,
+}
+
+impl PoolCore {
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().unwrap().jobs.pop_front()
+    }
+}
+
+/// Countdown latch for one `run_chunks_mut` batch: opens when every
+/// enqueued job has finished (or been dropped unrun — dropping a job
+/// closure drops its [`CompletionGuard`], so the latch can never hang
+/// on a job that no longer exists). A panicking job parks its payload
+/// here (first writer wins) so the dispatcher can re-raise the
+/// *original* panic — the Pool dispatcher stays interchangeable with
+/// Scoped/serial, where `std::thread::scope` propagates payloads.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn complete(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_open(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        while *n > 0 {
+            n = self.done.wait(n).unwrap();
+        }
+    }
+}
+
+/// Counts its job down on drop — on normal completion, when the job
+/// body panics (the job catches the panic itself and records it on
+/// the latch before this guard runs), and when a job is dropped
+/// without ever running.
+struct CompletionGuard(Arc<Latch>);
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        self.0.complete();
+    }
+}
+
+fn worker_loop(core: Arc<PoolCore>) {
+    loop {
+        let job = {
+            let mut q = core.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = core.available.wait(q).unwrap();
+            }
+        };
+        // Jobs contain their own catch_unwind (recording panics on
+        // their batch latch for the dispatching caller to re-raise);
+        // this outer catch is belt-and-suspenders so a pathological
+        // payload can never kill a parked worker the pool expects to
+        // outlive the batch.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Waits (on drop) for a dispatched batch, so chunk borrows can never
+/// outlive a `run_chunks_mut` call — even when the inline chunk-0
+/// closure panics. While waiting, the caller *helps drain* the job
+/// queue: this keeps a pool with fewer parked workers than chunks
+/// (including the zero-worker serial pool) making progress, and makes
+/// nested dispatch onto one pool deadlock-free.
+struct BatchGuard<'a> {
+    core: &'a PoolCore,
+    latch: Arc<Latch>,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        loop {
+            if self.latch.is_open() {
+                return;
+            }
+            match self.core.try_pop() {
+                Some(job) => {
+                    let _ = catch_unwind(AssertUnwindSafe(job));
+                }
+                None => {
+                    self.latch.wait();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The persistent step-engine worker pool: `capacity - 1` threads are
+/// spawned **once** (at construction, i.e. once per training run) and
+/// parked on a condvar between calls; the calling thread is the
+/// remaining worker. Replaces the per-call scoped-spawn layer on
+/// every hot path — same [`chunk_bounds`] boundaries, same per-chunk
+/// closure, so results are bit-identical to [`scoped_chunks_mut`] and
+/// to the serial loop (pinned by the soak battery in
+/// `tests/parallel_determinism.rs`), while the per-step dispatch cost
+/// drops from thread spawn/join to an enqueue + condvar wake.
+///
+/// Shared across call sites as `Arc<StepPool>` via
+/// [`Sharding::Pool`]; the pool is `Send + Sync` and reentrant (a
+/// worker that dispatches a nested batch helps drain the queue while
+/// it waits).
+pub struct StepPool {
+    core: Arc<PoolCore>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    capacity: usize,
+}
+
+impl StepPool {
+    /// Build a pool with `threads` total workers (normalized to at
+    /// least 1): the caller counts as one, so `threads - 1` parked
+    /// threads are spawned. `StepPool::new(1)` spawns nothing and
+    /// runs every batch inline.
+    pub fn new(threads: usize) -> StepPool {
+        let capacity = threads.max(1);
+        let core = Arc::new(PoolCore {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (1..capacity)
+            .map(|_| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name("gwt-step-worker".into())
+                    .spawn(move || worker_loop(core))
+                    .expect("spawn step-pool worker")
+            })
+            .collect();
+        StepPool { core, handles, capacity }
+    }
+
+    /// Total worker count (spawned threads + the calling thread).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Pool counterpart of [`scoped_chunks_mut`]: identical chunking
+    /// (`chunk_bounds(items.len(), workers)`), identical per-chunk
+    /// `init`/`f` contract, identical serial fast path — but chunks
+    /// 1.. are handed to the parked workers while the caller runs
+    /// chunk 0 inline and then helps drain the queue. `workers` may
+    /// exceed [`StepPool::capacity`]; the extra chunks simply queue
+    /// (boundaries — and therefore results — depend only on the
+    /// `workers` argument, never on how many threads the pool holds).
+    pub fn run_chunks_mut<T, S, I, F>(&self, items: &mut [T], workers: usize, init: I, f: F)
+    where
+        T: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize, &mut [T]) + Sync,
+    {
+        let bounds = chunk_bounds(items.len(), workers);
+        if bounds.len() <= 1 {
+            let mut scratch = init(0);
+            f(&mut scratch, 0, items);
+            return;
+        }
+        let latch = Arc::new(Latch::new(bounds.len() - 1));
+        // The guard is armed before any job exists: whatever happens
+        // below (enqueue panic, inline-chunk panic), its drop blocks
+        // until every created job has finished or been dropped — so
+        // the borrows erased into `Job` never escape this call.
+        let wait = BatchGuard { core: &self.core, latch: Arc::clone(&latch) };
+        let (init, f) = (&init, &f);
+        let (first, mut rest) = items.split_at_mut(bounds[0].1);
+        {
+            let mut jobs: Vec<Job> = Vec::with_capacity(bounds.len() - 1);
+            for (w, (start, end)) in bounds.iter().copied().enumerate().skip(1) {
+                let (chunk, tail) = rest.split_at_mut(end - start);
+                rest = tail;
+                let guard = CompletionGuard(Arc::clone(&latch));
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    // The panic is caught here and its payload parked
+                    // on this batch's latch (checking
+                    // `thread::panicking()` in the guard instead
+                    // would misattribute panics when a caller
+                    // help-drains another batch's jobs mid-unwind);
+                    // the guard then counts the latch down when the
+                    // closure ends, body panicked or not.
+                    let body = catch_unwind(AssertUnwindSafe(|| {
+                        let mut scratch = init(w);
+                        f(&mut scratch, start, chunk);
+                    }));
+                    if let Err(payload) = body {
+                        guard.0.panic.lock().unwrap().get_or_insert(payload);
+                    }
+                });
+                // SAFETY: the job captures borrows of `items`, `init`
+                // and `f` that live for this call only; `wait` (armed
+                // above, dropped at every exit from this function,
+                // panicking included) does not return until the latch
+                // has counted this job down, so the erased lifetime
+                // can never be observed dangling.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                jobs.push(job);
+            }
+            let mut q = self.core.queue.lock().unwrap();
+            q.jobs.extend(jobs);
+            drop(q);
+            self.core.available.notify_all();
+        }
+        // Chunk 0 runs inline on the caller — one fewer handoff, and
+        // a capacity-1 pool degenerates to the pure serial loop.
+        let mut scratch = init(0);
+        f(&mut scratch, 0, first);
+        drop(wait);
+        // Re-raise a worker panic with its original payload, exactly
+        // like the scoped dispatcher would.
+        let payload = latch.panic.lock().unwrap().take();
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.core.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.core.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The step engine's dispatch handle: every sharded call site
+/// (`optim::step_bank`, `optim::probe_bank`, `GwtAdam` row sharding,
+/// [`accumulate_sharded`]) takes one of these instead of a raw thread
+/// count, so the *same* long-lived pool serves the whole call graph
+/// of a run.
+///
+/// All three variants consume identical [`chunk_bounds`] boundaries
+/// and run identical per-chunk closures — swapping variants can never
+/// change results, only dispatch cost (the determinism battery pins
+/// `Pool` against both `Serial` and `Scoped`).
+#[derive(Clone, Default)]
+pub enum Sharding {
+    /// Everything inline on the calling thread (zero dispatch cost).
+    #[default]
+    Serial,
+    /// Per-call scoped spawn at the given worker count — the
+    /// pre-`StepPool` engine, kept as baseline for determinism tests
+    /// and the `perf_hotpaths` spawn-overhead comparison.
+    Scoped(usize),
+    /// A persistent [`StepPool`], spawned once and reused for every
+    /// call (the production path).
+    Pool(Arc<StepPool>),
+}
+
+impl Sharding {
+    /// The production constructor: a pool-backed handle with
+    /// `threads` total workers, or [`Sharding::Serial`] when
+    /// `threads <= 1` (no pool, no threads spawned — the common
+    /// single-threaded configuration costs nothing).
+    pub fn pool(threads: usize) -> Sharding {
+        if threads <= 1 {
+            Sharding::Serial
+        } else {
+            Sharding::Pool(Arc::new(StepPool::new(threads)))
+        }
+    }
+
+    /// Effective worker count fed to [`chunk_bounds`].
+    pub fn workers(&self) -> usize {
+        match self {
+            Sharding::Serial => 1,
+            Sharding::Scoped(n) => (*n).max(1),
+            Sharding::Pool(p) => p.capacity(),
+        }
+    }
+
+    /// Whether dispatching through this handle can use more than one
+    /// worker (the serial fast-path check shared by call sites).
+    pub fn is_parallel(&self) -> bool {
+        self.workers() > 1
+    }
+
+    /// Dispatch chunked work through this handle — the drop-in
+    /// replacement for a direct [`scoped_chunks_mut`] call, with the
+    /// same `init`/`f` contract and the same determinism guarantees.
+    pub fn run_chunks_mut<T, S, I, F>(&self, items: &mut [T], init: I, f: F)
+    where
+        T: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize, &mut [T]) + Sync,
+    {
+        match self {
+            Sharding::Serial => {
+                let mut scratch = init(0);
+                f(&mut scratch, 0, items);
+            }
+            Sharding::Scoped(n) => scoped_chunks_mut(items, *n, init, f),
+            Sharding::Pool(p) => p.run_chunks_mut(items, p.capacity(), init, f),
+        }
+    }
+}
+
+impl std::fmt::Debug for Sharding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sharding::Serial => write!(f, "Serial"),
+            Sharding::Scoped(n) => write!(f, "Scoped({n})"),
+            Sharding::Pool(p) => write!(f, "Pool({})", p.capacity()),
+        }
+    }
+}
+
+/// Flat length below which sharding the elementwise accumulate is not
+/// worth one dispatch (pure perf cutoff — a deterministic function of
+/// the length, and results are bit-identical on both sides of it).
+pub const ACCUM_SHARD_MIN_LEN: usize = 1 << 12;
+
+/// Sharded microbatch-gradient accumulation: `acc[i] += src[i]` over
+/// the flat gradient buffer, chunked on fixed [`chunk_bounds`]
+/// boundaries. The sum is element-local (each `acc[i]` is written by
+/// exactly one worker and receives exactly one `+=`), so the
+/// reduction order per element is fixed and every worker count — and
+/// the serial loop — produces the same bits. Pinned by
+/// `tests/grad_accum_parity.rs`.
+pub fn accumulate_sharded(sharding: &Sharding, acc: &mut [f32], src: &[f32]) {
+    assert_eq!(acc.len(), src.len(), "accumulate length mismatch");
+    if !sharding.is_parallel() || acc.len() < ACCUM_SHARD_MIN_LEN {
+        for (x, y) in acc.iter_mut().zip(src) {
+            *x += *y;
+        }
+        return;
+    }
+    sharding.run_chunks_mut(acc, |_| (), |_, off, chunk| {
+        for (x, y) in chunk.iter_mut().zip(&src[off..off + chunk.len()]) {
+            *x += *y;
         }
     });
 }
@@ -165,12 +590,28 @@ pub fn allreduce_mean(shards: Vec<Vec<f32>>) -> Vec<f32> {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
     use super::*;
+    use crate::testing::prop_check;
 
     #[test]
     fn scoped_map_ordered() {
         let out = scoped_map(4, |w| w * 10);
         assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn clamp_workers_rule() {
+        // workers == 0 means serial; workers > len waste nothing.
+        assert_eq!(clamp_workers(5, 0), 1);
+        assert_eq!(clamp_workers(5, 1), 1);
+        assert_eq!(clamp_workers(5, 3), 3);
+        assert_eq!(clamp_workers(5, 5), 5);
+        assert_eq!(clamp_workers(5, 99), 5);
+        // Empty ranges still resolve to one (serial) worker.
+        assert_eq!(clamp_workers(0, 0), 1);
+        assert_eq!(clamp_workers(0, 7), 1);
     }
 
     #[test]
@@ -197,6 +638,119 @@ mod tests {
     fn chunk_bounds_deterministic() {
         assert_eq!(chunk_bounds(10, 4), chunk_bounds(10, 4));
         assert_eq!(chunk_bounds(10, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+    }
+
+    // ---- The chunk_bounds property battery (the determinism
+    // contract stated as invariants over randomized (len, workers)
+    // grids, not examples). ----
+
+    #[test]
+    fn prop_chunks_disjoint_cover_and_ordered() {
+        prop_check("chunk-bounds-partition", 200, |rng| {
+            let len = rng.usize_below(10_000);
+            let workers = rng.usize_below(64);
+            let b = chunk_bounds(len, workers);
+            if len == 0 {
+                return if b.is_empty() {
+                    Ok(())
+                } else {
+                    Err("nonempty bounds for len=0".into())
+                };
+            }
+            // Never more chunks than (clamped) workers, never an
+            // empty chunk.
+            if b.len() > clamp_workers(len, workers) {
+                return Err(format!("{} chunks for workers={workers}", b.len()));
+            }
+            // Chunks are an ordered, gapless, overlap-free partition
+            // of 0..len: concatenating them reproduces the range.
+            let mut cursor = 0usize;
+            for &(start, end) in &b {
+                if start != cursor {
+                    return Err(format!("gap/overlap at {start} (want {cursor})"));
+                }
+                if end <= start {
+                    return Err(format!("empty/inverted chunk ({start},{end})"));
+                }
+                cursor = end;
+            }
+            if cursor != len {
+                return Err(format!("covered {cursor} of {len}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_chunk_sizes_balanced() {
+        // Ceil-division chunking: every chunk is the same size except
+        // possibly the last, which is never larger.
+        prop_check("chunk-bounds-balanced", 200, |rng| {
+            let len = 1 + rng.usize_below(10_000);
+            let workers = rng.usize_below(64);
+            let b = chunk_bounds(len, workers);
+            let size = len.div_ceil(clamp_workers(len, workers));
+            for (i, &(start, end)) in b.iter().enumerate() {
+                let w = end - start;
+                if i + 1 < b.len() && w != size {
+                    return Err(format!("chunk {i} width {w}, want {size}"));
+                }
+                if w > size {
+                    return Err(format!("last chunk {w} > {size}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_boundaries_pure_function_of_inputs() {
+        // Repeated evaluation — including interleaved with other
+        // (len, workers) queries, as a mid-run worker-count change
+        // would produce — always returns the same boundaries: there
+        // is no hidden state in the formula.
+        prop_check("chunk-bounds-pure", 100, |rng| {
+            let len = rng.usize_below(5_000);
+            let workers = rng.usize_below(64);
+            let first = chunk_bounds(len, workers);
+            let other = chunk_bounds(rng.usize_below(5_000), rng.usize_below(64));
+            drop(other);
+            if chunk_bounds(len, workers) != first {
+                return Err("boundaries changed between calls".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_processing_independent_of_worker_count() {
+        // The determinism contract itself: for a fixed item range,
+        // the per-item visit set (each item exactly once, at its own
+        // global index) is identical for every worker count — so any
+        // worker-count change mid-run cannot change results.
+        prop_check("chunk-visit-invariance", 60, |rng| {
+            let len = rng.usize_below(600);
+            let w1 = rng.usize_below(32);
+            let w2 = rng.usize_below(32);
+            let visit = |workers: usize| {
+                let mut marks = vec![0u32; len];
+                for (start, end) in chunk_bounds(len, workers) {
+                    for (i, m) in marks[start..end].iter_mut().enumerate() {
+                        *m += (start + i + 1) as u32;
+                    }
+                }
+                marks
+            };
+            let a = visit(w1);
+            let b = visit(w2);
+            if a != b {
+                return Err(format!("visits differ between {w1} and {w2} workers"));
+            }
+            if len > 0 && a != (1..=len as u32).collect::<Vec<_>>() {
+                return Err("an item was skipped or double-visited".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -230,7 +784,6 @@ mod tests {
     #[test]
     fn scoped_chunks_per_worker_scratch_is_persistent() {
         // The scratch init must run once per worker, not once per item.
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let inits = AtomicUsize::new(0);
         let mut items = vec![0u8; 64];
         scoped_chunks_mut(
@@ -245,6 +798,187 @@ mod tests {
         );
         assert_eq!(inits.load(Ordering::SeqCst), 4);
         assert!(items.iter().all(|x| *x == 1));
+    }
+
+    // ---- StepPool: the persistent-pool dispatcher. ----
+
+    #[test]
+    fn pool_matches_scoped_and_serial_bit_for_bit() {
+        // Same chunk boundaries + same per-chunk loop ⇒ identical
+        // output through every dispatcher, at every worker count.
+        let work = |dispatch: &dyn Fn(&mut [u64])| {
+            let mut items: Vec<u64> = (0..257).collect();
+            dispatch(&mut items);
+            items
+        };
+        let body = |_: &mut (), off: usize, chunk: &mut [u64]| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = x.wrapping_mul(2654435761).rotate_left(((off + i) % 63) as u32);
+            }
+        };
+        let serial = work(&|items| {
+            let mut s = ();
+            body(&mut s, 0, items);
+        });
+        for workers in [2usize, 3, 4, 7, 16] {
+            let scoped = work(&|items| scoped_chunks_mut(items, workers, |_| (), body));
+            let pool = StepPool::new(workers);
+            let pooled = work(&|items| pool.run_chunks_mut(items, workers, |_| (), body));
+            assert_eq!(scoped, serial, "scoped workers={workers}");
+            assert_eq!(pooled, serial, "pool workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pool_reuse_across_many_calls_has_no_state_leakage() {
+        // One pool, many batches: every call sees exactly its own
+        // items, scratch is rebuilt per chunk, and results stay
+        // identical to the serial loop on every reuse.
+        let pool = StepPool::new(4);
+        for round in 0..50u64 {
+            let len = 1 + (round as usize * 13) % 200;
+            let mut items: Vec<u64> = (0..len as u64).map(|i| i + round).collect();
+            let mut want = items.clone();
+            for (i, x) in want.iter_mut().enumerate() {
+                *x = x.wrapping_add(i as u64 * 7 + round);
+            }
+            pool.run_chunks_mut(&mut items, 4, |_| round, |r, off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = x.wrapping_add((off + i) as u64 * 7 + *r);
+                }
+            });
+            assert_eq!(items, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_handles_more_chunks_than_workers() {
+        // workers (chunking) may exceed capacity (threads): extra
+        // chunks queue and the caller helps drain — including the
+        // capacity-1 pool, which drains everything itself.
+        for capacity in [1usize, 2, 3] {
+            let pool = StepPool::new(capacity);
+            let mut items = vec![0u32; 97];
+            pool.run_chunks_mut(&mut items, 16, |_| (), |_, off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (off + i + 1) as u32;
+                }
+            });
+            let want: Vec<u32> = (1..=97).collect();
+            assert_eq!(items, want, "capacity={capacity}");
+        }
+    }
+
+    #[test]
+    fn pool_scratch_init_once_per_chunk() {
+        let pool = StepPool::new(4);
+        let inits = AtomicUsize::new(0);
+        let mut items = vec![0u8; 64];
+        pool.run_chunks_mut(
+            &mut items,
+            4,
+            |_| inits.fetch_add(1, Ordering::SeqCst),
+            |_, _, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = 1;
+                }
+            },
+        );
+        assert_eq!(inits.load(Ordering::SeqCst), 4);
+        assert!(items.iter().all(|x| *x == 1));
+    }
+
+    #[test]
+    fn pool_empty_and_single_chunk_run_inline() {
+        let pool = StepPool::new(4);
+        let mut empty: Vec<u8> = Vec::new();
+        pool.run_chunks_mut(&mut empty, 4, |_| (), |_, _, chunk| {
+            assert!(chunk.is_empty());
+        });
+        let mut one = vec![5u32];
+        pool.run_chunks_mut(&mut one, 7, |_| (), |_, off, chunk| {
+            assert_eq!(off, 0);
+            chunk[0] *= 2;
+        });
+        assert_eq!(one, vec![10]);
+    }
+
+    #[test]
+    fn pool_propagates_worker_panics_after_batch_completes() {
+        let pool = StepPool::new(3);
+        let mut items = vec![0u32; 30];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks_mut(&mut items, 3, |_| (), |_, off, chunk| {
+                if off >= 10 {
+                    panic!("boom");
+                }
+                for x in chunk.iter_mut() {
+                    *x = 1;
+                }
+            });
+        }));
+        // The original payload is re-raised (resume_unwind), exactly
+        // like the scoped dispatcher — not a generic wrapper panic.
+        let payload = result.expect_err("panic must propagate to the dispatcher");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool survives a panicking batch and keeps serving.
+        let mut again = vec![0u32; 8];
+        pool.run_chunks_mut(&mut again, 3, |_| (), |_, _, chunk| {
+            for x in chunk.iter_mut() {
+                *x = 7;
+            }
+        });
+        assert!(again.iter().all(|x| *x == 7));
+    }
+
+    #[test]
+    fn sharding_variants_share_the_contract() {
+        let run = |sharding: &Sharding| {
+            let mut items: Vec<u32> = vec![0; 41];
+            sharding.run_chunks_mut(&mut items, |_| (), |_, off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (off + i) as u32 * 3 + 1;
+                }
+            });
+            items
+        };
+        let serial = run(&Sharding::Serial);
+        assert_eq!(run(&Sharding::Scoped(4)), serial);
+        assert_eq!(run(&Sharding::pool(4)), serial);
+        // Constructor normalization goes through one rule: <= 1
+        // threads never builds a pool.
+        assert!(matches!(Sharding::pool(0), Sharding::Serial));
+        assert!(matches!(Sharding::pool(1), Sharding::Serial));
+        assert_eq!(Sharding::pool(4).workers(), 4);
+        assert_eq!(Sharding::Scoped(0).workers(), 1);
+        assert!(!Sharding::Serial.is_parallel());
+        assert!(Sharding::Scoped(2).is_parallel());
+    }
+
+    #[test]
+    fn accumulate_sharded_matches_serial_sum() {
+        let mut rng = crate::rng::Rng::new(77);
+        // Both sides of the ACCUM_SHARD_MIN_LEN cutoff.
+        for len in [0usize, 9, 1000, ACCUM_SHARD_MIN_LEN + 123] {
+            let src: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let mut want = base.clone();
+            for (x, y) in want.iter_mut().zip(&src) {
+                *x += *y;
+            }
+            for sharding in [Sharding::Serial, Sharding::Scoped(3), Sharding::pool(4)] {
+                let mut acc = base.clone();
+                accumulate_sharded(&sharding, &mut acc, &src);
+                assert_eq!(acc, want, "{sharding:?} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulate length mismatch")]
+    fn accumulate_rejects_ragged_buffers() {
+        let mut acc = vec![0.0f32; 3];
+        accumulate_sharded(&Sharding::Serial, &mut acc, &[1.0, 2.0]);
     }
 
     #[test]
@@ -275,7 +1009,6 @@ mod tests {
 
     #[test]
     fn parallel_map_actually_runs_closures() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let counter = AtomicUsize::new(0);
         scoped_map(8, |_| counter.fetch_add(1, Ordering::SeqCst));
         assert_eq!(counter.load(Ordering::SeqCst), 8);

@@ -48,6 +48,33 @@ pub fn prop_check<F: FnMut(&mut Rng) -> Result<(), String>>(
     }
 }
 
+/// Worker-count grid for the step-engine determinism batteries. The
+/// default {1, 2, 4, 7} covers serial, even, and odd sharding; CI's
+/// thread-matrix pass pins a single count via the `GWT_TEST_THREADS`
+/// env var (a comma-separated list is also accepted), so the contract
+/// is exercised at explicit counts on every run without the tests
+/// hardcoding them.
+///
+/// A set-but-invalid value (unparseable entry, or 0 — there is no
+/// "auto" here) panics instead of silently running the default grid:
+/// a pin that doesn't pin would let CI go green while never
+/// exercising the requested count.
+pub fn test_thread_grid() -> Vec<usize> {
+    match std::env::var("GWT_TEST_THREADS") {
+        Ok(raw) => raw
+            .split(',')
+            .map(|t| match t.trim().parse::<usize>() {
+                Ok(n) if n > 0 => n,
+                _ => panic!(
+                    "GWT_TEST_THREADS must be a comma-separated list of \
+                     positive worker counts, got '{raw}'"
+                ),
+            })
+            .collect(),
+        Err(_) => vec![1, 2, 4, 7],
+    }
+}
+
 /// Helper: random matrix dims with width divisible by 2^max_level.
 pub fn rand_dims(rng: &mut Rng, max_level: usize) -> (usize, usize, usize) {
     let m = 1 + rng.usize_below(48);
@@ -77,6 +104,15 @@ mod tests {
     #[should_panic(expected = "property 'always-fails'")]
     fn prop_check_reports_failure() {
         prop_check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn thread_grid_is_nonempty_and_positive() {
+        // Env-agnostic invariants (CI pins GWT_TEST_THREADS, so the
+        // exact grid is not asserted here).
+        let g = test_thread_grid();
+        assert!(!g.is_empty());
+        assert!(g.iter().all(|&n| n > 0));
     }
 
     #[test]

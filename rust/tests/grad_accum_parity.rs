@@ -1,0 +1,174 @@
+//! Gradient-accumulation sharding parity: `Trainer::train_step` now
+//! sums microbatch gradients through `pool::accumulate_sharded`
+//! (chunked elementwise adds over the flat buffer, fixed
+//! `chunk_bounds` boundaries). Because each element receives its
+//! `+=` from exactly one worker — in the same per-microbatch order
+//! the serial loop used — the sharded sum must be *bit-identical* to
+//! the serial one at every worker count and through every
+//! dispatcher. These tests pin that, from the raw primitive up to a
+//! full trainer-shaped accumulate → average → `step_bank` pipeline.
+//!
+//! Worker counts come from `testing::test_thread_grid()` (CI pins
+//! single counts via `GWT_TEST_THREADS`).
+
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::optim::{build_optimizers, step_bank};
+use gwt::pool::{accumulate_sharded, Sharding, ACCUM_SHARD_MIN_LEN};
+use gwt::rng::Rng;
+use gwt::tensor::Tensor;
+use gwt::testing::{prop_check, test_thread_grid};
+
+fn serial_sum(acc: &mut [f32], src: &[f32]) {
+    for (x, y) in acc.iter_mut().zip(src) {
+        *x += *y;
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i} ({x} vs {y})");
+    }
+}
+
+#[test]
+fn sharded_accumulate_bit_identical_to_serial() {
+    // Microbatch-shaped workload: several gradients folded into one
+    // accumulator, across both sides of the sharding cutoff.
+    for threads in test_thread_grid() {
+        // One pool reused for every length and microbatch — the
+        // trainer's configuration.
+        let pool = Sharding::pool(threads);
+        for len in
+            [5usize, 1023, ACCUM_SHARD_MIN_LEN, 3 * ACCUM_SHARD_MIN_LEN + 17]
+        {
+            let mut rng = Rng::new(0xacc0 + len as u64);
+            let micro: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..len).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut serial = vec![0.0f32; len];
+            for m in &micro {
+                serial_sum(&mut serial, m);
+            }
+            let mut pooled = vec![0.0f32; len];
+            let mut scoped = vec![0.0f32; len];
+            for m in &micro {
+                accumulate_sharded(&pool, &mut pooled, m);
+                accumulate_sharded(&Sharding::Scoped(threads), &mut scoped, m);
+            }
+            assert_bits_eq(&serial, &pooled, &format!("pool t={threads} len={len}"));
+            assert_bits_eq(
+                &serial,
+                &scoped,
+                &format!("scoped t={threads} len={len}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_accumulate_parity_random_lengths_and_workers() {
+    // Randomized (len, workers) — the boundary formula must never
+    // find a length/count combination that splits an element's single
+    // `+=` or reorders it.
+    prop_check("grad-accum-parity", 40, |rng| {
+        let len = rng.usize_below(3 * ACCUM_SHARD_MIN_LEN);
+        let threads = 1 + rng.usize_below(8);
+        let src: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let mut want = base.clone();
+        serial_sum(&mut want, &src);
+        let mut got = base.clone();
+        accumulate_sharded(&Sharding::Scoped(threads), &mut got, &src);
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "len={len} threads={threads} element {i}: {a} vs {b}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trainer_shaped_accumulation_preserves_step_bits() {
+    // The full train_step shape without a runtime: grad_accum
+    // microbatches summed, averaged, then stepped through identical
+    // banks. The serial-summed and pool-summed runs must land on
+    // bit-identical weights — the guarantee that the accumulation
+    // refactor cannot change any training result.
+    let shapes = gwt::config::presets::find("nano").unwrap().param_shapes();
+    let cfg = TrainConfig {
+        optimizer: OptSpec::gwt(2),
+        ..Default::default()
+    };
+    const GRAD_ACCUM: usize = 3;
+    for threads in test_thread_grid() {
+        let pool = Sharding::pool(threads);
+        let mut ser_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut shd_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut wrng = Rng::new(21);
+        let mut ser_w: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut wrng))
+            .collect();
+        let mut shd_w = ser_w.clone();
+        for step in 0..3u64 {
+            let micro: Vec<Vec<Tensor>> = (0..GRAD_ACCUM as u64)
+                .map(|m| {
+                    let mut grng = Rng::new(400 + step * 10 + m);
+                    shapes
+                        .iter()
+                        .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
+                        .collect()
+                })
+                .collect();
+            let inv = 1.0 / GRAD_ACCUM as f32;
+            let finish = |acc: Vec<Vec<f32>>| -> Vec<Tensor> {
+                acc.into_iter()
+                    .zip(&shapes)
+                    .map(|(mut gd, s)| {
+                        for x in &mut gd {
+                            *x *= inv;
+                        }
+                        Tensor::new(&s.shape, gd)
+                    })
+                    .collect()
+            };
+            let mut ser_acc: Vec<Vec<f32>> =
+                shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
+            for mb in &micro {
+                for (a, g) in ser_acc.iter_mut().zip(mb) {
+                    serial_sum(a, g.data());
+                }
+            }
+            let mut shd_acc: Vec<Vec<f32>> =
+                shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
+            for mb in &micro {
+                for (a, g) in shd_acc.iter_mut().zip(mb) {
+                    accumulate_sharded(&pool, a, g.data());
+                }
+            }
+            let ser_grads = finish(ser_acc);
+            let shd_grads = finish(shd_acc);
+            for (i, (a, b)) in ser_grads.iter().zip(&shd_grads).enumerate() {
+                assert_bits_eq(
+                    a.data(),
+                    b.data(),
+                    &format!("threads={threads} step={step} grad {i}"),
+                );
+            }
+            // Both banks step through the same pool, like the trainer.
+            step_bank(&mut ser_bank, &mut ser_w, &ser_grads, 0.01, &pool);
+            step_bank(&mut shd_bank, &mut shd_w, &shd_grads, 0.01, &pool);
+        }
+        for (i, (a, b)) in ser_w.iter().zip(&shd_w).enumerate() {
+            assert_bits_eq(
+                a.data(),
+                b.data(),
+                &format!("threads={threads} weights {} ({})", i, shapes[i].name),
+            );
+        }
+    }
+}

@@ -95,7 +95,7 @@ fn measured_parity_survives_training_steps() {
                 .iter()
                 .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
                 .collect();
-            gwt::optim::step_bank(&mut bank, &mut ws, &grads, 0.01, 1);
+            gwt::optim::step_bank(&mut bank, &mut ws, &grads, 0.01, &gwt::pool::Sharding::Serial);
         }
         assert_eq!(
             total_state_bytes(&bank),

@@ -1,9 +1,15 @@
 //! Step-engine determinism: the parallel optimizer step must be
 //! *bit-identical* to the serial one — same weights, same stats —
-//! for every optimizer spec and every worker count. This is the
-//! contract that makes `TrainConfig::threads` a pure throughput knob
-//! (fixed chunk boundaries, no cross-item reductions, each item
-//! processed by the same single-threaded code as the serial loop).
+//! for every optimizer spec, every worker count, and every
+//! dispatcher. This is the contract that makes `TrainConfig::threads`
+//! a pure throughput knob (fixed chunk boundaries, no cross-item
+//! reductions, each item processed by the same single-threaded code
+//! as the serial loop), and it is pinned for *both* dispatchers: the
+//! persistent `StepPool` (production) and the legacy per-call
+//! scoped-spawn engine it replaced.
+//!
+//! Worker counts come from `testing::test_thread_grid()` — default
+//! {1, 2, 4, 7}; CI pins single counts via `GWT_TEST_THREADS`.
 //!
 //! Runs entirely on the pure-rust optimizer paths (no artifacts
 //! needed), so it exercises the full bank: GWT row sharding included.
@@ -11,10 +17,11 @@
 use gwt::adapt::{selections, AdaptController, AdaptPolicy};
 use gwt::config::{InnerSpec, OptSpec, TrainConfig, TransformSpec};
 use gwt::memory::ParamShape;
-use gwt::optim::{build_optimizers, step_bank};
-use gwt::pool::{chunk_bounds, scoped_chunks_mut};
+use gwt::optim::{build_optimizers, probe_bank, step_bank};
+use gwt::pool::{chunk_bounds, scoped_chunks_mut, Sharding};
 use gwt::rng::Rng;
 use gwt::tensor::Tensor;
+use gwt::testing::test_thread_grid;
 use gwt::wavelet::WaveletBasis;
 
 fn nano_shapes() -> Vec<ParamShape> {
@@ -80,6 +87,15 @@ fn step_grads(shapes: &[ParamShape], step: u64) -> Vec<Tensor> {
         .collect()
 }
 
+/// Both parallel dispatchers at a worker count: the persistent pool
+/// (spawned once here, reused for the caller's whole comparison run)
+/// and the legacy scoped-spawn engine. The acceptance contract pins
+/// `StepPool` against the serial path *and* this previous
+/// implementation.
+fn dispatchers(threads: usize) -> Vec<Sharding> {
+    vec![Sharding::pool(threads), Sharding::Scoped(threads)]
+}
+
 #[test]
 fn parallel_bank_bit_identical_for_every_optimizer() {
     let shapes = nano_shapes();
@@ -91,38 +107,48 @@ fn parallel_bank_bit_identical_for_every_optimizer() {
         let mut ser_stats = Vec::new();
         for step in 0..3u64 {
             let grads = step_grads(&shapes, step);
-            ser_stats.push(step_bank(&mut ser_bank, &mut ser_w, &grads, 0.01, 1));
+            ser_stats.push(step_bank(
+                &mut ser_bank,
+                &mut ser_w,
+                &grads,
+                0.01,
+                &Sharding::Serial,
+            ));
         }
-        for threads in [2usize, 4, 7] {
-            let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
-            let mut w = init_weights(&shapes, 1);
-            for (step, ser) in ser_stats.iter().enumerate() {
-                let grads = step_grads(&shapes, step as u64);
-                let stats = step_bank(&mut bank, &mut w, &grads, 0.01, threads);
-                // Stats come back in bank order with the exact serial
-                // bits, regardless of which worker produced them.
-                assert_eq!(stats.len(), ser.len());
-                for (i, (a, b)) in stats.iter().zip(ser).enumerate() {
+        for threads in test_thread_grid() {
+            for sharding in dispatchers(threads) {
+                let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+                let mut w = init_weights(&shapes, 1);
+                for (step, ser) in ser_stats.iter().enumerate() {
+                    let grads = step_grads(&shapes, step as u64);
+                    let stats =
+                        step_bank(&mut bank, &mut w, &grads, 0.01, &sharding);
+                    // Stats come back in bank order with the exact
+                    // serial bits, regardless of which worker
+                    // produced them.
+                    assert_eq!(stats.len(), ser.len());
+                    for (i, (a, b)) in stats.iter().zip(ser).enumerate() {
+                        assert_eq!(
+                            a.update_norm.to_bits(),
+                            b.update_norm.to_bits(),
+                            "{opt:?} {sharding:?} step={step} param {i} norm"
+                        );
+                        assert_eq!(
+                            a.limiter_scale.to_bits(),
+                            b.limiter_scale.to_bits(),
+                            "{opt:?} {sharding:?} step={step} param {i} scale"
+                        );
+                    }
+                }
+                for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
                     assert_eq!(
-                        a.update_norm.to_bits(),
-                        b.update_norm.to_bits(),
-                        "{opt:?} threads={threads} step={step} param {i} norm"
-                    );
-                    assert_eq!(
-                        a.limiter_scale.to_bits(),
-                        b.limiter_scale.to_bits(),
-                        "{opt:?} threads={threads} step={step} param {i} scale"
+                        a.data(),
+                        b.data(),
+                        "{opt:?} {sharding:?} param {} ({})",
+                        i,
+                        shapes[i].name
                     );
                 }
-            }
-            for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
-                assert_eq!(
-                    a.data(),
-                    b.data(),
-                    "{opt:?} threads={threads} param {} ({})",
-                    i,
-                    shapes[i].name
-                );
             }
         }
     }
@@ -159,7 +185,8 @@ fn compressible_grads(shapes: &[ParamShape], step: u64) -> Vec<Tensor> {
 fn adaptive_pipeline_bit_identical_with_migrations() {
     // The full adaptive pipeline — parallel step, sharded probe,
     // serial policy, migration — must be bit-identical across worker
-    // counts, including the steps where migrations fire.
+    // counts and dispatchers, including the steps where migrations
+    // fire.
     let shapes = nano_shapes();
     for policy in [AdaptPolicy::Greedy, AdaptPolicy::Anneal] {
         let mut cfg = TrainConfig {
@@ -167,23 +194,23 @@ fn adaptive_pipeline_bit_identical_with_migrations() {
             ..Default::default()
         };
         cfg.adapt_cadence = 2;
-        let run = |threads: usize| {
+        let run = |sharding: &Sharding| {
             let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
             let mut ctl = AdaptController::from_config(&cfg).unwrap();
             let mut w = init_weights(&shapes, 3);
             let mut migrations = 0usize;
             for step in 1..=6u64 {
                 let grads = compressible_grads(&shapes, step);
-                step_bank(&mut bank, &mut w, &grads, 0.01, threads);
+                step_bank(&mut bank, &mut w, &grads, 0.01, sharding);
                 if let Some(ev) =
-                    ctl.post_step(step as usize, &mut bank, &grads, threads)
+                    ctl.post_step(step as usize, &mut bank, &grads, sharding)
                 {
                     migrations += ev.migrations;
                 }
             }
             (w, selections(&mut bank), migrations)
         };
-        let (ser_w, ser_sel, ser_migs) = run(1);
+        let (ser_w, ser_sel, ser_migs) = run(&Sharding::Serial);
         assert!(
             ser_migs > 0,
             "{policy:?}: compressible gradients must trigger a migration"
@@ -193,15 +220,101 @@ fn adaptive_pipeline_bit_identical_with_migrations() {
             ser_sel.iter().any(|s| *s != (WaveletBasis::Haar, 2)),
             "{policy:?}: {ser_sel:?}"
         );
-        for threads in [2usize, 4, 7] {
-            let (w, sel, migs) = run(threads);
-            assert_eq!(sel, ser_sel, "{policy:?} threads={threads} selections");
-            assert_eq!(migs, ser_migs, "{policy:?} threads={threads} events");
+        for threads in test_thread_grid() {
+            for sharding in dispatchers(threads) {
+                let (w, sel, migs) = run(&sharding);
+                assert_eq!(sel, ser_sel, "{policy:?} {sharding:?} selections");
+                assert_eq!(migs, ser_migs, "{policy:?} {sharding:?} events");
+                for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{policy:?} {sharding:?} param {} ({})",
+                        i,
+                        shapes[i].name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The soak battery (the pool-reuse contract): ≥100 consecutive
+/// `step_bank` + `probe_bank` steps through **one** `StepPool` per
+/// worker count — the pool is built once and reused for every step of
+/// every spec, exactly like a training run — pinned bit-identical
+/// against the serial baseline. An adaptive spec with forced
+/// migrations rides along, so state re-shaping mid-soak is covered.
+/// Any state leakage between pool reuses (a stale job, a scratch
+/// value crossing batches, a dropped chunk) would show up as a bit
+/// difference or a panic within the 100+ steps.
+#[test]
+fn soak_reused_pool_bit_identical_over_100_steps() {
+    const STEPS: u64 = 120;
+    let shapes = vec![
+        ParamShape {
+            name: "layers.00.attn.wq".into(),
+            shape: vec![16, 64],
+            eligible: true,
+        },
+        ParamShape {
+            name: "layers.00.mlp.up".into(),
+            shape: vec![16, 32],
+            eligible: true,
+        },
+        ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+    ];
+    // One pool per grid entry, shared across *both* specs and all
+    // 120 steps of each — the strongest reuse the trainer exhibits.
+    let pools: Vec<(usize, Sharding)> = test_thread_grid()
+        .into_iter()
+        .map(|t| (t, Sharding::pool(t)))
+        .collect();
+    for spec in ["gwt-2+adam", "adapt-greedy+adam"] {
+        let mut cfg = TrainConfig {
+            optimizer: OptSpec::parse(spec).unwrap(),
+            ..Default::default()
+        };
+        cfg.adapt_cadence = 10;
+        let run = |sharding: &Sharding| {
+            let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut ctl = AdaptController::from_config(&cfg);
+            let mut w = init_weights(&shapes, 17);
+            let mut stat_bits: Vec<u32> = Vec::new();
+            let mut migrations = 0usize;
+            for step in 1..=STEPS {
+                let grads = compressible_grads(&shapes, 900 + step);
+                let stats =
+                    step_bank(&mut bank, &mut w, &grads, 0.01, sharding);
+                probe_bank(&mut bank, &grads, sharding);
+                if let Some(c) = ctl.as_mut() {
+                    if let Some(ev) =
+                        c.post_step(step as usize, &mut bank, &grads, sharding)
+                    {
+                        migrations += ev.migrations;
+                    }
+                }
+                stat_bits.extend(stats.iter().map(|s| s.update_norm.to_bits()));
+            }
+            (w, stat_bits, migrations, selections(&mut bank))
+        };
+        let (ser_w, ser_bits, ser_migs, ser_sel) = run(&Sharding::Serial);
+        if spec.starts_with("adapt") {
+            assert!(ser_migs > 0, "{spec}: soak must include a migration step");
+        }
+        for (threads, pool) in &pools {
+            let (w, bits, migs, sel) = run(pool);
+            assert_eq!(
+                bits, ser_bits,
+                "{spec} threads={threads}: per-step stats diverged"
+            );
+            assert_eq!(migs, ser_migs, "{spec} threads={threads} migrations");
+            assert_eq!(sel, ser_sel, "{spec} threads={threads} selections");
             for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
                 assert_eq!(
                     a.data(),
                     b.data(),
-                    "{policy:?} threads={threads} param {} ({})",
+                    "{spec} threads={threads} param {} ({})",
                     i,
                     shapes[i].name
                 );
@@ -213,10 +326,11 @@ fn adaptive_pipeline_bit_identical_with_migrations() {
 #[test]
 fn single_param_row_sharding_matches_serial() {
     // With a one-param bank, build_optimizers routes the thread
-    // budget into GwtAdam's row sharding instead of the bank level;
-    // the result must still match the serial run bit-for-bit — for
-    // every wavelet basis (the row kernel is basis-dispatched but
-    // identical across workers).
+    // budget into GwtAdam's row sharding (now backed by the bank's
+    // own persistent pool) instead of the bank level; the result must
+    // still match the serial run bit-for-bit — for every wavelet
+    // basis (the row kernel is basis-dispatched but identical across
+    // workers).
     for basis in WaveletBasis::ALL {
         let shape = ParamShape {
             name: "layers.00.attn.wq".into(),
@@ -239,8 +353,8 @@ fn single_param_row_sharding_matches_serial() {
         for step in 0..3u64 {
             let mut grng = Rng::new(70 + step);
             let g = vec![Tensor::randn(&[32, 64], 1.0, &mut grng)];
-            step_bank(&mut serial, &mut w1, &g, 0.01, 1);
-            step_bank(&mut sharded, &mut w2, &g, 0.01, 1);
+            step_bank(&mut serial, &mut w1, &g, 0.01, &Sharding::Serial);
+            step_bank(&mut sharded, &mut w2, &g, 0.01, &Sharding::Serial);
         }
         assert_eq!(w1[0].data(), w2[0].data(), "{basis:?}");
     }
@@ -248,9 +362,12 @@ fn single_param_row_sharding_matches_serial() {
 
 #[test]
 fn zero_workers_and_one_param_edge_cases() {
-    // chunk_bounds: zero workers behaves as one; empty input is empty.
+    // chunk_bounds: zero workers behaves as one; empty input is empty
+    // (the clamping rule is shared — pool::clamp_workers).
     assert_eq!(chunk_bounds(5, 0), vec![(0, 5)]);
     assert!(chunk_bounds(0, 4).is_empty());
+    assert_eq!(gwt::pool::clamp_workers(5, 0), 1);
+    assert_eq!(gwt::pool::clamp_workers(5, 99), 5);
     // scoped_chunks_mut with zero workers runs inline on the caller.
     let mut xs = vec![1u32, 2, 3];
     scoped_chunks_mut(&mut xs, 0, |_| (), |_, _, c| {
@@ -259,6 +376,9 @@ fn zero_workers_and_one_param_edge_cases() {
         }
     });
     assert_eq!(xs, vec![2, 3, 4]);
+    // ...and so does the pool constructor: <= 1 thread never spawns.
+    assert!(matches!(Sharding::pool(0), Sharding::Serial));
+    assert!(matches!(Sharding::pool(1), Sharding::Serial));
     // A one-param bank sharded over many workers steps exactly once.
     let shape = ParamShape {
         name: "layers.00.attn.wq".into(),
@@ -275,13 +395,15 @@ fn zero_workers_and_one_param_edge_cases() {
     let mut w = vec![Tensor::randn(&[16, 16], 1.0, &mut rng)];
     let g = vec![Tensor::randn(&[16, 16], 1.0, &mut rng)];
     let before = w[0].clone();
-    let stats = step_bank(&mut bank, &mut w, &g, 0.01, 7);
+    let stats = step_bank(&mut bank, &mut w, &g, 0.01, &Sharding::pool(7));
     assert_eq!(stats.len(), 1);
     assert!(stats[0].update_norm > 0.0);
     assert_ne!(before.data(), w[0].data());
-    // Empty bank: no-op, no panic.
-    let stats = step_bank(&mut [], &mut [], &[], 0.01, 4);
-    assert!(stats.is_empty());
+    // Empty bank: no-op, no panic — through every dispatcher.
+    for sharding in [Sharding::Serial, Sharding::Scoped(4), Sharding::pool(4)] {
+        let stats = step_bank(&mut [], &mut [], &[], 0.01, &sharding);
+        assert!(stats.is_empty());
+    }
 }
 
 #[test]
@@ -296,8 +418,9 @@ fn step_bank_zero_threads_is_serial() {
     let mut a_w = init_weights(&shapes, 5);
     let mut b_w = a_w.clone();
     let grads = step_grads(&shapes, 0);
-    step_bank(&mut a_bank, &mut a_w, &grads, 0.01, 0);
-    step_bank(&mut b_bank, &mut b_w, &grads, 0.01, 1);
+    // Scoped(0) normalizes to one worker; pool(0) is Serial outright.
+    step_bank(&mut a_bank, &mut a_w, &grads, 0.01, &Sharding::Scoped(0));
+    step_bank(&mut b_bank, &mut b_w, &grads, 0.01, &Sharding::pool(0));
     for (a, b) in a_w.iter().zip(&b_w) {
         assert_eq!(a.data(), b.data());
     }

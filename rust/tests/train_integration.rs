@@ -96,6 +96,40 @@ fn deterministic_given_seed() {
 }
 
 #[test]
+fn thread_and_accum_sharding_leave_losses_unchanged() {
+    // The end-of-run loss must be unchanged from the seed (serial)
+    // behavior when the persistent pool shards the bank step AND the
+    // microbatch gradient accumulation: threads is a pure throughput
+    // knob, bit-for-bit, through a real train_step with grad_accum in
+    // play.
+    let Some(rt) = runtime() else { return };
+    let loader = loader_for("nano", 10);
+    let run = |threads: usize| {
+        let mut c = cfg(OptSpec::gwt(2), 6);
+        c.threads = threads;
+        c.grad_accum = 2;
+        let mut t = Trainer::new(rt.clone(), c, &loader).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..6 {
+            losses.push(t.train_step().unwrap());
+        }
+        losses
+    };
+    let serial = run(1);
+    for threads in [2usize, 4, 7] {
+        let sharded = run(threads);
+        assert_eq!(serial.len(), sharded.len());
+        for (step, (a, b)) in serial.iter().zip(&sharded).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads} step={step}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
 fn checkpoint_roundtrip_preserves_eval() {
     let Some(rt) = runtime() else { return };
     let loader = loader_for("nano", 5);
