@@ -3,7 +3,8 @@
 //! bottlenecks recorded in EXPERIMENTS.md §Perf.
 
 use gwt::bench_harness::{
-    runtime_or_none, time_bank_step, time_fn, write_result, TableView,
+    runtime_or_none, time_bank_step, time_fn, write_bench_file, write_result,
+    TableView,
 };
 use gwt::config::OptSpec;
 use gwt::linalg::{matmul, svd_jacobi};
@@ -189,6 +190,11 @@ fn main() -> anyhow::Result<()> {
     let Some(rt) = runtime_or_none() else {
         table.print();
         write_result("perf_hotpaths", &table, vec![])?;
+        write_bench_file(
+            "perf_hotpaths",
+            &table,
+            "artifact-free rows only (no compiled artifacts on this host)",
+        )?;
         return Ok(());
     };
     let mut hlo_opt = GwtAdam::new(64, 160, 2, hp, Some(rt.clone())).unwrap();
@@ -383,5 +389,10 @@ fn main() -> anyhow::Result<()> {
 
     table.print();
     write_result("perf_hotpaths", &table, vec![])?;
+    write_bench_file(
+        "perf_hotpaths",
+        &table,
+        "full run including HLO/PJRT rows",
+    )?;
     Ok(())
 }

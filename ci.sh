@@ -13,6 +13,15 @@ cd "$(dirname "$0")"
 fast=0
 [[ "${1:-}" == "--fast" ]] && fast=1
 
+# Fail with a real message instead of "line 17: cargo: command not
+# found" on hosts without the Rust toolchain (first observed running
+# this script in a python-only container).
+command -v cargo >/dev/null 2>&1 || {
+    echo "ci.sh: cargo not found on PATH — install the Rust toolchain" \
+         "or run inside the CI image" >&2
+    exit 1
+}
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -63,6 +72,25 @@ GWT_BENCH_SCALE=0.2 cargo bench --bench fig9_composition
 # holds the gwt-2 footprint and adapt_budget_mb is a hard cap.
 echo "== adaptive bench (smoke) =="
 GWT_BENCH_SCALE=0.2 cargo bench --bench fig10_adaptive
+
+# Job-engine smoke: two tiny synthetic jobs sharing one pool under a
+# deliberately tight budget (1.2x the largest single-job charge), so
+# the full-rank Adam job must queue behind the two gwt-2 jobs and be
+# admitted when they finish — the admission path is exercised, not
+# just the happy path. Artifact-free (--synthetic), run under both
+# gwt_path settings like the e2e trainings below.
+for path in auto rust; do
+    echo "== job engine smoke (gwt_path=$path) =="
+    out=$(cargo run --release -- serve --synthetic --budget-x 1.2 \
+        -s gwt_path="$path" \
+        "name=a,optimizer=gwt-2,steps=6" \
+        "name=b,optimizer=gwt-2,steps=6,priority=1" \
+        "name=c,optimizer=adam,steps=4" | tee /dev/stderr)
+    grep -q "queued job 'c'" <<<"$out" \
+        || { echo "job engine smoke: expected a queue event for 'c'"; exit 1; }
+    grep -q "finished job 'c'" <<<"$out" \
+        || { echo "job engine smoke: 'c' never finished"; exit 1; }
+done
 
 # Composed-spec e2e: one previously unreachable composition
 # (wavelet-compressed 8-bit Adam) trains via its CLI spec string,

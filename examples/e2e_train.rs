@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         let mut t = Trainer::new(runtime.clone(), cfg, &loader)?;
         println!(
             "\n-- {} (opt state {:.2} MB) --",
-            t.cfg.optimizer.label(),
+            t.job.cfg.optimizer.label(),
             t.optimizer_state_bytes() as f64 / 1e6
         );
         let out = t.run(&loader, true)?;

@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         let out = t.run(&loader, false)?;
         println!("  {:<14} done: valid ppl {:.2}", out.label, out.valid_ppl);
         table.row(vec![
-            t.cfg.optimizer.label(),
+            t.job.cfg.optimizer.label(),
             format!("{:.2}", out.valid_ppl),
             format!("{:.1}", out.state_bytes as f64 / 1e3),
             format!("{:.0}", out.tokens_per_sec),

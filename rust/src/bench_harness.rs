@@ -131,6 +131,32 @@ pub fn write_result(name: &str, table: &TableView, extra: Vec<(&str, Json)>) -> 
     Ok(())
 }
 
+/// Schema version of committed `BENCH_*.json` trajectory files.
+pub const BENCH_FILE_SCHEMA: usize = 1;
+
+/// Write a *committed* benchmark-trajectory file at the repo root
+/// (`BENCH_<name>.json`) — unlike `results/` output (ephemeral,
+/// gitignored), these are checked in so perf regressions show up in
+/// review diffs. Schema: `{schema_version, bench, note, table}` with
+/// the same table JSON as `write_result`.
+pub fn write_bench_file(
+    name: &str,
+    table: &TableView,
+    note: &str,
+) -> anyhow::Result<()> {
+    let fields = vec![
+        ("schema_version", crate::jsonx::num(BENCH_FILE_SCHEMA as f64)),
+        ("bench", s(name)),
+        ("note", s(note)),
+        ("table", table.to_json()),
+    ];
+    std::fs::write(
+        format!("BENCH_{name}.json"),
+        obj(fields).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Shared training harness for the paper-reproduction benches
 // ---------------------------------------------------------------------------

@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 /// a boolean flag to any launcher — otherwise a trailing positional
 /// after the flag would be consumed as its value (the old grammar
 /// footgun).
-pub const BOOL_FLAGS: &[&str] = &["verbose"];
+pub const BOOL_FLAGS: &[&str] = &["verbose", "synthetic"];
 
 #[derive(Debug, Default)]
 pub struct Args {

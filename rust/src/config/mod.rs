@@ -501,6 +501,14 @@ pub struct TrainConfig {
     /// Schmitt-trigger half-width around `adapt_threshold`, in
     /// [0, 1): suppresses selection churn near the threshold.
     pub adapt_hysteresis: f64,
+    /// `gwt serve`: engine-wide optimizer-state budget in MiB across
+    /// all admitted jobs (0 = unbounded). Per-job admission charges
+    /// come from `memory::measured_account`; see `serve::JobEngine`.
+    pub serve_budget_mb: f64,
+    /// `gwt serve`: default scheduling priority for submitted jobs
+    /// (higher steps first within a round; per-job `priority=` in the
+    /// job spec overrides).
+    pub serve_priority: usize,
     /// GWT execution-path selection (`auto` = HLO artifact when
     /// available, `rust` = force the pure-rust path). Resolved via
     /// [`TrainConfig::resolve_gwt_path`], which keeps the legacy
@@ -536,6 +544,8 @@ impl Default for TrainConfig {
             adapt_budget_mb: 0.0,
             adapt_threshold: 0.35,
             adapt_hysteresis: 0.05,
+            serve_budget_mb: 0.0,
+            serve_priority: 0,
             gwt_path: GwtPath::Auto,
             artifacts_dir: "artifacts".into(),
         }
@@ -586,6 +596,12 @@ impl TrainConfig {
             }
             "adapt_hysteresis" => {
                 self.adapt_hysteresis = v.parse().context("adapt_hysteresis")?
+            }
+            "serve_budget_mb" => {
+                self.serve_budget_mb = v.parse().context("serve_budget_mb")?
+            }
+            "serve_priority" => {
+                self.serve_priority = v.parse().context("serve_priority")?
             }
             "gwt_path" => self.gwt_path = GwtPath::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
@@ -641,6 +657,9 @@ impl TrainConfig {
         }
         if self.muon_ns_iters == 0 {
             bail!("muon_ns_iters must be positive");
+        }
+        if self.serve_budget_mb < 0.0 {
+            bail!("serve_budget_mb must be >= 0 (0 = unbounded)");
         }
         if let Some(TransformSpec::Adaptive { .. }) = self.optimizer.transform() {
             if self.adapt_cadence == 0 {

@@ -10,6 +10,8 @@
 //! would not overlap anyway; the *topology* is what the coordinator
 //! logic needs to get right, and transport is shared memory).
 
+use anyhow::{bail, Result};
+
 use crate::data::{DataLoader, Split};
 use crate::pool::allreduce_mean;
 
@@ -37,13 +39,40 @@ impl DpGroup {
 
 /// Combine per-worker per-param gradients: input
 /// `worker_grads[w][p]` flat data; returns averaged `[p]`.
-pub fn combine_grads(worker_grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
+///
+/// Ragged input (workers disagreeing on param count or on a param's
+/// element count) is a topology bug upstream — a worker dropped a
+/// gradient or an exec returned a short output — and is reported as
+/// an error naming the offending worker instead of a panic deep in
+/// the transpose.
+pub fn combine_grads(worker_grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
     let workers = worker_grads.len();
-    assert!(workers >= 1);
-    if workers == 1 {
-        return worker_grads.into_iter().next().unwrap();
+    if workers == 0 {
+        bail!("combine_grads: no worker gradients");
     }
     let n_params = worker_grads[0].len();
+    for (w, grads) in worker_grads.iter().enumerate() {
+        if grads.len() != n_params {
+            bail!(
+                "combine_grads: ragged input — worker {w} produced {} \
+                 param gradients, worker 0 produced {n_params}",
+                grads.len()
+            );
+        }
+        for (p, g) in grads.iter().enumerate() {
+            let want = worker_grads[0][p].len();
+            if g.len() != want {
+                bail!(
+                    "combine_grads: ragged input — worker {w} param {p} \
+                     has {} elements, worker 0 has {want}",
+                    g.len()
+                );
+            }
+        }
+    }
+    if workers == 1 {
+        return Ok(worker_grads.into_iter().next().unwrap());
+    }
     let mut out = Vec::with_capacity(n_params);
     // Transpose to per-param shard lists, allreduce each.
     let mut per_worker: Vec<std::vec::IntoIter<Vec<f32>>> =
@@ -53,7 +82,7 @@ pub fn combine_grads(worker_grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
             per_worker.iter_mut().map(|it| it.next().unwrap()).collect();
         out.push(allreduce_mean(shards));
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -76,7 +105,7 @@ mod tests {
     fn combine_grads_averages() {
         let w0 = vec![vec![1.0, 2.0], vec![10.0]];
         let w1 = vec![vec![3.0, 6.0], vec![20.0]];
-        let avg = combine_grads(vec![w0, w1]);
+        let avg = combine_grads(vec![w0, w1]).unwrap();
         assert_eq!(avg[0], vec![2.0, 4.0]);
         assert_eq!(avg[1], vec![15.0]);
     }
@@ -84,7 +113,30 @@ mod tests {
     #[test]
     fn single_worker_passthrough() {
         let w0 = vec![vec![1.0, 2.0]];
-        let avg = combine_grads(vec![w0.clone()]);
+        let avg = combine_grads(vec![w0.clone()]).unwrap();
         assert_eq!(avg, w0);
+    }
+
+    #[test]
+    fn ragged_param_count_is_a_clear_error() {
+        let w0 = vec![vec![1.0, 2.0], vec![10.0]];
+        let w1 = vec![vec![3.0, 6.0]]; // dropped a param gradient
+        let err = combine_grads(vec![w0, w1]).unwrap_err().to_string();
+        assert!(err.contains("ragged input"), "{err}");
+        assert!(err.contains("worker 1"), "{err}");
+    }
+
+    #[test]
+    fn ragged_element_count_is_a_clear_error() {
+        let w0 = vec![vec![1.0, 2.0]];
+        let w1 = vec![vec![3.0]]; // short gradient
+        let err = combine_grads(vec![w0, w1]).unwrap_err().to_string();
+        assert!(err.contains("ragged input"), "{err}");
+        assert!(err.contains("param 0"), "{err}");
+    }
+
+    #[test]
+    fn empty_input_is_an_error() {
+        assert!(combine_grads(vec![]).is_err());
     }
 }

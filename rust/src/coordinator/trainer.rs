@@ -1,54 +1,38 @@
-//! The training loop.
+//! The pre-training client: a thin single-job wrapper over
+//! `serve::JobState` + `serve::PretrainSource`. The step-loop math
+//! lives in `JobState::step_once`; this type owns what is specific to
+//! a one-job CLI run — the runtime handle, the eval executable, the
+//! run loop, and params-only checkpoints. Bit-identity with the
+//! pre-refactor monolithic Trainer is pinned by
+//! `rust/tests/job_engine.rs`.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::dp::{combine_grads, DpGroup};
-use super::schedule::CosineSchedule;
-use crate::adapt::AdaptController;
-use crate::checkpoint::Checkpoint;
 use crate::config::{presets, TrainConfig};
 use crate::data::DataLoader;
 use crate::memory::ParamShape;
-use crate::metrics::{AdaptTrace, LossCurve, Throughput};
-use crate::optim::{
-    build_optimizers_sharded, step_bank, total_state_bytes, ParamOptimizer,
-};
-use crate::pool::{accumulate_sharded, Sharding};
+use crate::metrics::LossCurve;
+use crate::pool::Sharding;
 use crate::runtime::{
     literal_f32, literal_tokens, scalar_from_literal, Runtime,
 };
+use crate::serve::{JobState, PretrainSource};
 use crate::tensor::Tensor;
 
 pub struct Trainer {
-    pub cfg: TrainConfig,
     runtime: Arc<Runtime>,
     preset: &'static presets::ModelPreset,
-    shapes: Vec<ParamShape>,
-    pub params: Vec<Tensor>,
-    bank: Vec<ParamOptimizer>,
-    dp: DpGroup,
-    schedule: CosineSchedule,
-    step: usize,
-    pub curve: LossCurve,
-    pub throughput: Throughput,
-    /// Adaptive-compression driver (`adapt-*` specs only): probes the
-    /// bank and re-selects (basis, level) on its cadence, after the
-    /// parallel step — serial, so the step engine stays a pure
-    /// throughput knob.
-    adapt: Option<AdaptController>,
-    /// Per-event adaptive telemetry (empty for static specs).
-    pub adapt_trace: AdaptTrace,
-    tokens_seen: usize,
     /// Step-engine dispatcher, built once from `cfg.threads`: a
-    /// persistent `pool::StepPool` whose workers are spawned here and
-    /// reused by every `step_bank`/`probe_bank`/grad-accumulate call
-    /// of the run (`Serial` when the run is single-threaded).
+    /// persistent `pool::StepPool` whose workers are reused by every
+    /// `step_bank`/`probe_bank`/grad-accumulate call of the run
+    /// (`Serial` when the run is single-threaded).
     sharding: Sharding,
-    /// §Perf L3-2: executables resolved once at construction instead
-    /// of a key-format + map lookup on every microbatch.
-    train_exec: Arc<crate::runtime::Exec>,
+    /// The job core: params, bank, schedule, curve, adapt controller.
+    pub job: JobState,
+    /// §Perf L3-2: executable resolved once at construction instead
+    /// of a key-format + map lookup on every eval batch.
     eval_exec: Arc<crate::runtime::Exec>,
 }
 
@@ -73,52 +57,19 @@ impl Trainer {
     ) -> Result<Trainer> {
         cfg.validate()?;
         let preset = presets::find(&cfg.preset)?;
-        runtime
-            .manifest
-            .check_preset(preset)
-            .context("preset drift between rust and aot.py")?;
-        let shapes = preset.param_shapes();
-        let mut rng = crate::rng::Rng::new(cfg.seed);
-        let params: Vec<Tensor> = shapes
-            .iter()
-            .map(|s| init_param(&s.name, &s.shape, &mut rng))
-            .collect();
         // One pool for the whole run: bank stepping, probing, grad
         // accumulation, and (single-param banks) row sharding all
         // reuse these workers.
         let sharding = Sharding::pool(cfg.resolve_threads());
-        let bank = build_optimizers_sharded(
-            &shapes,
-            &cfg,
-            Some(runtime.clone()),
-            sharding.clone(),
-        )?;
-        let dp = DpGroup::new(loader, cfg.dp_workers);
-        let schedule = CosineSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac);
-        let label = format!("{}_{}", cfg.preset, cfg.optimizer.label());
-        let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
+        let source = PretrainSource::new(&runtime, &cfg, loader)?;
         let eval_exec = runtime.exec(&format!("eval_loss_{}", cfg.preset))?;
-        let adapt = AdaptController::from_config(&cfg);
-        let adapt_trace = AdaptTrace::new(&label);
-        Ok(Trainer {
+        let job = JobState::new(
             cfg,
-            runtime,
-            preset,
-            shapes,
-            params,
-            bank,
-            dp,
-            schedule,
-            step: 0,
-            curve: LossCurve::new(&label),
-            throughput: Throughput::new(),
-            adapt,
-            adapt_trace,
-            tokens_seen: 0,
-            sharding,
-            train_exec,
-            eval_exec,
-        })
+            Box::new(source),
+            Some(runtime.clone()),
+            &sharding,
+        )?;
+        Ok(Trainer { runtime, preset, sharding, job, eval_exec })
     }
 
     pub fn preset(&self) -> &'static presets::ModelPreset {
@@ -130,100 +81,16 @@ impl Trainer {
     }
 
     pub fn shapes(&self) -> &[ParamShape] {
-        &self.shapes
+        &self.job.shapes
     }
 
     pub fn optimizer_state_bytes(&self) -> usize {
-        total_state_bytes(&self.bank)
-    }
-
-    /// Execute the `train_step` artifact for one token batch; returns
-    /// (loss, per-param gradient data).
-    fn forward_backward(&self, tokens: &[i32]) -> Result<(f32, Vec<Vec<f32>>)> {
-        let exec = &self.train_exec;
-        let mut inputs = Vec::with_capacity(self.params.len() + 1);
-        for p in &self.params {
-            inputs.push(literal_f32(p)?);
-        }
-        inputs.push(literal_tokens(
-            tokens,
-            self.preset.batch,
-            self.preset.seq_len,
-        )?);
-        let outs = exec.run(&inputs)?;
-        let loss = scalar_from_literal(&outs[0])?;
-        let grads = outs[1..]
-            .iter()
-            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((loss, grads))
+        self.job.optimizer_state_bytes()
     }
 
     /// One optimizer step: grad_accum x dp_workers microbatches.
     pub fn train_step(&mut self) -> Result<f32> {
-        let lr_t = self.schedule.lr(self.step);
-        let mut acc: Vec<Vec<f32>> =
-            self.shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
-        let mut loss_sum = 0.0f32;
-        let mut micro_count = 0usize;
-        for _ in 0..self.cfg.grad_accum {
-            let batches = self.dp.draw();
-            let mut worker_grads = Vec::with_capacity(batches.len());
-            for b in &batches {
-                let (loss, grads) = self.forward_backward(&b.tokens)?;
-                loss_sum += loss;
-                micro_count += 1;
-                self.tokens_seen += b.tokens.len();
-                self.throughput.add_tokens(b.tokens.len());
-                worker_grads.push(grads);
-            }
-            let combined = combine_grads(worker_grads);
-            // Microbatch accumulation rides the same reused pool as
-            // the optimizer step: chunked elementwise adds over the
-            // flat buffer, fixed boundaries, one writer per element —
-            // bit-identical to the serial sum at every worker count
-            // (pinned by tests/grad_accum_parity.rs).
-            for (a, g) in acc.iter_mut().zip(&combined) {
-                accumulate_sharded(&self.sharding, a, g);
-            }
-        }
-        let inv = 1.0 / self.cfg.grad_accum as f32;
-        let grads: Vec<Tensor> = acc
-            .into_iter()
-            .zip(&self.shapes)
-            .map(|(mut gd, s)| {
-                if self.cfg.grad_accum > 1 {
-                    for x in &mut gd {
-                        *x *= inv;
-                    }
-                }
-                Tensor::new(&s.shape, gd)
-            })
-            .collect();
-        // Parallel step engine: shard the bank through the run's
-        // persistent pool (bit-identical to the serial loop).
-        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, &self.sharding);
-        let mean_loss = loss_sum / micro_count.max(1) as f32;
-        self.step += 1;
-        // Adaptive-compression hook: on the controller's cadence,
-        // probe this step's combined gradients (sharded like the step
-        // itself), re-select decompositions, and record the event.
-        // The controller is serial and deterministic, so training
-        // stays bit-identical across thread counts.
-        if let Some(ctl) = self.adapt.as_mut() {
-            if let Some(ev) =
-                ctl.post_step(self.step, &mut self.bank, &grads, &self.sharding)
-            {
-                self.adapt_trace.push(ev);
-            }
-        }
-        self.curve.push(
-            self.step,
-            mean_loss,
-            self.tokens_seen,
-            self.throughput.elapsed_secs(),
-        );
-        Ok(mean_loss)
+        self.job.step_once(&self.sharding)
     }
 
     /// Mean validation loss via the `eval_loss` artifact.
@@ -233,8 +100,8 @@ impl Trainer {
         anyhow::ensure!(!batches.is_empty(), "no validation batches");
         let mut total = 0.0f32;
         for b in &batches {
-            let mut inputs = Vec::with_capacity(self.params.len() + 1);
-            for p in &self.params {
+            let mut inputs = Vec::with_capacity(self.job.params.len() + 1);
+            for p in &self.job.params {
                 inputs.push(literal_f32(p)?);
             }
             inputs.push(literal_tokens(
@@ -251,30 +118,30 @@ impl Trainer {
     /// Run the configured number of steps; returns the outcome
     /// summary. `verbose` prints a progress line every `eval_every`.
     pub fn run(&mut self, loader: &DataLoader, verbose: bool) -> Result<TrainOutcome> {
-        for _ in 0..self.cfg.steps {
+        for _ in 0..self.job.cfg.steps {
             let loss = self.train_step()?;
-            if verbose && self.step % self.cfg.eval_every.max(1) == 0 {
+            if verbose && self.job.step % self.job.cfg.eval_every.max(1) == 0 {
                 println!(
                     "step {:>5}  loss {:.4}  ppl {:.2}  lr {:.5}  tok/s {:.0}",
-                    self.step,
+                    self.job.step,
                     loss,
                     loss.exp(),
-                    self.schedule.lr(self.step.saturating_sub(1)),
-                    self.throughput.tokens_per_sec()
+                    self.job.schedule.lr(self.job.step.saturating_sub(1)),
+                    self.job.throughput.tokens_per_sec()
                 );
             }
         }
         let valid_loss = self.eval_loss(loader, 8)?;
-        let final_loss = self.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
+        let final_loss = self.job.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
         Ok(TrainOutcome {
-            label: self.curve.label.clone(),
+            label: self.job.curve.label.clone(),
             final_loss,
             final_ppl: final_loss.exp(),
             valid_loss,
             valid_ppl: valid_loss.exp(),
-            tokens_per_sec: self.throughput.tokens_per_sec(),
+            tokens_per_sec: self.job.throughput.tokens_per_sec(),
             state_bytes: self.optimizer_state_bytes(),
-            curve: self.curve.clone(),
+            curve: self.job.curve.clone(),
         })
     }
 
@@ -282,30 +149,32 @@ impl Trainer {
     /// drive `train_step` manually for mid-run checkpoints).
     pub fn run_summary(&self, loader: &DataLoader) -> TrainOutcome {
         let valid_loss = self.eval_loss(loader, 8).unwrap_or(f32::NAN);
-        let final_loss = self.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
+        let final_loss = self.job.curve.tail_mean_loss(10).unwrap_or(f32::NAN);
         TrainOutcome {
-            label: self.curve.label.clone(),
+            label: self.job.curve.label.clone(),
             final_loss,
             final_ppl: final_loss.exp(),
             valid_loss,
             valid_ppl: valid_loss.exp(),
-            tokens_per_sec: self.throughput.tokens_per_sec(),
+            tokens_per_sec: self.job.throughput.tokens_per_sec(),
             state_bytes: self.optimizer_state_bytes(),
-            curve: self.curve.clone(),
+            curve: self.job.curve.clone(),
         }
     }
 
+    /// Params-only checkpoint (eval workflows). The full-state
+    /// suspend/resume path is `JobState::snapshot`/`restore`.
     pub fn save_checkpoint(&self, path: &str) -> Result<()> {
-        let mut ck = Checkpoint::new(self.step as u64);
-        for (s, p) in self.shapes.iter().zip(&self.params) {
+        let mut ck = crate::checkpoint::Checkpoint::new(self.job.step as u64);
+        for (s, p) in self.job.shapes.iter().zip(&self.job.params) {
             ck.insert(&s.name, p.clone());
         }
         ck.save(path)
     }
 
     pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
-        let ck = Checkpoint::load(path)?;
-        for (s, p) in self.shapes.iter().zip(self.params.iter_mut()) {
+        let ck = crate::checkpoint::Checkpoint::load(path)?;
+        for (s, p) in self.job.shapes.iter().zip(self.job.params.iter_mut()) {
             let t = ck
                 .tensors
                 .get(&s.name)
@@ -313,7 +182,7 @@ impl Trainer {
             anyhow::ensure!(t.shape() == s.shape, "shape mismatch for {}", s.name);
             *p = t.clone();
         }
-        self.step = ck.step as usize;
+        self.job.step = ck.step as usize;
         Ok(())
     }
 }

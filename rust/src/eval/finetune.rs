@@ -12,13 +12,11 @@ use anyhow::{Context, Result};
 
 use crate::config::{presets, TrainConfig};
 use crate::coordinator::trainer::init_param;
-use crate::coordinator::CosineSchedule;
 use crate::memory::ParamShape;
-use crate::optim::{build_optimizers_sharded, step_bank, ParamOptimizer};
+use crate::optim::{build_optimizers_sharded, ParamOptimizer};
 use crate::pool::Sharding;
-use crate::runtime::{
-    literal_f32, literal_labels, literal_tokens, scalar_from_literal, Runtime,
-};
+use crate::runtime::{literal_f32, literal_tokens, Runtime};
+use crate::serve::{ClsSource, JobState};
 use crate::tensor::Tensor;
 
 use super::tasks::ClsTask;
@@ -114,72 +112,54 @@ impl FineTuner {
         })
     }
 
-    fn run_batch(
-        &mut self,
-        tokens: &[i32],
-        labels: &[i32],
-        lr_t: f32,
-    ) -> Result<f32> {
-        let key = format!(
-            "cls_train_step_{}_k{}",
-            self.cfg.preset, self.classes
-        );
-        let exec = self.runtime.exec(&key).with_context(|| {
-            format!("fine-tune artifact for k={} missing", self.classes)
-        })?;
-        let mut inputs = Vec::with_capacity(self.params.len() + 2);
-        for p in &self.params {
-            inputs.push(literal_f32(p)?);
-        }
-        inputs.push(literal_tokens(
-            tokens,
-            self.preset.batch,
-            self.preset.seq_len,
-        )?);
-        inputs.push(literal_labels(labels)?);
-        let outs = exec.run(&inputs)?;
-        let loss = scalar_from_literal(&outs[0])?;
-        let grads = self
-            .shapes
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                Ok(Tensor::new(&s.shape, outs[1 + i].to_vec::<f32>()?))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, &self.sharding);
-        Ok(loss)
-    }
-
     /// Fine-tune on `task.train` for `epochs`, return test accuracy.
+    ///
+    /// The loop is a `serve::JobState` over a `ClsSource`: the same
+    /// step core as pre-training (and as engine-hosted jobs), with the
+    /// fine-tune specifics — custom eligibility, the appended head,
+    /// the epoch schedule — injected via `from_parts` and the job
+    /// config (`steps` = epochs x steps-per-epoch, single worker, no
+    /// gradient accumulation, exactly the old loop's schedule).
     pub fn run(&mut self, task: &ClsTask, epochs: usize) -> Result<FtOutcome> {
-        let bs = self.preset.batch;
         anyhow::ensure!(
             task.spec.seq_len == self.preset.seq_len,
             "task seq_len {} != preset {}",
             task.spec.seq_len,
             self.preset.seq_len
         );
-        let steps_per_epoch = task.train.len() / bs;
-        let schedule = CosineSchedule::new(
-            self.cfg.lr,
-            epochs * steps_per_epoch,
-            self.cfg.warmup_frac,
+        let source = ClsSource::new(&self.runtime, &self.cfg, task, epochs)
+            .with_context(|| {
+                format!("building fine-tune source for k={}", self.classes)
+            })?;
+        let mut cfg = self.cfg.clone();
+        cfg.steps = source.total_rounds();
+        cfg.grad_accum = 1;
+        cfg.dp_workers = 1;
+        let mut job = JobState::from_parts(
+            cfg,
+            self.shapes.clone(),
+            std::mem::take(&mut self.params),
+            std::mem::take(&mut self.bank),
+            Box::new(source),
         );
-        let mut step = 0;
         let mut last_loss = f32::NAN;
-        for _ in 0..epochs {
-            for chunk in task.train.chunks_exact(bs) {
-                let mut tokens = Vec::with_capacity(bs * self.preset.seq_len);
-                let mut labels = Vec::with_capacity(bs);
-                for ex in chunk {
-                    tokens.extend_from_slice(&ex.tokens);
-                    labels.push(ex.label);
+        let mut failure = None;
+        for _ in 0..job.cfg.steps {
+            match job.step_once(&self.sharding) {
+                Ok(loss) => last_loss = loss,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
                 }
-                last_loss =
-                    self.run_batch(&tokens, &labels, schedule.lr(step))?;
-                step += 1;
             }
+        }
+        // Reclaim params/bank before propagating any step error so the
+        // tuner stays usable (accuracy probes, repeated sweeps).
+        let (params, bank) = job.into_parts();
+        self.params = params;
+        self.bank = bank;
+        if let Some(e) = failure {
+            return Err(e);
         }
         let accuracy = self.accuracy(task)?;
         Ok(FtOutcome {

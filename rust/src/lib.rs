@@ -34,6 +34,7 @@ pub mod optim;
 pub mod pool;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 pub mod wavelet;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train    — pretrain a preset with a chosen optimizer
+//!   serve    — run many jobs on one shared engine under a budget
 //!   eval     — load a checkpoint and report validation PPL
 //!   finetune — fine-tune on the synthetic MMLU-like suite
 //!   memory   — print the analytic memory tables (paper Tables I/XI)
@@ -16,6 +17,10 @@
 //!             -s adapt_cadence=25 -s adapt_budget_mb=64  # self-tuning GWT
 //!   gwt train --config configs/micro_gwt3.cfg --checkpoint out.ckpt
 //!   gwt train --threads 4 -s preset=small      # parallel step engine
+//!   gwt serve --budget-mb 1.0 \
+//!             "name=a,optimizer=gwt-2,steps=100" \
+//!             "name=b,optimizer=adam,steps=60,priority=1"
+//!   gwt serve --synthetic --budget-x 1.2 "name=a,..." "name=b,..."
 //!   gwt memory
 //!   gwt info
 
@@ -45,8 +50,10 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gwt <train|eval|finetune|memory|info> [--config FILE] \
-         [--threads N] [-s key=value ...]"
+        "usage: gwt <train|serve|eval|finetune|memory|info> [--config FILE] \
+         [--threads N] [-s key=value ...]\n\
+         serve: gwt serve [--budget-mb F | --budget-x F] [--synthetic] \
+         \"name=a,optimizer=gwt-2,steps=100[,priority=1]\" ..."
     );
 }
 
@@ -84,6 +91,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "finetune" => cmd_finetune(&args),
         "memory" => cmd_memory(),
@@ -124,7 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         outcome.valid_ppl,
         outcome.tokens_per_sec
     );
-    let trace = &trainer.adapt_trace;
+    let trace = &trainer.job.adapt_trace;
     if !trace.events.is_empty() {
         let hist = trace
             .events
@@ -153,6 +161,132 @@ fn cmd_train(args: &Args) -> Result<()> {
             )?;
         }
         println!("curve written under {dir}/");
+    }
+    Ok(())
+}
+
+/// Multi-tenant job engine: each positional argument is one job spec
+/// — comma-separated `key=value` pairs where `name` (required) and
+/// `priority` are job-level and everything else is a `TrainConfig`
+/// key applied on top of the base config. The budget comes from
+/// `serve_budget_mb` / `--budget-mb F` (absolute MiB) or
+/// `--budget-x F` (F x the largest single-job admission charge —
+/// handy for forcing queueing in smokes without hardcoding byte
+/// counts). `--synthetic` runs artifact-free on the deterministic
+/// synthetic gradient stream.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let base = load_config(args)?;
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "serve requires at least one job spec, e.g. \
+         \"name=a,optimizer=gwt-2,steps=100\""
+    );
+    let mut jobs: Vec<(String, usize, TrainConfig)> = Vec::new();
+    for spec in &args.positional {
+        let mut cfg = base.clone();
+        let mut name: Option<String> = None;
+        let mut priority = base.serve_priority;
+        for part in spec.split(',') {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "job spec '{spec}': expected key=value, got '{part}'"
+                )
+            })?;
+            match k.trim() {
+                "name" => name = Some(v.trim().to_string()),
+                "priority" => {
+                    priority = v.trim().parse().context("priority")?
+                }
+                other => cfg
+                    .set(other, v)
+                    .with_context(|| format!("job spec '{spec}'"))?,
+            }
+        }
+        let name = name
+            .ok_or_else(|| anyhow::anyhow!("job spec '{spec}' missing name="))?;
+        cfg.validate()?;
+        jobs.push((name, priority, cfg));
+    }
+
+    let mut budget_mb = base.serve_budget_mb;
+    if let Some(v) = args.flag("budget-mb") {
+        budget_mb = v.parse().context("--budget-mb")?;
+    }
+    if let Some(v) = args.flag("budget-x") {
+        let x: f64 = v.parse().context("--budget-x")?;
+        let max_charge = jobs
+            .iter()
+            .map(|(_, _, c)| gwt::serve::JobEngine::charge_for(c))
+            .collect::<Result<Vec<_>>>()?
+            .into_iter()
+            .max()
+            .unwrap_or(0);
+        budget_mb = x * max_charge as f64 / (1024.0 * 1024.0);
+    }
+
+    let synthetic = args.flag_bool("synthetic");
+    let runtime = if synthetic {
+        None
+    } else {
+        Some(Arc::new(
+            Runtime::load(&base.artifacts_dir).context("loading runtime")?,
+        ))
+    };
+    println!("== gwt serve ==");
+    println!("  jobs           {}", jobs.len());
+    println!(
+        "  budget         {}",
+        if budget_mb > 0.0 {
+            format!("{budget_mb:.2} MB")
+        } else {
+            "unbounded".into()
+        }
+    );
+    println!(
+        "  source         {}",
+        if synthetic { "synthetic" } else { "pjrt" }
+    );
+    let mut engine =
+        gwt::serve::JobEngine::new(runtime, base.resolve_threads(), budget_mb);
+    for (name, priority, cfg) in jobs {
+        let source = if synthetic {
+            gwt::serve::JobSource::Synthetic
+        } else {
+            gwt::serve::JobSource::Pretrain { loader: make_loader(&cfg)? }
+        };
+        engine.submit(&name, cfg, priority, source)?;
+    }
+    engine.run_to_completion()?;
+
+    println!("\nevents:");
+    for ev in engine.events() {
+        println!("  {ev}");
+    }
+    let trace = engine.step_trace();
+    let head: Vec<&str> =
+        trace.iter().take(12).map(String::as_str).collect();
+    println!(
+        "step trace     {} steps [{}{}]",
+        trace.len(),
+        head.join(" "),
+        if trace.len() > head.len() { " ..." } else { "" }
+    );
+    println!(
+        "peak admitted  {:.2} MB",
+        engine.peak_admitted_bytes() as f64 / 1e6
+    );
+    println!("\nper-job summary:");
+    for s in engine.summaries() {
+        println!(
+            "  {:<12} {:<28} steps {:<5} loss {:.4}  state {:.2} MB  \
+             {:.0} tok/s",
+            s.name,
+            s.label,
+            s.steps,
+            s.final_loss,
+            s.state_bytes as f64 / 1e6,
+            s.tokens_per_sec
+        );
     }
     Ok(())
 }

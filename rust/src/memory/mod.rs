@@ -230,6 +230,22 @@ impl MemoryReport {
     pub fn gb(bytes: usize) -> f64 {
         bytes as f64 / (1024.0 * 1024.0 * 1024.0)
     }
+
+    /// Bytes the job engine charges against its global budget when
+    /// admitting a job built from this spec. Static specs charge
+    /// their one number. Adaptive specs charge their per-job cap when
+    /// one is set (`cap` = `adapt_budget_mb` in bytes, 0 = uncapped):
+    /// the policy keeps the live bank under that cap, so the engine
+    /// need not reserve the level-1 ceiling — but never below the
+    /// init selection (`state_bytes`), which exists before the policy
+    /// first acts, and never above `worst_state_bytes`.
+    pub fn admission_charge(&self, cap: usize) -> usize {
+        if cap == 0 {
+            self.worst_state_bytes
+        } else {
+            self.worst_state_bytes.min(cap.max(self.state_bytes))
+        }
+    }
 }
 
 /// Paper-unit (BF16) account of a parameter set under `spec`.

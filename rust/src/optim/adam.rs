@@ -3,8 +3,13 @@
 //! it (the whole parameter under `Identity`, the approximation band
 //! under `Wavelet`, the subspace under `LowRank`/`RandomProj`).
 
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
 use super::compose::InnerOpt;
-use super::AdamHp;
+use super::{export_step_counter, import_scalar, import_vec, AdamHp};
+use crate::tensor::Tensor;
 
 pub struct AdamCore {
     hp: AdamHp,
@@ -67,6 +72,21 @@ impl InnerOpt for AdamCore {
         self.m = m;
         self.v = v;
         true
+    }
+
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        Some(vec![
+            ("m".into(), Tensor::new(&[self.m.len()], self.m.clone())),
+            ("v".into(), Tensor::new(&[self.v.len()], self.v.clone())),
+            ("t".into(), export_step_counter(self.t)),
+        ])
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        self.m = import_vec(state, "m", self.m.len())?;
+        self.v = import_vec(state, "v", self.v.len())?;
+        self.t = import_scalar(state, "t")? as usize;
+        Ok(())
     }
 }
 

@@ -4,8 +4,13 @@
 //! paper shows GWT composes with it (Fig 4) — in this codebase that
 //! composition is literally `gwt-2+adam-mini`.
 
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
 use super::compose::InnerOpt;
-use super::AdamHp;
+use super::{export_step_counter, import_scalar, import_vec, AdamHp};
+use crate::tensor::Tensor;
 
 pub struct AdamMiniCore {
     hp: AdamHp,
@@ -62,6 +67,21 @@ impl InnerOpt for AdamMiniCore {
         self.m = m;
         self.v *= old_len as f32 / new_len.max(1) as f32;
         true
+    }
+
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        Some(vec![
+            ("m".into(), Tensor::new(&[self.m.len()], self.m.clone())),
+            ("v".into(), Tensor::scalar(self.v)),
+            ("t".into(), export_step_counter(self.t)),
+        ])
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        self.m = import_vec(state, "m", self.m.len())?;
+        self.v = import_scalar(state, "v")?;
+        self.t = import_scalar(state, "t")? as usize;
+        Ok(())
     }
 }
 

@@ -23,6 +23,7 @@
 //! hot path (`gwt_adam_key`) and the row-sharded rust path unchanged
 //! for the paper's headline configuration.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -98,6 +99,23 @@ pub trait InnerOpt: Send {
     ) -> bool {
         let _ = (new_len, remap);
         false
+    }
+
+    /// Suspend/resume seam (mirrors [`super::MatrixOpt`]): export the
+    /// full mutable state as named f32 tensors, `None` when it does
+    /// not round-trip (8-bit quantized blocks).
+    fn export_state(&self) -> Option<Vec<(String, crate::tensor::Tensor)>> {
+        None
+    }
+
+    /// Restore state from [`InnerOpt::export_state`] on a fresh core
+    /// of the same domain length.
+    fn import_state(
+        &mut self,
+        state: &BTreeMap<String, crate::tensor::Tensor>,
+    ) -> Result<()> {
+        let _ = state;
+        bail!("inner optimizer does not support state import")
     }
 }
 
@@ -361,6 +379,39 @@ impl MatrixOpt for Composed {
         match &self.engine {
             Engine::Fused(f) => f.label(),
             Engine::Direct(_) | Engine::Generic { .. } => self.label.clone(),
+        }
+    }
+
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        match &self.engine {
+            Engine::Fused(f) => f.export_state(),
+            Engine::Direct(inner) => inner.export_state(),
+            // Stateless transforms (wavelets) pass the inner's state
+            // through; transforms owning projection state (GaLore SVD
+            // phase, APOLLO sketches) have no tensor round-trip yet.
+            Engine::Generic { transform, inner, .. } => {
+                if transform.state_bytes() == 0 {
+                    inner.export_state()
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        match &mut self.engine {
+            Engine::Fused(f) => f.import_state(state),
+            Engine::Direct(inner) => inner.import_state(state),
+            Engine::Generic { transform, inner, .. } => {
+                if transform.state_bytes() != 0 {
+                    bail!(
+                        "transform with projection state does not support \
+                         state import"
+                    );
+                }
+                inner.import_state(state)
+            }
         }
     }
 }

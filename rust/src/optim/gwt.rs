@@ -38,12 +38,13 @@
 //! env var as fallback) once per bank and routes accordingly — the
 //! env var is no longer read here, per-parameter.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::compose::GradientTransform;
-use super::{AdamHp, MatrixOpt};
+use super::{export_step_counter, import_scalar, import_vec, AdamHp, MatrixOpt};
 use crate::pool::Sharding;
 use crate::runtime::{
     literal_f32, literal_f32_from, tensor_from_literal, Runtime,
@@ -494,6 +495,21 @@ impl MatrixOpt for GwtAdam {
             self.basis.gwt_label(self.level),
             if self.uses_hlo() { " (HLO)" } else { " (rust)" }
         )
+    }
+
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        Some(vec![
+            ("m".into(), Tensor::new(&[self.m.len()], self.m.clone())),
+            ("v".into(), Tensor::new(&[self.v.len()], self.v.clone())),
+            ("t".into(), export_step_counter(self.t)),
+        ])
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        self.m = import_vec(state, "m", self.m.len())?;
+        self.v = import_vec(state, "v", self.v.len())?;
+        self.t = import_scalar(state, "t")? as usize;
+        Ok(())
     }
 }
 

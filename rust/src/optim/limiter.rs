@@ -28,6 +28,16 @@ impl NormGrowthLimiter {
         }
         scale
     }
+
+    /// Reference norm from the previous step (suspend/resume seam).
+    pub fn prev_norm(&self) -> Option<f32> {
+        self.prev_norm
+    }
+
+    /// Restore the reference norm captured by [`Self::prev_norm`].
+    pub fn set_prev_norm(&mut self, prev: Option<f32>) {
+        self.prev_norm = prev;
+    }
 }
 
 #[cfg(test)]

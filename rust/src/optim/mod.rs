@@ -47,9 +47,10 @@ pub mod lora;
 pub mod muon;
 pub mod sgdm;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub use adam::AdamCore;
 pub use adam8bit::Adam8bitCore;
@@ -118,6 +119,25 @@ pub trait MatrixOpt: Send {
     fn adaptive(&mut self) -> Option<&mut dyn crate::adapt::AdaptiveOpt> {
         None
     }
+
+    /// The suspend/resume seam: export the full mutable state as
+    /// named f32 tensors, or `None` when this engine's state does not
+    /// round-trip through tensors (8-bit quantized blocks, randomized
+    /// projections, adaptive decompositions). `serve::JobState` turns
+    /// `None` into a clear suspend error instead of silently dropping
+    /// moments.
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        None
+    }
+
+    /// Restore state produced by [`MatrixOpt::export_state`] on a
+    /// freshly built optimizer of the same shape/spec. Implementations
+    /// must make the post-import trajectory bit-identical to the
+    /// exporter's.
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        let _ = state;
+        bail!("optimizer '{}' does not support state import", self.label())
+    }
 }
 
 /// One parameter's full update pipeline: method + α + NL limiter.
@@ -168,6 +188,75 @@ impl ParamOptimizer {
     pub fn adaptive(&mut self) -> Option<&mut dyn crate::adapt::AdaptiveOpt> {
         self.inner.adaptive()
     }
+
+    /// Export engine state plus the limiter reference norm for
+    /// suspend/resume (`None` when the wrapped engine can't export).
+    /// The `limiter` entry is `[present-flag, prev_norm]` with `-1`
+    /// encoding "no reference yet".
+    pub fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        let mut state = self.inner.export_state()?;
+        let (flag, prev) = match &self.limiter {
+            Some(l) => (1.0, l.prev_norm().unwrap_or(-1.0)),
+            None => (0.0, -1.0),
+        };
+        state.push(("limiter".into(), Tensor::new(&[2], vec![flag, prev])));
+        Some(state)
+    }
+
+    /// Restore state from [`ParamOptimizer::export_state`].
+    pub fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        if let Some(t) = state.get("limiter") {
+            let d = t.data();
+            anyhow::ensure!(d.len() == 2, "malformed limiter state");
+            match (&mut self.limiter, d[0] != 0.0) {
+                (Some(l), true) => {
+                    l.set_prev_norm((d[1] >= 0.0).then_some(d[1]))
+                }
+                (None, false) => {}
+                _ => bail!(
+                    "limiter configuration mismatch for '{}' (exported with \
+                     a different nl_gamma setting?)",
+                    self.name
+                ),
+            }
+        }
+        self.inner.import_state(state)
+    }
+}
+
+/// Shared export/import helpers for the optimizer cores.
+pub(crate) fn import_vec(
+    state: &BTreeMap<String, Tensor>,
+    key: &str,
+    len: usize,
+) -> Result<Vec<f32>> {
+    let t = state
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("state missing '{key}'"))?;
+    if t.len() != len {
+        bail!("state '{key}' has {} elements, expected {len}", t.len());
+    }
+    Ok(t.data().to_vec())
+}
+
+pub(crate) fn import_scalar(
+    state: &BTreeMap<String, Tensor>,
+    key: &str,
+) -> Result<f32> {
+    let t = state
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("state missing '{key}'"))?;
+    if t.len() != 1 {
+        bail!("state '{key}' is not a scalar");
+    }
+    Ok(t.data()[0])
+}
+
+/// Step counters ride an f32 lane; fail loudly past exact-integer
+/// range instead of silently corrupting bias correction.
+pub(crate) fn export_step_counter(t: usize) -> Tensor {
+    assert!(t < (1 << 24), "step counter {t} exceeds exact f32 range");
+    Tensor::scalar(t as f32)
 }
 
 /// Build the per-parameter optimizer bank for a model, following the

@@ -5,7 +5,13 @@
 //! approximation band while the detail bands pass through raw (the
 //! core has no second moment, so its reported denominators are 1).
 
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
 use super::compose::InnerOpt;
+use super::import_vec;
+use crate::tensor::Tensor;
 
 pub struct SgdMCore {
     momentum: f32,
@@ -47,6 +53,18 @@ impl InnerOpt for SgdMCore {
         remap(&self.buf, &mut buf);
         self.buf = buf;
         true
+    }
+
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        Some(vec![(
+            "buf".into(),
+            Tensor::new(&[self.buf.len()], self.buf.clone()),
+        )])
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        self.buf = import_vec(state, "buf", self.buf.len())?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,540 @@
+//! `JobEngine`: multiplex many training jobs onto one step pool and
+//! one runtime, under one global state-byte budget.
+//!
+//! ## Scheduler determinism
+//!
+//! `run_round` steps every running job exactly once, in (priority
+//! descending, submission id ascending) order — a deterministic
+//! round-robin with priority tiers, no clocks, no races. Each job's
+//! own math runs through the engine-wide `pool::Sharding` handle, so
+//! a single job through the engine is bit-identical to the
+//! pre-refactor `Trainer` at every worker count.
+//!
+//! ## Admission control
+//!
+//! Every job is charged its *worst-case* optimizer-state bytes from
+//! `memory::measured_account` (for adaptive specs, capped by the
+//! job's own `adapt_budget_mb`, since the adapt policy's repair pass
+//! enforces that ceiling). The sum of admitted charges never exceeds
+//! the engine budget — a hard cap, checked before construction, not
+//! after an OOM. Jobs that do not fit wait in the queue and are
+//! re-considered whenever capacity is released (a job finishing or
+//! suspending).
+//!
+//! ## Budget degradation
+//!
+//! Before queueing an adaptive job, the engine tries to *tighten* its
+//! per-job `adapt_budget_mb` to the remaining engine capacity: if the
+//! tightened charge fits, the job is admitted degraded (compressed
+//! harder) instead of waiting — graceful degradation under tenancy
+//! growth rather than either OOM or starvation.
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::job::JobState;
+use super::source::{GradSource, PretrainSource, SyntheticSource};
+use crate::config::{presets, TrainConfig, TransformSpec};
+use crate::data::DataLoader;
+use crate::memory::measured_account;
+use crate::pool::Sharding;
+use crate::runtime::Runtime;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// What feeds a job's gradients (owned by the engine so suspended
+/// jobs can be rebuilt without the caller keeping loaders alive).
+pub enum JobSource {
+    /// Deterministic artifact-free stream (tests, smokes).
+    Synthetic,
+    /// PJRT pre-training over this loader (requires a runtime).
+    Pretrain { loader: DataLoader },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Suspended,
+    Finished,
+}
+
+/// Per-job outcome surfaced in the engine summary.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub name: String,
+    pub label: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub state_bytes: usize,
+    pub tokens_seen: usize,
+    pub tokens_per_sec: f64,
+}
+
+/// Admission/scheduling events, in order — the engine's audit log.
+#[derive(Clone, Debug)]
+pub enum EngineEvent {
+    Admitted { job: String, charge: usize },
+    Queued { job: String, needed: usize, available: usize },
+    Degraded { job: String, budget_mb: f64 },
+    Suspended { job: String },
+    Resumed { job: String },
+    Finished { job: String },
+}
+
+impl fmt::Display for EngineEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineEvent::Admitted { job, charge } => write!(
+                f,
+                "admitted job '{job}' (charge {:.2} MB)",
+                *charge as f64 / MB
+            ),
+            EngineEvent::Queued { job, needed, available } => write!(
+                f,
+                "queued job '{job}' (needs {:.2} MB, {:.2} MB available)",
+                *needed as f64 / MB,
+                *available as f64 / MB
+            ),
+            EngineEvent::Degraded { job, budget_mb } => write!(
+                f,
+                "degraded job '{job}' (adaptive budget tightened to \
+                 {budget_mb:.2} MB)"
+            ),
+            EngineEvent::Suspended { job } => {
+                write!(f, "suspended job '{job}'")
+            }
+            EngineEvent::Resumed { job } => write!(f, "resumed job '{job}'"),
+            EngineEvent::Finished { job } => write!(f, "finished job '{job}'"),
+        }
+    }
+}
+
+struct Job {
+    name: String,
+    priority: usize,
+    cfg: TrainConfig,
+    source: JobSource,
+    status: JobStatus,
+    state: Option<JobState>,
+    /// Admitted state-byte charge (0 while queued/suspended).
+    charge: usize,
+    summary: Option<JobSummary>,
+    /// The queue event is emitted once per wait, not per retry.
+    queued_reported: bool,
+}
+
+/// The multi-tenant training service: one shared step pool, one
+/// optional runtime, one state-byte budget.
+pub struct JobEngine {
+    runtime: Option<Arc<Runtime>>,
+    sharding: Sharding,
+    /// Global optimizer-state budget in bytes (0 = unbounded).
+    budget_bytes: usize,
+    jobs: Vec<Job>,
+    events: Vec<EngineEvent>,
+    /// Job name per executed step, in execution order — the
+    /// deterministic interleave trace tests pin.
+    step_trace: Vec<String>,
+    admitted_bytes: usize,
+    peak_admitted_bytes: usize,
+}
+
+impl JobEngine {
+    /// `threads` sizes the shared `pool::StepPool` (`<=1` = serial);
+    /// `budget_mb` is the global state-byte budget (0 = unbounded).
+    /// `runtime: None` restricts the engine to synthetic jobs.
+    pub fn new(
+        runtime: Option<Arc<Runtime>>,
+        threads: usize,
+        budget_mb: f64,
+    ) -> JobEngine {
+        JobEngine {
+            runtime,
+            sharding: Sharding::pool(threads),
+            budget_bytes: (budget_mb * MB) as usize,
+            jobs: Vec::new(),
+            events: Vec::new(),
+            step_trace: Vec::new(),
+            admitted_bytes: 0,
+            peak_admitted_bytes: 0,
+        }
+    }
+
+    /// Worst-case admission charge for a job config: the budget-facing
+    /// column of `memory::measured_account`, capped by the job's own
+    /// adaptive budget when it has one.
+    pub fn charge_for(cfg: &TrainConfig) -> Result<usize> {
+        let preset = presets::find(&cfg.preset)?;
+        let cap = (cfg.adapt_budget_mb * MB) as usize;
+        Ok(measured_account(&preset.param_shapes(), cfg.optimizer)
+            .admission_charge(cap))
+    }
+
+    /// Submit a job; it is admitted immediately if the budget allows,
+    /// queued otherwise. Returns the submission id (scheduling
+    /// tiebreaker within a priority level).
+    pub fn submit(
+        &mut self,
+        name: &str,
+        cfg: TrainConfig,
+        priority: usize,
+        source: JobSource,
+    ) -> Result<usize> {
+        cfg.validate()?;
+        if self.jobs.iter().any(|j| j.name == name) {
+            bail!("duplicate job name '{name}'");
+        }
+        let id = self.jobs.len();
+        self.jobs.push(Job {
+            name: name.to_string(),
+            priority,
+            cfg,
+            source,
+            status: JobStatus::Queued,
+            state: None,
+            charge: 0,
+            summary: None,
+            queued_reported: false,
+        });
+        self.try_admit()?;
+        Ok(id)
+    }
+
+    fn build_state(&self, cfg: &TrainConfig, i: usize) -> Result<JobState> {
+        let source: Box<dyn GradSource> = match &self.jobs[i].source {
+            JobSource::Synthetic => Box::new(SyntheticSource::new(cfg)?),
+            JobSource::Pretrain { loader } => {
+                let rt = self.runtime.as_ref().ok_or_else(|| {
+                    anyhow!(
+                        "job '{}' needs PJRT artifacts, but the engine was \
+                         built without a runtime",
+                        self.jobs[i].name
+                    )
+                })?;
+                Box::new(PretrainSource::new(rt, cfg, loader)?)
+            }
+        };
+        JobState::new(cfg.clone(), source, self.runtime.clone(), &self.sharding)
+    }
+
+    /// Sweep the queue in submission order, admitting every job that
+    /// fits (tightening adaptive jobs to the remaining capacity where
+    /// that makes them fit).
+    fn try_admit(&mut self) -> Result<()> {
+        for i in 0..self.jobs.len() {
+            if self.jobs[i].status != JobStatus::Queued {
+                continue;
+            }
+            let mut cfg = self.jobs[i].cfg.clone();
+            let mut charge = Self::charge_for(&cfg)?;
+            if self.budget_bytes > 0 {
+                let available =
+                    self.budget_bytes.saturating_sub(self.admitted_bytes);
+                if charge > available {
+                    let adaptive = matches!(
+                        cfg.optimizer.transform(),
+                        Some(TransformSpec::Adaptive { .. })
+                    );
+                    let mut degraded = false;
+                    if adaptive && available > 0 {
+                        let mut tcfg = cfg.clone();
+                        tcfg.adapt_budget_mb = available as f64 / MB;
+                        let tight = Self::charge_for(&tcfg)?;
+                        if tight <= available && tight < charge {
+                            self.events.push(EngineEvent::Degraded {
+                                job: self.jobs[i].name.clone(),
+                                budget_mb: tcfg.adapt_budget_mb,
+                            });
+                            cfg = tcfg;
+                            charge = tight;
+                            degraded = true;
+                        }
+                    }
+                    if !degraded {
+                        if !self.jobs[i].queued_reported {
+                            self.jobs[i].queued_reported = true;
+                            self.events.push(EngineEvent::Queued {
+                                job: self.jobs[i].name.clone(),
+                                needed: charge,
+                                available,
+                            });
+                        }
+                        continue;
+                    }
+                }
+            }
+            let state = self.build_state(&cfg, i)?;
+            let name = self.jobs[i].name.clone();
+            let job = &mut self.jobs[i];
+            job.cfg = cfg;
+            job.charge = charge;
+            job.state = Some(state);
+            job.status = JobStatus::Running;
+            job.queued_reported = false;
+            self.admitted_bytes += charge;
+            self.peak_admitted_bytes =
+                self.peak_admitted_bytes.max(self.admitted_bytes);
+            self.events.push(EngineEvent::Admitted { job: name, charge });
+        }
+        Ok(())
+    }
+
+    /// Step every running job once, highest priority first (submission
+    /// order within a tier). Returns how many jobs were stepped.
+    pub fn run_round(&mut self) -> Result<usize> {
+        let mut order: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| self.jobs[i].status == JobStatus::Running)
+            .collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(self.jobs[i].priority), i));
+        let sharding = self.sharding.clone();
+        let mut stepped = 0usize;
+        for i in order {
+            let done = {
+                let job = &mut self.jobs[i];
+                let state =
+                    job.state.as_mut().expect("running job without state");
+                state.step_once(&sharding)?;
+                state.step >= state.cfg.steps
+            };
+            self.step_trace.push(self.jobs[i].name.clone());
+            stepped += 1;
+            if done {
+                self.finish(i)?;
+            }
+        }
+        Ok(stepped)
+    }
+
+    fn finish(&mut self, i: usize) -> Result<()> {
+        let (name, charge) = {
+            let job = &mut self.jobs[i];
+            let state = job.state.take().expect("finishing job without state");
+            job.summary = Some(JobSummary {
+                name: job.name.clone(),
+                label: state.curve.label.clone(),
+                steps: state.step,
+                final_loss: state.curve.final_loss().unwrap_or(f32::NAN),
+                state_bytes: state.optimizer_state_bytes(),
+                tokens_seen: state.tokens_seen,
+                tokens_per_sec: state.throughput.tokens_per_sec(),
+            });
+            job.status = JobStatus::Finished;
+            let charge = job.charge;
+            job.charge = 0;
+            (job.name.clone(), charge)
+        };
+        self.admitted_bytes = self.admitted_bytes.saturating_sub(charge);
+        self.events.push(EngineEvent::Finished { job: name });
+        // Released capacity may admit queued jobs.
+        self.try_admit()
+    }
+
+    /// Run rounds until every admitted job finishes. Errors if queued
+    /// jobs remain with nothing running (they can never be admitted —
+    /// better a clear error than a silent infinite loop).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        loop {
+            let stepped = self.run_round()?;
+            if stepped == 0 {
+                if let Some(q) =
+                    self.jobs.iter().find(|j| j.status == JobStatus::Queued)
+                {
+                    bail!(
+                        "job '{}' can never be admitted: needs {:.2} MB but \
+                         the whole budget is {:.2} MB and nothing is running",
+                        q.name,
+                        Self::charge_for(&q.cfg)? as f64 / MB,
+                        self.budget_bytes as f64 / MB
+                    );
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    /// Checkpoint a running job out of the engine, releasing its
+    /// budget charge (which may admit queued jobs).
+    pub fn suspend(&mut self, name: &str, path: &str) -> Result<()> {
+        let i = self.index_of(name)?;
+        anyhow::ensure!(
+            self.jobs[i].status == JobStatus::Running,
+            "job '{name}' is not running"
+        );
+        let ck = self.jobs[i]
+            .state
+            .as_ref()
+            .expect("running job without state")
+            .snapshot()?;
+        ck.save(path)?;
+        let charge = {
+            let job = &mut self.jobs[i];
+            job.state = None;
+            job.status = JobStatus::Suspended;
+            let c = job.charge;
+            job.charge = 0;
+            c
+        };
+        self.admitted_bytes = self.admitted_bytes.saturating_sub(charge);
+        self.events.push(EngineEvent::Suspended { job: name.to_string() });
+        self.try_admit()
+    }
+
+    /// Re-admit a suspended job from its checkpoint. Subject to the
+    /// same budget check as a fresh admission.
+    pub fn resume(&mut self, name: &str, path: &str) -> Result<()> {
+        let i = self.index_of(name)?;
+        anyhow::ensure!(
+            self.jobs[i].status == JobStatus::Suspended,
+            "job '{name}' is not suspended"
+        );
+        let cfg = self.jobs[i].cfg.clone();
+        let charge = Self::charge_for(&cfg)?;
+        if self.budget_bytes > 0 {
+            let available =
+                self.budget_bytes.saturating_sub(self.admitted_bytes);
+            anyhow::ensure!(
+                charge <= available,
+                "resuming '{name}' needs {:.2} MB but only {:.2} MB of the \
+                 budget remain",
+                charge as f64 / MB,
+                available as f64 / MB
+            );
+        }
+        let ck = crate::checkpoint::Checkpoint::load(path)?;
+        let mut state = self.build_state(&cfg, i)?;
+        state.restore(&ck)?;
+        let job = &mut self.jobs[i];
+        job.state = Some(state);
+        job.status = JobStatus::Running;
+        job.charge = charge;
+        self.admitted_bytes += charge;
+        self.peak_admitted_bytes =
+            self.peak_admitted_bytes.max(self.admitted_bytes);
+        self.events.push(EngineEvent::Resumed { job: name.to_string() });
+        Ok(())
+    }
+
+    fn index_of(&self, name: &str) -> Result<usize> {
+        self.jobs
+            .iter()
+            .position(|j| j.name == name)
+            .ok_or_else(|| anyhow!("no job named '{name}'"))
+    }
+
+    pub fn status(&self, name: &str) -> Result<JobStatus> {
+        Ok(self.jobs[self.index_of(name)?].status)
+    }
+
+    /// Live state of an admitted job (tests read curves through this).
+    pub fn job_state(&self, name: &str) -> Option<&JobState> {
+        self.jobs
+            .iter()
+            .find(|j| j.name == name)
+            .and_then(|j| j.state.as_ref())
+    }
+
+    /// The effective (possibly degraded) config of a job.
+    pub fn job_cfg(&self, name: &str) -> Result<&TrainConfig> {
+        Ok(&self.jobs[self.index_of(name)?].cfg)
+    }
+
+    pub fn events(&self) -> &[EngineEvent] {
+        &self.events
+    }
+
+    pub fn step_trace(&self) -> &[String] {
+        &self.step_trace
+    }
+
+    pub fn admitted_bytes(&self) -> usize {
+        self.admitted_bytes
+    }
+
+    pub fn peak_admitted_bytes(&self) -> usize {
+        self.peak_admitted_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Summaries of finished jobs, submission order.
+    pub fn summaries(&self) -> Vec<&JobSummary> {
+        self.jobs.iter().filter_map(|j| j.summary.as_ref()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptSpec;
+
+    fn tiny_cfg(opt: OptSpec, steps: usize) -> TrainConfig {
+        TrainConfig {
+            preset: "nano".into(),
+            optimizer: opt,
+            steps,
+            eval_every: steps,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut e = JobEngine::new(None, 1, 0.0);
+        e.submit("a", tiny_cfg(OptSpec::gwt(2), 2), 0, JobSource::Synthetic)
+            .unwrap();
+        assert!(e
+            .submit("a", tiny_cfg(OptSpec::gwt(2), 2), 0, JobSource::Synthetic)
+            .is_err());
+    }
+
+    #[test]
+    fn unadmittable_job_is_a_clear_error_not_a_hang() {
+        // Budget smaller than any job's charge: run_to_completion must
+        // fail loudly instead of spinning.
+        let mut e = JobEngine::new(None, 1, 0.01);
+        e.submit("a", tiny_cfg(OptSpec::adam(), 2), 0, JobSource::Synthetic)
+            .unwrap();
+        let err = e.run_to_completion().unwrap_err().to_string();
+        assert!(err.contains("can never be admitted"), "{err}");
+        assert!(matches!(
+            e.events()[0],
+            EngineEvent::Queued { .. }
+        ));
+    }
+
+    #[test]
+    fn priority_orders_each_round() {
+        let mut e = JobEngine::new(None, 1, 0.0);
+        e.submit("lo", tiny_cfg(OptSpec::gwt(2), 2), 0, JobSource::Synthetic)
+            .unwrap();
+        e.submit("hi", tiny_cfg(OptSpec::gwt(2), 2), 5, JobSource::Synthetic)
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.step_trace(), &["hi", "lo", "hi", "lo"]);
+    }
+
+    #[test]
+    fn pretrain_without_runtime_is_an_error() {
+        let mut e = JobEngine::new(None, 1, 0.0);
+        let mut c = crate::data::SyntheticCorpus::new(
+            crate::data::CorpusSpec::default(),
+        );
+        let loader =
+            DataLoader::new(c.generate_tokens(50_000), 4, 128, 0);
+        let err = e
+            .submit(
+                "p",
+                tiny_cfg(OptSpec::gwt(2), 2),
+                0,
+                JobSource::Pretrain { loader },
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("without a runtime"), "{err}");
+    }
+}

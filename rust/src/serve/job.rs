@@ -1,0 +1,283 @@
+//! `JobState`: the step-loop core shared by every training client.
+//!
+//! This is the extraction the job engine is built on: params, bank,
+//! LR schedule, adapt controller, and curve/throughput metrics —
+//! everything `Trainer::train_step` and `FineTuner::run` used to
+//! duplicate — behind one `step_once` whose math is bit-identical to
+//! the pre-refactor `Trainer` (pinned by `rust/tests/job_engine.rs`
+//! across `testing::test_thread_grid()`).
+//!
+//! Suspend/resume: `snapshot` serializes params *and* the full
+//! optimizer state (via the `MatrixOpt::export_state` seam) plus the
+//! job cursor into one `Checkpoint`; `restore` rebuilds the exact
+//! trajectory, fast-forwarding the gradient source past the consumed
+//! rounds. Engines that cannot export state (8-bit quantized blocks,
+//! MUON, LoRA, adaptive wavelets, projection transforms) make
+//! `snapshot` fail with a clear error instead of silently dropping
+//! moments. Wall-clock metrics (`curve` walltime column,
+//! `throughput`) restart at resume — only the training math is
+//! bit-reproducible, not the clock.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::source::GradSource;
+use crate::adapt::AdaptController;
+use crate::checkpoint::Checkpoint;
+use crate::config::{presets, TrainConfig};
+use crate::coordinator::dp::combine_grads;
+use crate::coordinator::trainer::init_param;
+use crate::coordinator::CosineSchedule;
+use crate::memory::ParamShape;
+use crate::metrics::{AdaptTrace, LossCurve, Throughput};
+use crate::optim::{
+    build_optimizers_sharded, step_bank, total_state_bytes, ParamOptimizer,
+};
+use crate::pool::{accumulate_sharded, Sharding};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// One job's full training state. Fields are public: the engine and
+/// the thin clients (`Trainer`, `FineTuner`) read curves, params, and
+/// adapt traces directly.
+pub struct JobState {
+    pub cfg: TrainConfig,
+    pub shapes: Vec<ParamShape>,
+    pub params: Vec<Tensor>,
+    pub bank: Vec<ParamOptimizer>,
+    pub schedule: CosineSchedule,
+    pub step: usize,
+    pub curve: LossCurve,
+    pub throughput: Throughput,
+    /// Adaptive-compression driver (`adapt-*` specs only): probes the
+    /// bank and re-selects (basis, level) on its cadence, after the
+    /// parallel step — serial, so the step engine stays a pure
+    /// throughput knob.
+    pub adapt: Option<AdaptController>,
+    /// Per-event adaptive telemetry (empty for static specs).
+    pub adapt_trace: AdaptTrace,
+    pub tokens_seen: usize,
+    source: Box<dyn GradSource>,
+}
+
+impl JobState {
+    /// Build a fresh job: seeded param init + optimizer bank, exactly
+    /// the construction order of the pre-refactor `Trainer::new` (the
+    /// init RNG is independent of everything else, so single-job runs
+    /// stay bit-identical).
+    pub fn new(
+        cfg: TrainConfig,
+        source: Box<dyn GradSource>,
+        runtime: Option<Arc<Runtime>>,
+        sharding: &Sharding,
+    ) -> Result<JobState> {
+        cfg.validate()?;
+        let preset = presets::find(&cfg.preset)?;
+        let shapes = preset.param_shapes();
+        let mut rng = crate::rng::Rng::new(cfg.seed);
+        let params: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| init_param(&s.name, &s.shape, &mut rng))
+            .collect();
+        let bank = build_optimizers_sharded(
+            &shapes,
+            &cfg,
+            runtime,
+            sharding.clone(),
+        )?;
+        Ok(Self::from_parts(cfg, shapes, params, bank, source))
+    }
+
+    /// Assemble a job around caller-owned params and bank (the
+    /// fine-tune path: pre-trained weights, custom eligibility, an
+    /// appended head).
+    pub fn from_parts(
+        cfg: TrainConfig,
+        shapes: Vec<ParamShape>,
+        params: Vec<Tensor>,
+        bank: Vec<ParamOptimizer>,
+        source: Box<dyn GradSource>,
+    ) -> JobState {
+        let label = format!("{}_{}", cfg.preset, cfg.optimizer.label());
+        let schedule = CosineSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac);
+        let adapt = AdaptController::from_config(&cfg);
+        let adapt_trace = AdaptTrace::new(&label);
+        JobState {
+            shapes,
+            params,
+            bank,
+            schedule,
+            step: 0,
+            curve: LossCurve::new(&label),
+            throughput: Throughput::new(),
+            adapt,
+            adapt_trace,
+            tokens_seen: 0,
+            source,
+            cfg,
+        }
+    }
+
+    /// Hand params and bank back to the caller (the fine-tune client
+    /// keeps ownership across its accuracy evaluation).
+    pub fn into_parts(self) -> (Vec<Tensor>, Vec<ParamOptimizer>) {
+        (self.params, self.bank)
+    }
+
+    pub fn optimizer_state_bytes(&self) -> usize {
+        total_state_bytes(&self.bank)
+    }
+
+    /// One optimizer step: `grad_accum` gradient rounds from the
+    /// source, combined, accumulated, and applied through the shared
+    /// step engine. This is the verbatim core of the pre-refactor
+    /// `Trainer::train_step` — loss-sum order, accumulate path, and
+    /// step math unchanged.
+    pub fn step_once(&mut self, sharding: &Sharding) -> Result<f32> {
+        let lr_t = self.schedule.lr(self.step);
+        let mut acc: Vec<Vec<f32>> =
+            self.shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
+        let mut loss_sum = 0.0f32;
+        let mut micro_count = 0usize;
+        for _ in 0..self.cfg.grad_accum {
+            let round = self.source.next_round(&self.params)?;
+            let mut worker_grads = Vec::with_capacity(round.len());
+            for wb in round {
+                loss_sum += wb.loss;
+                micro_count += 1;
+                self.tokens_seen += wb.tokens;
+                self.throughput.add_tokens(wb.tokens);
+                worker_grads.push(wb.grads);
+            }
+            let combined = combine_grads(worker_grads)?;
+            // Microbatch accumulation rides the same reused pool as
+            // the optimizer step: chunked elementwise adds over the
+            // flat buffer, fixed boundaries, one writer per element —
+            // bit-identical to the serial sum at every worker count
+            // (pinned by tests/grad_accum_parity.rs).
+            for (a, g) in acc.iter_mut().zip(&combined) {
+                accumulate_sharded(sharding, a, g);
+            }
+        }
+        let inv = 1.0 / self.cfg.grad_accum as f32;
+        let grads: Vec<Tensor> = acc
+            .into_iter()
+            .zip(&self.shapes)
+            .map(|(mut gd, s)| {
+                if self.cfg.grad_accum > 1 {
+                    for x in &mut gd {
+                        *x *= inv;
+                    }
+                }
+                Tensor::new(&s.shape, gd)
+            })
+            .collect();
+        // Parallel step engine: shard the bank through the shared
+        // pool (bit-identical to the serial loop).
+        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, sharding);
+        let mean_loss = loss_sum / micro_count.max(1) as f32;
+        self.step += 1;
+        // Adaptive-compression hook: on the controller's cadence,
+        // probe this step's combined gradients (sharded like the step
+        // itself), re-select decompositions, and record the event.
+        // The controller is serial and deterministic, so training
+        // stays bit-identical across thread counts.
+        if let Some(ctl) = self.adapt.as_mut() {
+            if let Some(ev) =
+                ctl.post_step(self.step, &mut self.bank, &grads, sharding)
+            {
+                self.adapt_trace.push(ev);
+            }
+        }
+        self.curve.push(
+            self.step,
+            mean_loss,
+            self.tokens_seen,
+            self.throughput.elapsed_secs(),
+        );
+        Ok(mean_loss)
+    }
+
+    /// Serialize the full job — params, optimizer state, cursor —
+    /// into one checkpoint for suspend/resume.
+    pub fn snapshot(&self) -> Result<Checkpoint> {
+        let mut ck = Checkpoint::new(self.step as u64);
+        for (s, p) in self.shapes.iter().zip(&self.params) {
+            ck.insert(&s.name, p.clone());
+        }
+        for opt in &self.bank {
+            let state = opt.export_state().ok_or_else(|| {
+                anyhow!(
+                    "optimizer '{}' ({}) does not support suspend/resume \
+                     state export",
+                    opt.name,
+                    opt.label()
+                )
+            })?;
+            for (key, t) in state {
+                ck.insert(&format!("opt::{}::{}", opt.name, key), t);
+            }
+        }
+        // Split across two f32 lanes so counts beyond 2^24 survive
+        // the round trip exactly.
+        ck.insert(
+            "job::tokens_seen",
+            Tensor::new(
+                &[2],
+                vec![
+                    (self.tokens_seen & 0xff_ffff) as f32,
+                    (self.tokens_seen >> 24) as f32,
+                ],
+            ),
+        );
+        Ok(ck)
+    }
+
+    /// Rebuild the trajectory of a suspended job: params + optimizer
+    /// state from the checkpoint, gradient source fast-forwarded past
+    /// the rounds the suspended run consumed. Call on a freshly
+    /// constructed `JobState` with the same config.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        for (s, p) in self.shapes.iter().zip(self.params.iter_mut()) {
+            let t = ck
+                .tensors
+                .get(&s.name)
+                .ok_or_else(|| anyhow!("checkpoint missing param {}", s.name))?;
+            anyhow::ensure!(
+                t.shape() == s.shape,
+                "shape mismatch for {}",
+                s.name
+            );
+            *p = t.clone();
+        }
+        for opt in self.bank.iter_mut() {
+            let prefix = format!("opt::{}::", opt.name);
+            let state: BTreeMap<String, Tensor> = ck
+                .tensors
+                .iter()
+                .filter_map(|(k, t)| {
+                    k.strip_prefix(&prefix)
+                        .map(|key| (key.to_string(), t.clone()))
+                })
+                .collect();
+            opt.import_state(&state).with_context(|| {
+                format!("restoring optimizer state for '{}'", opt.name)
+            })?;
+        }
+        self.step = ck.step as usize;
+        self.tokens_seen = match ck.tensors.get("job::tokens_seen") {
+            Some(t) => {
+                let d = t.data();
+                anyhow::ensure!(d.len() == 2, "malformed job::tokens_seen");
+                d[0] as usize + ((d[1] as usize) << 24)
+            }
+            None => 0,
+        };
+        self.source
+            .fast_forward(self.step * self.cfg.grad_accum)
+            .context("fast-forwarding gradient source")?;
+        Ok(())
+    }
+}

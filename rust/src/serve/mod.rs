@@ -1,0 +1,25 @@
+//! Multi-tenant training service (the L3 job engine).
+//!
+//! `source` — gradient streams (PJRT pre-train, PJRT fine-tune
+//! classification, artifact-free synthetic) behind `GradSource`.
+//! `job` — `JobState`, the step-loop core every client shares.
+//! `engine` — `JobEngine`, the budget-governed multiplexer: many
+//! jobs, one step pool, one runtime, deterministic priority
+//! round-robin, admission control over a global state-byte budget
+//! with graceful degradation of adaptive jobs.
+//!
+//! `coordinator::Trainer` and `eval::FineTuner` are thin single-job
+//! clients of `JobState`; `gwt serve` (cli) drives `JobEngine`
+//! directly. See `docs/job-engine.md` for the architecture note.
+
+pub mod engine;
+pub mod job;
+pub mod source;
+
+pub use engine::{
+    EngineEvent, JobEngine, JobSource, JobStatus, JobSummary,
+};
+pub use job::JobState;
+pub use source::{
+    ClsSource, GradSource, PretrainSource, SyntheticSource, WorkerBatch,
+};

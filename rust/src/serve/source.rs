@@ -1,0 +1,357 @@
+//! Gradient sources: where a job's per-round gradients come from.
+//!
+//! A *round* is one microbatch per DP worker — exactly the unit
+//! `coordinator::dp::combine_grads` consumes. Pulling this behind a
+//! trait is what lets one `JobState` step loop serve pre-training
+//! (PJRT `train_step_*` artifacts), fine-tuning (`cls_train_step_*`
+//! artifacts), and artifact-free engine tests (a deterministic
+//! synthetic stream) without duplicating the loop.
+//!
+//! Determinism contract: a source is a pure function of its internal
+//! cursor and the parameters it is handed, and `fast_forward` must
+//! land the cursor exactly where `n` consumed rounds would have — the
+//! checkpoint suspend→resume bit-identity test pins this.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{presets, TrainConfig};
+use crate::coordinator::dp::DpGroup;
+use crate::data::DataLoader;
+use crate::eval::ClsTask;
+use crate::memory::ParamShape;
+use crate::rng::Rng;
+use crate::runtime::{
+    literal_f32, literal_labels, literal_tokens, scalar_from_literal, Exec,
+    Runtime,
+};
+use crate::tensor::Tensor;
+
+/// One worker's contribution to a gradient round.
+pub struct WorkerBatch {
+    pub loss: f32,
+    /// Tokens consumed producing this gradient (throughput metric).
+    pub tokens: usize,
+    /// Per-parameter flat gradient data, bank order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// A job's gradient stream. `next_round` returns one `WorkerBatch`
+/// per DP worker, in worker order (the loss-sum order the step loop
+/// relies on for bit-identity with the pre-refactor `Trainer`).
+pub trait GradSource: Send {
+    fn next_round(&mut self, params: &[Tensor]) -> Result<Vec<WorkerBatch>>;
+
+    /// Advance the stream past `rounds` rounds without computing
+    /// gradients (checkpoint resume: the restored optimizer state
+    /// already carries the effect of those rounds; the data cursor
+    /// must follow).
+    fn fast_forward(&mut self, rounds: usize) -> Result<()>;
+}
+
+/// Pre-training source: the `train_step_<preset>` PJRT artifact over
+/// a DP-sharded token stream — the forward/backward half of the old
+/// `Trainer::train_step`.
+pub struct PretrainSource {
+    dp: DpGroup,
+    /// §Perf L3-2: executable resolved once at construction instead
+    /// of a key-format + map lookup on every microbatch.
+    train_exec: Arc<Exec>,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl PretrainSource {
+    pub fn new(
+        runtime: &Runtime,
+        cfg: &TrainConfig,
+        loader: &DataLoader,
+    ) -> Result<PretrainSource> {
+        let preset = presets::find(&cfg.preset)?;
+        runtime
+            .manifest
+            .check_preset(preset)
+            .context("preset drift between rust and aot.py")?;
+        let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
+        Ok(PretrainSource {
+            dp: DpGroup::new(loader, cfg.dp_workers),
+            train_exec,
+            batch: preset.batch,
+            seq_len: preset.seq_len,
+        })
+    }
+
+    /// Execute the `train_step` artifact for one token batch; returns
+    /// (loss, per-param gradient data).
+    fn forward_backward(
+        &self,
+        params: &[Tensor],
+        tokens: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for p in params {
+            inputs.push(literal_f32(p)?);
+        }
+        inputs.push(literal_tokens(tokens, self.batch, self.seq_len)?);
+        let outs = self.train_exec.run(&inputs)?;
+        let loss = scalar_from_literal(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+}
+
+impl GradSource for PretrainSource {
+    fn next_round(&mut self, params: &[Tensor]) -> Result<Vec<WorkerBatch>> {
+        let batches = self.dp.draw();
+        let mut round = Vec::with_capacity(batches.len());
+        for b in &batches {
+            let (loss, grads) = self.forward_backward(params, &b.tokens)?;
+            round.push(WorkerBatch { loss, tokens: b.tokens.len(), grads });
+        }
+        Ok(round)
+    }
+
+    fn fast_forward(&mut self, rounds: usize) -> Result<()> {
+        // The loader RNGs advance exactly as if the batches had been
+        // trained on.
+        for _ in 0..rounds {
+            let _ = self.dp.draw();
+        }
+        Ok(())
+    }
+}
+
+/// Fine-tuning source: the `cls_train_step_<preset>_k<classes>`
+/// artifact over a pre-flattened epoch schedule. Single worker (the
+/// fine-tune path has no DP), finite stream — stepping past the last
+/// scheduled batch is an error, not a wraparound.
+pub struct ClsSource {
+    exec: Arc<Exec>,
+    batch: usize,
+    seq_len: usize,
+    /// (tokens, labels) per round, all epochs flattened in order.
+    rounds: Vec<(Vec<i32>, Vec<i32>)>,
+    cursor: usize,
+}
+
+impl ClsSource {
+    pub fn new(
+        runtime: &Runtime,
+        cfg: &TrainConfig,
+        task: &ClsTask,
+        epochs: usize,
+    ) -> Result<ClsSource> {
+        let preset = presets::find(&cfg.preset)?;
+        let classes = task.spec.classes;
+        let exec = runtime
+            .exec(&format!("cls_train_step_{}_k{}", cfg.preset, classes))
+            .with_context(|| {
+                format!("fine-tune artifact for k={classes} missing")
+            })?;
+        let bs = preset.batch;
+        let mut rounds = Vec::new();
+        for _ in 0..epochs {
+            for chunk in task.train.chunks_exact(bs) {
+                let mut tokens = Vec::with_capacity(bs * preset.seq_len);
+                let mut labels = Vec::with_capacity(bs);
+                for ex in chunk {
+                    tokens.extend_from_slice(&ex.tokens);
+                    labels.push(ex.label);
+                }
+                rounds.push((tokens, labels));
+            }
+        }
+        Ok(ClsSource {
+            exec,
+            batch: bs,
+            seq_len: preset.seq_len,
+            rounds,
+            cursor: 0,
+        })
+    }
+
+    /// Scheduled optimizer steps (epochs × steps-per-epoch).
+    pub fn total_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+}
+
+impl GradSource for ClsSource {
+    fn next_round(&mut self, params: &[Tensor]) -> Result<Vec<WorkerBatch>> {
+        if self.cursor >= self.rounds.len() {
+            bail!(
+                "classification source exhausted after {} rounds",
+                self.rounds.len()
+            );
+        }
+        let idx = self.cursor;
+        self.cursor += 1;
+        let (tokens, labels) = &self.rounds[idx];
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in params {
+            inputs.push(literal_f32(p)?);
+        }
+        inputs.push(literal_tokens(tokens, self.batch, self.seq_len)?);
+        inputs.push(literal_labels(labels)?);
+        let outs = self.exec.run(&inputs)?;
+        let loss = scalar_from_literal(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(vec![WorkerBatch { loss, tokens: tokens.len(), grads }])
+    }
+
+    fn fast_forward(&mut self, rounds: usize) -> Result<()> {
+        if self.cursor + rounds > self.rounds.len() {
+            bail!(
+                "cannot fast-forward {} rounds past a {}-round schedule",
+                rounds,
+                self.rounds.len()
+            );
+        }
+        self.cursor += rounds;
+        Ok(())
+    }
+}
+
+/// Artifact-free deterministic source for engine tests and the CI
+/// smoke: per-worker pseudo-gradients keyed on (seed, round, worker)
+/// — O(1) `fast_forward` — plus a mild pull toward zero so the
+/// parameter norm (and the reported loss, a function of it) actually
+/// responds to optimizer state. Because the loss depends on the
+/// params, any divergence in restored optimizer state shows up in the
+/// loss bits within a step or two.
+pub struct SyntheticSource {
+    shapes: Vec<ParamShape>,
+    seed: u64,
+    workers: usize,
+    tokens_per_round: usize,
+    grad_scale: f32,
+    round: u64,
+}
+
+impl SyntheticSource {
+    pub fn new(cfg: &TrainConfig) -> Result<SyntheticSource> {
+        let preset = presets::find(&cfg.preset)?;
+        Ok(SyntheticSource {
+            shapes: preset.param_shapes(),
+            seed: cfg.seed ^ 0x5e17e,
+            workers: cfg.dp_workers,
+            tokens_per_round: preset.tokens_per_batch(),
+            grad_scale: 0.02,
+            round: 0,
+        })
+    }
+}
+
+impl GradSource for SyntheticSource {
+    fn next_round(&mut self, params: &[Tensor]) -> Result<Vec<WorkerBatch>> {
+        if params.len() != self.shapes.len() {
+            bail!(
+                "synthetic source built for {} params, got {}",
+                self.shapes.len(),
+                params.len()
+            );
+        }
+        let norm: f64 = params.iter().map(|p| p.frob_norm() as f64).sum();
+        let round_key =
+            self.seed ^ self.round.wrapping_mul(0x9e3779b97f4a7c15);
+        let mut out = Vec::with_capacity(self.workers);
+        for w in 0..self.workers {
+            let mut rng = Rng::with_stream(round_key, 0x51 + w as u64);
+            let grads: Vec<Vec<f32>> = self
+                .shapes
+                .iter()
+                .zip(params)
+                .map(|(s, p)| {
+                    let mut g = rng.normal_vec(s.numel(), self.grad_scale);
+                    // Weight-decay-like pull: couples the gradient to
+                    // the params so the trajectory is state-dependent.
+                    for (gi, pi) in g.iter_mut().zip(p.data()) {
+                        *gi += 0.1 * pi;
+                    }
+                    g
+                })
+                .collect();
+            let loss = (norm as f32).ln_1p() + rng.f32() * 0.01;
+            out.push(WorkerBatch {
+                loss,
+                tokens: self.tokens_per_round,
+                grads,
+            });
+        }
+        self.round += 1;
+        Ok(out)
+    }
+
+    fn fast_forward(&mut self, rounds: usize) -> Result<()> {
+        // Per-round RNGs are keyed on the round counter alone, so
+        // skipping is a counter bump.
+        self.round += rounds as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano_params() -> Vec<Tensor> {
+        let preset = presets::find("nano").unwrap();
+        let mut rng = Rng::new(3);
+        preset
+            .param_shapes()
+            .iter()
+            .map(|s| {
+                Tensor::new(&s.shape, rng.normal_vec(s.numel(), 0.1))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn synthetic_rounds_are_deterministic() {
+        let cfg = TrainConfig { dp_workers: 2, ..Default::default() };
+        let params = nano_params();
+        let mut a = SyntheticSource::new(&cfg).unwrap();
+        let mut b = SyntheticSource::new(&cfg).unwrap();
+        for _ in 0..3 {
+            let ra = a.next_round(&params).unwrap();
+            let rb = b.next_round(&params).unwrap();
+            assert_eq!(ra.len(), 2);
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+                assert_eq!(x.grads, y.grads);
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_fast_forward_matches_consumed_rounds() {
+        let cfg = TrainConfig::default();
+        let params = nano_params();
+        let mut consumed = SyntheticSource::new(&cfg).unwrap();
+        for _ in 0..4 {
+            consumed.next_round(&params).unwrap();
+        }
+        let mut skipped = SyntheticSource::new(&cfg).unwrap();
+        skipped.fast_forward(4).unwrap();
+        let a = consumed.next_round(&params).unwrap();
+        let b = skipped.next_round(&params).unwrap();
+        assert_eq!(a[0].grads, b[0].grads);
+        assert_eq!(a[0].loss.to_bits(), b[0].loss.to_bits());
+    }
+
+    #[test]
+    fn synthetic_workers_draw_distinct_streams() {
+        let cfg = TrainConfig { dp_workers: 2, ..Default::default() };
+        let params = nano_params();
+        let mut s = SyntheticSource::new(&cfg).unwrap();
+        let round = s.next_round(&params).unwrap();
+        assert_ne!(round[0].grads[0], round[1].grads[0]);
+    }
+}

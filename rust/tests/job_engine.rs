@@ -1,0 +1,269 @@
+//! Multi-tenant job engine integration: scheduling determinism,
+//! budget admission, suspend/resume bit-identity, and parity with the
+//! pre-refactor `Trainer` path.
+//!
+//! Synthetic-source tests run everywhere (no PJRT artifacts needed);
+//! the trainer-parity test is artifact-gated like the rest of the
+//! integration suite.
+
+use std::sync::Arc;
+
+use gwt::config::{presets, OptSpec, TrainConfig};
+use gwt::coordinator::Trainer;
+use gwt::data::{CorpusSpec, DataLoader, SyntheticCorpus};
+use gwt::memory::measured_account;
+use gwt::runtime::Runtime;
+use gwt::serve::{EngineEvent, JobEngine, JobSource, JobStatus};
+use gwt::testing::test_thread_grid;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn loader_for(preset: &str, seed: u64) -> DataLoader {
+    let p = presets::find(preset).unwrap();
+    let mut c = SyntheticCorpus::new(CorpusSpec { seed, ..Default::default() });
+    DataLoader::new(c.generate_tokens(250_000), p.batch, p.seq_len, seed)
+}
+
+fn cfg(opt: OptSpec, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        optimizer: opt,
+        steps,
+        eval_every: steps,
+        ..Default::default()
+    }
+}
+
+/// Run a single synthetic job on an engine sized to `threads`,
+/// stopping one round short of completion so the live state is still
+/// readable. Returns (per-step loss bits, param bits, final loss bits).
+fn run_solo(threads: usize, job_cfg: &TrainConfig) -> (Vec<u32>, Vec<u32>, u32) {
+    let mut e = JobEngine::new(None, threads, 0.0);
+    e.submit("solo", job_cfg.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..job_cfg.steps - 1 {
+        e.run_round().unwrap();
+    }
+    let state = e.job_state("solo").unwrap();
+    let losses: Vec<u32> =
+        state.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    let params: Vec<u32> = state
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    e.run_to_completion().unwrap();
+    let final_bits = e.summaries()[0].final_loss.to_bits();
+    (losses, params, final_bits)
+}
+
+#[test]
+fn single_job_is_bit_identical_across_thread_grid() {
+    // The acceptance pin: one job through the shared-pool engine is
+    // bit-identical at every worker count (serial, even, odd — plus
+    // grad_accum and multi-worker DP to exercise the combine and
+    // accumulate paths).
+    let mut c = cfg(OptSpec::gwt(2), 6);
+    c.grad_accum = 2;
+    c.dp_workers = 3;
+    let (loss0, params0, final0) = run_solo(1, &c);
+    assert_eq!(loss0.len(), c.steps - 1);
+    for threads in test_thread_grid() {
+        let (loss, params, fin) = run_solo(threads, &c);
+        assert_eq!(loss, loss0, "loss bits diverged at threads={threads}");
+        assert_eq!(params, params0, "param bits diverged at threads={threads}");
+        assert_eq!(fin, final0, "final loss diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn two_jobs_interleave_and_third_queues_under_budget() {
+    // Budget fits two gwt-2 jobs but not a concurrent full-rank Adam
+    // job: the Adam job must wait in the queue and be admitted only
+    // when capacity is released, with the global budget held as a
+    // hard cap throughout.
+    let gwt_cfg = cfg(OptSpec::gwt(2), 4);
+    let adam_cfg = cfg(OptSpec::adam(), 2);
+    let adam_charge = JobEngine::charge_for(&adam_cfg).unwrap();
+    let gwt_charge = JobEngine::charge_for(&gwt_cfg).unwrap();
+    let budget_bytes = adam_charge + adam_charge / 5; // 1.2x Adam
+    assert!(
+        2 * gwt_charge <= budget_bytes
+            && 2 * gwt_charge + adam_charge > budget_bytes,
+        "test premise broken: gwt {gwt_charge} B, adam {adam_charge} B"
+    );
+
+    let mut e = JobEngine::new(None, 2, budget_bytes as f64 / MB);
+    e.submit("a", gwt_cfg.clone(), 0, JobSource::Synthetic).unwrap();
+    e.submit("b", gwt_cfg, 1, JobSource::Synthetic).unwrap();
+    e.submit("c", adam_cfg, 0, JobSource::Synthetic).unwrap();
+    assert_eq!(e.status("a").unwrap(), JobStatus::Running);
+    assert_eq!(e.status("b").unwrap(), JobStatus::Running);
+    assert_eq!(e.status("c").unwrap(), JobStatus::Queued);
+    assert!(e
+        .events()
+        .iter()
+        .any(|ev| matches!(ev, EngineEvent::Queued { job, .. } if job == "c")));
+
+    e.run_to_completion().unwrap();
+
+    // Deterministic interleave: b (priority 1) before a (priority 0)
+    // in every shared round; c runs alone once both finish.
+    assert_eq!(
+        e.step_trace(),
+        &["b", "a", "b", "a", "b", "a", "b", "a", "c", "c"]
+    );
+    // The queued job was eventually admitted, and the budget held as
+    // a hard cap at every admission point.
+    assert_eq!(e.status("c").unwrap(), JobStatus::Finished);
+    assert!(e.peak_admitted_bytes() <= e.budget_bytes());
+    assert_eq!(e.summaries().len(), 3);
+}
+
+#[test]
+fn suspend_resume_is_bit_identical() {
+    // A job checkpointed out at step 5 and resumed must replay the
+    // exact trajectory of an uninterrupted run: same per-step loss
+    // bits, same param bits, same token count, same final loss.
+    let mut c = cfg(OptSpec::gwt(2), 10);
+    c.grad_accum = 2;
+    let path = std::env::temp_dir()
+        .join("gwt_job_engine_suspend.bin")
+        .to_str()
+        .unwrap()
+        .to_string();
+
+    // Uninterrupted reference, stopped one round short so live state
+    // is readable.
+    let mut a = JobEngine::new(None, 2, 0.0);
+    a.submit("j", c.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..9 {
+        a.run_round().unwrap();
+    }
+    let sa = a.job_state("j").unwrap();
+    let loss_a: Vec<u32> =
+        sa.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    let params_a: Vec<u32> = sa
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    let tokens_a = sa.tokens_seen;
+
+    // Suspended run: 5 rounds, checkpoint out, resume, 4 more rounds.
+    let mut b = JobEngine::new(None, 2, 0.0);
+    b.submit("j", c, 0, JobSource::Synthetic).unwrap();
+    for _ in 0..5 {
+        b.run_round().unwrap();
+    }
+    b.suspend("j", &path).unwrap();
+    assert_eq!(b.status("j").unwrap(), JobStatus::Suspended);
+    assert_eq!(b.admitted_bytes(), 0, "suspend must release the charge");
+    assert_eq!(b.run_round().unwrap(), 0, "nothing left running");
+    b.resume("j", &path).unwrap();
+    assert_eq!(b.status("j").unwrap(), JobStatus::Running);
+    for _ in 0..4 {
+        b.run_round().unwrap();
+    }
+    let sb = b.job_state("j").unwrap();
+    // The resumed curve restarts at step 6: compare it to the tail of
+    // the uninterrupted curve.
+    let loss_b: Vec<u32> =
+        sb.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    assert_eq!(&loss_b[..], &loss_a[5..], "post-resume losses diverged");
+    let params_b: Vec<u32> = sb
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    assert_eq!(params_b, params_a, "param bits diverged after resume");
+    assert_eq!(sb.tokens_seen, tokens_a, "token accounting diverged");
+
+    a.run_to_completion().unwrap();
+    b.run_to_completion().unwrap();
+    assert_eq!(
+        a.summaries()[0].final_loss.to_bits(),
+        b.summaries()[0].final_loss.to_bits()
+    );
+}
+
+#[test]
+fn adaptive_job_degrades_instead_of_queueing() {
+    // An adaptive job whose worst-case charge exceeds the remaining
+    // budget is admitted with a tightened adapt_budget_mb (compressed
+    // harder) rather than queued — the graceful-degradation contract.
+    let adapt_cfg = cfg(OptSpec::parse("adapt-greedy+adam").unwrap(), 3);
+    let preset = presets::find(&adapt_cfg.preset).unwrap();
+    let report =
+        measured_account(&preset.param_shapes(), adapt_cfg.optimizer);
+    assert!(
+        report.worst_state_bytes > report.state_bytes,
+        "test premise broken: adaptive worst case must exceed init"
+    );
+    // Strictly between the init floor and the worst-case ceiling, so
+    // the full charge cannot fit but a tightened one can.
+    let budget_bytes =
+        report.state_bytes + (report.worst_state_bytes - report.state_bytes) / 2;
+
+    let mut e = JobEngine::new(None, 1, budget_bytes as f64 / MB);
+    e.submit("a", adapt_cfg, 0, JobSource::Synthetic).unwrap();
+    assert_eq!(e.status("a").unwrap(), JobStatus::Running);
+    assert!(e
+        .events()
+        .iter()
+        .any(|ev| matches!(ev, EngineEvent::Degraded { job, .. } if job == "a")));
+    let tightened = e.job_cfg("a").unwrap().adapt_budget_mb;
+    assert!(tightened > 0.0, "degraded job must carry a concrete budget");
+    assert!(e.admitted_bytes() <= e.budget_bytes());
+    e.run_to_completion().unwrap();
+    assert_eq!(e.summaries().len(), 1);
+}
+
+#[test]
+fn engine_matches_trainer_bit_for_bit() {
+    // Parity with the thin-client path: a single PJRT pre-training
+    // job through the engine reproduces Trainer::train_step exactly,
+    // at every worker count.
+    let Some(rt) = runtime() else { return };
+    for threads in test_thread_grid() {
+        let mut c = cfg(OptSpec::gwt(2), 5);
+        c.threads = threads;
+        let loader = loader_for("nano", 11);
+        let mut t = Trainer::new(rt.clone(), c.clone(), &loader).unwrap();
+        let trainer_losses: Vec<u32> =
+            (0..c.steps).map(|_| t.train_step().unwrap().to_bits()).collect();
+
+        let mut e = JobEngine::new(Some(rt.clone()), threads, 0.0);
+        e.submit(
+            "t",
+            c.clone(),
+            0,
+            JobSource::Pretrain { loader: loader_for("nano", 11) },
+        )
+        .unwrap();
+        for step in 0..c.steps - 1 {
+            e.run_round().unwrap();
+            let got = e.job_state("t").unwrap().curve.points[step].loss;
+            assert_eq!(
+                got.to_bits(),
+                trainer_losses[step],
+                "threads={threads} step={step}: engine {got} vs trainer"
+            );
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(
+            e.summaries()[0].final_loss.to_bits(),
+            trainer_losses[c.steps - 1],
+            "threads={threads}: final loss diverged"
+        );
+    }
+}

@@ -42,7 +42,7 @@ fn gwt_training_reduces_loss() {
     for _ in 0..29 {
         t.train_step().unwrap();
     }
-    let last = t.curve.tail_mean_loss(5).unwrap();
+    let last = t.job.curve.tail_mean_loss(5).unwrap();
     assert!(
         last < first - 0.5,
         "no learning: first {first}, last {last}"
@@ -58,7 +58,7 @@ fn adam_training_reduces_loss() {
     for _ in 0..19 {
         t.train_step().unwrap();
     }
-    assert!(t.curve.tail_mean_loss(5).unwrap() < first - 0.3);
+    assert!(t.job.curve.tail_mean_loss(5).unwrap() < first - 0.3);
 }
 
 #[test]
@@ -73,9 +73,9 @@ fn dp_workers_and_grad_accum_run() {
     for _ in 0..5 {
         t.train_step().unwrap();
     }
-    assert!(t.curve.final_loss().unwrap() < first);
+    assert!(t.job.curve.final_loss().unwrap() < first);
     // 6 steps x 2 accum x 2 workers x 512 tokens.
-    assert_eq!(t.curve.points.last().unwrap().tokens_seen, 6 * 2 * 2 * 512);
+    assert_eq!(t.job.curve.points.last().unwrap().tokens_seen, 6 * 2 * 2 * 512);
 }
 
 #[test]
@@ -88,7 +88,7 @@ fn deterministic_given_seed() {
         for _ in 0..5 {
             t.train_step().unwrap();
         }
-        t.curve.final_loss().unwrap()
+        t.job.curve.final_loss().unwrap()
     };
     let a = run(rt.clone());
     let b = run(rt);
@@ -189,7 +189,7 @@ fn db4_trains_end_to_end_with_haar_state_parity() {
     for _ in 0..9 {
         t.train_step().unwrap();
     }
-    let last = t.curve.final_loss().unwrap();
+    let last = t.job.curve.final_loss().unwrap();
     assert!(last < first, "db4 did not learn: {first} -> {last}");
 }
 
@@ -216,7 +216,7 @@ fn alternate_architectures_train() {
         for _ in 0..9 {
             t.train_step().unwrap();
         }
-        let last = t.curve.final_loss().unwrap();
+        let last = t.job.curve.final_loss().unwrap();
         assert!(last < first, "{preset}: {first} -> {last}");
     }
 }
