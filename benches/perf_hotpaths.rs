@@ -13,7 +13,7 @@ use gwt::pool::{accumulate_sharded, scoped_chunks_mut, Sharding, StepPool};
 use gwt::rng::Rng;
 use gwt::runtime::{literal_f32, literal_tokens};
 use gwt::tensor::Tensor;
-use gwt::wavelet::{haar_fwd, haar_inv, WaveletBasis};
+use gwt::wavelet::{haar_fwd, haar_inv, kernels, WaveletBasis};
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
@@ -44,6 +44,52 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} us", t.per_iter_us()),
         String::new(),
     ]);
+
+    // Level-kernel ISA comparison: the same row transforms driven
+    // explicitly through the scalar table and (when the host has one)
+    // the detected SIMD table. Outputs are bit-identical (see
+    // tests/simd_kernels.rs); these rows record the throughput gap
+    // the dispatch buys. The rows above already run whatever table
+    // `kernels::active()` selected (GWT_SIMD / `-s simd=` override).
+    table.row(vec![
+        "kernel dispatch".into(),
+        "-".into(),
+        kernels::active_label().into(),
+        "GWT_SIMD=scalar|auto overrides".into(),
+    ]);
+    {
+        let mut tables = vec![kernels::scalar()];
+        if let Some(simd) = kernels::simd() {
+            tables.push(simd);
+        }
+        let mut buf = vec![0.0f32; m * n];
+        let mut scratch = vec![0.0f32; n];
+        let bytes = (m * n * 4) as f64;
+        type RowDriver = fn(&kernels::KernelDispatch, &mut [f32], usize, &mut [f32]);
+        let drivers: [(&str, RowDriver); 4] = [
+            ("haar_fwd kernel l=3", kernels::haar_fwd_row_with),
+            ("haar_inv kernel l=3", kernels::haar_inv_row_with),
+            ("db4_fwd kernel l=3", kernels::db4_fwd_row_with),
+            ("db4_inv kernel l=3", kernels::db4_inv_row_with),
+        ];
+        for (name, driver) in drivers {
+            for &tbl in &tables {
+                let t = time_fn(3, 15, || {
+                    buf.copy_from_slice(&x);
+                    for r in 0..m {
+                        driver(tbl, &mut buf[r * n..(r + 1) * n], 3, &mut scratch);
+                    }
+                    std::hint::black_box(&buf);
+                });
+                table.row(vec![
+                    format!("{name} ({})", tbl.label),
+                    format!("{m}x{n}"),
+                    format!("{:.1} us", t.per_iter_us()),
+                    format!("{:.2} GB/s incl copy-in", bytes / t.median_ns),
+                ]);
+            }
+        }
+    }
 
     // GWT-Adam rust path vs HLO path, per optimizer step.
     let hp = AdamHp::default();
@@ -193,7 +239,11 @@ fn main() -> anyhow::Result<()> {
         write_bench_file(
             "perf_hotpaths",
             &table,
-            "artifact-free rows only (no compiled artifacts on this host)",
+            &format!(
+                "artifact-free rows only (no compiled artifacts on this \
+                 host); kernel dispatch {}",
+                kernels::active_label()
+            ),
         )?;
         return Ok(());
     };
@@ -392,7 +442,10 @@ fn main() -> anyhow::Result<()> {
     write_bench_file(
         "perf_hotpaths",
         &table,
-        "full run including HLO/PJRT rows",
+        &format!(
+            "full run including HLO/PJRT rows; kernel dispatch {}",
+            kernels::active_label()
+        ),
     )?;
     Ok(())
 }

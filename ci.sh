@@ -47,12 +47,36 @@ for t in 1 7; do
         --test parallel_determinism --test grad_accum_parity
 done
 
+# SIMD-matrix pass: the wavelet kernel dispatch must be a pure
+# throughput knob — `scalar` forces the portable kernels, `auto`
+# picks the detected ISA (AVX2/NEON), and both must produce the same
+# bits everywhere (the simd_kernels battery asserts this directly;
+# parallel_determinism asserts it composes with pool sharding).
+for simd in scalar auto; do
+    echo "== simd matrix (GWT_SIMD=$simd) =="
+    GWT_SIMD=$simd cargo test -q \
+        --test simd_kernels --test parallel_determinism
+done
+
 # Smoke the pool-reuse bench rows: perf_hotpaths' dispatch-overhead,
 # pool-vs-scoped bank-step, and serial-vs-sharded accumulation rows
 # are artifact-free and print before the HLO gate, so this is green
 # (and informative) on a fresh checkout.
+#
+# The run rewrites BENCH_perf_hotpaths.json in place, so snapshot the
+# committed baseline first and gate the fresh medians against it
+# afterwards (`gwt bench-check` skips itself while the committed file
+# is still the empty-rows placeholder). GWT_BENCH_TOL widens/narrows
+# the band (fractional; default +50% absorbs shared-runner noise).
+bench_baseline=$(mktemp)
+cp BENCH_perf_hotpaths.json "$bench_baseline"
 echo "== pool-reuse bench rows (smoke) =="
 GWT_BENCH_SCALE=0.2 cargo bench --bench perf_hotpaths
+
+echo "== bench regression gate (perf_hotpaths) =="
+cargo run --release -- bench-check "$bench_baseline" \
+    BENCH_perf_hotpaths.json --tol "${GWT_BENCH_TOL:-0.5}"
+rm -f "$bench_baseline"
 
 # Smoke the Haar-vs-DB4 basis-ablation bench: its transform-level
 # section is artifact-free, so this runs green on a fresh checkout

@@ -12,7 +12,11 @@
 //!
 //! Everything here is a pure function of the gradient bits, which is
 //! what lets `optim::probe_bank` shard probing across workers under
-//! the same fixed-boundary bit-identity contract as `step_bank`.
+//! the same fixed-boundary bit-identity contract as `step_bank`. The
+//! profile's forward transforms run on the `wavelet::kernels`
+//! dispatch table (SIMD where detected, bit-identical to scalar), so
+//! probe results — and therefore adaptive selections and migration
+//! timing — are unchanged by the `GWT_SIMD` setting.
 
 use crate::wavelet::WaveletBasis;
 

@@ -158,6 +158,129 @@ pub fn write_bench_file(
 }
 
 // ---------------------------------------------------------------------------
+// Bench-regression gate (`gwt bench-check`, wired into ci.sh)
+// ---------------------------------------------------------------------------
+
+/// Outcome of comparing a fresh bench table against the committed
+/// `BENCH_*.json` baseline.
+#[derive(Debug)]
+pub enum BenchGate {
+    /// Nothing to compare: the baseline is a placeholder (no rows) or
+    /// shares no timing rows with the fresh run.
+    Skipped { reason: String },
+    /// Every shared timing row is within tolerance.
+    Passed { compared: usize, warnings: Vec<String> },
+    /// At least one shared timing row regressed beyond tolerance.
+    Regressed {
+        failures: Vec<String>,
+        compared: usize,
+        warnings: Vec<String>,
+    },
+}
+
+/// Parse a bench median cell (`"12.3 us"`, `"0.45 ms"`, `"450 ns"`,
+/// `"1.2 s"`) into nanoseconds. `None` for non-timing cells.
+pub fn parse_median_ns(cell: &str) -> Option<f64> {
+    let mut it = cell.split_whitespace();
+    let v: f64 = it.next()?.parse().ok()?;
+    let scale = match it.next()? {
+        "ns" => 1.0,
+        "us" => 1e3,
+        "ms" => 1e6,
+        "s" => 1e9,
+        _ => return None,
+    };
+    if it.next().is_some() {
+        return None;
+    }
+    Some(v * scale)
+}
+
+fn bench_row_fields(row: &Json) -> anyhow::Result<(String, String, String)> {
+    let cells = row.as_arr()?;
+    anyhow::ensure!(cells.len() >= 3, "bench row needs >= 3 cells");
+    Ok((
+        cells[0].as_str()?.to_string(),
+        cells[1].as_str()?.to_string(),
+        cells[2].as_str()?.to_string(),
+    ))
+}
+
+/// Compare two `BENCH_*.json` documents (`{..., table: {rows}}`).
+/// Rows are keyed by `(component, shape)`; a fresh median more than
+/// `tol` (fractional, e.g. 0.5 = +50%) above the baseline median is a
+/// regression. Baseline rows absent from the fresh run only warn —
+/// the HLO/PJRT rows are artifact-dependent and legitimately vanish
+/// on artifact-free hosts. An empty baseline (the committed
+/// placeholder) skips the gate.
+pub fn compare_bench_tables(
+    baseline: &Json,
+    fresh: &Json,
+    tol: f64,
+) -> anyhow::Result<BenchGate> {
+    anyhow::ensure!(tol >= 0.0, "tolerance must be >= 0, got {tol}");
+    let base_rows = baseline.get("table")?.get("rows")?.as_arr()?;
+    if base_rows.is_empty() {
+        return Ok(BenchGate::Skipped {
+            reason: "baseline has no rows (placeholder BENCH file); \
+                     commit a recorded run to arm the gate"
+                .into(),
+        });
+    }
+    let fresh_rows = fresh.get("table")?.get("rows")?.as_arr()?;
+    let mut fresh_by_key = std::collections::BTreeMap::new();
+    for row in fresh_rows {
+        let (c, sh, med) = bench_row_fields(row)?;
+        fresh_by_key.insert((c, sh), med);
+    }
+    let mut compared = 0usize;
+    let mut warnings = Vec::new();
+    let mut failures = Vec::new();
+    for row in base_rows {
+        let (c, sh, med) = bench_row_fields(row)?;
+        let Some(base_ns) = parse_median_ns(&med) else {
+            continue;
+        };
+        let label = format!("{c} [{sh}]");
+        match fresh_by_key.get(&(c, sh)) {
+            None => warnings.push(format!(
+                "{label}: baseline row missing from fresh run \
+                 (artifact-dependent?)"
+            )),
+            Some(fresh_med) => match parse_median_ns(fresh_med) {
+                None => warnings.push(format!(
+                    "{label}: fresh median '{fresh_med}' is not a timing"
+                )),
+                Some(fresh_ns) => {
+                    compared += 1;
+                    if fresh_ns > base_ns * (1.0 + tol) {
+                        failures.push(format!(
+                            "{label}: {:.1} us -> {:.1} us (+{:.0}%, \
+                             tolerance +{:.0}%)",
+                            base_ns / 1e3,
+                            fresh_ns / 1e3,
+                            (fresh_ns / base_ns - 1.0) * 100.0,
+                            tol * 100.0
+                        ));
+                    }
+                }
+            },
+        }
+    }
+    if compared == 0 {
+        return Ok(BenchGate::Skipped {
+            reason: "no timing rows shared between baseline and fresh run"
+                .into(),
+        });
+    }
+    if failures.is_empty() {
+        Ok(BenchGate::Passed { compared, warnings })
+    } else {
+        Ok(BenchGate::Regressed { failures, compared, warnings })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared training harness for the paper-reproduction benches
 // ---------------------------------------------------------------------------
 
@@ -363,5 +486,96 @@ mod tests {
     fn scaled_floors_at_ten() {
         assert!(scaled(5) >= 5);
         assert_eq!(scaled(10_000).min(10_000), scaled(10_000));
+    }
+
+    #[test]
+    fn parse_median_units() {
+        assert_eq!(parse_median_ns("450 ns"), Some(450.0));
+        assert_eq!(parse_median_ns("12.5 us"), Some(12_500.0));
+        assert_eq!(parse_median_ns("0.25 ms"), Some(250_000.0));
+        assert_eq!(parse_median_ns("2 s"), Some(2e9));
+        assert_eq!(parse_median_ns("  3.0 us  "), Some(3_000.0));
+        assert_eq!(parse_median_ns("-"), None);
+        assert_eq!(parse_median_ns("avx2"), None);
+        assert_eq!(parse_median_ns("1.2 GB/s"), None);
+        assert_eq!(parse_median_ns("1.2 us extra"), None);
+        assert_eq!(parse_median_ns(""), None);
+    }
+
+    fn bench_doc(rows: &[(&str, &str, &str)]) -> Json {
+        let mut t = TableView::new("T", &["component", "shape", "median", "notes"]);
+        for (c, sh, m) in rows {
+            t.row(vec![c.to_string(), sh.to_string(), m.to_string(), String::new()]);
+        }
+        obj(vec![("table", t.to_json())])
+    }
+
+    #[test]
+    fn gate_skips_on_placeholder_baseline() {
+        let base = bench_doc(&[]);
+        let fresh = bench_doc(&[("haar_fwd", "256x1024", "10.0 us")]);
+        match compare_bench_tables(&base, &fresh, 0.5).unwrap() {
+            BenchGate::Skipped { reason } => {
+                assert!(reason.contains("placeholder"), "{reason}")
+            }
+            other => panic!("expected skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_warns_on_missing() {
+        let base = bench_doc(&[
+            ("haar_fwd", "256x1024", "10.0 us"),
+            ("gwt_adam step (HLO)", "64x160 l=2", "5.0 us"),
+            ("kernel dispatch", "-", "avx2"),
+        ]);
+        // 40% slower is inside the 50% band; the HLO row is absent.
+        let fresh = bench_doc(&[("haar_fwd", "256x1024", "14.0 us")]);
+        match compare_bench_tables(&base, &fresh, 0.5).unwrap() {
+            BenchGate::Passed { compared, warnings } => {
+                assert_eq!(compared, 1);
+                assert_eq!(warnings.len(), 1);
+                assert!(warnings[0].contains("missing"), "{}", warnings[0]);
+            }
+            other => panic!("expected pass, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_flags_regressions_beyond_tolerance() {
+        let base = bench_doc(&[
+            ("haar_fwd", "256x1024", "10.0 us"),
+            ("haar_inv", "256x1024", "10.0 us"),
+        ]);
+        let fresh = bench_doc(&[
+            ("haar_fwd", "256x1024", "16.0 us"),
+            ("haar_inv", "256x1024", "10.0 us"),
+        ]);
+        match compare_bench_tables(&base, &fresh, 0.5).unwrap() {
+            BenchGate::Regressed { failures, compared, .. } => {
+                assert_eq!(compared, 2);
+                assert_eq!(failures.len(), 1);
+                assert!(failures[0].contains("haar_fwd"), "{}", failures[0]);
+            }
+            other => panic!("expected regression, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_skips_when_no_rows_are_shared() {
+        let base = bench_doc(&[("old row", "1x1", "1.0 us")]);
+        let fresh = bench_doc(&[("new row", "1x1", "1.0 us")]);
+        match compare_bench_tables(&base, &fresh, 0.5).unwrap() {
+            BenchGate::Skipped { reason } => {
+                assert!(reason.contains("shared"), "{reason}")
+            }
+            other => panic!("expected skip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_rejects_negative_tolerance() {
+        let d = bench_doc(&[("r", "s", "1.0 us")]);
+        assert!(compare_bench_tables(&d, &d, -0.1).is_err());
     }
 }

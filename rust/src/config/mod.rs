@@ -32,6 +32,7 @@ use anyhow::{bail, Context, Result};
 pub use presets::{ModelPreset, PRESETS};
 
 use crate::adapt::AdaptPolicy;
+use crate::wavelet::kernels::SimdMode;
 use crate::wavelet::WaveletBasis;
 
 /// The gradient-compression stage of an optimizer composition: how an
@@ -514,6 +515,12 @@ pub struct TrainConfig {
     /// [`TrainConfig::resolve_gwt_path`], which keeps the legacy
     /// `GWT_OPT_PATH` env var as a fallback.
     pub gwt_path: GwtPath,
+    /// Wavelet kernel selection (`simd` key): `auto` = best detected
+    /// ISA (AVX2/NEON), `scalar` = force the portable kernels.
+    /// Resolved via [`TrainConfig::resolve_simd`], which folds in the
+    /// `GWT_SIMD` env var; pure throughput knob — every choice is
+    /// bit-identical (see `wavelet::kernels`).
+    pub simd: SimdMode,
     pub artifacts_dir: String,
 }
 
@@ -547,6 +554,7 @@ impl Default for TrainConfig {
             serve_budget_mb: 0.0,
             serve_priority: 0,
             gwt_path: GwtPath::Auto,
+            simd: SimdMode::Auto,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -604,6 +612,7 @@ impl TrainConfig {
                 self.serve_priority = v.parse().context("serve_priority")?
             }
             "gwt_path" => self.gwt_path = GwtPath::parse(v)?,
+            "simd" => self.simd = SimdMode::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
             other => bail!("unknown config key '{other}'"),
         }
@@ -722,6 +731,17 @@ impl TrainConfig {
         GwtPath::Auto
     }
 
+    /// Resolve the wavelet kernel mode once (CLI startup pins it via
+    /// `wavelet::kernels::set_mode`): an explicit `simd = scalar`
+    /// wins; otherwise `GWT_SIMD=scalar` forces scalar; default is
+    /// `Auto` (best detected ISA).
+    pub fn resolve_simd(&self) -> SimdMode {
+        if self.simd == SimdMode::Scalar {
+            return SimdMode::Scalar;
+        }
+        crate::wavelet::kernels::mode_from_env()
+    }
+
     /// Resolve the step-engine worker count: `0` auto-detects from
     /// the host's available parallelism, capped by the preset's
     /// useful maximum (one worker per parameter tensor); an explicit
@@ -778,6 +798,12 @@ impl TrainConfig {
         }
         // Show the *resolved* path so an env-var fallback is visible.
         m.insert("gwt_path".into(), self.resolve_gwt_path().label().into());
+        // Resolved mode plus the ISA it lands on, e.g. "auto (avx2)".
+        let simd = self.resolve_simd();
+        m.insert(
+            "simd".into(),
+            format!("{} ({})", simd.label(), simd.table().label),
+        );
         m
     }
 }
@@ -959,6 +985,29 @@ mod tests {
         if std::env::var("GWT_OPT_PATH").is_err() {
             assert_eq!(cfg.resolve_gwt_path(), GwtPath::Auto);
             assert_eq!(cfg.summary()["gwt_path"], "auto");
+        }
+    }
+
+    #[test]
+    fn config_accepts_simd_key() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.simd, SimdMode::Auto);
+        cfg.apply_text("simd = scalar\n").unwrap();
+        assert_eq!(cfg.simd, SimdMode::Scalar);
+        // Explicit scalar wins regardless of GWT_SIMD.
+        assert_eq!(cfg.resolve_simd(), SimdMode::Scalar);
+        assert_eq!(cfg.summary()["simd"], "scalar (scalar)");
+        assert!(cfg.apply_text("simd = avx512").is_err());
+        cfg.simd = SimdMode::Auto;
+        // Without the env var set, Auto resolves to Auto and the
+        // summary shows the detected ISA in parentheses. (The env
+        // path is exercised by ci.sh's GWT_SIMD matrix — mutating
+        // process env in-test would race other tests.)
+        if std::env::var("GWT_SIMD").is_err() {
+            assert_eq!(cfg.resolve_simd(), SimdMode::Auto);
+            let label = cfg.summary()["simd"].clone();
+            let isa = SimdMode::Auto.table().label;
+            assert_eq!(label, format!("auto ({isa})"));
         }
     }
 

@@ -50,10 +50,11 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gwt <train|serve|eval|finetune|memory|info> [--config FILE] \
-         [--threads N] [-s key=value ...]\n\
+        "usage: gwt <train|serve|eval|finetune|memory|info|bench-check> \
+         [--config FILE] [--threads N] [-s key=value ...]\n\
          serve: gwt serve [--budget-mb F | --budget-x F] [--synthetic] \
-         \"name=a,optimizer=gwt-2,steps=100[,priority=1]\" ..."
+         \"name=a,optimizer=gwt-2,steps=100[,priority=1]\" ...\n\
+         bench-check: gwt bench-check BASELINE.json FRESH.json [--tol F]"
     );
 }
 
@@ -71,6 +72,10 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
         cfg.threads = t;
     }
     cfg.validate()?;
+    // Pin the wavelet kernel table once, from the resolved config
+    // (`simd` key folded with `GWT_SIMD`); bit-identical either way,
+    // so this only affects throughput.
+    gwt::wavelet::kernels::set_mode(cfg.resolve_simd());
     Ok(cfg)
 }
 
@@ -96,6 +101,7 @@ fn run(argv: &[String]) -> Result<()> {
         "finetune" => cmd_finetune(&args),
         "memory" => cmd_memory(),
         "info" => cmd_info(&args),
+        "bench-check" => cmd_bench_check(&args),
         other => {
             print_usage();
             anyhow::bail!("unknown command '{other}'")
@@ -375,6 +381,57 @@ fn cmd_memory() -> Result<()> {
             gb(OptSpec::parse("gwt-2+adam8bit")?),
             gb(OptSpec::parse("gwt-2+sgdm")?),
         );
+    }
+    Ok(())
+}
+
+/// Bench-regression gate: compare a fresh `BENCH_*.json` against the
+/// committed baseline (`ci.sh` snapshots the baseline before the
+/// bench smoke rewrites it). Exit 1 on regression beyond `--tol`
+/// (fractional; default 0.5 = +50%).
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 2,
+        "usage: gwt bench-check BASELINE.json FRESH.json [--tol F]"
+    );
+    let tol: f64 = match args.flag("tol") {
+        Some(v) => v.parse().context("--tol")?,
+        None => 0.5,
+    };
+    let read = |path: &str| -> Result<gwt::jsonx::Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        gwt::jsonx::Json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let baseline = read(&args.positional[0])?;
+    let fresh = read(&args.positional[1])?;
+    use gwt::bench_harness::BenchGate;
+    match gwt::bench_harness::compare_bench_tables(&baseline, &fresh, tol)? {
+        BenchGate::Skipped { reason } => {
+            println!("bench-check: SKIP — {reason}");
+        }
+        BenchGate::Passed { compared, warnings } => {
+            for w in &warnings {
+                println!("bench-check: warn — {w}");
+            }
+            println!(
+                "bench-check: OK — {compared} rows within +{:.0}%",
+                tol * 100.0
+            );
+        }
+        BenchGate::Regressed { failures, compared, warnings } => {
+            for w in &warnings {
+                println!("bench-check: warn — {w}");
+            }
+            for f in &failures {
+                println!("bench-check: FAIL — {f}");
+            }
+            anyhow::bail!(
+                "{} of {compared} bench rows regressed beyond +{:.0}%",
+                failures.len(),
+                tol * 100.0
+            );
+        }
     }
     Ok(())
 }

@@ -37,6 +37,12 @@
 //! resolves `TrainConfig::gwt_path` (with the legacy `GWT_OPT_PATH`
 //! env var as fallback) once per bank and routes accordingly — the
 //! env var is no longer read here, per-parameter.
+//!
+//! On the rust path, every `basis.fwd_row`/`basis.inv_row` call
+//! bottoms out in the `wavelet::kernels` dispatch table — AVX2/NEON
+//! level kernels where the host supports them, pinned bit-identical
+//! to scalar — so the row sharding here accelerates under `GWT_SIMD`
+//! (/ the `simd` config key) without any change at this layer.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

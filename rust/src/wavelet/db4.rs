@@ -25,87 +25,88 @@ pub const H: [f32; 4] = [
 /// High-pass decomposition filter g[k] = (-1)^k h[3-k].
 pub const G: [f32; 4] = [H[3], -H[2], H[1], -H[0]];
 
+use super::kernels;
+
 /// One level forward, periodic boundary: row -> [A | D] in place.
+/// Dispatched wrapper over the active kernel table (scalar body:
+/// `kernels::db4_fwd_level_scalar`).
 pub fn db4_fwd_level(row: &mut [f32], scratch: &mut [f32]) {
-    let n = row.len();
-    debug_assert!(n >= 2 && n % 2 == 0);
-    let half = n / 2;
-    for i in 0..half {
-        let mut a = 0.0f32;
-        let mut d = 0.0f32;
-        for k in 0..4 {
-            let x = row[(2 * i + k) % n];
-            a += H[k] * x;
-            d += G[k] * x;
-        }
-        scratch[i] = a;
-        scratch[half + i] = d;
-    }
-    row.copy_from_slice(&scratch[..n]);
+    debug_assert!(row.len() >= 2 && row.len() % 2 == 0);
+    (kernels::active().db4_fwd_level)(row, scratch);
 }
 
 /// One level inverse, periodic boundary: [A | D] -> row in place.
 pub fn db4_inv_level(row: &mut [f32], scratch: &mut [f32]) {
-    let n = row.len();
-    let half = n / 2;
-    scratch[..n].fill(0.0);
-    for i in 0..half {
-        let a = row[i];
-        let d = row[half + i];
-        for k in 0..4 {
-            scratch[(2 * i + k) % n] += H[k] * a + G[k] * d;
-        }
-    }
-    row.copy_from_slice(&scratch[..n]);
+    debug_assert!(row.len() >= 2 && row.len() % 2 == 0);
+    (kernels::active().db4_inv_level)(row, scratch);
 }
 
 /// Multi-level forward transform of one row, in place, using
 /// `scratch` (len >= row.len()) — the db4 arm of
 /// `WaveletBasis::fwd_row`, mirroring `haar_fwd_row`'s contract.
 pub fn db4_fwd_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
-    let n = row.len();
-    debug_assert!(level == 0 || n % (1 << level) == 0);
-    let mut w = n;
-    for _ in 0..level {
-        db4_fwd_level(&mut row[..w], scratch);
-        w /= 2;
-    }
+    kernels::db4_fwd_row_with(kernels::active(), row, level, scratch);
 }
 
 /// Multi-level inverse transform of one row, in place.
 pub fn db4_inv_row(row: &mut [f32], level: usize, scratch: &mut [f32]) {
-    let n = row.len();
-    debug_assert!(level == 0 || n % (1 << level) == 0);
-    let mut w = n >> level;
-    for _ in 0..level {
-        w *= 2;
-        db4_inv_level(&mut row[..w], scratch);
-    }
+    kernels::db4_inv_row_with(kernels::active(), row, level, scratch);
 }
 
 /// Multi-level forward over an (m, n) matrix; layout matches the Haar
 /// module: [A_l | D_l | ... | D_1].
 pub fn db4_fwd(x: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
-    assert_eq!(x.len(), m * n);
-    super::check_level(n, level).expect("invalid level");
-    let mut out = x.to_vec();
+    let mut out = vec![0.0f32; m * n];
     let mut scratch = vec![0.0f32; n];
-    for r in 0..m {
-        db4_fwd_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
-    }
+    db4_fwd_into(x, m, n, level, &mut out, &mut scratch);
     out
+}
+
+/// Allocation-free form of [`db4_fwd`]: `out` (len `m*n`) receives
+/// the coefficients, `scratch` (len >= `n`) is caller-owned.
+pub fn db4_fwd_into(
+    x: &[f32],
+    m: usize,
+    n: usize,
+    level: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    assert!(scratch.len() >= n);
+    super::check_level(n, level).expect("invalid level");
+    out.copy_from_slice(x);
+    for r in 0..m {
+        db4_fwd_row(&mut out[r * n..(r + 1) * n], level, scratch);
+    }
 }
 
 /// Multi-level inverse.
 pub fn db4_inv(c: &[f32], m: usize, n: usize, level: usize) -> Vec<f32> {
-    assert_eq!(c.len(), m * n);
-    super::check_level(n, level).expect("invalid level");
-    let mut out = c.to_vec();
+    let mut out = vec![0.0f32; m * n];
     let mut scratch = vec![0.0f32; n];
-    for r in 0..m {
-        db4_inv_row(&mut out[r * n..(r + 1) * n], level, &mut scratch);
-    }
+    db4_inv_into(c, m, n, level, &mut out, &mut scratch);
     out
+}
+
+/// Allocation-free form of [`db4_inv`].
+pub fn db4_inv_into(
+    c: &[f32],
+    m: usize,
+    n: usize,
+    level: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    assert!(scratch.len() >= n);
+    super::check_level(n, level).expect("invalid level");
+    out.copy_from_slice(c);
+    for r in 0..m {
+        db4_inv_row(&mut out[r * n..(r + 1) * n], level, scratch);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,263 @@
+//! SIMD DB4 level kernels (AVX2 / NEON), bit-identical to
+//! [`super::db4_fwd_level_scalar`] / [`super::db4_inv_level_scalar`].
+//!
+//! Forward: output `(a_i, d_i)` is a 4-tap stencil over
+//! `x[2i..2i+4]` (mod n). The scalar loop accumulates tap by tap
+//! from a literal `0.0`; the vector form does the identical
+//! `acc = ((((0 + H0·x0) + H1·x1) + H2·x2) + H3·x3)` chain with
+//! splatted coefficients — separate mul and add intrinsics, never an
+//! FMA, and an explicit leading zero-add (observable: `0.0 + (-0.0)`
+//! is `+0.0`, and -0.0 products arise from underflow). Lanes cover
+//! only stencils that don't wrap (`i <= half-2`); the wrap stencil
+//! and sub-lane tails run the shared scalar helpers.
+//!
+//! Inverse: each output pair `(out[2p], out[2p+1])` receives exactly
+//! two stencil contributions, accumulated in the historical scatter
+//! order (see `db4_inv_point` / `db4_inv_point0` in the parent
+//! module). The vector form reproduces that same
+//! `(0 + (H·a_prev + G·d_prev)) + (H·a_cur + G·d_cur)` grouping per
+//! lane for `p >= 1`; the wrapping pair `p = 0` is always scalar.
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use crate::wavelet::db4::{G, H};
+    use crate::wavelet::kernels::{db4_fwd_point, db4_inv_point, db4_inv_point0};
+    use core::arch::x86_64::*;
+
+    /// Safe entry: the dispatch table only selects this module after
+    /// `is_x86_feature_detected!("avx2")`.
+    pub fn db4_fwd_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { db4_fwd_level_impl(row, scratch) }
+    }
+
+    pub fn db4_inv_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { db4_inv_level_impl(row, scratch) }
+    }
+
+    /// Deinterleave 16 consecutive floats at `p` into 8 evens + 8 odds.
+    #[target_feature(enable = "avx2")]
+    unsafe fn evens_odds(p: *const f32) -> (__m256, __m256) {
+        let idx = _mm256_setr_epi32(0, 2, 4, 6, 1, 3, 5, 7);
+        let v0 = _mm256_permutevar8x32_ps(_mm256_loadu_ps(p), idx);
+        let v1 = _mm256_permutevar8x32_ps(_mm256_loadu_ps(p.add(8)), idx);
+        (
+            _mm256_permute2f128_ps::<0x20>(v0, v1),
+            _mm256_permute2f128_ps::<0x31>(v0, v1),
+        )
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn db4_fwd_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let n = row.len();
+        debug_assert!(n >= 2 && n % 2 == 0);
+        debug_assert!(scratch.len() >= n);
+        let half = n / 2;
+        // Lanes only over stencils that stay in-bounds (2i+3 <= n-1).
+        let interior = half - 1;
+        let simd = interior - interior % 8;
+        let zero = _mm256_setzero_ps();
+        let h: [__m256; 4] = [
+            _mm256_set1_ps(H[0]),
+            _mm256_set1_ps(H[1]),
+            _mm256_set1_ps(H[2]),
+            _mm256_set1_ps(H[3]),
+        ];
+        let g: [__m256; 4] = [
+            _mm256_set1_ps(G[0]),
+            _mm256_set1_ps(G[1]),
+            _mm256_set1_ps(G[2]),
+            _mm256_set1_ps(G[3]),
+        ];
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            // Taps 0/1 at offset 2i, taps 2/3 at offset 2i+2.
+            let (x0, x1) = evens_odds(rp.add(2 * i));
+            let (x2, x3) = evens_odds(rp.add(2 * i + 2));
+            let mut a = _mm256_add_ps(zero, _mm256_mul_ps(h[0], x0));
+            a = _mm256_add_ps(a, _mm256_mul_ps(h[1], x1));
+            a = _mm256_add_ps(a, _mm256_mul_ps(h[2], x2));
+            a = _mm256_add_ps(a, _mm256_mul_ps(h[3], x3));
+            let mut d = _mm256_add_ps(zero, _mm256_mul_ps(g[0], x0));
+            d = _mm256_add_ps(d, _mm256_mul_ps(g[1], x1));
+            d = _mm256_add_ps(d, _mm256_mul_ps(g[2], x2));
+            d = _mm256_add_ps(d, _mm256_mul_ps(g[3], x3));
+            _mm256_storeu_ps(sp.add(i), a);
+            _mm256_storeu_ps(sp.add(half + i), d);
+            i += 8;
+        }
+        for i in simd..half {
+            let (a, d) = db4_fwd_point(row, n, i);
+            scratch[i] = a;
+            scratch[half + i] = d;
+        }
+        row.copy_from_slice(&scratch[..n]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn db4_inv_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let n = row.len();
+        debug_assert!(n >= 2 && n % 2 == 0);
+        debug_assert!(scratch.len() >= n);
+        let half = n / 2;
+        let interior = half - 1; // pairs p = 1..half (p = 0 wraps)
+        let simd = interior - interior % 8;
+        let zero = _mm256_setzero_ps();
+        let (h0, h1, h2, h3) = (
+            _mm256_set1_ps(H[0]),
+            _mm256_set1_ps(H[1]),
+            _mm256_set1_ps(H[2]),
+            _mm256_set1_ps(H[3]),
+        );
+        let (g0, g1, g2, g3) = (
+            _mm256_set1_ps(G[0]),
+            _mm256_set1_ps(G[1]),
+            _mm256_set1_ps(G[2]),
+            _mm256_set1_ps(G[3]),
+        );
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut p = 1usize;
+        while p < 1 + simd {
+            let ap = _mm256_loadu_ps(rp.add(p - 1));
+            let dp = _mm256_loadu_ps(rp.add(half + p - 1));
+            let ac = _mm256_loadu_ps(rp.add(p));
+            let dc = _mm256_loadu_ps(rp.add(half + p));
+            // (0 + (H2·ap + G2·dp)) + (H0·ac + G0·dc), per lane.
+            let t1e = _mm256_add_ps(_mm256_mul_ps(h2, ap), _mm256_mul_ps(g2, dp));
+            let t2e = _mm256_add_ps(_mm256_mul_ps(h0, ac), _mm256_mul_ps(g0, dc));
+            let ev = _mm256_add_ps(_mm256_add_ps(zero, t1e), t2e);
+            let t1o = _mm256_add_ps(_mm256_mul_ps(h3, ap), _mm256_mul_ps(g3, dp));
+            let t2o = _mm256_add_ps(_mm256_mul_ps(h1, ac), _mm256_mul_ps(g1, dc));
+            let od = _mm256_add_ps(_mm256_add_ps(zero, t1o), t2o);
+            let lo = _mm256_unpacklo_ps(ev, od);
+            let hi = _mm256_unpackhi_ps(ev, od);
+            _mm256_storeu_ps(sp.add(2 * p), _mm256_permute2f128_ps::<0x20>(lo, hi));
+            _mm256_storeu_ps(
+                sp.add(2 * p + 8),
+                _mm256_permute2f128_ps::<0x31>(lo, hi),
+            );
+            p += 8;
+        }
+        for p in (1 + simd)..half {
+            let (e, o) = db4_inv_point(row, half, p);
+            scratch[2 * p] = e;
+            scratch[2 * p + 1] = o;
+        }
+        let (e0, o0) = db4_inv_point0(row, half);
+        scratch[0] = e0;
+        scratch[1] = o0;
+        row.copy_from_slice(&scratch[..n]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use crate::wavelet::db4::{G, H};
+    use crate::wavelet::kernels::{db4_fwd_point, db4_inv_point, db4_inv_point0};
+    use core::arch::aarch64::*;
+
+    /// Safe entry: NEON is baseline on aarch64.
+    pub fn db4_fwd_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { db4_fwd_level_impl(row, scratch) }
+    }
+
+    pub fn db4_inv_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { db4_inv_level_impl(row, scratch) }
+    }
+
+    unsafe fn db4_fwd_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let n = row.len();
+        debug_assert!(n >= 2 && n % 2 == 0);
+        debug_assert!(scratch.len() >= n);
+        let half = n / 2;
+        let interior = half - 1;
+        let simd = interior - interior % 4;
+        let zero = vdupq_n_f32(0.0);
+        let h: [float32x4_t; 4] = [
+            vdupq_n_f32(H[0]),
+            vdupq_n_f32(H[1]),
+            vdupq_n_f32(H[2]),
+            vdupq_n_f32(H[3]),
+        ];
+        let g: [float32x4_t; 4] = [
+            vdupq_n_f32(G[0]),
+            vdupq_n_f32(G[1]),
+            vdupq_n_f32(G[2]),
+            vdupq_n_f32(G[3]),
+        ];
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            let t01 = vld2q_f32(rp.add(2 * i)); // .0 = taps 0, .1 = taps 1
+            let t23 = vld2q_f32(rp.add(2 * i + 2)); // .0 = taps 2, .1 = taps 3
+            let mut a = vaddq_f32(zero, vmulq_f32(h[0], t01.0));
+            a = vaddq_f32(a, vmulq_f32(h[1], t01.1));
+            a = vaddq_f32(a, vmulq_f32(h[2], t23.0));
+            a = vaddq_f32(a, vmulq_f32(h[3], t23.1));
+            let mut d = vaddq_f32(zero, vmulq_f32(g[0], t01.0));
+            d = vaddq_f32(d, vmulq_f32(g[1], t01.1));
+            d = vaddq_f32(d, vmulq_f32(g[2], t23.0));
+            d = vaddq_f32(d, vmulq_f32(g[3], t23.1));
+            vst1q_f32(sp.add(i), a);
+            vst1q_f32(sp.add(half + i), d);
+            i += 4;
+        }
+        for i in simd..half {
+            let (a, d) = db4_fwd_point(row, n, i);
+            scratch[i] = a;
+            scratch[half + i] = d;
+        }
+        row.copy_from_slice(&scratch[..n]);
+    }
+
+    unsafe fn db4_inv_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let n = row.len();
+        debug_assert!(n >= 2 && n % 2 == 0);
+        debug_assert!(scratch.len() >= n);
+        let half = n / 2;
+        let interior = half - 1;
+        let simd = interior - interior % 4;
+        let zero = vdupq_n_f32(0.0);
+        let (h0, h1, h2, h3) = (
+            vdupq_n_f32(H[0]),
+            vdupq_n_f32(H[1]),
+            vdupq_n_f32(H[2]),
+            vdupq_n_f32(H[3]),
+        );
+        let (g0, g1, g2, g3) = (
+            vdupq_n_f32(G[0]),
+            vdupq_n_f32(G[1]),
+            vdupq_n_f32(G[2]),
+            vdupq_n_f32(G[3]),
+        );
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut p = 1usize;
+        while p < 1 + simd {
+            let ap = vld1q_f32(rp.add(p - 1));
+            let dp = vld1q_f32(rp.add(half + p - 1));
+            let ac = vld1q_f32(rp.add(p));
+            let dc = vld1q_f32(rp.add(half + p));
+            let t1e = vaddq_f32(vmulq_f32(h2, ap), vmulq_f32(g2, dp));
+            let t2e = vaddq_f32(vmulq_f32(h0, ac), vmulq_f32(g0, dc));
+            let ev = vaddq_f32(vaddq_f32(zero, t1e), t2e);
+            let t1o = vaddq_f32(vmulq_f32(h3, ap), vmulq_f32(g3, dp));
+            let t2o = vaddq_f32(vmulq_f32(h1, ac), vmulq_f32(g1, dc));
+            let od = vaddq_f32(vaddq_f32(zero, t1o), t2o);
+            vst2q_f32(sp.add(2 * p), float32x4x2_t(ev, od));
+            p += 4;
+        }
+        for p in (1 + simd)..half {
+            let (e, o) = db4_inv_point(row, half, p);
+            scratch[2 * p] = e;
+            scratch[2 * p + 1] = o;
+        }
+        let (e0, o0) = db4_inv_point0(row, half);
+        scratch[0] = e0;
+        scratch[1] = o0;
+        row.copy_from_slice(&scratch[..n]);
+    }
+}

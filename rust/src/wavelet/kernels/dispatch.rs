@@ -1,0 +1,220 @@
+//! Runtime kernel selection: one [`KernelDispatch`] table of the four
+//! level kernels, chosen once from CPU-feature detection (and the
+//! `GWT_SIMD` override) and cached in an atomic pointer.
+//!
+//! Selection policy, in precedence order:
+//!
+//! 1. [`set_mode`] — what the CLI calls after config resolution
+//!    (`TrainConfig::resolve_simd`, which folds in the `simd` config
+//!    key and the `GWT_SIMD` env var);
+//! 2. the `GWT_SIMD` env var (`scalar` | `auto`), read lazily on
+//!    first kernel use when [`set_mode`] was never called (tests,
+//!    benches, library embedders);
+//! 3. `auto`: AVX2 when `is_x86_feature_detected!("avx2")` holds on
+//!    x86_64, NEON unconditionally on aarch64 (baseline ISA), scalar
+//!    everywhere else.
+//!
+//! Because every table is bit-identical on every input (the module
+//! contract), a racing `set_mode`/`active` pair is benign: whichever
+//! table a worker observes, the output bits are the same.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// A level-kernel entry: transform `row` (current level's width) in
+/// place using `scratch` (len >= row.len()).
+pub type LevelKernel = fn(&mut [f32], &mut [f32]);
+
+/// One selectable implementation set of the four row-level kernels.
+pub struct KernelDispatch {
+    /// ISA label for summaries/benches: `scalar` | `avx2` | `neon`.
+    pub label: &'static str,
+    pub haar_fwd_level: LevelKernel,
+    pub haar_inv_level: LevelKernel,
+    pub db4_fwd_level: LevelKernel,
+    pub db4_inv_level: LevelKernel,
+}
+
+static SCALAR: KernelDispatch = KernelDispatch {
+    label: "scalar",
+    haar_fwd_level: super::haar_fwd_level_scalar,
+    haar_inv_level: super::haar_inv_level_scalar,
+    db4_fwd_level: super::db4_fwd_level_scalar,
+    db4_inv_level: super::db4_inv_level_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelDispatch = KernelDispatch {
+    label: "avx2",
+    haar_fwd_level: super::haar_simd::avx2::haar_fwd_level,
+    haar_inv_level: super::haar_simd::avx2::haar_inv_level,
+    db4_fwd_level: super::db4_simd::avx2::db4_fwd_level,
+    db4_inv_level: super::db4_simd::avx2::db4_inv_level,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelDispatch = KernelDispatch {
+    label: "neon",
+    haar_fwd_level: super::haar_simd::neon::haar_fwd_level,
+    haar_inv_level: super::haar_simd::neon::haar_inv_level,
+    db4_fwd_level: super::db4_simd::neon::db4_fwd_level,
+    db4_inv_level: super::db4_simd::neon::db4_inv_level,
+};
+
+/// The portable scalar table (always available; the bit-identity
+/// reference the SIMD batteries compare against).
+pub fn scalar() -> &'static KernelDispatch {
+    &SCALAR
+}
+
+/// The best table `auto` would pick on this host.
+fn best() -> &'static KernelDispatch {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        return &AVX2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    return &NEON;
+    #[cfg(not(target_arch = "aarch64"))]
+    &SCALAR
+}
+
+/// The SIMD table this host supports, if any — `None` means `auto`
+/// resolves to scalar (tests degrade to scalar==scalar there).
+pub fn simd() -> Option<&'static KernelDispatch> {
+    let b = best();
+    if std::ptr::eq(b, &SCALAR) {
+        None
+    } else {
+        Some(b)
+    }
+}
+
+/// Kernel-selection mode: the `simd` config key / `GWT_SIMD` env var.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Force the portable scalar kernels (A/B tests, CI matrix,
+    /// bit-identity triage).
+    Scalar,
+    /// Pick the best detected ISA (scalar when none).
+    #[default]
+    Auto,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> anyhow::Result<SimdMode> {
+        match s.trim().to_lowercase().as_str() {
+            "scalar" => Ok(SimdMode::Scalar),
+            "auto" => Ok(SimdMode::Auto),
+            other => anyhow::bail!("simd must be scalar|auto, got '{other}'"),
+        }
+    }
+
+    pub const fn label(self) -> &'static str {
+        match self {
+            SimdMode::Scalar => "scalar",
+            SimdMode::Auto => "auto",
+        }
+    }
+
+    /// The table this mode selects on this host.
+    pub fn table(self) -> &'static KernelDispatch {
+        match self {
+            SimdMode::Scalar => &SCALAR,
+            SimdMode::Auto => best(),
+        }
+    }
+}
+
+/// Read the `GWT_SIMD` env override. Like `GWT_TEST_THREADS`, a
+/// set-but-invalid value panics instead of silently running `auto`:
+/// a pin that doesn't pin would let a `GWT_SIMD=scalar` CI pass go
+/// green while still running SIMD.
+pub fn mode_from_env() -> SimdMode {
+    match std::env::var("GWT_SIMD") {
+        Ok(raw) => SimdMode::parse(&raw).unwrap_or_else(|e| panic!("GWT_SIMD: {e}")),
+        Err(_) => SimdMode::Auto,
+    }
+}
+
+static ACTIVE: AtomicPtr<KernelDispatch> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The table every `wavelet` row transform dispatches through.
+/// Lazily initialized from [`mode_from_env`] on first use; explicit
+/// [`set_mode`] (the CLI's config-resolution hook) overrides.
+pub fn active() -> &'static KernelDispatch {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if p.is_null() {
+        let t = mode_from_env().table();
+        ACTIVE.store(
+            t as *const KernelDispatch as *mut KernelDispatch,
+            Ordering::Release,
+        );
+        return t;
+    }
+    // Safety: only ever stores pointers to the 'static tables above.
+    unsafe { &*p }
+}
+
+/// ISA label of the active table (config summaries, bench notes).
+pub fn active_label() -> &'static str {
+    active().label
+}
+
+/// Pin the active table to `mode`'s selection. Called once at CLI
+/// startup with the resolved config value; tests use it to force
+/// scalar/auto and restore `mode_from_env()` afterwards.
+pub fn set_mode(mode: SimdMode) {
+    let t = mode.table();
+    ACTIVE.store(
+        t as *const KernelDispatch as *mut KernelDispatch,
+        Ordering::Release,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_parse_and_label() {
+        assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Scalar);
+        assert_eq!(SimdMode::parse("AUTO").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse(" auto ").unwrap(), SimdMode::Auto);
+        assert!(SimdMode::parse("avx512").is_err());
+        assert!(SimdMode::parse("").is_err());
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+        assert_eq!(SimdMode::Scalar.label(), "scalar");
+        assert_eq!(SimdMode::Auto.label(), "auto");
+    }
+
+    #[test]
+    fn scalar_mode_selects_scalar_table() {
+        assert!(std::ptr::eq(SimdMode::Scalar.table(), scalar()));
+        assert_eq!(scalar().label, "scalar");
+    }
+
+    #[test]
+    fn auto_table_is_scalar_or_detected_simd() {
+        let t = SimdMode::Auto.table();
+        match simd() {
+            Some(s) => {
+                assert!(std::ptr::eq(t, s));
+                assert!(matches!(s.label, "avx2" | "neon"), "{}", s.label);
+            }
+            None => assert!(std::ptr::eq(t, scalar())),
+        }
+    }
+
+    #[test]
+    fn set_mode_pins_and_restores() {
+        // Global state: other tests observe bit-identical tables
+        // either way, so flipping here is benign; restore the env
+        // resolution at the end regardless.
+        set_mode(SimdMode::Scalar);
+        assert_eq!(active_label(), "scalar");
+        set_mode(SimdMode::Auto);
+        assert_eq!(active_label(), SimdMode::Auto.table().label);
+        set_mode(mode_from_env());
+        assert_eq!(active_label(), mode_from_env().table().label);
+    }
+}

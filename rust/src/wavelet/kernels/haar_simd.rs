@@ -1,0 +1,179 @@
+//! SIMD Haar level kernels (AVX2 / NEON), bit-identical to
+//! [`super::haar_fwd_level_scalar`] / [`super::haar_inv_level_scalar`].
+//!
+//! The Haar butterflies are embarrassingly lane-parallel: output
+//! element `i` depends only on the input pair `(row[2i], row[2i+1])`
+//! (forward) or `(A[i], D[i])` (inverse), and the scalar loop does
+//! exactly one add/sub followed by one multiply per output. The
+//! vector forms perform those *same two operations* per lane —
+//! `add`/`sub` then `mul` by the splatted `INV_SQRT2`, never an FMA —
+//! so every lane reproduces the scalar bits exactly; only the
+//! even/odd (de)interleave shuffles differ, and shuffles move bits
+//! without rounding. Tails shorter than one vector run the scalar
+//! per-element code verbatim.
+
+// The deinterleave recipe used by the AVX2 kernels (shared with
+// db4_simd): `_mm256_permutevar8x32_ps` with index [0,2,4,6,1,3,5,7]
+// groups evens into the low half and odds into the high half of each
+// source vector; `_mm256_permute2f128_ps` then splices the two low
+// halves (evens) and the two high halves (odds).
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use crate::wavelet::INV_SQRT2;
+    use core::arch::x86_64::*;
+
+    /// Safe entry: the dispatch table only selects this module after
+    /// `is_x86_feature_detected!("avx2")`.
+    pub fn haar_fwd_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { haar_fwd_level_impl(row, scratch) }
+    }
+
+    pub fn haar_inv_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { haar_inv_level_impl(row, scratch) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn haar_fwd_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let w = row.len();
+        debug_assert!(w >= 2 && w % 2 == 0);
+        debug_assert!(scratch.len() >= w);
+        let half = w / 2;
+        let simd = half - half % 8;
+        let c = _mm256_set1_ps(INV_SQRT2);
+        let idx = _mm256_setr_epi32(0, 2, 4, 6, 1, 3, 5, 7);
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            // 16 consecutive inputs -> 8 even lanes + 8 odd lanes.
+            let v0 = _mm256_loadu_ps(rp.add(2 * i));
+            let v1 = _mm256_loadu_ps(rp.add(2 * i + 8));
+            let p0 = _mm256_permutevar8x32_ps(v0, idx);
+            let p1 = _mm256_permutevar8x32_ps(v1, idx);
+            let e = _mm256_permute2f128_ps::<0x20>(p0, p1);
+            let o = _mm256_permute2f128_ps::<0x31>(p0, p1);
+            // Same per-element ops as scalar: (e±o) then *INV_SQRT2.
+            let a = _mm256_mul_ps(_mm256_add_ps(e, o), c);
+            let d = _mm256_mul_ps(_mm256_sub_ps(e, o), c);
+            _mm256_storeu_ps(sp.add(i), a);
+            _mm256_storeu_ps(sp.add(half + i), d);
+            i += 8;
+        }
+        for i in simd..half {
+            let e = row[2 * i];
+            let o = row[2 * i + 1];
+            scratch[i] = (e + o) * INV_SQRT2;
+            scratch[half + i] = (e - o) * INV_SQRT2;
+        }
+        row.copy_from_slice(&scratch[..w]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn haar_inv_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let w2 = row.len();
+        debug_assert!(w2 >= 2 && w2 % 2 == 0);
+        debug_assert!(scratch.len() >= w2);
+        let w = w2 / 2;
+        let simd = w - w % 8;
+        let c = _mm256_set1_ps(INV_SQRT2);
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            let a = _mm256_loadu_ps(rp.add(i));
+            let d = _mm256_loadu_ps(rp.add(w + i));
+            let s = _mm256_mul_ps(_mm256_add_ps(a, d), c);
+            let t = _mm256_mul_ps(_mm256_sub_ps(a, d), c);
+            // Interleave (s, t) back to [s0 t0 s1 t1 ...]: unpack
+            // within 128-bit halves, then splice the halves.
+            let lo = _mm256_unpacklo_ps(s, t);
+            let hi = _mm256_unpackhi_ps(s, t);
+            _mm256_storeu_ps(sp.add(2 * i), _mm256_permute2f128_ps::<0x20>(lo, hi));
+            _mm256_storeu_ps(
+                sp.add(2 * i + 8),
+                _mm256_permute2f128_ps::<0x31>(lo, hi),
+            );
+            i += 8;
+        }
+        for i in simd..w {
+            let a = row[i];
+            let d = row[w + i];
+            scratch[2 * i] = (a + d) * INV_SQRT2;
+            scratch[2 * i + 1] = (a - d) * INV_SQRT2;
+        }
+        row.copy_from_slice(&scratch[..w2]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use crate::wavelet::INV_SQRT2;
+    use core::arch::aarch64::*;
+
+    /// Safe entry: NEON is baseline on aarch64, so no detection gate
+    /// is needed; the unsafe below is only the intrinsic calls.
+    pub fn haar_fwd_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { haar_fwd_level_impl(row, scratch) }
+    }
+
+    pub fn haar_inv_level(row: &mut [f32], scratch: &mut [f32]) {
+        unsafe { haar_inv_level_impl(row, scratch) }
+    }
+
+    unsafe fn haar_fwd_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let w = row.len();
+        debug_assert!(w >= 2 && w % 2 == 0);
+        debug_assert!(scratch.len() >= w);
+        let half = w / 2;
+        let simd = half - half % 4;
+        let c = vdupq_n_f32(INV_SQRT2);
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            // vld2 deinterleaves: .0 = evens, .1 = odds.
+            let eo = vld2q_f32(rp.add(2 * i));
+            let a = vmulq_f32(vaddq_f32(eo.0, eo.1), c);
+            let d = vmulq_f32(vsubq_f32(eo.0, eo.1), c);
+            vst1q_f32(sp.add(i), a);
+            vst1q_f32(sp.add(half + i), d);
+            i += 4;
+        }
+        for i in simd..half {
+            let e = row[2 * i];
+            let o = row[2 * i + 1];
+            scratch[i] = (e + o) * INV_SQRT2;
+            scratch[half + i] = (e - o) * INV_SQRT2;
+        }
+        row.copy_from_slice(&scratch[..w]);
+    }
+
+    unsafe fn haar_inv_level_impl(row: &mut [f32], scratch: &mut [f32]) {
+        let w2 = row.len();
+        debug_assert!(w2 >= 2 && w2 % 2 == 0);
+        debug_assert!(scratch.len() >= w2);
+        let w = w2 / 2;
+        let simd = w - w % 4;
+        let c = vdupq_n_f32(INV_SQRT2);
+        let rp = row.as_ptr();
+        let sp = scratch.as_mut_ptr();
+        let mut i = 0usize;
+        while i < simd {
+            let a = vld1q_f32(rp.add(i));
+            let d = vld1q_f32(rp.add(w + i));
+            let s = vmulq_f32(vaddq_f32(a, d), c);
+            let t = vmulq_f32(vsubq_f32(a, d), c);
+            // vst2 interleaves back to [s0 t0 s1 t1 ...].
+            vst2q_f32(sp.add(2 * i), float32x4x2_t(s, t));
+            i += 4;
+        }
+        for i in simd..w {
+            let a = row[i];
+            let d = row[w + i];
+            scratch[2 * i] = (a + d) * INV_SQRT2;
+            scratch[2 * i + 1] = (a - d) * INV_SQRT2;
+        }
+        row.copy_from_slice(&scratch[..w2]);
+    }
+}

@@ -1,0 +1,348 @@
+//! Row-kernel subsystem: the innermost loops of the wavelet
+//! transforms, with lane-parallel (SIMD) implementations selected at
+//! runtime behind a [`KernelDispatch`] table.
+//!
+//! Every wavelet consumer — `GwtAdam` row sharding, `Composed`'s
+//! generic wavelet path, the adaptive probe/migrate machinery, and
+//! the serve engine — funnels through four *level kernels* (one
+//! decomposition level over one row):
+//!
+//! * Haar forward / inverse: the 2-tap pairwise lifting butterflies;
+//! * DB4 forward / inverse: the 4-tap periodic stencils.
+//!
+//! This module owns the portable scalar forms (moved verbatim from
+//! `wavelet::haar_*_row` / `wavelet::db4::db4_*_level`), the AVX2 and
+//! NEON forms ([`haar_simd`], [`db4_simd`]), and the runtime
+//! selection ([`dispatch`]: `is_x86_feature_detected!("avx2")` on
+//! x86_64, unconditional NEON on aarch64, scalar elsewhere — with a
+//! `GWT_SIMD=scalar|auto` env/config override).
+//!
+//! ## Bit-identity contract
+//!
+//! The SIMD forms are required to be **bit-for-bit identical** to the
+//! scalar forms on every input, preserving the repo's step-engine
+//! determinism contract (serial == sharded at every worker count, so
+//! `GWT_SIMD` — like `TrainConfig::threads` — is a pure throughput
+//! knob). This is achievable because each output element of every
+//! kernel depends on a *fixed, tiny* set of inputs (Haar: one pair;
+//! DB4: four taps) with no cross-element reduction, so vector lanes
+//! can perform *exactly the same* floating-point operations in
+//! *exactly the same per-element order* as the scalar loop:
+//!
+//! * no FMA contraction (Rust never auto-fuses; the SIMD code uses
+//!   separate mul/add intrinsics only);
+//! * accumulations start from an explicit `0.0 +` matching the
+//!   scalar `acc = 0.0; acc += ...` pattern (`0.0 + (-0.0)` is
+//!   `+0.0`, so the leading zero-add is observable and kept);
+//! * no operand reassociation or commutation anywhere (x86 `addps`
+//!   NaN-payload propagation is operand-order-dependent).
+//!
+//! The contract is pinned by `tests/simd_kernels.rs` (randomized
+//! width/level `to_bits` battery) and the `parallel_determinism.rs`
+//! SIMD row. See `docs/simd-kernels.md` for the per-kernel argument.
+
+pub mod db4_simd;
+pub mod dispatch;
+pub mod haar_simd;
+
+pub use dispatch::{
+    active, active_label, mode_from_env, scalar, set_mode, simd,
+    KernelDispatch, SimdMode,
+};
+
+use super::db4::{G, H};
+use super::INV_SQRT2;
+
+// ---------------------------------------------------------------------------
+// Scalar level kernels (the portable fallback and the bit-identity
+// reference). Each transforms `row` in place using `scratch`
+// (len >= row.len()); `row.len()` is the current level's width
+// (even, >= 2).
+// ---------------------------------------------------------------------------
+
+/// One Haar forward level: `row` -> `[A | D]`.
+pub fn haar_fwd_level_scalar(row: &mut [f32], scratch: &mut [f32]) {
+    let w = row.len();
+    debug_assert!(w >= 2 && w % 2 == 0);
+    let half = w / 2;
+    for i in 0..half {
+        let e = row[2 * i];
+        let o = row[2 * i + 1];
+        scratch[i] = (e + o) * INV_SQRT2; // approximation
+        scratch[half + i] = (e - o) * INV_SQRT2; // detail D_k
+    }
+    row.copy_from_slice(&scratch[..w]);
+}
+
+/// One Haar inverse level: `[A | D]` -> `row`.
+pub fn haar_inv_level_scalar(row: &mut [f32], scratch: &mut [f32]) {
+    let w2 = row.len();
+    debug_assert!(w2 >= 2 && w2 % 2 == 0);
+    let w = w2 / 2;
+    for i in 0..w {
+        let a = row[i];
+        let d = row[w + i];
+        scratch[2 * i] = (a + d) * INV_SQRT2;
+        scratch[2 * i + 1] = (a - d) * INV_SQRT2;
+    }
+    row.copy_from_slice(&scratch[..w2]);
+}
+
+/// One DB4 forward level, periodic boundary: `row` -> `[A | D]`.
+pub fn db4_fwd_level_scalar(row: &mut [f32], scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(n >= 2 && n % 2 == 0);
+    let half = n / 2;
+    for i in 0..half {
+        let (a, d) = db4_fwd_point(row, n, i);
+        scratch[i] = a;
+        scratch[half + i] = d;
+    }
+    row.copy_from_slice(&scratch[..n]);
+}
+
+/// One DB4 inverse level, periodic boundary: `[A | D]` -> `row`.
+///
+/// Written in *gather* form — each output pair receives exactly two
+/// stencil contributions — but accumulating them in the same order
+/// the historical scatter loop (`scratch[(2i+k)%n] += ...` over
+/// `i = 0..half`) did, so the bits are unchanged: for output pair
+/// `p >= 1` the `i = p-1` (taps 2,3) contribution lands before the
+/// `i = p` (taps 0,1) one; the wrapping pair `p = 0` receives
+/// `i = 0` (taps 0,1) first, then `i = half-1` (taps 2,3).
+pub fn db4_inv_level_scalar(row: &mut [f32], scratch: &mut [f32]) {
+    let n = row.len();
+    debug_assert!(n >= 2 && n % 2 == 0);
+    let half = n / 2;
+    let (e0, o0) = db4_inv_point0(row, half);
+    scratch[0] = e0;
+    scratch[1] = o0;
+    for p in 1..half {
+        let (e, o) = db4_inv_point(row, half, p);
+        scratch[2 * p] = e;
+        scratch[2 * p + 1] = o;
+    }
+    row.copy_from_slice(&scratch[..n]);
+}
+
+// ---------------------------------------------------------------------------
+// Stencil-point helpers, shared between the scalar kernels and the
+// SIMD kernels' tail/wrap handling (one definition site for the
+// bit-identity-critical operation order).
+// ---------------------------------------------------------------------------
+
+/// DB4 forward stencil at output index `i`: `(a, d)` accumulated tap
+/// by tap from an explicit `0.0` (the reference operation order).
+#[inline]
+pub(crate) fn db4_fwd_point(row: &[f32], n: usize, i: usize) -> (f32, f32) {
+    let mut a = 0.0f32;
+    let mut d = 0.0f32;
+    for k in 0..4 {
+        let x = row[(2 * i + k) % n];
+        a += H[k] * x;
+        d += G[k] * x;
+    }
+    (a, d)
+}
+
+/// DB4 inverse output pair `(out[2p], out[2p+1])` for `p >= 1` (no
+/// wrap): previous stencil's taps 2/3 first, current stencil's taps
+/// 0/1 second — the scatter loop's accumulation order.
+#[inline]
+pub(crate) fn db4_inv_point(row: &[f32], half: usize, p: usize) -> (f32, f32) {
+    debug_assert!(p >= 1 && p < half);
+    let ap = row[p - 1];
+    let dp = row[half + p - 1];
+    let ac = row[p];
+    let dc = row[half + p];
+    let e = (0.0 + (H[2] * ap + G[2] * dp)) + (H[0] * ac + G[0] * dc);
+    let o = (0.0 + (H[3] * ap + G[3] * dp)) + (H[1] * ac + G[1] * dc);
+    (e, o)
+}
+
+/// DB4 inverse wrapping pair `(out[0], out[1])`: the `i = 0` stencil
+/// writes taps 0/1 here first; the `i = half-1` stencil wraps taps
+/// 2/3 around last. (For `n = 2`, `half-1 == 0` and both
+/// contributions come from the same stencil — still in this order.)
+#[inline]
+pub(crate) fn db4_inv_point0(row: &[f32], half: usize) -> (f32, f32) {
+    let a0 = row[0];
+    let d0 = row[half];
+    let al = row[half - 1];
+    let dl = row[2 * half - 1];
+    let e = (0.0 + (H[0] * a0 + G[0] * d0)) + (H[2] * al + G[2] * dl);
+    let o = (0.0 + (H[1] * a0 + G[1] * d0)) + (H[3] * al + G[3] * dl);
+    (e, o)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-level row drivers over an explicit dispatch table. The
+// `wavelet` module's public row functions call these with
+// `dispatch::active()`; tests and benches pass a pinned table to
+// compare implementations without touching global state.
+// ---------------------------------------------------------------------------
+
+/// Multi-level Haar forward of one row through table `k`.
+pub fn haar_fwd_row_with(
+    k: &KernelDispatch,
+    row: &mut [f32],
+    level: usize,
+    scratch: &mut [f32],
+) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n;
+    for _ in 0..level {
+        (k.haar_fwd_level)(&mut row[..w], scratch);
+        w /= 2;
+    }
+}
+
+/// Multi-level Haar inverse of one row through table `k`.
+pub fn haar_inv_row_with(
+    k: &KernelDispatch,
+    row: &mut [f32],
+    level: usize,
+    scratch: &mut [f32],
+) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n >> level;
+    for _ in 0..level {
+        (k.haar_inv_level)(&mut row[..2 * w], scratch);
+        w *= 2;
+    }
+}
+
+/// Multi-level DB4 forward of one row through table `k`.
+pub fn db4_fwd_row_with(
+    k: &KernelDispatch,
+    row: &mut [f32],
+    level: usize,
+    scratch: &mut [f32],
+) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n;
+    for _ in 0..level {
+        (k.db4_fwd_level)(&mut row[..w], scratch);
+        w /= 2;
+    }
+}
+
+/// Multi-level DB4 inverse of one row through table `k`.
+pub fn db4_inv_row_with(
+    k: &KernelDispatch,
+    row: &mut [f32],
+    level: usize,
+    scratch: &mut [f32],
+) {
+    let n = row.len();
+    debug_assert!(level == 0 || n % (1 << level) == 0);
+    let mut w = n >> level;
+    for _ in 0..level {
+        w *= 2;
+        (k.db4_inv_level)(&mut row[..w], scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    // The gather-form rewrite of the DB4 inverse level must equal the
+    // historical scatter form bit-for-bit (the scatter loop is
+    // reproduced here as the reference).
+    fn db4_inv_level_scatter(row: &mut [f32], scratch: &mut [f32]) {
+        let n = row.len();
+        let half = n / 2;
+        scratch[..n].fill(0.0);
+        for i in 0..half {
+            let a = row[i];
+            let d = row[half + i];
+            for k in 0..4 {
+                scratch[(2 * i + k) % n] += H[k] * a + G[k] * d;
+            }
+        }
+        row.copy_from_slice(&scratch[..n]);
+    }
+
+    #[test]
+    fn gather_inverse_matches_scatter_inverse_bitwise() {
+        let mut rng = Rng::new(0xdb4);
+        for &n in &[2usize, 4, 6, 8, 10, 14, 16, 30, 64, 96, 1024] {
+            for _ in 0..8 {
+                let x = rng.normal_vec(n, 1.0);
+                let mut scratch = vec![0.0f32; n];
+                let mut a = x.clone();
+                db4_inv_level_scalar(&mut a, &mut scratch);
+                let mut b = x.clone();
+                db4_inv_level_scatter(&mut b, &mut scratch);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_inverse_handles_signed_zero_like_scatter() {
+        // The scatter form starts from a fill(0.0); if the stencil
+        // contribution is -0.0, `0.0 + (-0.0)` is +0.0. The gather
+        // form keeps the explicit leading zero-add, so the bits agree
+        // even on all-(-0.0) input (where every product is -0.0... ×
+        // coefficients of both signs — mixed-sign zero sums exercise
+        // the IEEE-754 +0.0 rule).
+        for &n in &[2usize, 4, 8, 16] {
+            let x = vec![-0.0f32; n];
+            let mut scratch = vec![0.0f32; n];
+            let mut a = x.clone();
+            db4_inv_level_scalar(&mut a, &mut scratch);
+            let mut b = x.clone();
+            db4_inv_level_scatter(&mut b, &mut scratch);
+            let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn row_drivers_match_historical_row_loops() {
+        // The `_with(scalar())` drivers are the old wavelet row
+        // functions factored through the table — same bits.
+        let mut rng = Rng::new(7);
+        let (n, level) = (96usize, 5usize);
+        let x = rng.normal_vec(n, 1.0);
+        let mut scratch = vec![0.0f32; n];
+
+        let mut via_table = x.clone();
+        haar_fwd_row_with(scalar(), &mut via_table, level, &mut scratch);
+        let mut reference = x.clone();
+        {
+            // Historical haar_fwd_row loop body.
+            let mut w = n;
+            for _ in 0..level {
+                let half = w / 2;
+                for i in 0..half {
+                    let e = reference[2 * i];
+                    let o = reference[2 * i + 1];
+                    scratch[i] = (e + o) * INV_SQRT2;
+                    scratch[half + i] = (e - o) * INV_SQRT2;
+                }
+                reference[..w].copy_from_slice(&scratch[..w]);
+                w = half;
+            }
+        }
+        assert_eq!(
+            via_table.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        let mut back = via_table.clone();
+        haar_inv_row_with(scalar(), &mut back, level, &mut scratch);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

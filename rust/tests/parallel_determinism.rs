@@ -154,6 +154,52 @@ fn parallel_bank_bit_identical_for_every_optimizer() {
     }
 }
 
+/// The SIMD row of the determinism contract: pool-sharded steps on
+/// the auto-dispatched wavelet kernels (AVX2/NEON where detected)
+/// must be bit-identical to the serial run on the forced-scalar
+/// kernels, for every optimizer spec — `GWT_SIMD`, like `threads`,
+/// is a pure throughput knob. (Flipping the global kernel table here
+/// is benign for concurrently-running tests: every table produces
+/// the same bits on every input — that is exactly what this test
+/// pins.)
+#[test]
+fn pool_sharded_simd_matches_serial_scalar_for_every_optimizer() {
+    use gwt::wavelet::kernels::{self, SimdMode};
+    let shapes = nano_shapes();
+    for &opt in ALL_SPECS {
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        // Serial reference under forced-scalar kernels.
+        kernels::set_mode(SimdMode::Scalar);
+        let mut ser_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut ser_w = init_weights(&shapes, 21);
+        for step in 0..3u64 {
+            let grads = step_grads(&shapes, 100 + step);
+            step_bank(&mut ser_bank, &mut ser_w, &grads, 0.01, &Sharding::Serial);
+        }
+        // Pool-sharded runs under auto (SIMD where the host has it).
+        kernels::set_mode(SimdMode::Auto);
+        for threads in test_thread_grid() {
+            let pool = Sharding::pool(threads);
+            let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut w = init_weights(&shapes, 21);
+            for step in 0..3u64 {
+                let grads = step_grads(&shapes, 100 + step);
+                step_bank(&mut bank, &mut w, &grads, 0.01, &pool);
+            }
+            for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{opt:?} simd-vs-scalar threads={threads} param {} ({})",
+                    i,
+                    shapes[i].name
+                );
+            }
+        }
+    }
+    kernels::set_mode(kernels::mode_from_env());
+}
+
 /// Block-constant gradients (width 16) drive the greedy/anneal
 /// policies to deepen from the init level 2 — a migration is
 /// guaranteed to fire within the run.

@@ -1,0 +1,164 @@
+//! SIMD == scalar bit-identity battery for the wavelet level kernels.
+//!
+//! The `wavelet::kernels` contract is that every dispatch table
+//! (scalar, AVX2, NEON) produces **bit-for-bit identical** output on
+//! every input — `GWT_SIMD` is a pure throughput knob, like
+//! `threads`. These tests compare the scalar table against the
+//! detected SIMD table through the `_with` row drivers (no global
+//! state), across randomized widths/levels, minimum widths, tails
+//! shorter than one vector, and special values (signed zeros,
+//! subnormals). On hosts with no SIMD table (`kernels::simd()` is
+//! `None`) the battery degrades to scalar==scalar and still passes.
+//!
+//! CI runs this file under both `GWT_SIMD=scalar` and `GWT_SIMD=auto`
+//! (the env pin is asserted in the global-mode test below).
+
+use gwt::rng::Rng;
+use gwt::testing::prop_check;
+use gwt::wavelet::kernels::{self, KernelDispatch, SimdMode};
+use gwt::wavelet::db4::db4_fwd;
+use gwt::wavelet::{haar_fwd, haar_lowpass};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+type Driver = fn(&KernelDispatch, &mut [f32], usize, &mut [f32]);
+
+const DRIVERS: [(&str, Driver); 4] = [
+    ("haar_fwd", kernels::haar_fwd_row_with),
+    ("haar_inv", kernels::haar_inv_row_with),
+    ("db4_fwd", kernels::db4_fwd_row_with),
+    ("db4_inv", kernels::db4_inv_row_with),
+];
+
+/// The table pair under test: scalar vs detected SIMD (or scalar vs
+/// scalar on hosts without one — degenerate but keeps CI green on
+/// pre-AVX2 x86).
+fn table_pair() -> (&'static KernelDispatch, &'static KernelDispatch) {
+    (kernels::scalar(), kernels::simd().unwrap_or_else(kernels::scalar))
+}
+
+fn assert_drivers_agree(x: &[f32], level: usize, ctx: &str) {
+    let (scalar, simd) = table_pair();
+    let n = x.len();
+    let mut scratch = vec![0.0f32; n];
+    for (name, driver) in DRIVERS {
+        let mut a = x.to_vec();
+        driver(scalar, &mut a, level, &mut scratch);
+        let mut b = x.to_vec();
+        driver(simd, &mut b, level, &mut scratch);
+        assert_eq!(
+            bits(&a),
+            bits(&b),
+            "{name}: scalar vs {} diverged ({ctx}, n={n}, level={level})",
+            simd.label
+        );
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_randomized_rows() {
+    prop_check("simd == scalar (randomized widths/levels)", 150, |rng| {
+        let level = 1 + rng.usize_below(6);
+        // Odd block counts make every processed width hit a scalar
+        // tail; widths range from one vector's worth to far past it.
+        let blocks = 1 + rng.usize_below(40);
+        let n = blocks << level;
+        let x = rng.normal_vec(n, 1.0);
+        assert_drivers_agree(&x, level, "randomized");
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_matches_scalar_at_minimum_and_tail_widths() {
+    // n=2 is the minimum level width (the DB4 wrap-only case); the
+    // rest sit just below/above the 4-lane (NEON) and 8-lane (AVX2)
+    // boundaries so the scalar tail spans 0..lane-1 elements.
+    let mut rng = Rng::new(0x51);
+    for &n in &[2usize, 4, 6, 10, 14, 18, 30, 34, 62, 66, 128] {
+        for rep in 0..4 {
+            let x = rng.normal_vec(n, 1.0);
+            assert_drivers_agree(&x, 1, &format!("tail rep {rep}"));
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_multilevel_tails() {
+    // Deep levels shrink the processed width below one vector while
+    // earlier levels still run SIMD — both regimes inside one call.
+    let mut rng = Rng::new(0x52);
+    for &(n, level) in &[(64usize, 5usize), (96, 5), (160, 5), (1024, 10)] {
+        let x = rng.normal_vec(n, 1.0);
+        assert_drivers_agree(&x, level, "multilevel");
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_special_values() {
+    // Signed zeros (the `0.0 + (-0.0)` rule), subnormals, and large
+    // magnitudes — the values where a reordered or fused SIMD form
+    // would betray itself.
+    let patterns: [fn(usize) -> f32; 4] = [
+        |_| -0.0,
+        |i| if i % 2 == 0 { -0.0 } else { 0.0 },
+        |i| f32::from_bits(1 + (i as u32 % 7)), // subnormals
+        |i| {
+            let v = 1e30f32 * (1.0 + i as f32 * 0.25);
+            if i % 3 == 0 {
+                -v
+            } else {
+                v
+            }
+        },
+    ];
+    for (pi, pat) in patterns.iter().enumerate() {
+        let x: Vec<f32> = (0..64).map(pat).collect();
+        assert_drivers_agree(&x, 3, &format!("pattern {pi}"));
+    }
+}
+
+#[test]
+fn global_mode_pins_and_public_api_is_bit_stable() {
+    // One test owns the global dispatch state (set_mode) so the
+    // others — which only use explicit tables — cannot race it.
+    //
+    // First: when CI pins GWT_SIMD=scalar, the lazily-initialized
+    // active table must actually be scalar.
+    if std::env::var("GWT_SIMD").as_deref() == Ok("scalar") {
+        assert_eq!(kernels::mode_from_env(), SimdMode::Scalar);
+    }
+    assert!(
+        matches!(kernels::active_label(), "scalar" | "avx2" | "neon"),
+        "{}",
+        kernels::active_label()
+    );
+
+    // Second: the public matrix API (what GwtAdam / Composed / the
+    // adaptive probe sit on) returns the same bits under forced
+    // scalar and under auto.
+    let mut rng = Rng::new(0x53);
+    let (m, n, level) = (7usize, 96usize, 3usize);
+    let x = rng.normal_vec(m * n, 1.0);
+
+    kernels::set_mode(SimdMode::Scalar);
+    assert_eq!(kernels::active_label(), "scalar");
+    let haar_s = haar_fwd(&x, m, n, level);
+    let db4_s = db4_fwd(&x, m, n, level);
+    let low_s = haar_lowpass(&x, m, n, level);
+
+    kernels::set_mode(SimdMode::Auto);
+    let haar_a = haar_fwd(&x, m, n, level);
+    let db4_a = db4_fwd(&x, m, n, level);
+    let low_a = haar_lowpass(&x, m, n, level);
+
+    // Restore the env-resolved mode before asserting, so a failure
+    // below cannot leave a foreign table pinned for later tests.
+    kernels::set_mode(kernels::mode_from_env());
+
+    assert_eq!(bits(&haar_s), bits(&haar_a), "haar_fwd scalar vs auto");
+    assert_eq!(bits(&db4_s), bits(&db4_a), "db4_fwd scalar vs auto");
+    assert_eq!(bits(&low_s), bits(&low_a), "haar_lowpass scalar vs auto");
+}
