@@ -21,7 +21,7 @@
 
 use gwt::adapt::{selection_histogram, AdaptController};
 use gwt::bench_harness::{
-    bench_scale, scaled, time_fn, write_result, TableView,
+    bench_scale, scaled, time_fn, write_bench_file, write_result, TableView,
 };
 use gwt::config::{presets, OptSpec, TrainConfig};
 use gwt::memory::{measured_account, ParamShape};
@@ -267,9 +267,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     // -------- 10c: probe overhead --------
+    // Three identity+timing columns so the bench-regression gate can
+    // key these rows ((cells[0], cells[1]) -> cells[2]).
     let mut probe_table = TableView::new(
         "Fig 10c — probe overhead per step (micro, adapt-greedy+adam)",
-        &["section", "ms/iter"],
+        &["section", "preset", "median", "notes"],
     );
     {
         let preset = "micro";
@@ -293,18 +295,26 @@ fn main() -> anyhow::Result<()> {
             step_bank(&mut bank, &mut w, &grads, 0.001, &Sharding::Serial);
             probe_bank(&mut bank, &grads, &Sharding::Serial);
         });
-        probe_table
-            .row(vec!["step only".into(), format!("{:.3}", step_only.per_iter_ms())]);
+        probe_table.row(vec![
+            "step only".into(),
+            preset.into(),
+            format!("{:.3} ms", step_only.per_iter_ms()),
+            String::new(),
+        ]);
         probe_table.row(vec![
             "step + probe".into(),
-            format!("{:.3}", step_and_probe.per_iter_ms()),
+            preset.into(),
+            format!("{:.3} ms", step_and_probe.per_iter_ms()),
+            String::new(),
         ]);
         let overhead = (step_and_probe.median_ns - step_only.median_ns)
             / step_only.median_ns.max(1.0)
             * 100.0;
         probe_table.row(vec![
             "probe overhead".into(),
-            format!("{overhead:+.0}% (amortized /{cadence} at default cadence)"),
+            preset.into(),
+            format!("{overhead:+.0}%"),
+            format!("amortized /{cadence} at default cadence"),
         ]);
     }
 
@@ -320,5 +330,11 @@ fn main() -> anyhow::Result<()> {
     write_result("fig10a_adaptive_loss", &loss_table, vec![])?;
     write_result("fig10b_adaptive_dynamics", &dyn_table, vec![])?;
     write_result("fig10c_probe_overhead", &probe_table, vec![])?;
+    write_bench_file(
+        "fig10_adaptive",
+        &probe_table,
+        "probe-overhead timings only; the loss-proxy and dynamics \
+         tables are run outcomes, not latencies, and stay in results/",
+    )?;
     Ok(())
 }

@@ -13,7 +13,10 @@
 //! ci.sh smoke-invokes this bench (Part 1 at minimum), so keep the
 //! artifact-free section fast and dependency-free.
 
-use gwt::bench_harness::{bench_loader, pretrain, scaled, write_result, RunSpec, TableView};
+use gwt::bench_harness::{
+    bench_loader, pretrain, scaled, write_bench_file, write_result, RunSpec,
+    TableView,
+};
 use gwt::config::OptSpec;
 use gwt::rng::Rng;
 use gwt::runtime::Runtime;
@@ -103,6 +106,13 @@ fn main() -> anyhow::Result<()> {
     let Ok(rt) = Runtime::load("artifacts") else {
         println!("(skipping training ablation: no artifacts)");
         write_result("fig8_basis_ablation", &table, vec![])?;
+        write_bench_file(
+            "fig8_basis_ablation",
+            &table,
+            "transform-level rows only (no compiled artifacts); error \
+             ratios, not timings — the bench gate keys on them for \
+             presence, not latency",
+        )?;
         return Ok(());
     };
     let rt = std::sync::Arc::new(rt);
@@ -143,6 +153,11 @@ fn main() -> anyhow::Result<()> {
         "fig8_basis_ablation",
         &table,
         vec![("training", train_table.to_json())],
+    )?;
+    write_bench_file(
+        "fig8_basis_ablation",
+        &table,
+        "full run including the nano training ablation",
     )?;
     Ok(())
 }

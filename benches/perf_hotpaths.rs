@@ -9,7 +9,10 @@ use gwt::bench_harness::{
 use gwt::config::OptSpec;
 use gwt::linalg::{matmul, svd_jacobi};
 use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
-use gwt::pool::{accumulate_sharded, scoped_chunks_mut, Sharding, StepPool};
+use gwt::pool::{
+    accumulate_sharded, allreduce_mean_sharded, scoped_chunks_mut, Sharding,
+    StepPool,
+};
 use gwt::rng::Rng;
 use gwt::runtime::{literal_f32, literal_tokens};
 use gwt::tensor::Tensor;
@@ -226,6 +229,53 @@ fn main() -> anyhow::Result<()> {
                 "{:.2} GB/s, {:.2}x vs serial",
                 bytes / t_shard.median_ns,
                 t_ser.median_ns / t_shard.median_ns
+            ),
+        ]);
+    }
+
+    // DDP combine: full-band vs approximation-band all-reduce over 4
+    // replica shards (the `ddp::GradReducer` hot path). Bytes-moved
+    // counts the reduction payload contributed by the non-root
+    // replicas: full-band moves every element across the tree, the
+    // level-2 approx band moves 1/4 of them (at the cost of one
+    // forward transform per replica, included in the timing).
+    {
+        let (m, n, level) = (256usize, 1024usize, 2usize);
+        let replicas = 4usize;
+        let ddp_shards: Vec<Vec<f32>> = (0..replicas)
+            .map(|w| rng.normal_vec(m * n, w as f32 + 1.0))
+            .collect();
+        let ddp_pool = Sharding::pool(4);
+        let t_full = time_fn(2, 9, || {
+            std::hint::black_box(allreduce_mean_sharded(&ddp_pool, &ddp_shards));
+        });
+        let t_approx = time_fn(2, 9, || {
+            std::hint::black_box(gwt::ddp::approx_reduce(
+                &ddp_pool,
+                WaveletBasis::Haar,
+                level,
+                &ddp_shards,
+                m,
+                n,
+            ));
+        });
+        let full_bytes = (replicas - 1) * m * n * 4;
+        let approx_bytes = (replicas - 1) * m * (n >> level) * 4;
+        table.row(vec![
+            "ddp combine full-band x4".into(),
+            format!("{m}x{n}"),
+            format!("{:.2} ms", t_full.per_iter_ms()),
+            format!("{:.2} MB reduced per combine", full_bytes as f64 / 1e6),
+        ]);
+        table.row(vec![
+            "ddp combine approx-band x4".into(),
+            format!("{m}x{n} l={level}"),
+            format!("{:.2} ms", t_approx.per_iter_ms()),
+            format!(
+                "{:.2} MB reduced ({}x less) incl fwd, {:.2}x vs full",
+                approx_bytes as f64 / 1e6,
+                full_bytes / approx_bytes,
+                t_full.median_ns / t_approx.median_ns
             ),
         ]);
     }

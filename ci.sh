@@ -78,24 +78,28 @@ cargo run --release -- bench-check "$bench_baseline" \
     BENCH_perf_hotpaths.json --tol "${GWT_BENCH_TOL:-0.5}"
 rm -f "$bench_baseline"
 
-# Smoke the Haar-vs-DB4 basis-ablation bench: its transform-level
-# section is artifact-free, so this runs green on a fresh checkout
-# and covers the end-to-end ablation when artifacts are present.
-echo "== basis ablation bench (smoke) =="
-GWT_BENCH_SCALE=0.2 cargo bench --bench fig8_basis_ablation
-
-# Smoke the composition grid (transform+inner grammar): fully
-# artifact-free — asserts analytic state bytes == measured for every
-# gwt-{haar,db4}-l x {adam,adam8bit,sgdm} pair and times the bank step.
-echo "== composition bench (smoke) =="
-GWT_BENCH_SCALE=0.2 cargo bench --bench fig9_composition
-
-# Smoke the adaptive-compression bench: artifact-free — static
-# gwt-{1,2} vs adapt-{fixed,greedy,anneal} (loss proxy, state bytes
-# over time, probe overhead), with in-bench asserts that adapt-fixed
-# holds the gwt-2 footprint and adapt_budget_mb is a hard cap.
-echo "== adaptive bench (smoke) =="
-GWT_BENCH_SCALE=0.2 cargo bench --bench fig10_adaptive
+# Fig-bench smokes, each under the same snapshot + bench-check gate
+# as perf_hotpaths (the committed BENCH_*.json is the baseline; the
+# gate skips itself while a file is still the empty-rows placeholder
+# and compares only timing-formatted cells once recorded):
+# * fig8 — Haar-vs-DB4 basis ablation (transform-level section is
+#   artifact-free; error ratios gate on presence, not latency);
+# * fig9 — composition grid, asserts analytic state bytes == measured
+#   for every gwt-{haar,db4}-l x {adam,adam8bit,sgdm} pair and times
+#   the bank step;
+# * fig10 — adaptive compression (loss proxy, dynamics, probe
+#   overhead), with in-bench asserts that adapt-fixed holds the gwt-2
+#   footprint and adapt_budget_mb is a hard cap.
+for fig in fig8_basis_ablation fig9_composition fig10_adaptive; do
+    bench_baseline=$(mktemp)
+    cp "BENCH_$fig.json" "$bench_baseline"
+    echo "== $fig bench (smoke) =="
+    GWT_BENCH_SCALE=0.2 cargo bench --bench "$fig"
+    echo "== bench regression gate ($fig) =="
+    cargo run --release -- bench-check "$bench_baseline" \
+        "BENCH_$fig.json" --tol "${GWT_BENCH_TOL:-0.5}"
+    rm -f "$bench_baseline"
+done
 
 # Job-engine smoke: two tiny synthetic jobs sharing one pool under a
 # deliberately tight budget (1.2x the largest single-job charge), so
@@ -116,6 +120,29 @@ for path in auto rust; do
         || { echo "job engine smoke: 'c' never finished"; exit 1; }
 done
 
+# Replica-matrix smoke: the wavelet-domain DDP path end-to-end.
+# `replicas=1` is the passthrough pin (no comm ledger); `replicas=4`
+# runs the compressed approximation-band all-reduce and must report
+# its communication volume (the "Nx vs full" multiple) in the per-job
+# summary. Artifact-free, under both gwt_path settings like the rest.
+for path in auto rust; do
+    for r in 1 4; do
+        echo "== replica matrix smoke (gwt_path=$path replicas=$r) =="
+        out=$(cargo run --release -- serve --synthetic \
+            -s gwt_path="$path" -s replicas="$r" \
+            "name=r,optimizer=gwt-2,steps=6" | tee /dev/stderr)
+        grep -q "finished job 'r'" <<<"$out" \
+            || { echo "replica smoke: job never finished"; exit 1; }
+        if [[ "$r" -gt 1 ]]; then
+            grep -q "vs full" <<<"$out" \
+                || { echo "replica smoke: expected a comm summary"; exit 1; }
+        else
+            grep -q "vs full" <<<"$out" \
+                && { echo "replica smoke: single replica logged comm"; exit 1; }
+        fi
+    done
+done
+
 # Composed-spec e2e: one previously unreachable composition
 # (wavelet-compressed 8-bit Adam) trains via its CLI spec string,
 # under both gwt_path settings (the knob must be inert for non-Adam
@@ -128,6 +155,12 @@ if [[ -f artifacts/manifest.json ]]; then
             -s preset=nano -s optimizer=gwt-db4-1+adam8bit \
             -s steps=20 -s eval_every=10 -s gwt_path="$path"
     done
+    # Replicated e2e: 4 logical replicas over disjoint PJRT data
+    # shards, combined through the approximation-band all-reduce
+    # (`--replicas` is the CLI spelling of the `replicas` config key).
+    echo "== replicated e2e: gwt-2 --replicas 4 =="
+    cargo run --release -- train --replicas 4 \
+        -s preset=nano -s optimizer=gwt-2 -s steps=12 -s eval_every=6
     # Adaptive e2e: probe + policy + migration in a real training
     # loop, under both gwt_path settings (the knob is inert for
     # adaptive specs — they always run the rust paths, since HLO

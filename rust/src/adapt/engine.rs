@@ -259,6 +259,26 @@ impl MatrixOpt for AdaptiveWavelet {
     fn adaptive(&mut self) -> Option<&mut dyn AdaptiveOpt> {
         Some(self)
     }
+
+    /// Coefficient-domain seam, Fused core only — same trade as
+    /// `Composed`. NOTE: `ddp::GradReducer` deliberately does NOT use
+    /// this seam for adaptive specs (the adapt probe needs the full
+    /// weight-domain gradient stream; see docs/ddp.md), but the entry
+    /// exists and is pinned so the seam stays valid across migrations.
+    fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
+        match &self.core {
+            Core::Fused(f) => f.coeff_band(),
+            Core::Generic { .. } => None,
+        }
+    }
+
+    fn direction_from_coeffs(&mut self, c: &Tensor, lr_eff: f32) -> Option<Tensor> {
+        assert_eq!(c.shape(), &[self.rows, self.cols]);
+        match &mut self.core {
+            Core::Fused(f) => f.direction_from_coeffs(c, lr_eff),
+            Core::Generic { .. } => None,
+        }
+    }
 }
 
 impl AdaptiveOpt for AdaptiveWavelet {

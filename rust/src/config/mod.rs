@@ -418,6 +418,37 @@ impl OptSpec {
     }
 }
 
+/// Cross-replica reduction domain for `crate::ddp` (`ddp_reduce`
+/// key). `Auto` reduces each parameter over the compact wavelet
+/// approximation band when its optimizer exposes a coefficient-domain
+/// step ([`crate::optim::MatrixOpt::coeff_band`]) and full-band
+/// otherwise; `Full` pins every parameter to the full-band path,
+/// which is bit-identical to the single-replica `combine_grads`
+/// reduction (the DDP determinism baseline).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DdpReduce {
+    #[default]
+    Auto,
+    Full,
+}
+
+impl DdpReduce {
+    pub fn parse(s: &str) -> Result<DdpReduce> {
+        match s.trim().to_lowercase().as_str() {
+            "auto" => Ok(DdpReduce::Auto),
+            "full" => Ok(DdpReduce::Full),
+            other => bail!("ddp_reduce must be auto|full, got '{other}'"),
+        }
+    }
+
+    pub const fn label(self) -> &'static str {
+        match self {
+            DdpReduce::Auto => "auto",
+            DdpReduce::Full => "full",
+        }
+    }
+}
+
 /// Execution-path selection for GWT-Adam steps (`gwt_path` key).
 ///
 /// Resolved once per optimizer-bank construction (not per
@@ -466,6 +497,20 @@ pub struct TrainConfig {
     pub grad_accum: usize,
     /// Data-parallel worker count (thread-simulated GPUs).
     pub dp_workers: usize,
+    /// Logical model replicas for wavelet-domain data parallelism
+    /// (`crate::ddp`): each replica consumes its own data shard; their
+    /// gradients are tree-all-reduced — over only the wavelet
+    /// approximation band where the optimizer allows — before one
+    /// shared bank steps. `1` disables the reducer entirely. Mutually
+    /// exclusive with `dp_workers > 1` (both occupy the data-shard
+    /// axis; see [`TrainConfig::round_width`]).
+    pub replicas: usize,
+    /// Cross-replica reduction domain (`ddp_reduce` key): `auto` =
+    /// approximation-band all-reduce wherever the optimizer exposes a
+    /// coefficient-domain step (falling back to full-band per param),
+    /// `full` = always reduce full weight-domain gradients (bitwise
+    /// the legacy `combine_grads` path). Inert when `replicas == 1`.
+    pub ddp_reduce: DdpReduce,
     /// Parallel step-engine worker threads for the optimizer bank /
     /// GWT row sharding / microbatch gradient accumulation — one
     /// persistent `pool::StepPool` spawned per run (`pool::Sharding`).
@@ -536,6 +581,8 @@ impl Default for TrainConfig {
             seed: 0,
             grad_accum: 1,
             dp_workers: 1,
+            replicas: 1,
+            ddp_reduce: DdpReduce::Auto,
             threads: 1,
             nl_gamma: 1.01,
             modulewise_lr: true,
@@ -574,6 +621,8 @@ impl TrainConfig {
             "seed" => self.seed = v.parse().context("seed")?,
             "grad_accum" => self.grad_accum = v.parse().context("grad_accum")?,
             "dp_workers" => self.dp_workers = v.parse().context("dp_workers")?,
+            "replicas" => self.replicas = v.parse().context("replicas")?,
+            "ddp_reduce" => self.ddp_reduce = DdpReduce::parse(v)?,
             "threads" => self.threads = v.parse().context("threads")?,
             "nl_gamma" => self.nl_gamma = v.parse().context("nl_gamma")?,
             "modulewise_lr" => self.modulewise_lr = parse_bool(v)?,
@@ -654,6 +703,17 @@ impl TrainConfig {
         }
         if self.lr <= 0.0 || self.steps == 0 || self.grad_accum == 0 || self.dp_workers == 0 {
             bail!("lr/steps/grad_accum/dp_workers must be positive");
+        }
+        if self.replicas == 0 {
+            bail!("replicas must be positive");
+        }
+        if self.replicas > 1 && self.dp_workers > 1 {
+            bail!(
+                "replicas and dp_workers both occupy the data-shard axis; \
+                 set at most one of them above 1 (replicas={} dp_workers={})",
+                self.replicas,
+                self.dp_workers
+            );
         }
         if !(0.0..=1.0).contains(&self.warmup_frac) {
             bail!("warmup_frac must be in [0,1]");
@@ -746,6 +806,20 @@ impl TrainConfig {
     /// the host's available parallelism, capped by the preset's
     /// useful maximum (one worker per parameter tensor); an explicit
     /// positive value is honored as-is.
+    /// Number of per-round gradient producers a `GradSource` must
+    /// yield: the replica count when DDP is on, the data-parallel
+    /// worker count otherwise (validation rejects both > 1 — they are
+    /// one axis with two reduction semantics, and `replicas=R` feeds
+    /// the exact worker batches `dp_workers=R` would, which is what
+    /// makes full-band DDP bit-identical to the legacy path).
+    pub fn round_width(&self) -> usize {
+        if self.replicas > 1 {
+            self.replicas
+        } else {
+            self.dp_workers
+        }
+    }
+
     pub fn resolve_threads(&self) -> usize {
         if self.threads > 0 {
             return self.threads;
@@ -767,6 +841,10 @@ impl TrainConfig {
         m.insert("alpha".into(), format!("{}", self.alpha));
         m.insert("steps".into(), format!("{}", self.steps));
         m.insert("dp_workers".into(), format!("{}", self.dp_workers));
+        m.insert("replicas".into(), format!("{}", self.replicas));
+        if self.replicas > 1 {
+            m.insert("ddp_reduce".into(), self.ddp_reduce.label().into());
+        }
         m.insert("threads".into(), format!("{}", self.threads));
         m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
         m.insert("sgd_momentum".into(), format!("{}", self.sgd_momentum));
@@ -986,6 +1064,35 @@ mod tests {
             assert_eq!(cfg.resolve_gwt_path(), GwtPath::Auto);
             assert_eq!(cfg.summary()["gwt_path"], "auto");
         }
+    }
+
+    #[test]
+    fn config_accepts_replica_keys() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.round_width(), 1);
+        // replicas=1: ddp_reduce is inert and hidden from the summary.
+        assert_eq!(cfg.summary()["replicas"], "1");
+        assert!(!cfg.summary().contains_key("ddp_reduce"));
+        cfg.apply_text("replicas = 4\nddp_reduce = full\n").unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.ddp_reduce, DdpReduce::Full);
+        assert_eq!(cfg.round_width(), 4);
+        assert_eq!(cfg.summary()["replicas"], "4");
+        assert_eq!(cfg.summary()["ddp_reduce"], "full");
+        cfg.validate().unwrap();
+        assert!(cfg.apply_text("ddp_reduce = approx").is_err());
+        // replicas and dp_workers are one axis — both > 1 is rejected.
+        cfg.dp_workers = 2;
+        assert!(cfg.validate().is_err());
+        cfg.dp_workers = 1;
+        cfg.replicas = 0;
+        assert!(cfg.validate().is_err());
+        // dp_workers drives the round width when DDP is off.
+        let mut legacy = TrainConfig { dp_workers: 3, ..Default::default() };
+        assert_eq!(legacy.round_width(), 3);
+        legacy.set("ddp_reduce", "auto").unwrap();
+        assert_eq!(legacy.ddp_reduce, DdpReduce::Auto);
     }
 
     #[test]

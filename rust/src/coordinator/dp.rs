@@ -45,6 +45,14 @@ impl DpGroup {
 /// gradient or an exec returned a short output — and is reported as
 /// an error naming the offending worker instead of a panic deep in
 /// the transpose.
+///
+/// This is the *full-band* reduction: every gradient element crosses
+/// the tree. `crate::ddp::GradReducer` wraps it for replicated jobs —
+/// delegating here verbatim in full-band mode (which is what pins the
+/// two paths bitwise) and swapping in the approximation-band
+/// compressed reduce where the optimizer allows. The reduction order
+/// itself is `pool::allreduce_sum`'s documented binomial tree, with
+/// workers in ascending index order.
 pub fn combine_grads(worker_grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
     let workers = worker_grads.len();
     if workers == 0 {

@@ -1,0 +1,528 @@
+//! Wavelet-domain data-parallel replicas: compressed all-reduce over
+//! the approximation band.
+//!
+//! The GWT paper frames wavelet subspaces as *scalable* state
+//! compression; this module makes the same decomposition serve
+//! communication. R logical model replicas each consume their own
+//! data shard and produce a full gradient per step. Instead of
+//! all-reducing full-width gradients and letting each optimizer
+//! re-derive its coefficients (transform → reduce → inverse →
+//! re-forward), the reducer applies the forward transform **once per
+//! replica**, tree-all-reduces only the retained approximation band
+//! (`n >> level` of `n` columns — a `2^level`× payload reduction),
+//! and feeds the reduced coefficients straight into the optimizer's
+//! coefficient-domain step entry
+//! ([`MatrixOpt::coeff_band`][crate::optim::MatrixOpt::coeff_band] /
+//! `direction_from_coeffs`). Detail bands are *dropped* (zeroed), the
+//! communication-side analogue of the optimizer keeping moments only
+//! over the approximation band.
+//!
+//! ## Determinism contract
+//!
+//! Everything here is pinned bit-identical (rust/tests/
+//! ddp_determinism.rs) along three axes:
+//!
+//! * **R = 1** is a pure passthrough — `GradReducer` plans nothing,
+//!   delegates to [`combine_grads`], and logs no traffic, so a
+//!   1-replica job is bit-identical to the plain trainer loop.
+//! * **Full-band mode** (`ddp_reduce = full`, or any parameter whose
+//!   optimizer exposes no coefficient seam) delegates to the exact
+//!   [`combine_grads`] tree — bitwise the legacy `dp_workers` path.
+//! * **Thread/SIMD invariance**: the per-replica forward transform is
+//!   row-sharded with fixed `chunk_bounds` boundaries and per-row
+//!   independence, and the cross-replica reduction replays
+//!   `pool::allreduce_sum`'s documented binomial tree per element
+//!   ([`allreduce_mean_sharded`]) with replicas in fixed ascending
+//!   index order — so worker count and `GWT_SIMD` mode never change a
+//!   bit.
+//!
+//! ## Adaptive specs reduce full-band
+//!
+//! `adapt-*` optimizers could step from coefficients (the seam exists
+//! on `AdaptiveWavelet`), but their probe consumes the *weight-domain*
+//! gradient stream: an approximation-band-only reduce would feed the
+//! probe zero detail energy, making every candidate level look
+//! perfectly compressible and the policy self-reinforce deeper
+//! levels. [`GradReducer::plan`] therefore pins adaptive configs to
+//! the full-band path; see docs/ddp.md.
+//!
+//! ## Communication accounting
+//!
+//! A tree all-reduce over R shards moves `R-1` payload-sized messages
+//! (one per tree edge), so the reducer charges
+//! `(R-1) · payload_elems · 4` bytes per parameter per combine, and
+//! the counterfactual `(R-1) · numel · 4` to `full_bytes`. Per-step
+//! totals land in [`CommLog`] (flushed by [`GradReducer::log_step`]);
+//! `serve` surfaces them per job.
+
+use anyhow::Result;
+
+use crate::config::{DdpReduce, TrainConfig, TransformSpec};
+use crate::coordinator::dp::combine_grads;
+use crate::memory::ParamShape;
+use crate::metrics::{CommLog, CommRecord};
+use crate::optim::ParamOptimizer;
+use crate::pool::{allreduce_mean, allreduce_mean_sharded, Sharding};
+use crate::wavelet::WaveletBasis;
+
+/// One parameter's reduction plan when the compressed path is on:
+/// which decomposition to transform into, and the matrix geometry
+/// (the flat gradient is `rows × cols` row-major).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandPlan {
+    pub basis: WaveletBasis,
+    pub level: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl BandPlan {
+    /// Approximation-band width per row.
+    pub fn approx_cols(&self) -> usize {
+        self.cols >> self.level
+    }
+}
+
+/// The cross-replica gradient reducer: owns the reduce-mode decision,
+/// the per-parameter band plans, and the communication ledger.
+pub struct GradReducer {
+    replicas: usize,
+    reduce: DdpReduce,
+    /// Adaptive specs are pinned to full-band (see module docs).
+    adaptive: bool,
+    pending_bytes: usize,
+    pending_full_bytes: usize,
+    pub comm: CommLog,
+}
+
+impl GradReducer {
+    pub fn new(cfg: &TrainConfig) -> GradReducer {
+        let adaptive = matches!(
+            cfg.optimizer.transform(),
+            Some(TransformSpec::Adaptive { .. })
+        );
+        GradReducer {
+            replicas: cfg.replicas,
+            reduce: cfg.ddp_reduce,
+            adaptive,
+            pending_bytes: 0,
+            pending_full_bytes: 0,
+            comm: CommLog::default(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Resolve the per-parameter reduction plan against the current
+    /// bank. `None` entries reduce full-band; `Some` entries reduce
+    /// the approximation band of that decomposition. Resolved once
+    /// per optimizer step (migrations happen *post*-step, so a plan
+    /// never straddles a decomposition change — and adaptive configs
+    /// are all-`None` anyway).
+    pub fn plan(
+        &self,
+        bank: &[ParamOptimizer],
+        shapes: &[ParamShape],
+    ) -> Vec<Option<BandPlan>> {
+        assert_eq!(bank.len(), shapes.len(), "bank/shapes length mismatch");
+        if self.replicas <= 1
+            || self.reduce == DdpReduce::Full
+            || self.adaptive
+        {
+            return vec![None; bank.len()];
+        }
+        bank.iter()
+            .zip(shapes)
+            .map(|(opt, p)| {
+                let (basis, level) = opt.coeff_band()?;
+                // The coefficient seam only exists on 2D fused engines.
+                debug_assert_eq!(p.shape.len(), 2, "coeff seam on non-matrix");
+                Some(BandPlan {
+                    basis,
+                    level,
+                    rows: p.shape[0],
+                    cols: p.shape[1],
+                })
+            })
+            .collect()
+    }
+
+    /// Combine per-replica per-param gradients under `plan`. Input
+    /// and output match [`combine_grads`]: `worker_grads[r][p]` flat
+    /// data in, averaged `[p]` out — except that `Some`-planned
+    /// parameters come back as *coefficient* tensors (approximation
+    /// band populated, detail bands zero) for
+    /// [`crate::optim::step_bank_mixed`] to route through the bank's
+    /// coefficient entries.
+    ///
+    /// An all-`None` plan delegates wholesale to [`combine_grads`],
+    /// which is what guarantees full-band mode reproduces the legacy
+    /// path bit for bit.
+    pub fn combine(
+        &mut self,
+        worker_grads: Vec<Vec<Vec<f32>>>,
+        plan: &[Option<BandPlan>],
+        sharding: &Sharding,
+    ) -> Result<Vec<Vec<f32>>> {
+        let r = worker_grads.len();
+        if r <= 1 || plan.iter().all(|p| p.is_none()) {
+            let full_elems: usize = worker_grads
+                .first()
+                .map(|w| w.iter().map(|g| g.len()).sum())
+                .unwrap_or(0);
+            let out = combine_grads(worker_grads)?;
+            if r > 1 {
+                let moved = (r - 1) * full_elems * 4;
+                self.pending_bytes += moved;
+                self.pending_full_bytes += moved;
+            }
+            return Ok(out);
+        }
+        // Mixed path: same topology validation as `combine_grads`,
+        // same error wording, so callers see one contract.
+        let n_params = worker_grads[0].len();
+        anyhow::ensure!(
+            plan.len() == n_params,
+            "GradReducer::combine: plan covers {} params, workers produced \
+             {n_params}",
+            plan.len()
+        );
+        for (w, grads) in worker_grads.iter().enumerate() {
+            if grads.len() != n_params {
+                anyhow::bail!(
+                    "combine_grads: ragged input — worker {w} produced {} \
+                     param gradients, worker 0 produced {n_params}",
+                    grads.len()
+                );
+            }
+            for (p, g) in grads.iter().enumerate() {
+                let want = worker_grads[0][p].len();
+                if g.len() != want {
+                    anyhow::bail!(
+                        "combine_grads: ragged input — worker {w} param {p} \
+                         has {} elements, worker 0 has {want}",
+                        g.len()
+                    );
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(n_params);
+        let mut per_worker: Vec<std::vec::IntoIter<Vec<f32>>> =
+            worker_grads.into_iter().map(|w| w.into_iter()).collect();
+        for bp in plan.iter().take(n_params) {
+            // Replica shards in fixed ascending index order — the
+            // order `allreduce_sum`'s tree contract is defined over.
+            let shards: Vec<Vec<f32>> =
+                per_worker.iter_mut().map(|it| it.next().unwrap()).collect();
+            match bp {
+                None => {
+                    let numel = shards[0].len();
+                    self.pending_bytes += (r - 1) * numel * 4;
+                    self.pending_full_bytes += (r - 1) * numel * 4;
+                    out.push(allreduce_mean(shards));
+                }
+                Some(bp) => {
+                    let numel = shards[0].len();
+                    anyhow::ensure!(
+                        numel == bp.rows * bp.cols,
+                        "GradReducer::combine: param is {numel} elements, \
+                         plan says {}x{}",
+                        bp.rows,
+                        bp.cols
+                    );
+                    let q = bp.approx_cols();
+                    self.pending_bytes += (r - 1) * bp.rows * q * 4;
+                    self.pending_full_bytes += (r - 1) * numel * 4;
+                    let compact = approx_reduce(
+                        sharding, bp.basis, bp.level, &shards, bp.rows,
+                        bp.cols,
+                    );
+                    // Scatter the reduced band into a zeroed full
+                    // coefficient tensor ([A_l | 0 … 0] per row):
+                    // detail bands are dropped, by design.
+                    let mut coeffs = vec![0.0f32; numel];
+                    for (crow, arow) in coeffs
+                        .chunks_exact_mut(bp.cols)
+                        .zip(compact.chunks_exact(q))
+                    {
+                        crow[..q].copy_from_slice(arow);
+                    }
+                    out.push(coeffs);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Flush the traffic accumulated by [`GradReducer::combine`]
+    /// since the last flush into the ledger as one per-step record
+    /// (gradient accumulation folds its microbatch combines into that
+    /// step's record). No-op when nothing moved (R = 1).
+    pub fn log_step(&mut self, step: usize) {
+        if self.pending_full_bytes == 0 {
+            return;
+        }
+        self.comm.push(CommRecord {
+            step,
+            full_bytes: self.pending_full_bytes,
+            bytes: self.pending_bytes,
+        });
+        self.pending_bytes = 0;
+        self.pending_full_bytes = 0;
+    }
+}
+
+/// Forward-transform each row of the flat `rows × cols` gradient and
+/// keep only the approximation band: returns `rows × (cols >> level)`
+/// compact data. Row-sharded over `sharding` with per-worker
+/// persistent `(row, scratch)` buffers; each row's transform is the
+/// same `fwd_row` call at any worker count, so the output is
+/// bit-identical across the thread grid (and across `GWT_SIMD` modes,
+/// by the kernel tables' own bit-identity contract).
+fn approx_forward(
+    sharding: &Sharding,
+    basis: WaveletBasis,
+    level: usize,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    assert_eq!(g.len(), rows * cols, "gradient/geometry mismatch");
+    let q = cols >> level;
+    let mut compact = vec![0.0f32; rows * q];
+    let mut items: Vec<_> = g
+        .chunks_exact(cols)
+        .zip(compact.chunks_exact_mut(q))
+        .collect();
+    sharding.run_chunks_mut(
+        &mut items,
+        |_| (vec![0.0f32; cols], vec![0.0f32; cols]),
+        |(row, scratch), _, chunk| {
+            for (gr, ar) in chunk.iter_mut() {
+                row.copy_from_slice(gr);
+                basis.fwd_row(row, level, scratch);
+                ar.copy_from_slice(&row[..q]);
+            }
+        },
+    );
+    compact
+}
+
+/// The compressed all-reduce primitive: transform each replica's
+/// `rows × cols` gradient, tree-average the approximation bands in
+/// replica-index order, return the `rows × (cols >> level)` compact
+/// mean. Public for the perf_hotpaths bench (full-band vs approx-band
+/// bytes/latency rows).
+pub fn approx_reduce(
+    sharding: &Sharding,
+    basis: WaveletBasis,
+    level: usize,
+    shards: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    let bands: Vec<Vec<f32>> = shards
+        .iter()
+        .map(|g| approx_forward(sharding, basis, level, g, rows, cols))
+        .collect();
+    allreduce_mean_sharded(sharding, &bands)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptSpec;
+    use crate::optim::build_optimizers_sharded;
+    use crate::rng::Rng;
+
+    fn shapes() -> Vec<ParamShape> {
+        vec![
+            ParamShape {
+                name: "blk.attn".into(),
+                shape: vec![8, 64],
+                eligible: true,
+            },
+            ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+        ]
+    }
+
+    fn cfg(optimizer: &str, replicas: usize) -> TrainConfig {
+        TrainConfig {
+            optimizer: OptSpec::parse(optimizer).unwrap(),
+            replicas,
+            ..Default::default()
+        }
+    }
+
+    fn bank(cfg: &TrainConfig) -> Vec<ParamOptimizer> {
+        build_optimizers_sharded(&shapes(), cfg, None, Sharding::Serial)
+            .unwrap()
+    }
+
+    #[test]
+    fn plan_is_empty_for_single_replica_full_mode_and_adaptive() {
+        for (spec, replicas, reduce) in [
+            ("gwt-2", 1, DdpReduce::Auto),
+            ("gwt-2", 4, DdpReduce::Full),
+            ("adapt-greedy", 4, DdpReduce::Auto),
+        ] {
+            let mut c = cfg(spec, replicas);
+            c.ddp_reduce = reduce;
+            let r = GradReducer::new(&c);
+            let plan = r.plan(&bank(&c), &shapes());
+            assert!(plan.iter().all(|p| p.is_none()), "{spec} R={replicas}");
+        }
+    }
+
+    #[test]
+    fn plan_reads_the_coefficient_seam_per_param() {
+        let c = cfg("gwt-db4-2", 4);
+        let r = GradReducer::new(&c);
+        let plan = r.plan(&bank(&c), &shapes());
+        assert_eq!(
+            plan[0],
+            Some(BandPlan {
+                basis: WaveletBasis::Db4,
+                level: 2,
+                rows: 8,
+                cols: 64,
+            })
+        );
+        // Non-eligible params (identity transform) reduce full-band.
+        assert_eq!(plan[1], None);
+        // Specs without a fused coefficient engine reduce full-band.
+        let c8 = cfg("gwt-2+adam8bit", 4);
+        let plan8 = GradReducer::new(&c8).plan(&bank(&c8), &shapes());
+        assert!(plan8.iter().all(|p| p.is_none()));
+    }
+
+    #[test]
+    fn all_none_plan_is_combine_grads_bitwise() {
+        let mut rng = Rng::new(0xdd9);
+        let worker_grads: Vec<Vec<Vec<f32>>> = (0..3)
+            .map(|_| vec![rng.normal_vec(512, 1.0), rng.normal_vec(16, 1.0)])
+            .collect();
+        let want = combine_grads(worker_grads.clone()).unwrap();
+        let c = cfg("gwt-2", 3);
+        let mut r = GradReducer::new(&c);
+        let got = r
+            .combine(worker_grads, &[None, None], &Sharding::Serial)
+            .unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            let gb: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb);
+        }
+        // Full-band traffic: (R-1) · Σnumel · 4 bytes, ratio 1.
+        r.log_step(1);
+        assert_eq!(r.comm.total_full_bytes(), 2 * (512 + 16) * 4);
+        assert_eq!(r.comm.total_bytes(), 2 * (512 + 16) * 4);
+    }
+
+    #[test]
+    fn approx_plan_reduces_band_and_zeroes_details() {
+        let mut rng = Rng::new(0xdda);
+        let (rows, cols, level) = (4usize, 32usize, 2usize);
+        let q = cols >> level;
+        let shards: Vec<Vec<f32>> =
+            (0..2).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+        let bp = BandPlan { basis: WaveletBasis::Haar, level, rows, cols };
+        let c = cfg("gwt-2", 2);
+        let mut r = GradReducer::new(&c);
+        let worker_grads: Vec<Vec<Vec<f32>>> =
+            shards.iter().map(|s| vec![s.clone()]).collect();
+        let out = r
+            .combine(worker_grads, &[Some(bp)], &Sharding::Serial)
+            .unwrap();
+        // Reference: mean of the two full forward transforms' bands
+        // (2 shards: tree order == plain pairwise add).
+        let f0 = WaveletBasis::Haar.fwd(&shards[0], rows, cols, level);
+        let f1 = WaveletBasis::Haar.fwd(&shards[1], rows, cols, level);
+        for row in 0..rows {
+            for j in 0..cols {
+                let idx = row * cols + j;
+                if j < q {
+                    let want = (f0[idx] + f1[idx]) / 2.0;
+                    assert_eq!(out[0][idx].to_bits(), want.to_bits());
+                } else {
+                    assert_eq!(out[0][idx], 0.0, "detail band not zeroed");
+                }
+            }
+        }
+        r.log_step(1);
+        assert_eq!(r.comm.total_full_bytes(), rows * cols * 4);
+        assert_eq!(r.comm.total_bytes(), rows * q * 4);
+        assert_eq!(r.comm.compression_ratio().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn ragged_input_keeps_combine_grads_wording() {
+        let c = cfg("gwt-2", 2);
+        let mut r = GradReducer::new(&c);
+        let w0 = vec![vec![1.0f32; 32], vec![2.0f32; 4]];
+        let w1 = vec![vec![1.0f32; 32]];
+        let bp = BandPlan {
+            basis: WaveletBasis::Haar,
+            level: 1,
+            rows: 1,
+            cols: 32,
+        };
+        let err = r
+            .combine(vec![w0, w1], &[Some(bp), None], &Sharding::Serial)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ragged input"), "{err}");
+        assert!(err.contains("worker 1"), "{err}");
+    }
+
+    #[test]
+    fn single_replica_logs_no_traffic() {
+        let c = cfg("gwt-2", 1);
+        let mut r = GradReducer::new(&c);
+        let out = r
+            .combine(
+                vec![vec![vec![1.0, 2.0, 3.0, 4.0]]],
+                &[None],
+                &Sharding::Serial,
+            )
+            .unwrap();
+        assert_eq!(out[0], vec![1.0, 2.0, 3.0, 4.0]);
+        r.log_step(1);
+        assert!(r.comm.records.is_empty());
+    }
+
+    #[test]
+    fn approx_reduce_is_sharding_invariant() {
+        let mut rng = Rng::new(0xddb);
+        let (rows, cols, level) = (16usize, 64usize, 2usize);
+        let shards: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(rows * cols, 1.0)).collect();
+        let want: Vec<u32> = approx_reduce(
+            &Sharding::Serial,
+            WaveletBasis::Haar,
+            level,
+            &shards,
+            rows,
+            cols,
+        )
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+        for sharding in [Sharding::Scoped(3), Sharding::pool(4)] {
+            let got: Vec<u32> = approx_reduce(
+                &sharding,
+                WaveletBasis::Haar,
+                level,
+                &shards,
+                rows,
+                cols,
+            )
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+            assert_eq!(got, want, "{sharding:?}");
+        }
+    }
+}

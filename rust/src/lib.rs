@@ -25,6 +25,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod ddp;
 pub mod eval;
 pub mod jsonx;
 pub mod linalg;

@@ -21,6 +21,8 @@
 //!             "name=a,optimizer=gwt-2,steps=100" \
 //!             "name=b,optimizer=adam,steps=60,priority=1"
 //!   gwt serve --synthetic --budget-x 1.2 "name=a,..." "name=b,..."
+//!   gwt train --replicas 4 -s optimizer=gwt-2   # wavelet-domain DDP:
+//!             # all-reduce only the approximation band (see docs/ddp.md)
 //!   gwt memory
 //!   gwt info
 
@@ -51,7 +53,7 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "usage: gwt <train|serve|eval|finetune|memory|info|bench-check> \
-         [--config FILE] [--threads N] [-s key=value ...]\n\
+         [--config FILE] [--threads N] [--replicas R] [-s key=value ...]\n\
          serve: gwt serve [--budget-mb F | --budget-x F] [--synthetic] \
          \"name=a,optimizer=gwt-2,steps=100[,priority=1]\" ...\n\
          bench-check: gwt bench-check BASELINE.json FRESH.json [--tol F]"
@@ -70,6 +72,12 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     // (equivalent to `-s threads=N`; 0 = auto-detect).
     if let Some(t) = args.flag_usize("threads")? {
         cfg.threads = t;
+    }
+    // `--replicas R` is the CLI spelling of the DDP replica knob
+    // (equivalent to `-s replicas=R`; see `ddp_reduce` for the
+    // reduction-domain companion).
+    if let Some(r) = args.flag_usize("replicas")? {
+        cfg.replicas = r;
     }
     cfg.validate()?;
     // Pin the wavelet kernel table once, from the resolved config
@@ -283,9 +291,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("\nper-job summary:");
     for s in engine.summaries() {
+        // Replicated (or data-parallel) jobs append their measured
+        // communication volume: bytes actually moved, and the
+        // full-gradient counterfactual's multiple of it.
+        let comm = if s.comm_full_bytes > 0 {
+            format!(
+                "  comm {:.2} MB ({:.1}x vs full)",
+                s.comm_bytes as f64 / 1e6,
+                s.comm_full_bytes as f64 / s.comm_bytes.max(1) as f64
+            )
+        } else {
+            String::new()
+        };
         println!(
             "  {:<12} {:<28} steps {:<5} loss {:.4}  state {:.2} MB  \
-             {:.0} tok/s",
+             {:.0} tok/s{comm}",
             s.name,
             s.label,
             s.steps,

@@ -194,6 +194,60 @@ impl AdaptTrace {
     }
 }
 
+/// One optimizer step's cross-replica communication cost, recorded by
+/// `ddp::GradReducer`. `full_bytes` is what a naive full-gradient
+/// all-reduce would have moved for the same step; `bytes` is what the
+/// (possibly approximation-band-compressed) reduction actually moved.
+/// Both count payload bytes per tree edge: `(R-1) · elems · 4` summed
+/// over parameters and microbatches.
+#[derive(Clone, Copy, Debug)]
+pub struct CommRecord {
+    pub step: usize,
+    pub full_bytes: usize,
+    pub bytes: usize,
+}
+
+/// Per-run record of cross-replica communication volume — the
+/// measured half of the GWT paper's "compressed communication" story
+/// (a `gwt-2` run moves ~2² times fewer bytes than full-band; see
+/// docs/ddp.md for the exact accounting).
+#[derive(Clone, Debug, Default)]
+pub struct CommLog {
+    pub records: Vec<CommRecord>,
+}
+
+impl CommLog {
+    pub fn push(&mut self, r: CommRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.bytes).sum()
+    }
+
+    pub fn total_full_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.full_bytes).sum()
+    }
+
+    /// Full-band bytes per actually-moved byte (≥ 1 when compression
+    /// is active, 1.0 when reducing full-band, `None` with no traffic).
+    pub fn compression_ratio(&self) -> Option<f64> {
+        let moved = self.total_bytes();
+        if moved == 0 {
+            return None;
+        }
+        Some(self.total_full_bytes() as f64 / moved as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,full_bytes,bytes\n");
+        for r in &self.records {
+            s.push_str(&format!("{},{},{}\n", r.step, r.full_bytes, r.bytes));
+        }
+        s
+    }
+}
+
 /// Write a set of curves as one CSV per curve under `dir`.
 pub fn write_curves(dir: &str, curves: &[LossCurve]) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -284,6 +338,22 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.starts_with("step,migrations"));
         assert!(csv.contains("10,3,1,4096,haar-2:2|haar-3:1"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn comm_log_totals_ratio_and_csv() {
+        let mut log = CommLog::default();
+        assert_eq!(log.total_bytes(), 0);
+        assert!(log.compression_ratio().is_none());
+        log.push(CommRecord { step: 1, full_bytes: 4096, bytes: 1024 });
+        log.push(CommRecord { step: 2, full_bytes: 4096, bytes: 1024 });
+        assert_eq!(log.total_bytes(), 2048);
+        assert_eq!(log.total_full_bytes(), 8192);
+        assert!((log.compression_ratio().unwrap() - 4.0).abs() < 1e-12);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,full_bytes,bytes"));
+        assert!(csv.contains("1,4096,1024"));
         assert_eq!(csv.lines().count(), 3);
     }
 

@@ -7,8 +7,13 @@
 //! and the quantize/dequantize cost that makes 8-bit Adam the slowest
 //! method in the paper's Table III throughput column.
 
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
 use super::compose::InnerOpt;
-use super::AdamHp;
+use super::{export_step_counter, import_scalar, import_vec, AdamHp};
+use crate::tensor::Tensor;
 
 pub const BLOCK: usize = 2048;
 
@@ -109,6 +114,56 @@ impl InnerOpt for Adam8bitCore {
     fn state_bytes(&self) -> usize {
         self.m.bytes() + self.v.bytes()
     }
+
+    /// Suspend/resume: int8 codes are small exact integers, so riding
+    /// an f32 tensor lane is lossless (|code| ≤ 127 ≪ 2²⁴); scales are
+    /// f32 already. The round trip restores the quantized state
+    /// *bit-identically*, which is what makes post-resume trajectories
+    /// match the uninterrupted run (pinned in rust/tests/job_engine.rs).
+    fn export_state(&self) -> Option<Vec<(String, Tensor)>> {
+        let lanes = |q: &QState| {
+            let codes: Vec<f32> = q.q.iter().map(|&c| c as f32).collect();
+            let n = codes.len();
+            let s = q.scales.clone();
+            let ns = s.len();
+            (Tensor::new(&[n], codes), Tensor::new(&[ns], s))
+        };
+        let (m_q, m_scales) = lanes(&self.m);
+        let (v_q, v_scales) = lanes(&self.v);
+        Some(vec![
+            ("m_q".into(), m_q),
+            ("m_scales".into(), m_scales),
+            ("v_q".into(), v_q),
+            ("v_scales".into(), v_scales),
+            ("t".into(), export_step_counter(self.t)),
+        ])
+    }
+
+    fn import_state(&mut self, state: &BTreeMap<String, Tensor>) -> Result<()> {
+        let codes = |key: &str, want: usize| -> Result<Vec<i8>> {
+            let lane = import_vec(state, key, want)?;
+            lane.iter()
+                .map(|&c| {
+                    if c.fract() != 0.0 || !(-127.0..=127.0).contains(&c) {
+                        anyhow::bail!(
+                            "state '{key}' holds non-int8 code {c}"
+                        );
+                    }
+                    Ok(c as i8)
+                })
+                .collect()
+        };
+        let m_q = codes("m_q", self.m.q.len())?;
+        let m_scales = import_vec(state, "m_scales", self.m.scales.len())?;
+        let v_q = codes("v_q", self.v.q.len())?;
+        let v_scales = import_vec(state, "v_scales", self.v.scales.len())?;
+        self.m.q = m_q;
+        self.m.scales = m_scales;
+        self.v.q = v_q;
+        self.v.scales = v_scales;
+        self.t = import_scalar(state, "t")? as usize;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +216,43 @@ mod tests {
             }
         }
         assert!(max_rel < 0.25, "divergence {max_rel}");
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_identical() {
+        let mut rng = Rng::new(9);
+        let n = BLOCK + 37; // straddle a block boundary
+        let mut a = Adam8bitCore::new(n, AdamHp::default());
+        let mut u = vec![0.0f32; n];
+        for _ in 0..5 {
+            let g: Vec<f32> = rng.normal_vec(n, 0.5);
+            a.step(&g, &mut u, None);
+        }
+        let state: BTreeMap<String, Tensor> =
+            a.export_state().unwrap().into_iter().collect();
+        let mut b = Adam8bitCore::new(n, AdamHp::default());
+        b.import_state(&state).unwrap();
+        assert_eq!(a.m.q, b.m.q);
+        assert_eq!(a.t, b.t);
+        let mut ub = vec![0.0f32; n];
+        for _ in 0..3 {
+            let g: Vec<f32> = rng.normal_vec(n, 0.5);
+            let bca = a.step(&g, &mut u, None);
+            let bcb = b.step(&g, &mut ub, None);
+            assert_eq!(bca.to_bits(), bcb.to_bits());
+            let ua: Vec<u32> = u.iter().map(|x| x.to_bits()).collect();
+            let uexp: Vec<u32> = ub.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ua, uexp);
+        }
+    }
+
+    #[test]
+    fn import_rejects_non_integer_codes() {
+        let mut a = Adam8bitCore::new(8, AdamHp::default());
+        let mut state: BTreeMap<String, Tensor> =
+            a.export_state().unwrap().into_iter().collect();
+        state.insert("m_q".into(), Tensor::new(&[8], vec![0.5; 8]));
+        assert!(a.import_state(&state).is_err());
     }
 
     #[test]

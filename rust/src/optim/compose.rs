@@ -39,6 +39,7 @@ use super::{AdamHp, MatrixOpt};
 use crate::config::{InnerSpec, OptSpec, TransformSpec};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
+use crate::wavelet::WaveletBasis;
 
 /// Down-project gradients into a compact domain / up-project updates
 /// back. Implementations must be deterministic pure functions of
@@ -412,6 +413,25 @@ impl MatrixOpt for Composed {
                 }
                 inner.import_state(state)
             }
+        }
+    }
+
+    /// Coefficient-domain seam: only the fused Wavelet×Adam engine
+    /// steps directly on wavelet coefficients today. The Generic
+    /// engine's `InnerOpt::step` interface would need a band-aware
+    /// denominator pipeline to match — until then, `ddp` reduces
+    /// full-band for those specs.
+    fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
+        match &self.engine {
+            Engine::Fused(f) => f.coeff_band(),
+            Engine::Direct(_) | Engine::Generic { .. } => None,
+        }
+    }
+
+    fn direction_from_coeffs(&mut self, c: &Tensor, lr_eff: f32) -> Option<Tensor> {
+        match &mut self.engine {
+            Engine::Fused(f) => f.direction_from_coeffs(c, lr_eff),
+            Engine::Direct(_) | Engine::Generic { .. } => None,
         }
     }
 }

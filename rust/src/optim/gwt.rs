@@ -400,6 +400,61 @@ impl GwtAdam {
         );
         out
     }
+
+    /// [`GwtAdam::rust_direction`] with the forward transform already
+    /// applied: `c` holds per-row coefficient layout
+    /// `[A_l | D_l | … | D_1]` for this optimizer's `(basis, level)`.
+    /// Runs [`gwt_adam_coeff_row`] — the tail of [`gwt_adam_row`]
+    /// after its `fwd_row` — under the identical row sharding, so
+    /// `rust_direction_coeffs(fwd(g))` is bit-identical to
+    /// `rust_direction(g)` at every worker count.
+    fn rust_direction_coeffs(&mut self, c: &Tensor) -> Vec<f32> {
+        let (rows, n, level) = (self.rows, self.cols, self.level);
+        let basis = self.basis;
+        let q = n >> level;
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        let mut out = vec![0.0f32; rows * n];
+        if !self.sharding.is_parallel() || rows == 1 {
+            let (mstate, vstate, scratch) =
+                (&mut self.m, &mut self.v, &mut self.scratch);
+            for r in 0..rows {
+                gwt_adam_coeff_row(
+                    c.row(r),
+                    &mut out[r * n..(r + 1) * n],
+                    &mut mstate[r * q..(r + 1) * q],
+                    &mut vstate[r * q..(r + 1) * q],
+                    level,
+                    basis,
+                    scratch,
+                    b1,
+                    b2,
+                    eps,
+                );
+            }
+            return out;
+        }
+        let mut items: Vec<_> = c
+            .data()
+            .chunks_exact(n)
+            .zip(out.chunks_exact_mut(n))
+            .zip(self.m.chunks_exact_mut(q))
+            .zip(self.v.chunks_exact_mut(q))
+            .map(|(((cr, orow), mrow), vrow)| (cr, orow, mrow, vrow))
+            .collect();
+        self.sharding.run_chunks_mut(
+            &mut items,
+            |_| vec![0.0f32; n],
+            |scratch, _, chunk| {
+                for (cr, orow, mrow, vrow) in chunk.iter_mut() {
+                    gwt_adam_coeff_row(
+                        cr, orow, mrow, vrow, level, basis, scratch, b1, b2,
+                        eps,
+                    );
+                }
+            },
+        );
+        out
+    }
 }
 
 /// One row of the fused rust kernel: forward transform (through the
@@ -451,6 +506,49 @@ fn gwt_adam_row(
         off += w;
     }
     // Inverse transform back to weight space.
+    basis.inv_row(orow, level, scratch);
+}
+
+/// The tail of [`gwt_adam_row`] — moment update, band-wise normalize,
+/// inverse transform — with the forward transform already applied:
+/// `cr` is the coefficient row (`[A_l | D_l | … | D_1]`). For any
+/// gradient row `gr`, running `fwd_row` then this function is
+/// bit-identical to [`gwt_adam_row`] on `gr`: the floating-point op
+/// sequence from the coefficient values onward is the same code.
+#[allow(clippy::too_many_arguments)]
+fn gwt_adam_coeff_row(
+    cr: &[f32],
+    orow: &mut [f32],
+    mrow: &mut [f32],
+    vrow: &mut [f32],
+    level: usize,
+    basis: WaveletBasis,
+    scratch: &mut [f32],
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    let n = cr.len();
+    let q = mrow.len();
+    for j in 0..q {
+        let a = cr[j];
+        mrow[j] = b1 * mrow[j] + (1.0 - b1) * a;
+        vrow[j] = b2 * vrow[j] + (1.0 - b2) * a * a;
+    }
+    for j in 0..q {
+        let denom = vrow[j].sqrt() + eps;
+        orow[j] = mrow[j] / denom;
+    }
+    let mut off = q;
+    for k in (1..=level).rev() {
+        let w = n >> k;
+        let rep = 1usize << (level - k);
+        for j in 0..w {
+            let denom = vrow[j / rep].sqrt() + eps;
+            orow[off + j] = cr[off + j] / denom;
+        }
+        off += w;
+    }
     basis.inv_row(orow, level, scratch);
 }
 
@@ -516,6 +614,26 @@ impl MatrixOpt for GwtAdam {
         self.v = import_vec(state, "v", self.v.len())?;
         self.t = import_scalar(state, "t")? as usize;
         Ok(())
+    }
+
+    fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
+        Some((self.basis, self.level))
+    }
+
+    /// Coefficient-domain step: identical to [`MatrixOpt::direction`]
+    /// minus the forward transform (and minus the HLO attempt — the
+    /// AOT artifacts take weight-domain gradients, so this entry is
+    /// rust-only; `ddp` callers accept that trade for skipping the
+    /// inverse+re-forward round trip).
+    fn direction_from_coeffs(&mut self, c: &Tensor, _lr_eff: f32) -> Option<Tensor> {
+        assert_eq!(c.shape(), &[self.rows, self.cols]);
+        self.t += 1;
+        let bc = self.hp.bias_correction(self.t);
+        let mut out = self.rust_direction_coeffs(c);
+        for x in &mut out {
+            *x *= bc;
+        }
+        Some(Tensor::new(&[self.rows, self.cols], out))
     }
 }
 

@@ -138,6 +138,30 @@ pub trait MatrixOpt: Send {
         let _ = state;
         bail!("optimizer '{}' does not support state import", self.label())
     }
+
+    /// The coefficient-domain seam (`crate::ddp`): when this engine's
+    /// first move in [`MatrixOpt::direction`] is a wavelet forward
+    /// transform of the gradient, report that `(basis, level)` so a
+    /// caller who already holds the gradient in coefficient form
+    /// (e.g. a compressed all-reduce over replicas) can skip the
+    /// redundant inverse+re-forward round trip and call
+    /// [`MatrixOpt::direction_from_coeffs`] instead. Default: no
+    /// coefficient-domain entry.
+    fn coeff_band(&self) -> Option<(crate::wavelet::WaveletBasis, usize)> {
+        None
+    }
+
+    /// [`MatrixOpt::direction`] with the forward transform already
+    /// applied: `c` is the full coefficient tensor (row layout
+    /// `[A_l | D_l | … | D_1]` for the `(basis, level)` reported by
+    /// [`MatrixOpt::coeff_band`]). Contract: for any gradient `g`,
+    /// `direction_from_coeffs(fwd(g))` is bit-identical to
+    /// `direction(g)`. Returns `None` when unsupported (callers must
+    /// check [`MatrixOpt::coeff_band`] first).
+    fn direction_from_coeffs(&mut self, c: &Tensor, lr_eff: f32) -> Option<Tensor> {
+        let _ = (c, lr_eff);
+        None
+    }
 }
 
 /// One parameter's full update pipeline: method + α + NL limiter.
@@ -172,6 +196,35 @@ impl ParamOptimizer {
         };
         w.axpy(-lr_eff * scale, &u);
         StepStats { update_norm: norm * scale, limiter_scale: scale }
+    }
+
+    /// [`ParamOptimizer::apply`] with the gradient already in
+    /// coefficient form (see [`MatrixOpt::direction_from_coeffs`]).
+    /// Mirrors `apply` exactly — same limiter accounting, same axpy —
+    /// so `apply_coeffs(w, fwd(g))` is bit-identical to `apply(w, g)`.
+    /// Returns `None` when the wrapped engine has no coefficient
+    /// entry; callers gate on [`ParamOptimizer::coeff_band`].
+    pub fn apply_coeffs(
+        &mut self,
+        w: &mut Tensor,
+        c: &Tensor,
+        lr_t: f32,
+    ) -> Option<StepStats> {
+        let lr_eff = lr_t * self.alpha;
+        let u = self.inner.direction_from_coeffs(c, lr_eff)?;
+        let norm = u.frob_norm() * lr_eff;
+        let scale = match &mut self.limiter {
+            Some(l) => l.scale_for(norm),
+            None => 1.0,
+        };
+        w.axpy(-lr_eff * scale, &u);
+        Some(StepStats { update_norm: norm * scale, limiter_scale: scale })
+    }
+
+    /// The wrapped engine's coefficient-domain entry (`None` for
+    /// engines without one) — what `ddp::GradReducer::plan` reads.
+    pub fn coeff_band(&self) -> Option<(crate::wavelet::WaveletBasis, usize)> {
+        self.inner.coeff_band()
     }
 
     pub fn state_bytes(&self) -> usize {
@@ -415,6 +468,54 @@ pub fn step_bank(
     sharding.run_chunks_mut(&mut items, |_| (), |_, _, chunk| {
         for (opt, w, g, s) in chunk.iter_mut() {
             **s = opt.apply(w, g, lr_t);
+        }
+    });
+    stats
+}
+
+/// [`step_bank`] where some gradients are already in coefficient form.
+/// `coeff[i]` says whether `grads[i]` is a coefficient tensor for bank
+/// entry `i`'s [`MatrixOpt::coeff_band`] decomposition (routed through
+/// [`ParamOptimizer::apply_coeffs`]) or a plain weight-domain gradient
+/// (routed through [`ParamOptimizer::apply`]). Sharding is identical
+/// to `step_bank` — same fixed chunk boundaries, per-parameter
+/// independence — so the result is bit-identical at every worker
+/// count. Panics if a coefficient-flagged entry has no coefficient
+/// seam: `ddp::GradReducer::plan` only flags entries it read the seam
+/// from, so that indicates plan/bank drift, not a user error.
+pub fn step_bank_mixed(
+    bank: &mut [ParamOptimizer],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    coeff: &[bool],
+    lr_t: f32,
+    sharding: &Sharding,
+) -> Vec<StepStats> {
+    assert_eq!(bank.len(), params.len(), "bank/params length mismatch");
+    assert_eq!(bank.len(), grads.len(), "bank/grads length mismatch");
+    assert_eq!(bank.len(), coeff.len(), "bank/coeff length mismatch");
+    let mut stats = vec![StepStats::default(); bank.len()];
+    let mut items: Vec<_> = bank
+        .iter_mut()
+        .zip(params.iter_mut())
+        .zip(grads.iter())
+        .zip(coeff.iter())
+        .zip(stats.iter_mut())
+        .map(|((((opt, w), g), c), s)| (opt, w, g, *c, s))
+        .collect();
+    sharding.run_chunks_mut(&mut items, |_| (), |_, _, chunk| {
+        for (opt, w, g, c, s) in chunk.iter_mut() {
+            **s = if *c {
+                opt.apply_coeffs(w, g, lr_t).unwrap_or_else(|| {
+                    panic!(
+                        "step_bank_mixed: '{}' flagged as coefficient-domain \
+                         but has no coeff_band seam",
+                        opt.name
+                    )
+                })
+            } else {
+                opt.apply(w, g, lr_t)
+            };
         }
     });
     stats

@@ -553,6 +553,23 @@ where
 /// Tree allreduce (sum) over per-worker vectors; returns the reduced
 /// vector. All inputs must have equal length. log2(n) rounds, like a
 /// binomial-tree reduce: pairs at distance 2^k combine each round.
+///
+/// ## Reduction-order contract (DDP determinism)
+///
+/// The per-element combine order is a *pure function of the shard
+/// count and the shard index order*: round `k` folds shard
+/// `i + 2^k` into shard `i` for every even multiple `i` of `2^{k+1}`,
+/// ascending `i`, so element `e`'s final value is the fixed binomial
+/// tree `((s0+s1)+(s2+s3))+...` over `shards[*][e]`. Because f32
+/// addition is not associative, this order is observable:
+/// *permuting the input shards may change the output bits*, while
+/// reducing the same shards in the same order always reproduces them
+/// exactly — including through [`allreduce_mean_sharded`], which
+/// replays the identical per-element tree from any worker count.
+/// `rust/tests/ddp_determinism.rs` pins both halves of this contract;
+/// the wavelet-DDP subsystem (`crate::ddp`) relies on it for
+/// cross-replica bit-identity, so callers must present replica shards
+/// in a fixed order (replica index ascending).
 pub fn allreduce_sum(mut shards: Vec<Vec<f32>>) -> Vec<f32> {
     assert!(!shards.is_empty());
     let len = shards[0].len();
@@ -576,7 +593,8 @@ pub fn allreduce_sum(mut shards: Vec<Vec<f32>>) -> Vec<f32> {
 }
 
 /// Mean-reduce convenience used for gradient averaging across DP
-/// workers.
+/// workers. Inherits [`allreduce_sum`]'s fixed-tree reduction-order
+/// contract; the final `/= n` divide is elementwise and orderless.
 pub fn allreduce_mean(shards: Vec<Vec<f32>>) -> Vec<f32> {
     let n = shards.len() as f32;
     let mut out = allreduce_sum(shards);
@@ -584,6 +602,66 @@ pub fn allreduce_mean(shards: Vec<Vec<f32>>) -> Vec<f32> {
         for x in &mut out {
             *x /= n;
         }
+    }
+    out
+}
+
+/// Sharded twin of [`allreduce_mean`]: the same binomial reduction
+/// tree, parallelized over *elements* instead of run serially over
+/// shards — the worker-pool stand-in for a multi-rank ring/tree
+/// all-reduce in the wavelet-DDP subsystem.
+///
+/// Bit-identity: for every element `e` the worker that owns `e` loads
+/// the `R` shard lanes into a scratch row and replays exactly the
+/// stride-doubling loop of [`allreduce_sum`] (`lane[i] += lane[i+2^k]`
+/// in the same `i` order), then applies the same `/= R` divide. The
+/// per-element f32 op sequence is therefore a pure function of `R`,
+/// independent of the worker count and the [`chunk_bounds`] split —
+/// `allreduce_mean_sharded(s, shards)` == `allreduce_mean(shards)`
+/// bitwise for every `Sharding` (pinned in
+/// `rust/tests/ddp_determinism.rs`). Short inputs (below
+/// [`ACCUM_SHARD_MIN_LEN`]) take the serial path outright.
+pub fn allreduce_mean_sharded(
+    sharding: &Sharding,
+    shards: &[Vec<f32>],
+) -> Vec<f32> {
+    assert!(!shards.is_empty(), "allreduce over zero shards");
+    let len = shards[0].len();
+    assert!(shards.iter().all(|s| s.len() == len), "ragged shards");
+    let r = shards.len();
+    if r == 1 {
+        return shards[0].clone();
+    }
+    if !sharding.is_parallel() || len < ACCUM_SHARD_MIN_LEN {
+        return allreduce_mean(shards.to_vec());
+    }
+    let mut out = vec![0.0f32; len];
+    sharding.run_chunks_mut(
+        &mut out,
+        |_| vec![0.0f32; r],
+        |lanes, off, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let e = off + k;
+                for (lane, s) in lanes.iter_mut().zip(shards) {
+                    *lane = s[e];
+                }
+                // Verbatim allreduce_sum tree over the lane row.
+                let mut stride = 1;
+                while stride < r {
+                    let mut i = 0;
+                    while i + stride < r {
+                        lanes[i] += lanes[i + stride];
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                *o = lanes[0];
+            }
+        },
+    );
+    let n = r as f32;
+    for x in &mut out {
+        *x /= n;
     }
     out
 }
@@ -1005,6 +1083,87 @@ mod tests {
     #[should_panic(expected = "ragged")]
     fn ragged_shards_rejected() {
         allreduce_sum(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    /// Reference implementation of the documented reduction order: an
+    /// explicit binomial tree over shard indices, one element at a
+    /// time. `allreduce_sum` must match it *bitwise* for every shard
+    /// count — this is the order `crate::ddp` builds on.
+    fn reference_tree(shards: &[Vec<f32>]) -> Vec<f32> {
+        let len = shards[0].len();
+        (0..len)
+            .map(|e| {
+                let mut lanes: Vec<f32> = shards.iter().map(|s| s[e]).collect();
+                let mut stride = 1;
+                while stride < lanes.len() {
+                    let mut i = 0;
+                    while i + stride < lanes.len() {
+                        lanes[i] += lanes[i + stride];
+                        i += stride * 2;
+                    }
+                    stride *= 2;
+                }
+                lanes[0]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn allreduce_order_is_the_documented_binomial_tree() {
+        let mut rng = crate::rng::Rng::new(0xa11);
+        for r in 1..=9usize {
+            let shards: Vec<Vec<f32>> =
+                (0..r).map(|_| rng.normal_vec(17, 1e6)).collect();
+            let want = reference_tree(&shards);
+            let got = allreduce_sum(shards.clone());
+            let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "r={r}");
+        }
+    }
+
+    #[test]
+    fn allreduce_order_is_sensitive_to_shard_permutation() {
+        // The order contract cuts both ways: f32 addition is not
+        // associative, so permuting the input shards changes the
+        // bits. This crafted case makes it deterministic: summing
+        // (1e8 + -1e8) + 1.0 gives 1.0 exactly, while (1e8 + 1.0)
+        // rounds the 1.0 away before -1e8 cancels.
+        let a = vec![1e8f32];
+        let b = vec![-1e8f32];
+        let c = vec![1.0f32];
+        let ordered = allreduce_sum(vec![a.clone(), b.clone(), c.clone()]);
+        let permuted = allreduce_sum(vec![a, c, b]);
+        assert_eq!(ordered, vec![1.0]);
+        assert_eq!(permuted, vec![0.0]);
+        assert_ne!(ordered[0].to_bits(), permuted[0].to_bits());
+    }
+
+    #[test]
+    fn allreduce_mean_sharded_matches_serial_bitwise() {
+        let mut rng = crate::rng::Rng::new(0xddc);
+        // Both sides of the ACCUM_SHARD_MIN_LEN cutoff, even and odd
+        // shard counts (odd exercises the lone-tail tree arm).
+        for len in [1usize, 100, ACCUM_SHARD_MIN_LEN + 57] {
+            for r in [1usize, 2, 3, 5, 8] {
+                let shards: Vec<Vec<f32>> =
+                    (0..r).map(|_| rng.normal_vec(len, 1e4)).collect();
+                let want: Vec<u32> = allreduce_mean(shards.clone())
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                for sharding in
+                    [Sharding::Serial, Sharding::Scoped(3), Sharding::pool(4)]
+                {
+                    let got: Vec<u32> =
+                        allreduce_mean_sharded(&sharding, &shards)
+                            .iter()
+                            .map(|x| x.to_bits())
+                            .collect();
+                    assert_eq!(got, want, "{sharding:?} len={len} r={r}");
+                }
+            }
+        }
     }
 
     #[test]

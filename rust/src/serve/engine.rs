@@ -71,6 +71,13 @@ pub struct JobSummary {
     pub state_bytes: usize,
     pub tokens_seen: usize,
     pub tokens_per_sec: f64,
+    /// Cross-replica bytes actually moved over the run (`crate::ddp`
+    /// ledger; 0 for single-replica jobs).
+    pub comm_bytes: usize,
+    /// What a full-gradient all-reduce would have moved — the
+    /// compression counterfactual (equal to `comm_bytes` when the job
+    /// reduced full-band).
+    pub comm_full_bytes: usize,
 }
 
 /// Admission/scheduling events, in order — the engine's audit log.
@@ -166,6 +173,15 @@ impl JobEngine {
     /// Worst-case admission charge for a job config: the budget-facing
     /// column of `memory::measured_account`, capped by the job's own
     /// adaptive budget when it has one.
+    ///
+    /// The charge is independent of `cfg.replicas`: DDP replicas here
+    /// are *logical* (per-replica data shards and gradients, one
+    /// shared parameter set and optimizer bank — see `crate::ddp`), so
+    /// a replicated job holds exactly one bank's worth of optimizer
+    /// state and stays admissible under the same byte budget as its
+    /// single-replica twin. Per-replica gradient buffers are
+    /// transient, like every other gradient in the engine, and are
+    /// not budget-charged.
     pub fn charge_for(cfg: &TrainConfig) -> Result<usize> {
         let preset = presets::find(&cfg.preset)?;
         let cap = (cfg.adapt_budget_mb * MB) as usize;
@@ -320,6 +336,8 @@ impl JobEngine {
                 state_bytes: state.optimizer_state_bytes(),
                 tokens_seen: state.tokens_seen,
                 tokens_per_sec: state.throughput.tokens_per_sec(),
+                comm_bytes: state.reducer.comm.total_bytes(),
+                comm_full_bytes: state.reducer.comm.total_full_bytes(),
             });
             job.status = JobStatus::Finished;
             let charge = job.charge;

@@ -11,10 +11,11 @@
 //! optimizer state (via the `MatrixOpt::export_state` seam) plus the
 //! job cursor into one `Checkpoint`; `restore` rebuilds the exact
 //! trajectory, fast-forwarding the gradient source past the consumed
-//! rounds. Engines that cannot export state (8-bit quantized blocks,
-//! MUON, LoRA, adaptive wavelets, projection transforms) make
-//! `snapshot` fail with a clear error instead of silently dropping
-//! moments. Wall-clock metrics (`curve` walltime column,
+//! rounds. 8-bit quantized blocks ride f32 lanes losslessly (int8
+//! codes are small exact integers), so `*+adam8bit` jobs checkpoint
+//! too; engines that still cannot export state (MUON, LoRA, adaptive
+//! wavelets, projection transforms) make `snapshot` fail with a clear
+//! error instead of silently dropping moments. Wall-clock metrics (`curve` walltime column,
 //! `throughput`) restart at resume — only the training math is
 //! bit-reproducible, not the clock.
 
@@ -27,13 +28,14 @@ use super::source::GradSource;
 use crate::adapt::AdaptController;
 use crate::checkpoint::Checkpoint;
 use crate::config::{presets, TrainConfig};
-use crate::coordinator::dp::combine_grads;
 use crate::coordinator::trainer::init_param;
 use crate::coordinator::CosineSchedule;
+use crate::ddp::GradReducer;
 use crate::memory::ParamShape;
 use crate::metrics::{AdaptTrace, LossCurve, Throughput};
 use crate::optim::{
-    build_optimizers_sharded, step_bank, total_state_bytes, ParamOptimizer,
+    build_optimizers_sharded, step_bank, step_bank_mixed, total_state_bytes,
+    ParamOptimizer,
 };
 use crate::pool::{accumulate_sharded, Sharding};
 use crate::runtime::Runtime;
@@ -59,6 +61,12 @@ pub struct JobState {
     /// Per-event adaptive telemetry (empty for static specs).
     pub adapt_trace: AdaptTrace,
     pub tokens_seen: usize,
+    /// Cross-replica gradient reducer (`crate::ddp`): plans which
+    /// parameters reduce over the compact approximation band, runs the
+    /// fixed-order tree reduction, and keeps the communication ledger
+    /// (`reducer.comm`). With `replicas = 1` it is a pure passthrough
+    /// around `combine_grads` — the legacy single-box path, bitwise.
+    pub reducer: GradReducer,
     source: Box<dyn GradSource>,
 }
 
@@ -104,6 +112,7 @@ impl JobState {
         let schedule = CosineSchedule::new(cfg.lr, cfg.steps, cfg.warmup_frac);
         let adapt = AdaptController::from_config(&cfg);
         let adapt_trace = AdaptTrace::new(&label);
+        let reducer = GradReducer::new(&cfg);
         JobState {
             shapes,
             params,
@@ -115,6 +124,7 @@ impl JobState {
             adapt,
             adapt_trace,
             tokens_seen: 0,
+            reducer,
             source,
             cfg,
         }
@@ -137,6 +147,14 @@ impl JobState {
     /// step math unchanged.
     pub fn step_once(&mut self, sharding: &Sharding) -> Result<f32> {
         let lr_t = self.schedule.lr(self.step);
+        // Resolve the cross-replica reduction plan once per step,
+        // against the bank as it stands *before* the step (adaptive
+        // migrations happen post-step, so a plan never straddles a
+        // decomposition change). An all-`None` plan — R = 1, full-band
+        // mode, adaptive specs, legacy `dp_workers` — makes the
+        // reducer a bitwise passthrough around `combine_grads`.
+        let plan = self.reducer.plan(&self.bank, &self.shapes);
+        let full_band = plan.iter().all(|p| p.is_none());
         let mut acc: Vec<Vec<f32>> =
             self.shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
         let mut loss_sum = 0.0f32;
@@ -151,12 +169,15 @@ impl JobState {
                 self.throughput.add_tokens(wb.tokens);
                 worker_grads.push(wb.grads);
             }
-            let combined = combine_grads(worker_grads)?;
+            let combined =
+                self.reducer.combine(worker_grads, &plan, sharding)?;
             // Microbatch accumulation rides the same reused pool as
             // the optimizer step: chunked elementwise adds over the
             // flat buffer, fixed boundaries, one writer per element —
             // bit-identical to the serial sum at every worker count
-            // (pinned by tests/grad_accum_parity.rs).
+            // (pinned by tests/grad_accum_parity.rs). Coefficient
+            // tensors accumulate the same way — the transform is
+            // linear, so summing coefficients is summing gradients.
             for (a, g) in acc.iter_mut().zip(&combined) {
                 accumulate_sharded(sharding, a, g);
             }
@@ -175,10 +196,25 @@ impl JobState {
             })
             .collect();
         // Parallel step engine: shard the bank through the shared
-        // pool (bit-identical to the serial loop).
-        step_bank(&mut self.bank, &mut self.params, &grads, lr_t, sharding);
+        // pool (bit-identical to the serial loop). Planned parameters
+        // enter through the bank's coefficient-domain seam — no
+        // inverse+re-forward round trip.
+        if full_band {
+            step_bank(&mut self.bank, &mut self.params, &grads, lr_t, sharding);
+        } else {
+            let coeff: Vec<bool> = plan.iter().map(|p| p.is_some()).collect();
+            step_bank_mixed(
+                &mut self.bank,
+                &mut self.params,
+                &grads,
+                &coeff,
+                lr_t,
+                sharding,
+            );
+        }
         let mean_loss = loss_sum / micro_count.max(1) as f32;
         self.step += 1;
+        self.reducer.log_step(self.step);
         // Adaptive-compression hook: on the controller's cadence,
         // probe this step's combined gradients (sharded like the step
         // itself), re-select decompositions, and record the event.

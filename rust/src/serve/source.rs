@@ -75,7 +75,10 @@ impl PretrainSource {
             .context("preset drift between rust and aot.py")?;
         let train_exec = runtime.exec(&format!("train_step_{}", cfg.preset))?;
         Ok(PretrainSource {
-            dp: DpGroup::new(loader, cfg.dp_workers),
+            // One loader shard per round slot: replicas when DDP is
+            // on, dp_workers otherwise (config validation keeps the
+            // two axes exclusive).
+            dp: DpGroup::new(loader, cfg.round_width()),
             train_exec,
             batch: preset.batch,
             seq_len: preset.seq_len,
@@ -241,7 +244,11 @@ impl SyntheticSource {
         Ok(SyntheticSource {
             shapes: preset.param_shapes(),
             seed: cfg.seed ^ 0x5e17e,
-            workers: cfg.dp_workers,
+            // `replicas=R` draws the exact worker streams
+            // `dp_workers=R` would (stream key `0x51 + w`), which is
+            // what makes full-band DDP bit-identical to the legacy
+            // data-parallel path.
+            workers: cfg.round_width(),
             tokens_per_round: preset.tokens_per_batch(),
             grad_scale: 0.02,
             round: 0,

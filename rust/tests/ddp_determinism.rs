@@ -1,0 +1,371 @@
+//! Cross-replica determinism for the wavelet-domain DDP subsystem
+//! (`gwt::ddp`): the three pinned axes from `docs/ddp.md`.
+//!
+//! 1. Full-band replicated jobs are bitwise the legacy `dp_workers`
+//!    path — `GradReducer` delegates to `combine_grads` verbatim.
+//! 2. A replicated job at fixed R is bit-identical across the thread
+//!    grid and across `GWT_SIMD` {scalar, auto} — replicas shard by
+//!    index, the tree reduction order is fixed, and the coefficient
+//!    step enters the bank through the same per-row kernels.
+//! 3. The communication ledger matches the plan exactly:
+//!    (R-1) x payload x 4 bytes per parameter per combine, with the
+//!    approximation band exactly 2^level smaller than full-band.
+//!
+//! Synthetic sources throughout — no PJRT artifacts needed.
+
+use gwt::adapt::AdaptiveOpt;
+use gwt::config::{DdpReduce, OptSpec, TrainConfig};
+use gwt::memory::ParamShape;
+use gwt::optim::{build_optimizers, step_bank, step_bank_mixed};
+use gwt::pool::Sharding;
+use gwt::rng::Rng;
+use gwt::serve::{JobEngine, JobSource, JobState, SyntheticSource};
+use gwt::tensor::Tensor;
+use gwt::testing::test_thread_grid;
+use gwt::wavelet::kernels::{self, SimdMode};
+use gwt::wavelet::WaveletBasis;
+
+fn cfg(opt: OptSpec, steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        optimizer: opt,
+        steps,
+        eval_every: steps,
+        ..Default::default()
+    }
+}
+
+/// Run a single synthetic job to one round short of completion (so
+/// live state is readable), then finish. Returns (per-step loss bits,
+/// param bits, final loss bits) — the same probe as job_engine.rs.
+fn run_solo(threads: usize, job_cfg: &TrainConfig) -> (Vec<u32>, Vec<u32>, u32) {
+    let mut e = JobEngine::new(None, threads, 0.0);
+    e.submit("solo", job_cfg.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..job_cfg.steps - 1 {
+        e.run_round().unwrap();
+    }
+    let state = e.job_state("solo").unwrap();
+    let losses: Vec<u32> =
+        state.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    let params: Vec<u32> = state
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    e.run_to_completion().unwrap();
+    let final_bits = e.summaries()[0].final_loss.to_bits();
+    (losses, params, final_bits)
+}
+
+fn param_bits(params: &[Tensor]) -> Vec<u32> {
+    params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+#[test]
+fn full_band_replicas_match_legacy_dp_workers_bitwise() {
+    // `replicas = R` in full-band mode and `dp_workers = R` occupy the
+    // same data-shard axis: identical synthetic batch streams (the
+    // source keys its RNG by shard index over `round_width()`),
+    // identical tree reduction through `combine_grads`. The two
+    // configs must produce the same trajectory to the last bit.
+    let mut rep = cfg(OptSpec::gwt(2), 6);
+    rep.grad_accum = 2;
+    rep.replicas = 4;
+    rep.ddp_reduce = DdpReduce::Full;
+    let mut legacy = cfg(OptSpec::gwt(2), 6);
+    legacy.grad_accum = 2;
+    legacy.dp_workers = 4;
+
+    let (loss_r, params_r, final_r) = run_solo(2, &rep);
+    let (loss_l, params_l, final_l) = run_solo(2, &legacy);
+    assert_eq!(loss_r, loss_l, "full-band replicas vs dp_workers: loss");
+    assert_eq!(params_r, params_l, "full-band replicas vs dp_workers: params");
+    assert_eq!(final_r, final_l, "full-band replicas vs dp_workers: final");
+}
+
+#[test]
+fn approx_band_reduction_changes_the_trajectory() {
+    // Guard against a vacuous grid test: in auto mode a gwt-2 job's
+    // eligible parameters reduce only the approximation band, so the
+    // weights must diverge from the full-band run (detail-band shard
+    // noise is dropped before the optimizer sees it).
+    let mut auto_c = cfg(OptSpec::gwt(2), 4);
+    auto_c.replicas = 4;
+    let mut full_c = auto_c.clone();
+    full_c.ddp_reduce = DdpReduce::Full;
+    let (_, params_auto, _) = run_solo(1, &auto_c);
+    let (_, params_full, _) = run_solo(1, &full_c);
+    assert_ne!(
+        params_auto, params_full,
+        "approx-band mode must actually engage the compressed reduce"
+    );
+}
+
+#[test]
+fn replica_grid_bit_identical_across_threads_and_simd() {
+    // The tentpole pin: for each replica count, the trajectory under
+    // the compressed reduce is a pure function of the config — thread
+    // count and SIMD dispatch are throughput knobs only. Reference is
+    // serial + forced-scalar kernels; the grid runs every thread count
+    // under both kernel tables.
+    for r in [1usize, 2, 4] {
+        let mut c = cfg(OptSpec::gwt(2), 4);
+        c.grad_accum = 2;
+        c.replicas = r;
+        kernels::set_mode(SimdMode::Scalar);
+        let (loss0, params0, final0) = run_solo(1, &c);
+        for (label, mode) in
+            [("scalar", SimdMode::Scalar), ("auto", SimdMode::Auto)]
+        {
+            kernels::set_mode(mode);
+            for threads in test_thread_grid() {
+                let (loss, params, fin) = run_solo(threads, &c);
+                assert_eq!(
+                    loss, loss0,
+                    "r={r} simd={label} threads={threads}: loss bits"
+                );
+                assert_eq!(
+                    params, params0,
+                    "r={r} simd={label} threads={threads}: param bits"
+                );
+                assert_eq!(
+                    fin, final0,
+                    "r={r} simd={label} threads={threads}: final loss"
+                );
+            }
+        }
+        kernels::set_mode(kernels::mode_from_env());
+    }
+}
+
+#[test]
+fn db4_replicas_bit_identical() {
+    // Basis spot-check: the approx-band forward uses the same
+    // basis-dispatched row kernel as the optimizer, so Db4 replicas
+    // pin the same way Haar does.
+    let mut c = cfg(OptSpec::gwt_basis(WaveletBasis::Db4, 2), 4);
+    c.replicas = 2;
+    kernels::set_mode(SimdMode::Scalar);
+    let (loss0, params0, final0) = run_solo(1, &c);
+    kernels::set_mode(SimdMode::Auto);
+    let (loss, params, fin) = run_solo(4, &c);
+    kernels::set_mode(kernels::mode_from_env());
+    assert_eq!(loss, loss0, "db4 replicas: loss bits");
+    assert_eq!(params, params0, "db4 replicas: param bits");
+    assert_eq!(fin, final0, "db4 replicas: final loss");
+}
+
+#[test]
+fn adaptive_replicas_with_forced_migration_bit_identical() {
+    // Adaptive specs always reduce full-band (the probe needs
+    // weight-domain gradients), and migrations happen post-step — a
+    // replicated adaptive job with a mid-run migration must still be
+    // bit-identical across the whole dispatcher grid.
+    let mut c = cfg(OptSpec::parse("adapt-greedy+adam").unwrap(), 6);
+    c.replicas = 2;
+    let run = |sharding: &Sharding| -> (Vec<u32>, Vec<u32>) {
+        let src = SyntheticSource::new(&c).unwrap();
+        let mut js =
+            JobState::new(c.clone(), Box::new(src), None, sharding).unwrap();
+        let mut loss_bits = Vec::new();
+        for step in 1..=c.steps {
+            loss_bits.push(js.step_once(sharding).unwrap().to_bits());
+            if step == 3 {
+                // Force the same migration on every adaptive engine,
+                // identically in every run — state re-shaping mid-job.
+                let mut migrated = 0usize;
+                for opt in js.bank.iter_mut() {
+                    if let Some(a) = opt.adaptive() {
+                        let _ = a.migrate(WaveletBasis::Db4, 3);
+                        migrated += 1;
+                    }
+                }
+                assert!(migrated > 0, "adaptive bank exposes no engines");
+            }
+        }
+        (loss_bits, param_bits(&js.params))
+    };
+    let (loss0, params0) = run(&Sharding::Serial);
+    for threads in test_thread_grid() {
+        for sharding in [Sharding::pool(threads), Sharding::Scoped(threads)] {
+            let (loss, params) = run(&sharding);
+            assert_eq!(loss, loss0, "{sharding:?}: loss bits");
+            assert_eq!(params, params0, "{sharding:?}: param bits");
+        }
+    }
+}
+
+#[test]
+fn comm_ledger_matches_plan_accounting() {
+    // The per-step communication record is exactly
+    // grad_accum x sum_p (R-1) x payload_p x 4 bytes, where payload is
+    // the approximation band for planned parameters and the full
+    // element count for the rest — and the planned band is exactly
+    // 2^level smaller than its full-band counterpart.
+    let mut c = cfg(OptSpec::gwt(2), 3);
+    c.replicas = 4;
+    c.grad_accum = 2;
+    let sharding = Sharding::Serial;
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut js =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    for _ in 0..c.steps {
+        js.step_once(&sharding).unwrap();
+    }
+
+    // The spec is static, so the post-run plan equals every step's.
+    let plan = js.reducer.plan(&js.bank, &js.shapes);
+    assert!(
+        plan.iter().any(|p| p.is_some()),
+        "gwt-2 replicas must plan at least one approx-band reduction"
+    );
+    let (mut moved, mut full) = (0usize, 0usize);
+    let (mut elig_elems, mut elig_payload) = (0usize, 0usize);
+    for (p, s) in plan.iter().zip(&js.shapes) {
+        let numel = s.numel();
+        let payload = match p {
+            Some(bp) => bp.rows * bp.approx_cols(),
+            None => numel,
+        };
+        moved += (c.replicas - 1) * payload * 4;
+        full += (c.replicas - 1) * numel * 4;
+        if let Some(bp) = p {
+            elig_elems += numel;
+            elig_payload += bp.rows * bp.approx_cols();
+        }
+    }
+    assert_eq!(
+        elig_elems,
+        4 * elig_payload,
+        "level-2 approx band must be exactly 2^2 smaller"
+    );
+
+    let per_step_moved = c.grad_accum * moved;
+    let per_step_full = c.grad_accum * full;
+    assert_eq!(js.reducer.comm.records.len(), c.steps);
+    for (i, rec) in js.reducer.comm.records.iter().enumerate() {
+        assert_eq!(rec.step, i + 1);
+        assert_eq!(rec.bytes, per_step_moved, "step {} moved bytes", i + 1);
+        assert_eq!(rec.full_bytes, per_step_full, "step {} full bytes", i + 1);
+    }
+    let ratio = js.reducer.comm.compression_ratio().unwrap();
+    assert!(
+        ratio > 1.5 && ratio < 4.0,
+        "nano gwt-2 overall ratio (eligible 4x, diluted by embeddings \
+         and norms): {ratio}"
+    );
+}
+
+#[test]
+fn single_replica_keeps_the_ledger_empty() {
+    let c = cfg(OptSpec::gwt(2), 3);
+    let sharding = Sharding::Serial;
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut js =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    for _ in 0..c.steps {
+        js.step_once(&sharding).unwrap();
+    }
+    assert!(js.reducer.comm.records.is_empty());
+}
+
+#[test]
+fn coeff_domain_step_matches_weight_domain_step_bitwise() {
+    // The seam the compressed reduce feeds: stepping the bank with
+    // forward-transformed gradients through `step_bank_mixed` must be
+    // bit-identical to stepping with weight-domain gradients — the
+    // fused kernel's coefficient entry point is the exact tail of its
+    // weight entry point after `fwd_row`.
+    let shapes = vec![
+        ParamShape {
+            name: "layers.00.attn.wq".into(),
+            shape: vec![16, 64],
+            eligible: true,
+        },
+        ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+    ];
+    let specs = [
+        OptSpec::gwt(2),
+        OptSpec::gwt_basis(WaveletBasis::Db4, 2),
+        OptSpec::parse("gwt-2+adam").unwrap(),
+    ];
+    for spec in specs {
+        let cfg = TrainConfig { optimizer: spec, ..Default::default() };
+        for sharding in [Sharding::Serial, Sharding::pool(4)] {
+            let mut bank_w = build_optimizers(&shapes, &cfg, None).unwrap();
+            let mut bank_c = build_optimizers(&shapes, &cfg, None).unwrap();
+            let (basis, level) = bank_w[0]
+                .coeff_band()
+                .expect("eligible gwt param must expose the coeff seam");
+            let mut rng = Rng::new(11);
+            let mut w_a: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let mut w_b = w_a.clone();
+            let flags: Vec<bool> =
+                shapes.iter().map(|s| s.eligible && s.shape.len() == 2).collect();
+            for step in 0..3u64 {
+                let mut grng = Rng::new(50 + step);
+                let grads: Vec<Tensor> = shapes
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut grng))
+                    .collect();
+                let coeff_grads: Vec<Tensor> = grads
+                    .iter()
+                    .zip(&shapes)
+                    .zip(&flags)
+                    .map(|((g, s), &f)| {
+                        if f {
+                            Tensor::new(
+                                &s.shape,
+                                basis.fwd(
+                                    g.data(),
+                                    s.shape[0],
+                                    s.shape[1],
+                                    level,
+                                ),
+                            )
+                        } else {
+                            g.clone()
+                        }
+                    })
+                    .collect();
+                let sa = step_bank(&mut bank_w, &mut w_a, &grads, 0.01, &sharding);
+                let sb = step_bank_mixed(
+                    &mut bank_c,
+                    &mut w_b,
+                    &coeff_grads,
+                    &flags,
+                    0.01,
+                    &sharding,
+                );
+                assert_eq!(sa.len(), sb.len());
+                for (i, (a, b)) in sa.iter().zip(&sb).enumerate() {
+                    assert_eq!(
+                        a.update_norm.to_bits(),
+                        b.update_norm.to_bits(),
+                        "{spec:?} {sharding:?} step={step} param {i} norm"
+                    );
+                    assert_eq!(
+                        a.limiter_scale.to_bits(),
+                        b.limiter_scale.to_bits(),
+                        "{spec:?} {sharding:?} step={step} param {i} scale"
+                    );
+                }
+            }
+            for (i, (a, b)) in w_a.iter().zip(&w_b).enumerate() {
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{spec:?} {sharding:?} param {} ({})",
+                    i,
+                    shapes[i].name
+                );
+            }
+        }
+    }
+}

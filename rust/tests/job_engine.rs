@@ -197,6 +197,63 @@ fn suspend_resume_is_bit_identical() {
 }
 
 #[test]
+fn suspend_resume_adam8bit_is_bit_identical() {
+    // The quantized inner: `gwt-2+adam8bit` moments ride f32 lanes
+    // through the checkpoint (int8 codes are small exact integers, so
+    // the round trip is lossless) and the resumed run must replay the
+    // uninterrupted trajectory bit for bit.
+    let mut c = cfg(OptSpec::parse("gwt-2+adam8bit").unwrap(), 10);
+    c.grad_accum = 2;
+    let path = std::env::temp_dir()
+        .join("gwt_job_engine_suspend_adam8bit.bin")
+        .to_str()
+        .unwrap()
+        .to_string();
+
+    let mut a = JobEngine::new(None, 2, 0.0);
+    a.submit("j", c.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..9 {
+        a.run_round().unwrap();
+    }
+    let sa = a.job_state("j").unwrap();
+    let loss_a: Vec<u32> =
+        sa.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    let params_a: Vec<u32> = sa
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+
+    let mut b = JobEngine::new(None, 2, 0.0);
+    b.submit("j", c, 0, JobSource::Synthetic).unwrap();
+    for _ in 0..5 {
+        b.run_round().unwrap();
+    }
+    b.suspend("j", &path).unwrap();
+    b.resume("j", &path).unwrap();
+    for _ in 0..4 {
+        b.run_round().unwrap();
+    }
+    let sb = b.job_state("j").unwrap();
+    let loss_b: Vec<u32> =
+        sb.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    assert_eq!(&loss_b[..], &loss_a[5..], "post-resume losses diverged");
+    let params_b: Vec<u32> = sb
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    assert_eq!(params_b, params_a, "param bits diverged after resume");
+
+    a.run_to_completion().unwrap();
+    b.run_to_completion().unwrap();
+    assert_eq!(
+        a.summaries()[0].final_loss.to_bits(),
+        b.summaries()[0].final_loss.to_bits()
+    );
+}
+
+#[test]
 fn adaptive_job_degrades_instead_of_queueing() {
     // An adaptive job whose worst-case charge exceeds the remaining
     // budget is admitted with a tightened adapt_budget_mb (compressed
