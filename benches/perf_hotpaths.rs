@@ -164,6 +164,38 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // Tracing overhead gate: the same pooled bank step with the obs
+    // timing flag off (the default — every instrumentation site is
+    // one relaxed-bool/Option check) and on (timestamps + atomic
+    // aggregation). The untraced row must stay within GWT_BENCH_TOL
+    // of the committed baseline — that is the zero-cost-when-disabled
+    // contract under the bench-check gate; the traced row records
+    // what enabling costs.
+    {
+        let trace_pool = Sharding::pool(4);
+        gwt::obs::set_timing(false);
+        let t_off = time_bank_step("nano", OptSpec::gwt(2), &trace_pool, 2, 9);
+        gwt::obs::set_timing(true);
+        let t_on = time_bank_step("nano", OptSpec::gwt(2), &trace_pool, 2, 9);
+        gwt::obs::set_timing(false);
+        gwt::obs::reset_globals();
+        table.row(vec![
+            "bank step untraced (pool x4)".into(),
+            "nano".into(),
+            format!("{:.2} ms", t_off.per_iter_ms()),
+            "obs timing off (default path)".into(),
+        ]);
+        table.row(vec![
+            "bank step traced (pool x4)".into(),
+            "nano".into(),
+            format!("{:.2} ms", t_on.per_iter_ms()),
+            format!(
+                "{:.2}x vs untraced (global spans + pool busy/idle)",
+                t_on.median_ns / t_off.median_ns
+            ),
+        ]);
+    }
+
     // Pure dispatch overhead: near-empty chunks make the per-call
     // spawn/park-wake cost the entire measurement. This is the
     // per-step tax the persistent pool removes.

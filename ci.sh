@@ -120,6 +120,23 @@ for path in auto rust; do
         || { echo "job engine smoke: 'c' never finished"; exit 1; }
 done
 
+# Trace smoke: the observability loop end-to-end. A short synthetic
+# traced serve run must stream a schema-valid events.jsonl
+# (`trace check` validates the required keys of every line — the
+# docs/observability.md compatibility contract) and render the
+# summary report. Artifact-free.
+trace_dir=$(mktemp -d)
+echo "== trace smoke (--trace-dir) =="
+out=$(cargo run --release -- serve --synthetic --trace-dir "$trace_dir" \
+    "name=t,optimizer=gwt-2,steps=6" | tee /dev/stderr)
+grep -q "finished job 't'" <<<"$out" \
+    || { echo "trace smoke: job never finished"; exit 1; }
+[[ -s "$trace_dir/events.jsonl" ]] \
+    || { echo "trace smoke: no events.jsonl written"; exit 1; }
+cargo run --release -- trace check "$trace_dir"
+cargo run --release -- trace summary "$trace_dir" >/dev/null
+rm -rf "$trace_dir"
+
 # Replica-matrix smoke: the wavelet-domain DDP path end-to-end.
 # `replicas=1` is the passthrough pin (no comm ledger); `replicas=4`
 # runs the compressed approximation-band all-reduce and must report

@@ -148,12 +148,36 @@ impl AdaptController {
         grads: &[Tensor],
         sharding: &Sharding,
     ) -> Option<AdaptEvent> {
+        self.post_step_obs(
+            step,
+            bank,
+            grads,
+            sharding,
+            &mut crate::obs::JobObs::disabled(),
+        )
+    }
+
+    /// [`AdaptController::post_step`] under `probe`/`migrate` spans:
+    /// the probe span covers the sharded statistics pass through the
+    /// policy selection, the migrate span the applied moves. Spans
+    /// only bracket the existing code — decisions and migrations are
+    /// byte-for-byte the plain path.
+    pub fn post_step_obs(
+        &mut self,
+        step: usize,
+        bank: &mut [ParamOptimizer],
+        grads: &[Tensor],
+        sharding: &Sharding,
+        obs: &mut crate::obs::JobObs,
+    ) -> Option<AdaptEvent> {
         if self.policy == AdaptPolicy::Fixed || step % self.cadence != 0 {
             return None;
         }
+        let probe_t0 = obs.begin();
         probe_bank(bank, grads, sharding);
         self.events_seen += 1;
         if self.events_seen < MIN_PROBE_SAMPLES {
+            obs.end(crate::obs::Phase::Probe, probe_t0, step);
             return None;
         }
         // Gather views (and the budget's immovable share) in bank
@@ -182,6 +206,8 @@ impl AdaptController {
             fixed_bytes,
         };
         let moves = select(self.policy, &views, &knobs);
+        obs.end(crate::obs::Phase::Probe, probe_t0, step);
+        let migrate_t0 = obs.begin();
         let mut migrations = 0usize;
         let mut resets = 0usize;
         for (index, basis, level) in moves {
@@ -197,6 +223,7 @@ impl AdaptController {
                 MigrationKind::Noop => {}
             }
         }
+        obs.end(crate::obs::Phase::Migrate, migrate_t0, step);
         let histogram = selection_histogram(bank);
         Some(AdaptEvent {
             step,

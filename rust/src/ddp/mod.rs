@@ -160,6 +160,25 @@ impl GradReducer {
     /// An all-`None` plan delegates wholesale to [`combine_grads`],
     /// which is what guarantees full-band mode reproduces the legacy
     /// path bit for bit.
+    /// [`GradReducer::combine`] under a `band_reduce` span (the
+    /// per-row forward transforms inside it additionally record into
+    /// the process-global `forward_transform` aggregate, see
+    /// [`approx_forward`]). The span only brackets the call — the
+    /// reduction is byte-for-byte the plain path.
+    pub fn combine_obs(
+        &mut self,
+        worker_grads: Vec<Vec<Vec<f32>>>,
+        plan: &[Option<BandPlan>],
+        sharding: &Sharding,
+        step: usize,
+        obs: &mut crate::obs::JobObs,
+    ) -> Result<Vec<Vec<f32>>> {
+        let t0 = obs.begin();
+        let out = self.combine(worker_grads, plan, sharding);
+        obs.end(crate::obs::Phase::BandReduce, t0, step);
+        out
+    }
+
     pub fn combine(
         &mut self,
         worker_grads: Vec<Vec<Vec<f32>>>,
@@ -290,6 +309,9 @@ fn approx_forward(
     cols: usize,
 ) -> Vec<f32> {
     assert_eq!(g.len(), rows * cols, "gradient/geometry mismatch");
+    // Global span: this runs per replica per parameter, below the
+    // per-job seam (one relaxed-bool check when tracing is off).
+    let span = crate::obs::timing_start();
     let q = cols >> level;
     let mut compact = vec![0.0f32; rows * q];
     let mut items: Vec<_> = g
@@ -307,6 +329,7 @@ fn approx_forward(
             }
         },
     );
+    crate::obs::record_global(crate::obs::Phase::ForwardTransform, span);
     compact
 }
 

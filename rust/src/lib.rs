@@ -31,6 +31,7 @@ pub mod jsonx;
 pub mod linalg;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod pool;
 pub mod rng;

@@ -7,6 +7,7 @@
 //!   finetune — fine-tune on the synthetic MMLU-like suite
 //!   memory   — print the analytic memory tables (paper Tables I/XI)
 //!   info     — artifact manifest summary
+//!   trace    — inspect a `--trace-dir` JSONL event stream
 //!
 //! Examples:
 //!   gwt train -s preset=nano -s optimizer=gwt-2 -s steps=200
@@ -21,6 +22,9 @@
 //!             "name=a,optimizer=gwt-2,steps=100" \
 //!             "name=b,optimizer=adam,steps=60,priority=1"
 //!   gwt serve --synthetic --budget-x 1.2 "name=a,..." "name=b,..."
+//!   gwt serve --synthetic --trace-dir traces/run1 "name=a,..."
+//!   gwt trace summary traces/run1   # phase/registry report
+//!   gwt trace check traces/run1     # schema validation (CI smoke)
 //!   gwt train --replicas 4 -s optimizer=gwt-2   # wavelet-domain DDP:
 //!             # all-reduce only the approximation band (see docs/ddp.md)
 //!   gwt memory
@@ -52,11 +56,14 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: gwt <train|serve|eval|finetune|memory|info|bench-check> \
-         [--config FILE] [--threads N] [--replicas R] [-s key=value ...]\n\
+        "usage: gwt <train|serve|eval|finetune|memory|info|bench-check|trace> \
+         [--config FILE] [--threads N] [--replicas R] [--trace-dir DIR] \
+         [-s key=value ...]\n\
          serve: gwt serve [--budget-mb F | --budget-x F] [--synthetic] \
+         [--trace-dir DIR] \
          \"name=a,optimizer=gwt-2,steps=100[,priority=1]\" ...\n\
-         bench-check: gwt bench-check BASELINE.json FRESH.json [--tol F]"
+         bench-check: gwt bench-check BASELINE.json FRESH.json [--tol F]\n\
+         trace: gwt trace <summary|check> DIR"
     );
 }
 
@@ -110,10 +117,23 @@ fn run(argv: &[String]) -> Result<()> {
         "memory" => cmd_memory(),
         "info" => cmd_info(&args),
         "bench-check" => cmd_bench_check(&args),
+        "trace" => cmd_trace(&args),
         other => {
             print_usage();
             anyhow::bail!("unknown command '{other}'")
         }
+    }
+}
+
+/// Resolve `--trace-dir` into a tracer: a JSONL stream under the
+/// given directory, or the zero-cost disabled handle when absent.
+fn make_tracer(args: &Args) -> Result<gwt::obs::Tracer> {
+    match args.flag("trace-dir") {
+        Some(dir) => {
+            println!("  trace          {dir}/{}", gwt::obs::sink::EVENTS_FILE);
+            gwt::obs::Tracer::to_dir(dir)
+        }
+        None => Ok(gwt::obs::Tracer::disabled()),
     }
 }
 
@@ -128,6 +148,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("  platform       {}", runtime.platform());
     let loader = make_loader(&cfg)?;
     let mut trainer = Trainer::new(runtime, cfg.clone(), &loader)?;
+    let tracer = make_tracer(args)?;
+    if tracer.is_enabled() {
+        let label = trainer.job.curve.label.clone();
+        trainer.job.set_obs(gwt::obs::JobObs::new(tracer.clone(), &label));
+    }
     println!(
         "  params         {} tensors / {:.2}M scalars",
         trainer.shapes().len(),
@@ -169,12 +194,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(dir) = args.flag("curve-dir") {
         gwt::metrics::write_curves(dir, &[outcome.curve])?;
         if !trace.events.is_empty() {
-            std::fs::write(
-                format!("{dir}/adapt_trace.csv"),
-                trace.to_csv(),
+            gwt::obs::sink::write_csv_file(
+                &format!("{dir}/adapt_trace.csv"),
+                &trace.to_csv(),
             )?;
         }
         println!("curve written under {dir}/");
+    }
+    if tracer.is_enabled() {
+        let step = trainer.job.step;
+        trainer.job.obs.flush_window(step);
+        tracer.write_summary();
     }
     Ok(())
 }
@@ -260,8 +290,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "  source         {}",
         if synthetic { "synthetic" } else { "pjrt" }
     );
+    let tracer = make_tracer(args)?;
     let mut engine =
         gwt::serve::JobEngine::new(runtime, base.resolve_threads(), budget_mb);
+    engine.set_tracer(tracer.clone());
     for (name, priority, cfg) in jobs {
         let source = if synthetic {
             gwt::serve::JobSource::Synthetic
@@ -271,6 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.submit(&name, cfg, priority, source)?;
     }
     engine.run_to_completion()?;
+    tracer.write_summary();
 
     println!("\nevents:");
     for ev in engine.events() {
@@ -454,6 +487,135 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Required keys per event kind — the validation half of the JSONL
+/// schema contract (docs/observability.md). `gwt trace check` fails
+/// on any unparseable line, unknown `ev`, or missing key.
+fn trace_required_keys(ev: &str) -> Result<&'static [&'static str]> {
+    Ok(match ev {
+        "span" => &["job", "step", "phase", "ns"],
+        "step" => &[
+            "job",
+            "step",
+            "loss",
+            "tokens",
+            "comm_bytes",
+            "comm_full_bytes",
+            "wall_secs",
+        ],
+        "adapt" => {
+            &["job", "step", "migrations", "resets", "state_bytes", "histogram"]
+        }
+        "engine" => &["kind", "job", "detail"],
+        "window" => &["job", "step", "phases"],
+        "summary" => &["registry", "global_phases"],
+        other => anyhow::bail!("unknown event kind '{other}'"),
+    })
+}
+
+/// `gwt trace <summary|check> DIR` — inspect the `events.jsonl`
+/// stream a `--trace-dir` run wrote. `check` validates every line
+/// against the schema (the CI smoke); `summary` aggregates spans into
+/// a per-(job, phase) report plus the final registry.
+fn cmd_trace(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 2,
+        "usage: gwt trace <summary|check> DIR"
+    );
+    let verb = args.positional[0].as_str();
+    let dir = &args.positional[1];
+    let path = format!("{dir}/{}", gwt::obs::sink::EVENTS_FILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading trace stream {path}"))?;
+    match verb {
+        "check" => {
+            let mut lines = 0usize;
+            for (i, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let ctx = || format!("{path}:{}", i + 1);
+                let j = gwt::jsonx::Json::parse(line).with_context(ctx)?;
+                let ev = j.get("ev").and_then(|v| v.as_str()).with_context(ctx)?;
+                for key in trace_required_keys(ev).with_context(ctx)? {
+                    j.get(key).with_context(|| {
+                        format!("{path}:{}: '{ev}' event", i + 1)
+                    })?;
+                }
+                lines += 1;
+            }
+            anyhow::ensure!(lines > 0, "{path} holds no events");
+            println!("trace check: OK — {lines} events");
+            Ok(())
+        }
+        "summary" => {
+            use std::collections::BTreeMap;
+            let mut spans: BTreeMap<(String, String), gwt::obs::SpanAgg> =
+                BTreeMap::new();
+            let mut summary: Option<gwt::jsonx::Json> = None;
+            let mut events = 0usize;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let j = gwt::jsonx::Json::parse(line)?;
+                events += 1;
+                match j.get("ev")?.as_str()? {
+                    "span" => {
+                        let key = (
+                            j.get("job")?.as_str()?.to_string(),
+                            j.get("phase")?.as_str()?.to_string(),
+                        );
+                        spans
+                            .entry(key)
+                            .or_default()
+                            .record(j.get("ns")?.as_f64()? as u64);
+                    }
+                    "summary" => summary = Some(j),
+                    _ => {}
+                }
+            }
+            println!("{events} events in {path}\n");
+            let mut table = gwt::bench_harness::TableView::new(
+                "span phases (per job)",
+                &["job", "phase", "count", "total ms", "mean us", "max us"],
+            );
+            for ((job, phase), agg) in &spans {
+                table.row(vec![
+                    job.clone(),
+                    phase.clone(),
+                    agg.count.to_string(),
+                    format!("{:.3}", agg.total_ns as f64 / 1e6),
+                    format!("{:.1}", agg.mean_ns() as f64 / 1e3),
+                    format!("{:.1}", agg.max_ns as f64 / 1e3),
+                ]);
+            }
+            table.print();
+            if let Some(s) = summary {
+                let reg = s.get("registry")?;
+                let mut rt = gwt::bench_harness::TableView::new(
+                    "registry",
+                    &["kind", "key", "value"],
+                );
+                for (kind, section) in [("counter", "counters"), ("gauge", "gauges")]
+                {
+                    if let Some(gwt::jsonx::Json::Obj(m)) = reg.opt(section) {
+                        for (k, v) in m {
+                            rt.row(vec![
+                                kind.to_string(),
+                                k.clone(),
+                                format!("{:.0}", v.as_f64().unwrap_or(0.0)),
+                            ]);
+                        }
+                    }
+                }
+                println!();
+                rt.print();
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown trace verb '{other}' (expected summary or check)"
+        ),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,7 +1,13 @@
 //! Metrics: loss-curve recording, perplexity, throughput meters, and
 //! CSV emission for the figure benches.
+//!
+//! All CSV serialization flows through `obs::sink::csv_table` (format
+//! strings — the byte-compatibility contract — stay here), and all
+//! wall-time reads flow through `obs::clock` so nothing in this module
+//! ever touches the non-monotonic system clock.
 
-use std::time::Instant;
+use crate::obs::clock::Stopwatch;
+use crate::obs::sink::csv_table;
 
 /// One recorded training point.
 #[derive(Clone, Copy, Debug)]
@@ -61,18 +67,18 @@ impl LossCurve {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("step,loss,ppl,tokens_seen,wall_secs\n");
-        for p in &self.points {
-            s.push_str(&format!(
-                "{},{:.6},{:.4},{},{:.3}\n",
-                p.step,
-                p.loss,
-                ppl(p.loss),
-                p.tokens_seen,
-                p.wall_secs
-            ));
-        }
-        s
+        csv_table(
+            &["step", "loss", "ppl", "tokens_seen", "wall_secs"],
+            self.points.iter().map(|p| {
+                vec![
+                    p.step.to_string(),
+                    format!("{:.6}", p.loss),
+                    format!("{:.4}", ppl(p.loss)),
+                    p.tokens_seen.to_string(),
+                    format!("{:.3}", p.wall_secs),
+                ]
+            }),
+        )
     }
 }
 
@@ -80,9 +86,12 @@ pub fn ppl(loss: f32) -> f32 {
     loss.exp()
 }
 
-/// Tokens/sec meter.
+/// Tokens/sec meter on the monotonic, resumable `obs::clock`
+/// stopwatch: a suspended job checkpoints `elapsed_secs()` and
+/// restores with [`Throughput::resume`], so wall times never restart
+/// at zero (or step backwards) across suspend/resume cycles.
 pub struct Throughput {
-    start: Instant,
+    watch: Stopwatch,
     tokens: usize,
 }
 
@@ -94,7 +103,13 @@ impl Default for Throughput {
 
 impl Throughput {
     pub fn new() -> Self {
-        Throughput { start: Instant::now(), tokens: 0 }
+        Throughput { watch: Stopwatch::start(), tokens: 0 }
+    }
+
+    /// Rebuild a meter from checkpointed state: `elapsed_secs` seconds
+    /// and `tokens` tokens already on the clock.
+    pub fn resume(elapsed_secs: f64, tokens: usize) -> Self {
+        Throughput { watch: Stopwatch::resume(elapsed_secs), tokens }
     }
 
     pub fn add_tokens(&mut self, n: usize) {
@@ -102,7 +117,7 @@ impl Throughput {
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
-        let secs = self.start.elapsed().as_secs_f64();
+        let secs = self.watch.elapsed_secs();
         if secs <= 0.0 {
             return 0.0;
         }
@@ -110,7 +125,7 @@ impl Throughput {
     }
 
     pub fn elapsed_secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.watch.elapsed_secs()
     }
 }
 
@@ -179,18 +194,18 @@ impl AdaptTrace {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("step,migrations,resets,state_bytes,histogram\n");
-        for e in &self.events {
-            s.push_str(&format!(
-                "{},{},{},{},{}\n",
-                e.step,
-                e.migrations,
-                e.resets,
-                e.state_bytes,
-                e.histogram_label()
-            ));
-        }
-        s
+        csv_table(
+            &["step", "migrations", "resets", "state_bytes", "histogram"],
+            self.events.iter().map(|e| {
+                vec![
+                    e.step.to_string(),
+                    e.migrations.to_string(),
+                    e.resets.to_string(),
+                    e.state_bytes.to_string(),
+                    e.histogram_label(),
+                ]
+            }),
+        )
     }
 }
 
@@ -240,24 +255,28 @@ impl CommLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("step,full_bytes,bytes\n");
-        for r in &self.records {
-            s.push_str(&format!("{},{},{}\n", r.step, r.full_bytes, r.bytes));
-        }
-        s
+        csv_table(
+            &["step", "full_bytes", "bytes"],
+            self.records.iter().map(|r| {
+                vec![
+                    r.step.to_string(),
+                    r.full_bytes.to_string(),
+                    r.bytes.to_string(),
+                ]
+            }),
+        )
     }
 }
 
 /// Write a set of curves as one CSV per curve under `dir`.
 pub fn write_curves(dir: &str, curves: &[LossCurve]) -> anyhow::Result<()> {
-    std::fs::create_dir_all(dir)?;
     for c in curves {
         let safe: String = c
             .label
             .chars()
             .map(|ch| if ch.is_alphanumeric() { ch } else { '_' })
             .collect();
-        std::fs::write(format!("{dir}/{safe}.csv"), c.to_csv())?;
+        crate::obs::sink::write_csv_file(&format!("{dir}/{safe}.csv"), &c.to_csv())?;
     }
     Ok(())
 }
@@ -364,5 +383,20 @@ mod tests {
         t.add_tokens(500);
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(t.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn throughput_elapsed_is_monotone_and_resumable() {
+        let t = Throughput::new();
+        let mut last = 0.0;
+        for _ in 0..10 {
+            let e = t.elapsed_secs();
+            assert!(e >= 0.0);
+            assert!(e >= last);
+            last = e;
+        }
+        let r = Throughput::resume(last + 50.0, 1000);
+        assert!(r.elapsed_secs() >= last + 50.0, "resume keeps the base");
+        assert!(r.tokens_per_sec() > 0.0);
     }
 }

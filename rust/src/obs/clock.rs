@@ -1,0 +1,107 @@
+//! The one clock every span, throughput meter, and wall-time column
+//! reads: monotonic [`Instant`]s behind two tiny helpers, so no
+//! metrics path ever touches the non-monotonic system wall clock
+//! (`SystemTime` can step backwards under NTP; `Instant` cannot).
+//!
+//! [`Stopwatch`] adds the piece `Instant` alone lacks: *resumable*
+//! elapsed time. A suspended job checkpoints its accumulated seconds
+//! and resumes the watch from that base on restore, so the `wall_secs`
+//! column of a loss curve stays non-negative and monotone per step
+//! across suspend/resume cycles (previously the meter restarted at
+//! zero, which made resumed-run wall times jump backwards relative to
+//! the suspended run's tail). Pinned by `rust/tests/obs.rs`.
+
+use std::time::{Duration, Instant};
+
+/// The canonical span timestamp: a monotonic instant. Every obs
+/// timing site calls this (not `Instant::now()` directly) so the
+/// clock discipline is greppable and swappable in one place.
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+/// Nanoseconds elapsed since `t0`, saturating into `u64` (a span
+/// would need ~584 years to overflow).
+pub fn ns_since(t0: Instant) -> u64 {
+    let n = t0.elapsed().as_nanos();
+    if n > u64::MAX as u128 {
+        u64::MAX
+    } else {
+        n as u64
+    }
+}
+
+/// A monotonic, resumable stopwatch: `base` seconds accumulated by
+/// previous run segments plus the live `Instant` since this segment
+/// started. Backs `metrics::Throughput` and the loss-curve wall-time
+/// column.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    base: Duration,
+    since: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Stopwatch::start()
+    }
+}
+
+impl Stopwatch {
+    /// Start from zero (fresh run segment).
+    pub fn start() -> Stopwatch {
+        Stopwatch { base: Duration::ZERO, since: now() }
+    }
+
+    /// Resume with `base_secs` already on the clock (the checkpointed
+    /// elapsed time of a suspended run). Non-finite or negative bases
+    /// clamp to zero — a malformed checkpoint must not panic the
+    /// restore path (`Duration::from_secs_f64` would).
+    pub fn resume(base_secs: f64) -> Stopwatch {
+        let base = if base_secs.is_finite() && base_secs > 0.0 {
+            Duration::from_secs_f64(base_secs)
+        } else {
+            Duration::ZERO
+        };
+        Stopwatch { base, since: now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.base + self.since.elapsed()
+    }
+
+    /// Total seconds on the watch: accumulated base + live segment.
+    /// Monotone and non-negative by construction.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let w = Stopwatch::start();
+        let a = w.elapsed_secs();
+        let b = w.elapsed_secs();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn resume_carries_the_base() {
+        let w = Stopwatch::resume(100.0);
+        assert!(w.elapsed_secs() >= 100.0);
+    }
+
+    #[test]
+    fn malformed_bases_clamp_to_zero() {
+        for bad in [-1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let w = Stopwatch::resume(bad);
+            assert!(w.elapsed_secs() >= 0.0);
+            assert!(w.elapsed_secs() < 1.0);
+        }
+    }
+}

@@ -1,0 +1,661 @@
+//! Unified tracing & metrics: structured step-phase spans, a
+//! counter/gauge registry, and JSONL event sinks — one measurement
+//! surface for the quantities the paper argues about (optimizer-state
+//! bytes, step overhead, communication volume) across pool, optim,
+//! adapt, ddp, and serve.
+//!
+//! ## Architecture
+//!
+//! Three pieces, all plain functions — no macro crates:
+//!
+//! * **Spans** — scoped timers over the step-phase taxonomy
+//!   ([`Phase`]): a call site takes a timestamp with
+//!   [`JobObs::begin`] (or [`timing_start`] for process-global
+//!   sites) and closes it with [`JobObs::end`] /
+//!   [`record_global`], which aggregates (count, total ns, max ns)
+//!   and emits one JSONL line per span close. Job-attributed phases
+//!   aggregate per job *and* per step window (a window event flushes
+//!   every [`JobObs::WINDOW_STEPS`] steps); sites below the job seam
+//!   (pool latch protocol, HLO dispatch, per-param transforms)
+//!   aggregate into lock-free process-global atomics surfaced in the
+//!   summary event and `gwt trace summary`.
+//! * **Registry** — [`MetricsRegistry`] counters/gauges behind the
+//!   shared [`Tracer`], synced from the existing typed ledgers
+//!   (`metrics::CommLog`, `metrics::AdaptTrace`, admission bytes).
+//! * **Sinks** — `--trace-dir` opens one `events.jsonl` stream
+//!   (`obs::sink`, written via `jsonx`); `gwt trace summary` renders
+//!   the human report and `gwt trace check` validates the schema.
+//!
+//! ## The two hard constraints
+//!
+//! **Numerics are untouchable.** Instrumentation only ever *reads*
+//! clocks and byte counts; it never reorders work, never adds a
+//! reduction, never allocates into a compute path. The bit-identity
+//! batteries (`parallel_determinism.rs`, `ddp_determinism.rs`,
+//! `job_engine.rs`, `tests/obs.rs`) pass identically with tracing on
+//! and off.
+//!
+//! **Disabled means branch-cheap.** Every call site pays exactly one
+//! check on the disabled path — an `Option<Arc<_>>` test
+//! ([`JobObs::begin`]) or one relaxed atomic bool load
+//! ([`timing_start`]) — with no timestamp taken, no allocation, no
+//! lock. The traced-vs-untraced `perf_hotpaths` row pair keeps the
+//! disabled path inside the `GWT_BENCH_TOL` band.
+
+pub mod clock;
+pub mod registry;
+pub mod sink;
+
+pub use registry::{keys, MetricsRegistry};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::jsonx::Json;
+
+/// The step-phase taxonomy: where an optimizer step spends its time.
+/// `key()` strings appear verbatim in JSONL span events and are part
+/// of the schema contract (docs/observability.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Pulling one gradient round out of the job's `GradSource`.
+    GradFetch,
+    /// Wavelet forward transform of a gradient (ddp approx path, the
+    /// generic `Composed` down-projection).
+    ForwardTransform,
+    /// Cross-replica gradient combine: the fixed-order tree reduce
+    /// (full-band or approximation-band).
+    BandReduce,
+    /// The bank step itself (`step_bank` / `step_bank_mixed`).
+    InnerUpdate,
+    /// Adaptive compressibility probe + selection.
+    Probe,
+    /// Adaptive moment migration (band remap / reset rebuild).
+    Migrate,
+    /// Fused Wavelet×Adam HLO executable dispatch (PJRT).
+    HloDispatch,
+    /// `StepPool` batch fan-out: job enqueue + worker wake.
+    PoolFanout,
+    /// Caller-side latch wait for a dispatched pool batch.
+    PoolLatchWait,
+}
+
+impl Phase {
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::GradFetch,
+        Phase::ForwardTransform,
+        Phase::BandReduce,
+        Phase::InnerUpdate,
+        Phase::Probe,
+        Phase::Migrate,
+        Phase::HloDispatch,
+        Phase::PoolFanout,
+        Phase::PoolLatchWait,
+    ];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            Phase::GradFetch => "grad_fetch",
+            Phase::ForwardTransform => "forward_transform",
+            Phase::BandReduce => "band_reduce",
+            Phase::InnerUpdate => "inner_update",
+            Phase::Probe => "probe",
+            Phase::Migrate => "migrate",
+            Phase::HloDispatch => "hlo_dispatch",
+            Phase::PoolFanout => "pool_fanout",
+            Phase::PoolLatchWait => "pool_latch_wait",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// One phase's aggregation cell: count, total, and max nanoseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanAgg {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl SpanAgg {
+    pub const ZERO: SpanAgg = SpanAgg { count: 0, total_ns: 0, max_ns: 0 };
+
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &SpanAgg) {
+        self.count += other.count;
+        self.total_ns = self.total_ns.saturating_add(other.total_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_ns / self.count
+        }
+    }
+}
+
+/// Per-phase aggregation table (one [`SpanAgg`] per [`Phase`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PhaseSet {
+    aggs: [SpanAgg; Phase::COUNT],
+}
+
+impl Default for PhaseSet {
+    fn default() -> Self {
+        PhaseSet { aggs: [SpanAgg::ZERO; Phase::COUNT] }
+    }
+}
+
+impl PhaseSet {
+    pub fn record(&mut self, phase: Phase, ns: u64) {
+        self.aggs[phase.idx()].record(ns);
+    }
+
+    pub fn get(&self, phase: Phase) -> SpanAgg {
+        self.aggs[phase.idx()]
+    }
+
+    pub fn merge(&mut self, other: &PhaseSet) {
+        for (a, b) in self.aggs.iter_mut().zip(&other.aggs) {
+            a.merge(b);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.aggs.iter().all(|a| a.count == 0)
+    }
+
+    pub fn clear(&mut self) {
+        self.aggs = [SpanAgg::ZERO; Phase::COUNT];
+    }
+
+    /// Phases with at least one recorded span, taxonomy order.
+    pub fn iter(&self) -> impl Iterator<Item = (Phase, SpanAgg)> + '_ {
+        Phase::ALL
+            .into_iter()
+            .map(|p| (p, self.get(p)))
+            .filter(|(_, a)| a.count > 0)
+    }
+
+    /// `{"inner_update":{"count":..,"total_ns":..,"max_ns":..}, ...}`
+    /// — empty phases omitted.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.iter()
+                .map(|(p, a)| {
+                    (
+                        p.key().to_string(),
+                        crate::jsonx::obj(vec![
+                            ("count", crate::jsonx::num(a.count as f64)),
+                            ("total_ns", crate::jsonx::num(a.total_ns as f64)),
+                            ("max_ns", crate::jsonx::num(a.max_ns as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+// ---- process-global timing (sites below the per-job seam) -----------
+//
+// The pool latch protocol, the HLO dispatch inside `GwtAdam`, and the
+// per-param transform in `Composed` run below any handle-threading
+// seam (inside `MatrixOpt`, inside worker threads). They record into
+// lock-free atomics gated by one global flag, checked once per call
+// site with a relaxed load — the branch-cheap disabled-path contract.
+
+static TIMING: AtomicBool = AtomicBool::new(false);
+
+/// Turn process-global phase timing on/off (set by `--trace-dir`
+/// runs and the traced bench rows; default off).
+pub fn set_timing(on: bool) {
+    TIMING.store(on, Ordering::Relaxed);
+}
+
+pub fn timing_enabled() -> bool {
+    TIMING.load(Ordering::Relaxed)
+}
+
+/// The global-site span opener: `None` (no timestamp taken) unless
+/// timing is enabled. Pair with [`record_global`] /
+/// [`add_pool_busy`] / [`add_pool_idle`].
+#[inline]
+pub fn timing_start() -> Option<Instant> {
+    if timing_enabled() {
+        Some(clock::now())
+    } else {
+        None
+    }
+}
+
+struct AtomicAgg {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl AtomicAgg {
+    const fn new() -> AtomicAgg {
+        AtomicAgg {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> SpanAgg {
+        SpanAgg {
+            count: self.count.load(Ordering::Relaxed),
+            total_ns: self.total_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.total_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+const AGG_INIT: AtomicAgg = AtomicAgg::new();
+static GLOBAL_PHASES: [AtomicAgg; Phase::COUNT] = [AGG_INIT; Phase::COUNT];
+static POOL_BUSY_NS: AtomicU64 = AtomicU64::new(0);
+static POOL_IDLE_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Close a global span opened by [`timing_start`] (no-op on `None`).
+#[inline]
+pub fn record_global(phase: Phase, start: Option<Instant>) {
+    if let Some(t0) = start {
+        GLOBAL_PHASES[phase.idx()].record(clock::ns_since(t0));
+    }
+}
+
+/// Credit worker busy time (pool chunk execution) since `start`.
+#[inline]
+pub fn add_pool_busy(start: Option<Instant>) {
+    if let Some(t0) = start {
+        POOL_BUSY_NS.fetch_add(clock::ns_since(t0), Ordering::Relaxed);
+    }
+}
+
+/// Credit caller idle time (latch wait) since `start`.
+#[inline]
+pub fn add_pool_idle(start: Option<Instant>) {
+    if let Some(t0) = start {
+        POOL_IDLE_NS.fetch_add(clock::ns_since(t0), Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of the process-global phase aggregates.
+pub fn global_phases() -> PhaseSet {
+    let mut out = PhaseSet::default();
+    for p in Phase::ALL {
+        out.aggs[p.idx()] = GLOBAL_PHASES[p.idx()].snapshot();
+    }
+    out
+}
+
+pub fn pool_busy_ns() -> u64 {
+    POOL_BUSY_NS.load(Ordering::Relaxed)
+}
+
+pub fn pool_idle_ns() -> u64 {
+    POOL_IDLE_NS.load(Ordering::Relaxed)
+}
+
+/// Zero every global aggregate (benches and tests isolate runs).
+pub fn reset_globals() {
+    for a in &GLOBAL_PHASES {
+        a.reset();
+    }
+    POOL_BUSY_NS.store(0, Ordering::Relaxed);
+    POOL_IDLE_NS.store(0, Ordering::Relaxed);
+}
+
+// ---- the shared tracer ----------------------------------------------
+
+struct TracerCore {
+    registry: Mutex<MetricsRegistry>,
+    sink: Option<sink::EventSink>,
+}
+
+/// The shared observability handle: a cheaply clonable reference to
+/// one registry + optional JSONL sink, or nothing at all. A disabled
+/// tracer is a `None` — every operation is one `Option` check.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    core: Option<Arc<TracerCore>>,
+}
+
+impl Tracer {
+    /// The zero-cost tracer: no registry, no sink, no allocation.
+    pub fn disabled() -> Tracer {
+        Tracer { core: None }
+    }
+
+    /// Registry-only tracer (tests, in-process consumers): spans and
+    /// counters aggregate, nothing is written to disk.
+    pub fn enabled() -> Tracer {
+        Tracer {
+            core: Some(Arc::new(TracerCore {
+                registry: Mutex::new(MetricsRegistry::default()),
+                sink: None,
+            })),
+        }
+    }
+
+    /// Full tracer: registry + `events.jsonl` stream under `dir`
+    /// (created if missing). Also turns process-global timing on —
+    /// the pool/HLO sites have no handle to check.
+    pub fn to_dir(dir: &str) -> Result<Tracer> {
+        std::fs::create_dir_all(dir)?;
+        let sink =
+            sink::EventSink::create(&format!("{dir}/{}", sink::EVENTS_FILE))?;
+        set_timing(true);
+        Ok(Tracer {
+            core: Some(Arc::new(TracerCore {
+                registry: Mutex::new(MetricsRegistry::default()),
+                sink: Some(sink),
+            })),
+        })
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.is_some()
+    }
+
+    /// Write one JSONL event line (no-op without a sink).
+    pub fn emit(&self, ev: Json) {
+        if let Some(core) = &self.core {
+            if let Some(sink) = &core.sink {
+                sink.write(&ev);
+            }
+        }
+    }
+
+    pub fn counter_add(&self, key: &str, v: u64) {
+        if let Some(core) = &self.core {
+            core.registry.lock().unwrap().counter_add(key, v);
+        }
+    }
+
+    pub fn gauge_set(&self, key: &str, v: u64) {
+        if let Some(core) = &self.core {
+            core.registry.lock().unwrap().gauge_set(key, v);
+        }
+    }
+
+    pub fn gauge_max(&self, key: &str, v: u64) {
+        if let Some(core) = &self.core {
+            core.registry.lock().unwrap().gauge_max(key, v);
+        }
+    }
+
+    /// Snapshot of the registry (`None` when disabled).
+    pub fn registry(&self) -> Option<MetricsRegistry> {
+        self.core
+            .as_ref()
+            .map(|c| c.registry.lock().unwrap().clone())
+    }
+
+    /// Fold the process-global pool counters into the registry and
+    /// emit the end-of-run summary event.
+    pub fn write_summary(&self) {
+        let Some(core) = &self.core else { return };
+        let registry_json = {
+            let mut reg = core.registry.lock().unwrap();
+            reg.gauge_set(keys::POOL_BUSY_NS, pool_busy_ns());
+            reg.gauge_set(keys::POOL_IDLE_NS, pool_idle_ns());
+            reg.to_json()
+        };
+        self.emit(sink::summary_event(registry_json, &global_phases()));
+        self.flush();
+    }
+
+    pub fn flush(&self) {
+        if let Some(core) = &self.core {
+            if let Some(sink) = &core.sink {
+                sink.flush();
+            }
+        }
+    }
+}
+
+// ---- the per-job span handle ----------------------------------------
+
+/// Per-job observability handle: the tracer plus this job's phase
+/// aggregation (whole-run and current step window). Owned by
+/// `serve::JobState`; `JobObs::disabled()` is the default and costs
+/// one `Option` check per span site.
+pub struct JobObs {
+    tracer: Tracer,
+    job: String,
+    /// Whole-run per-phase aggregation for this job.
+    pub run: PhaseSet,
+    /// Aggregation since the last window flush.
+    window: PhaseSet,
+}
+
+impl Default for JobObs {
+    fn default() -> Self {
+        JobObs::disabled()
+    }
+}
+
+impl JobObs {
+    /// Window-flush cadence in steps: every `WINDOW_STEPS`-th step
+    /// emits a `window` event with the phase aggregation since the
+    /// previous flush.
+    pub const WINDOW_STEPS: usize = 16;
+
+    pub fn disabled() -> JobObs {
+        JobObs {
+            tracer: Tracer::disabled(),
+            job: String::new(),
+            run: PhaseSet::default(),
+            window: PhaseSet::default(),
+        }
+    }
+
+    pub fn new(tracer: Tracer, job: &str) -> JobObs {
+        JobObs {
+            tracer,
+            job: job.to_string(),
+            run: PhaseSet::default(),
+            window: PhaseSet::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.tracer.is_enabled()
+    }
+
+    pub fn job(&self) -> &str {
+        &self.job
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Open a span: `None` (no timestamp, no work) when disabled.
+    #[inline]
+    pub fn begin(&self) -> Option<Instant> {
+        if self.enabled() {
+            Some(clock::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`JobObs::begin`]: aggregate into the
+    /// run and window tables and emit the span-close line.
+    pub fn end(&mut self, phase: Phase, start: Option<Instant>, step: usize) {
+        let Some(t0) = start else { return };
+        let ns = clock::ns_since(t0);
+        self.run.record(phase, ns);
+        self.window.record(phase, ns);
+        self.tracer.emit(sink::span_event(&self.job, step, phase, ns));
+    }
+
+    pub fn counter_add(&self, key: &str, v: u64) {
+        self.tracer.counter_add(key, v);
+    }
+
+    pub fn gauge_set(&self, key: &str, v: u64) {
+        self.tracer.gauge_set(key, v);
+    }
+
+    pub fn emit(&self, ev: Json) {
+        self.tracer.emit(ev);
+    }
+
+    /// Flush the step window on its cadence (call once per step).
+    pub fn maybe_flush_window(&mut self, step: usize) {
+        if self.enabled() && step % Self::WINDOW_STEPS == 0 {
+            self.flush_window(step);
+        }
+    }
+
+    /// Emit and reset the current window (also called at job finish).
+    pub fn flush_window(&mut self, step: usize) {
+        if self.window.is_empty() {
+            return;
+        }
+        self.tracer.emit(sink::window_event(&self.job, step, &self.window));
+        self.window.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_keys_are_unique_and_cover_all() {
+        let mut keys: Vec<&str> = Phase::ALL.iter().map(|p| p.key()).collect();
+        assert_eq!(keys.len(), Phase::COUNT);
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), Phase::COUNT, "duplicate phase key");
+    }
+
+    #[test]
+    fn span_agg_math() {
+        let mut a = SpanAgg::default();
+        a.record(10);
+        a.record(30);
+        a.record(20);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.total_ns, 60);
+        assert_eq!(a.max_ns, 30);
+        assert_eq!(a.mean_ns(), 20);
+        let mut b = SpanAgg::default();
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count, 4);
+        assert_eq!(a.total_ns, 160);
+        assert_eq!(a.max_ns, 100);
+        assert_eq!(SpanAgg::ZERO.mean_ns(), 0);
+    }
+
+    #[test]
+    fn phase_set_records_and_serializes() {
+        let mut ps = PhaseSet::default();
+        assert!(ps.is_empty());
+        ps.record(Phase::InnerUpdate, 50);
+        ps.record(Phase::InnerUpdate, 150);
+        ps.record(Phase::Probe, 7);
+        assert!(!ps.is_empty());
+        assert_eq!(ps.get(Phase::InnerUpdate).count, 2);
+        assert_eq!(ps.get(Phase::InnerUpdate).max_ns, 150);
+        assert_eq!(ps.get(Phase::GradFetch).count, 0);
+        let j = ps.to_json();
+        assert!(j.opt("inner_update").is_some());
+        assert!(j.opt("grad_fetch").is_none(), "empty phases omitted");
+        assert_eq!(
+            j.get("probe").unwrap().get("total_ns").unwrap().as_usize().unwrap(),
+            7
+        );
+        ps.clear();
+        assert!(ps.is_empty());
+    }
+
+    #[test]
+    fn disabled_handles_do_nothing() {
+        let mut obs = JobObs::disabled();
+        assert!(!obs.enabled());
+        let t = obs.begin();
+        assert!(t.is_none(), "disabled begin must not take a timestamp");
+        obs.end(Phase::InnerUpdate, t, 1);
+        assert!(obs.run.is_empty());
+        let tr = Tracer::disabled();
+        assert!(!tr.is_enabled());
+        tr.counter_add(keys::COMM_BYTES, 10);
+        assert!(tr.registry().is_none());
+    }
+
+    #[test]
+    fn enabled_spans_aggregate_per_run_and_window() {
+        let mut obs = JobObs::new(Tracer::enabled(), "j");
+        for step in 1..=3usize {
+            let t = obs.begin();
+            assert!(t.is_some());
+            obs.end(Phase::InnerUpdate, t, step);
+        }
+        assert_eq!(obs.run.get(Phase::InnerUpdate).count, 3);
+        assert_eq!(obs.window.get(Phase::InnerUpdate).count, 3);
+        obs.flush_window(3);
+        assert!(obs.window.is_empty());
+        assert_eq!(obs.run.get(Phase::InnerUpdate).count, 3, "run survives");
+    }
+
+    #[test]
+    fn registry_shared_across_clones() {
+        let tr = Tracer::enabled();
+        let tr2 = tr.clone();
+        tr.counter_add(keys::COMM_BYTES, 5);
+        tr2.counter_add(keys::COMM_BYTES, 7);
+        assert_eq!(tr.registry().unwrap().counter(keys::COMM_BYTES), 12);
+    }
+
+    #[test]
+    fn global_timing_gate() {
+        // Snapshot-delta discipline: other tests may run concurrently,
+        // so assert on deltas of our own recording, not absolutes.
+        set_timing(false);
+        assert!(timing_start().is_none());
+        let before = global_phases().get(Phase::HloDispatch);
+        record_global(Phase::HloDispatch, None);
+        assert_eq!(global_phases().get(Phase::HloDispatch).count, before.count);
+        set_timing(true);
+        let t = timing_start();
+        assert!(t.is_some());
+        record_global(Phase::HloDispatch, t);
+        assert!(global_phases().get(Phase::HloDispatch).count > before.count);
+        set_timing(false);
+    }
+}

@@ -1,0 +1,147 @@
+//! `MetricsRegistry`: the unified counter/gauge store behind the
+//! tracer. Counters accumulate (comm bytes, migrations); gauges hold
+//! the latest (or peak) observation (live state bytes, queue depth).
+//!
+//! The per-step typed records the repo already had —
+//! `metrics::AdaptTrace` (adaptive events) and `metrics::CommLog`
+//! (per-step communication ledger) — stay as the raw, test-pinned
+//! data; the registry is the *unified totals view* over them, synced
+//! by `serve::JobState` each step, so one snapshot answers "how many
+//! bytes / migrations / state-bytes is this run at" without walking
+//! every subsystem's log. Key names are a compatibility contract
+//! (docs/observability.md); use the [`keys`] constants, not ad-hoc
+//! strings.
+
+use std::collections::BTreeMap;
+
+use crate::jsonx::{num, Json};
+
+/// Registry key constants — the schema half of the counter/gauge
+/// store. Field names appear verbatim in JSONL summary events.
+pub mod keys {
+    /// Gauge: measured live optimizer-state bytes of admitted banks.
+    pub const STATE_BYTES_LIVE: &str = "state_bytes_live";
+    /// Gauge: worst-case (admission-charge) state bytes.
+    pub const STATE_BYTES_WORST: &str = "state_bytes_worst";
+    /// Counter: cross-replica bytes actually moved (ddp ledger).
+    pub const COMM_BYTES: &str = "comm_bytes";
+    /// Counter: bytes a full-gradient all-reduce would have moved.
+    pub const COMM_FULL_BYTES: &str = "comm_full_bytes";
+    /// Gauge: engine state-byte budget currently admitted.
+    pub const ADMITTED_BYTES: &str = "admitted_bytes";
+    /// Gauge: peak admitted bytes over the run.
+    pub const PEAK_ADMITTED_BYTES: &str = "peak_admitted_bytes";
+    /// Gauge: jobs waiting for admission.
+    pub const QUEUE_DEPTH: &str = "queue_depth";
+    /// Gauge: cumulative step-pool worker busy nanoseconds.
+    pub const POOL_BUSY_NS: &str = "pool_busy_ns";
+    /// Gauge: cumulative step-pool latch-wait (idle) nanoseconds.
+    pub const POOL_IDLE_NS: &str = "pool_idle_ns";
+    /// Counter: adaptive migrations applied (resets included).
+    pub const MIGRATIONS: &str = "migrations";
+    /// Counter: migrations that took the reset fallback.
+    pub const RESETS: &str = "resets";
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+}
+
+impl MetricsRegistry {
+    pub fn counter_add(&mut self, key: &str, v: u64) {
+        if v != 0 {
+            *self.counters.entry(key.to_string()).or_insert(0) += v;
+        }
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, key: &str, v: u64) {
+        self.gauges.insert(key.to_string(), v);
+    }
+
+    /// Set the gauge to `max(current, v)` — peak-tracking gauges.
+    pub fn gauge_max(&mut self, key: &str, v: u64) {
+        let e = self.gauges.entry(key.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    pub fn gauge(&self, key: &str) -> u64 {
+        self.gauges.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &BTreeMap<String, u64> {
+        &self.gauges
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+    }
+
+    /// `{"counters": {...}, "gauges": {...}}` — the registry half of
+    /// the JSONL summary event.
+    pub fn to_json(&self) -> Json {
+        let map = |m: &BTreeMap<String, u64>| {
+            Json::Obj(
+                m.iter().map(|(k, v)| (k.clone(), num(*v as f64))).collect(),
+            )
+        };
+        crate::jsonx::obj(vec![
+            ("counters", map(&self.counters)),
+            ("gauges", map(&self.gauges)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_gauges_overwrite() {
+        let mut r = MetricsRegistry::default();
+        assert!(r.is_empty());
+        r.counter_add(keys::COMM_BYTES, 100);
+        r.counter_add(keys::COMM_BYTES, 28);
+        assert_eq!(r.counter(keys::COMM_BYTES), 128);
+        r.gauge_set(keys::QUEUE_DEPTH, 3);
+        r.gauge_set(keys::QUEUE_DEPTH, 1);
+        assert_eq!(r.gauge(keys::QUEUE_DEPTH), 1);
+        r.gauge_max(keys::PEAK_ADMITTED_BYTES, 10);
+        r.gauge_max(keys::PEAK_ADMITTED_BYTES, 4);
+        assert_eq!(r.gauge(keys::PEAK_ADMITTED_BYTES), 10);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("missing"), 0);
+    }
+
+    #[test]
+    fn zero_counter_adds_allocate_nothing() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add(keys::MIGRATIONS, 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add(keys::MIGRATIONS, 2);
+        r.gauge_set(keys::STATE_BYTES_LIVE, 4096);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get(keys::MIGRATIONS).unwrap().as_usize().unwrap(),
+            2
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get(keys::STATE_BYTES_LIVE).unwrap().as_usize().unwrap(),
+            4096
+        );
+    }
+}

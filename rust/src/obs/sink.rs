@@ -1,0 +1,219 @@
+//! Event sinks: the JSONL stream (one line per event/span-close,
+//! written through `jsonx` — no external JSON crates) and the shared
+//! CSV table writer the legacy per-subsystem CSV emitters
+//! (`LossCurve`, `AdaptTrace`, `CommLog`) now flow through.
+//!
+//! The JSONL field names are a compatibility contract — see
+//! docs/observability.md for the full event schema. `gwt trace check`
+//! validates exactly the required keys listed there.
+
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{Phase, PhaseSet};
+use crate::jsonx::{arr, num, obj, s, Json};
+
+/// Name of the event stream file inside a `--trace-dir`.
+pub const EVENTS_FILE: &str = "events.jsonl";
+
+/// Append-only JSONL writer. Write errors are swallowed after
+/// construction: observability must never kill a training run over a
+/// full disk (the `trace check` smoke would surface truncation).
+pub struct EventSink {
+    out: Mutex<BufWriter<fs::File>>,
+}
+
+impl EventSink {
+    pub fn create(path: &str) -> Result<EventSink> {
+        let file = fs::File::create(path)
+            .with_context(|| format!("creating trace stream {path}"))?;
+        Ok(EventSink { out: Mutex::new(BufWriter::new(file)) })
+    }
+
+    pub fn write(&self, ev: &Json) {
+        let line = ev.to_string_compact();
+        let mut out = self.out.lock().unwrap();
+        let _ = out.write_all(line.as_bytes());
+        let _ = out.write_all(b"\n");
+    }
+
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---- event constructors (the schema in one place) -------------------
+
+/// Span close: `{"ev":"span","job":J,"step":N,"phase":P,"ns":X}`.
+pub fn span_event(job: &str, step: usize, phase: Phase, ns: u64) -> Json {
+    obj(vec![
+        ("ev", s("span")),
+        ("job", s(job)),
+        ("step", num(step as f64)),
+        ("phase", s(phase.key())),
+        ("ns", num(ns as f64)),
+    ])
+}
+
+/// One optimizer step's outcome. `loss` is `null` when non-finite
+/// (the writer rejects NaN/Inf, and a diverged job must still trace).
+#[allow(clippy::too_many_arguments)]
+pub fn step_event(
+    job: &str,
+    step: usize,
+    loss: f32,
+    tokens_seen: usize,
+    comm_bytes: usize,
+    comm_full_bytes: usize,
+    wall_secs: f64,
+) -> Json {
+    let loss_json = if loss.is_finite() {
+        num(loss as f64)
+    } else {
+        Json::Null
+    };
+    obj(vec![
+        ("ev", s("step")),
+        ("job", s(job)),
+        ("step", num(step as f64)),
+        ("loss", loss_json),
+        ("tokens", num(tokens_seen as f64)),
+        ("comm_bytes", num(comm_bytes as f64)),
+        ("comm_full_bytes", num(comm_full_bytes as f64)),
+        ("wall_secs", num(wall_secs)),
+    ])
+}
+
+/// Adaptive-compression event (mirrors `metrics::AdaptEvent`).
+pub fn adapt_event(
+    job: &str,
+    step: usize,
+    migrations: usize,
+    resets: usize,
+    state_bytes: usize,
+    histogram: &[(String, usize)],
+) -> Json {
+    obj(vec![
+        ("ev", s("adapt")),
+        ("job", s(job)),
+        ("step", num(step as f64)),
+        ("migrations", num(migrations as f64)),
+        ("resets", num(resets as f64)),
+        ("state_bytes", num(state_bytes as f64)),
+        (
+            "histogram",
+            arr(histogram
+                .iter()
+                .map(|(k, c)| {
+                    obj(vec![("sel", s(k)), ("count", num(*c as f64))])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+/// Engine admission/scheduling event. `detail` carries the same
+/// human text the serve event log prints.
+pub fn engine_event(kind: &str, job: &str, detail: &str) -> Json {
+    obj(vec![
+        ("ev", s("engine")),
+        ("kind", s(kind)),
+        ("job", s(job)),
+        ("detail", s(detail)),
+    ])
+}
+
+/// Per-job step-window flush: phase aggregation since the previous
+/// window.
+pub fn window_event(job: &str, step: usize, window: &PhaseSet) -> Json {
+    obj(vec![
+        ("ev", s("window")),
+        ("job", s(job)),
+        ("step", num(step as f64)),
+        ("phases", window.to_json()),
+    ])
+}
+
+/// End-of-run summary: the registry plus the process-global phase
+/// aggregates (pool fan-out/latch-wait, HLO dispatch, transform).
+pub fn summary_event(registry: Json, global_phases: &PhaseSet) -> Json {
+    obj(vec![
+        ("ev", s("summary")),
+        ("registry", registry),
+        ("global_phases", global_phases.to_json()),
+    ])
+}
+
+// ---- the shared CSV writer ------------------------------------------
+
+/// The one CSV table serializer: `header` cells then one line per
+/// row, comma-joined. Cell *formatting* stays with the caller (the
+/// byte-compatibility contract of the existing curve/trace/ledger
+/// files lives in their format strings); this removes the duplicated
+/// header-plus-push_str writer loops `metrics.rs` used to carry per
+/// type.
+pub fn csv_table<I>(header: &[&str], rows: I) -> String
+where
+    I: IntoIterator<Item = Vec<String>>,
+{
+    let mut out = header.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a CSV produced by [`csv_table`] (or a legacy `to_csv`) to
+/// disk, creating parent directories — the file half of the sink.
+pub fn write_csv_file(path: &str, csv: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    fs::write(path, csv).with_context(|| format!("writing {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_table_matches_handwritten_shape() {
+        let csv = csv_table(
+            &["a", "b"],
+            vec![vec!["1".to_string(), "2".to_string()]],
+        );
+        assert_eq!(csv, "a,b\n1,2\n");
+        let empty = csv_table(&["x"], Vec::<Vec<String>>::new());
+        assert_eq!(empty, "x\n");
+    }
+
+    #[test]
+    fn step_event_nan_loss_is_null() {
+        let ev = step_event("j", 1, f32::NAN, 0, 0, 0, 0.5);
+        assert_eq!(ev.get("loss").unwrap(), &Json::Null);
+        // The writer must accept it (Num would assert on NaN).
+        assert!(ev.to_string_compact().contains("\"loss\":null"));
+    }
+
+    #[test]
+    fn span_event_round_trips() {
+        let ev = span_event("job-a", 7, Phase::InnerUpdate, 1234);
+        let back = Json::parse(&ev.to_string_compact()).unwrap();
+        assert_eq!(back.get("ev").unwrap().as_str().unwrap(), "span");
+        assert_eq!(back.get("phase").unwrap().as_str().unwrap(), "inner_update");
+        assert_eq!(back.get("ns").unwrap().as_usize().unwrap(), 1234);
+    }
+}

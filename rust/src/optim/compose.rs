@@ -340,7 +340,14 @@ impl MatrixOpt for Composed {
             }
             Engine::Generic { transform, inner, cbuf, ubuf, dbuf } => {
                 assert_eq!(g.shape(), &self.shape[..]);
+                // Global forward-transform span (this runs per
+                // parameter, below the job seam).
+                let t0 = crate::obs::timing_start();
                 transform.down(g, cbuf);
+                crate::obs::record_global(
+                    crate::obs::Phase::ForwardTransform,
+                    t0,
+                );
                 let want = !dbuf.is_empty();
                 let bc = inner.step(
                     cbuf,

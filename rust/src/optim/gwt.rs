@@ -559,7 +559,12 @@ impl MatrixOpt for GwtAdam {
         let bc = self.hp.bias_correction(self.t);
 
         if self.exec.is_some() {
-            match self.hlo_direction(g) {
+            // Global span (per-param call sites have no job handle):
+            // one relaxed-bool check when tracing is off.
+            let t0 = crate::obs::timing_start();
+            let res = self.hlo_direction(g);
+            crate::obs::record_global(crate::obs::Phase::HloDispatch, t0);
+            match res {
                 Ok(mut upd) => {
                     upd.scale(bc);
                     return upd;

@@ -473,6 +473,24 @@ pub fn step_bank(
     stats
 }
 
+/// [`step_bank`] under an `inner_update` span. The span only brackets
+/// the call — numerics and sharding are byte-for-byte the plain path
+/// (a disabled `obs` costs one `Option` check).
+pub fn step_bank_obs(
+    bank: &mut [ParamOptimizer],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    lr_t: f32,
+    sharding: &Sharding,
+    step: usize,
+    obs: &mut crate::obs::JobObs,
+) -> Vec<StepStats> {
+    let t0 = obs.begin();
+    let stats = step_bank(bank, params, grads, lr_t, sharding);
+    obs.end(crate::obs::Phase::InnerUpdate, t0, step);
+    stats
+}
+
 /// [`step_bank`] where some gradients are already in coefficient form.
 /// `coeff[i]` says whether `grads[i]` is a coefficient tensor for bank
 /// entry `i`'s [`MatrixOpt::coeff_band`] decomposition (routed through
@@ -518,6 +536,25 @@ pub fn step_bank_mixed(
             };
         }
     });
+    stats
+}
+
+/// [`step_bank_mixed`] under an `inner_update` span (see
+/// [`step_bank_obs`]).
+#[allow(clippy::too_many_arguments)]
+pub fn step_bank_mixed_obs(
+    bank: &mut [ParamOptimizer],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    coeff: &[bool],
+    lr_t: f32,
+    sharding: &Sharding,
+    step: usize,
+    obs: &mut crate::obs::JobObs,
+) -> Vec<StepStats> {
+    let t0 = obs.begin();
+    let stats = step_bank_mixed(bank, params, grads, coeff, lr_t, sharding);
+    obs.end(crate::obs::Phase::InnerUpdate, t0, step);
     stats
 }
 

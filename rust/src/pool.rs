@@ -71,6 +71,8 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::obs;
+
 /// The step engine's single thread-count normalization rule, shared
 /// by [`chunk_bounds`], [`scoped_chunks_mut`], [`StepPool`], and
 /// [`Sharding`] (previously each call site clamped its own way):
@@ -242,7 +244,9 @@ fn worker_loop(core: Arc<PoolCore>) {
         // this outer catch is belt-and-suspenders so a pathological
         // payload can never kill a parked worker the pool expects to
         // outlive the batch.
+        let busy = obs::timing_start();
         let _ = catch_unwind(AssertUnwindSafe(job));
+        obs::add_pool_busy(busy);
     }
 }
 
@@ -265,10 +269,16 @@ impl Drop for BatchGuard<'_> {
             }
             match self.core.try_pop() {
                 Some(job) => {
+                    // Help-draining is worker-equivalent execution:
+                    // credit it as busy time, not latch-wait idle.
+                    let busy = obs::timing_start();
                     let _ = catch_unwind(AssertUnwindSafe(job));
+                    obs::add_pool_busy(busy);
                 }
                 None => {
+                    let idle = obs::timing_start();
                     self.latch.wait();
+                    obs::add_pool_idle(idle);
                     return;
                 }
             }
@@ -352,6 +362,7 @@ impl StepPool {
         let wait = BatchGuard { core: &self.core, latch: Arc::clone(&latch) };
         let (init, f) = (&init, &f);
         let (first, mut rest) = items.split_at_mut(bounds[0].1);
+        let fanout = obs::timing_start();
         {
             let mut jobs: Vec<Job> = Vec::with_capacity(bounds.len() - 1);
             for (w, (start, end)) in bounds.iter().copied().enumerate().skip(1) {
@@ -390,11 +401,19 @@ impl StepPool {
             drop(q);
             self.core.available.notify_all();
         }
+        obs::record_global(obs::Phase::PoolFanout, fanout);
         // Chunk 0 runs inline on the caller — one fewer handoff, and
         // a capacity-1 pool degenerates to the pure serial loop.
+        let inline_busy = obs::timing_start();
         let mut scratch = init(0);
         f(&mut scratch, 0, first);
+        obs::add_pool_busy(inline_busy);
+        // The guard drop is the caller's wait for the batch: drained
+        // jobs inside it are credited busy, the final park idle; the
+        // whole interval is the latch-wait span.
+        let latch_wait = obs::timing_start();
         drop(wait);
+        obs::record_global(obs::Phase::PoolLatchWait, latch_wait);
         // Re-raise a worker panic with its original payload, exactly
         // like the scoped dispatcher would.
         let payload = latch.panic.lock().unwrap().take();

@@ -39,6 +39,7 @@ use super::source::{GradSource, PretrainSource, SyntheticSource};
 use crate::config::{presets, TrainConfig, TransformSpec};
 use crate::data::DataLoader;
 use crate::memory::measured_account;
+use crate::obs::{keys, sink, JobObs, Tracer};
 use crate::pool::Sharding;
 use crate::runtime::Runtime;
 
@@ -89,6 +90,33 @@ pub enum EngineEvent {
     Suspended { job: String },
     Resumed { job: String },
     Finished { job: String },
+}
+
+impl EngineEvent {
+    /// Machine-readable event kind — the `kind` field of the JSONL
+    /// `engine` event (schema contract, docs/observability.md).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineEvent::Admitted { .. } => "admitted",
+            EngineEvent::Queued { .. } => "queued",
+            EngineEvent::Degraded { .. } => "degraded",
+            EngineEvent::Suspended { .. } => "suspended",
+            EngineEvent::Resumed { .. } => "resumed",
+            EngineEvent::Finished { .. } => "finished",
+        }
+    }
+
+    /// The job the event concerns.
+    pub fn job(&self) -> &str {
+        match self {
+            EngineEvent::Admitted { job, .. }
+            | EngineEvent::Queued { job, .. }
+            | EngineEvent::Degraded { job, .. }
+            | EngineEvent::Suspended { job }
+            | EngineEvent::Resumed { job }
+            | EngineEvent::Finished { job } => job,
+        }
+    }
 }
 
 impl fmt::Display for EngineEvent {
@@ -147,7 +175,15 @@ pub struct JobEngine {
     step_trace: Vec<String>,
     admitted_bytes: usize,
     peak_admitted_bytes: usize,
+    /// Shared observability handle; disabled by default. When enabled,
+    /// admitted jobs get a `JobObs` over it, engine events stream as
+    /// JSONL, and `run_round` prints periodic in-run summary lines.
+    tracer: Tracer,
+    rounds: usize,
 }
+
+/// In-run summary-line cadence for traced `run_round` loops.
+const SUMMARY_EVERY_ROUNDS: usize = 16;
 
 impl JobEngine {
     /// `threads` sizes the shared `pool::StepPool` (`<=1` = serial);
@@ -167,7 +203,45 @@ impl JobEngine {
             step_trace: Vec::new(),
             admitted_bytes: 0,
             peak_admitted_bytes: 0,
+            tracer: Tracer::disabled(),
+            rounds: 0,
         }
+    }
+
+    /// Attach a tracer. Jobs admitted (or resumed) afterwards record
+    /// per-job spans and events against it; call before submitting.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Append to the audit log and mirror the event onto the JSONL
+    /// stream plus the engine gauges (no-ops when tracing is off).
+    fn record_event(&mut self, ev: EngineEvent) {
+        if self.tracer.is_enabled() {
+            self.tracer.emit(sink::engine_event(
+                ev.kind(),
+                ev.job(),
+                &ev.to_string(),
+            ));
+            self.sync_gauges();
+        }
+        self.events.push(ev);
+    }
+
+    fn sync_gauges(&self) {
+        let queued = self
+            .jobs
+            .iter()
+            .filter(|j| j.status == JobStatus::Queued)
+            .count();
+        self.tracer.gauge_set(keys::QUEUE_DEPTH, queued as u64);
+        self.tracer.gauge_set(keys::ADMITTED_BYTES, self.admitted_bytes as u64);
+        self.tracer
+            .gauge_max(keys::PEAK_ADMITTED_BYTES, self.peak_admitted_bytes as u64);
     }
 
     /// Worst-case admission charge for a job config: the budget-facing
@@ -260,7 +334,7 @@ impl JobEngine {
                         tcfg.adapt_budget_mb = available as f64 / MB;
                         let tight = Self::charge_for(&tcfg)?;
                         if tight <= available && tight < charge {
-                            self.events.push(EngineEvent::Degraded {
+                            self.record_event(EngineEvent::Degraded {
                                 job: self.jobs[i].name.clone(),
                                 budget_mb: tcfg.adapt_budget_mb,
                             });
@@ -272,7 +346,7 @@ impl JobEngine {
                     if !degraded {
                         if !self.jobs[i].queued_reported {
                             self.jobs[i].queued_reported = true;
-                            self.events.push(EngineEvent::Queued {
+                            self.record_event(EngineEvent::Queued {
                                 job: self.jobs[i].name.clone(),
                                 needed: charge,
                                 available,
@@ -282,8 +356,11 @@ impl JobEngine {
                     }
                 }
             }
-            let state = self.build_state(&cfg, i)?;
+            let mut state = self.build_state(&cfg, i)?;
             let name = self.jobs[i].name.clone();
+            if self.tracer.is_enabled() {
+                state.set_obs(JobObs::new(self.tracer.clone(), &name));
+            }
             let job = &mut self.jobs[i];
             job.cfg = cfg;
             job.charge = charge;
@@ -293,7 +370,7 @@ impl JobEngine {
             self.admitted_bytes += charge;
             self.peak_admitted_bytes =
                 self.peak_admitted_bytes.max(self.admitted_bytes);
-            self.events.push(EngineEvent::Admitted { job: name, charge });
+            self.record_event(EngineEvent::Admitted { job: name, charge });
         }
         Ok(())
     }
@@ -321,13 +398,43 @@ impl JobEngine {
                 self.finish(i)?;
             }
         }
+        self.rounds += 1;
+        if self.tracer.is_enabled()
+            && stepped > 0
+            && self.rounds % SUMMARY_EVERY_ROUNDS == 0
+        {
+            let running = self
+                .jobs
+                .iter()
+                .filter(|j| j.status == JobStatus::Running)
+                .count();
+            let queued = self
+                .jobs
+                .iter()
+                .filter(|j| j.status == JobStatus::Queued)
+                .count();
+            println!(
+                "[trace] round {}: {} running, {} queued, {:.2} MB admitted \
+                 (peak {:.2} MB)",
+                self.rounds,
+                running,
+                queued,
+                self.admitted_bytes as f64 / MB,
+                self.peak_admitted_bytes as f64 / MB
+            );
+        }
         Ok(stepped)
     }
 
     fn finish(&mut self, i: usize) -> Result<()> {
         let (name, charge) = {
             let job = &mut self.jobs[i];
-            let state = job.state.take().expect("finishing job without state");
+            let mut state =
+                job.state.take().expect("finishing job without state");
+            // Emit the trailing (partial) span window before the
+            // state — and its obs handle — are dropped.
+            let final_step = state.step;
+            state.obs.flush_window(final_step);
             job.summary = Some(JobSummary {
                 name: job.name.clone(),
                 label: state.curve.label.clone(),
@@ -345,7 +452,7 @@ impl JobEngine {
             (job.name.clone(), charge)
         };
         self.admitted_bytes = self.admitted_bytes.saturating_sub(charge);
-        self.events.push(EngineEvent::Finished { job: name });
+        self.record_event(EngineEvent::Finished { job: name });
         // Released capacity may admit queued jobs.
         self.try_admit()
     }
@@ -396,7 +503,7 @@ impl JobEngine {
             c
         };
         self.admitted_bytes = self.admitted_bytes.saturating_sub(charge);
-        self.events.push(EngineEvent::Suspended { job: name.to_string() });
+        self.record_event(EngineEvent::Suspended { job: name.to_string() });
         self.try_admit()
     }
 
@@ -424,6 +531,9 @@ impl JobEngine {
         let ck = crate::checkpoint::Checkpoint::load(path)?;
         let mut state = self.build_state(&cfg, i)?;
         state.restore(&ck)?;
+        if self.tracer.is_enabled() {
+            state.set_obs(JobObs::new(self.tracer.clone(), name));
+        }
         let job = &mut self.jobs[i];
         job.state = Some(state);
         job.status = JobStatus::Running;
@@ -431,7 +541,7 @@ impl JobEngine {
         self.admitted_bytes += charge;
         self.peak_admitted_bytes =
             self.peak_admitted_bytes.max(self.admitted_bytes);
-        self.events.push(EngineEvent::Resumed { job: name.to_string() });
+        self.record_event(EngineEvent::Resumed { job: name.to_string() });
         Ok(())
     }
 

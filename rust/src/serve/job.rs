@@ -15,9 +15,18 @@
 //! codes are small exact integers), so `*+adam8bit` jobs checkpoint
 //! too; engines that still cannot export state (MUON, LoRA, adaptive
 //! wavelets, projection transforms) make `snapshot` fail with a clear
-//! error instead of silently dropping moments. Wall-clock metrics (`curve` walltime column,
-//! `throughput`) restart at resume — only the training math is
-//! bit-reproducible, not the clock.
+//! error instead of silently dropping moments. Wall-clock metrics
+//! (`curve` walltime column, `throughput`) checkpoint their elapsed
+//! seconds (`job::wall_secs`) and resume the monotonic stopwatch from
+//! that base, so wall times stay non-negative and monotone per step
+//! across suspend/resume cycles.
+//!
+//! Observability: an optional [`JobObs`] handle records step-phase
+//! spans (grad fetch, band reduce, inner update, probe, migrate) and
+//! per-step JSONL events. The default handle is disabled — one
+//! `Option` check per site, no timestamps, and the step math is
+//! byte-for-byte identical either way (pinned by `rust/tests/obs.rs`
+//! and `tests/parallel_determinism.rs`).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -33,9 +42,10 @@ use crate::coordinator::CosineSchedule;
 use crate::ddp::GradReducer;
 use crate::memory::ParamShape;
 use crate::metrics::{AdaptTrace, LossCurve, Throughput};
+use crate::obs::{keys, sink, JobObs, Phase};
 use crate::optim::{
-    build_optimizers_sharded, step_bank, step_bank_mixed, total_state_bytes,
-    ParamOptimizer,
+    build_optimizers_sharded, step_bank_mixed_obs, step_bank_obs,
+    total_state_bytes, ParamOptimizer,
 };
 use crate::pool::{accumulate_sharded, Sharding};
 use crate::runtime::Runtime;
@@ -67,6 +77,10 @@ pub struct JobState {
     /// (`reducer.comm`). With `replicas = 1` it is a pure passthrough
     /// around `combine_grads` — the legacy single-box path, bitwise.
     pub reducer: GradReducer,
+    /// Step-phase span recorder + event emitter; disabled by default
+    /// (`JobObs::disabled()`), attached by the engine/CLI when a
+    /// `--trace-dir` run wants the JSONL stream.
+    pub obs: JobObs,
     source: Box<dyn GradSource>,
 }
 
@@ -125,9 +139,15 @@ impl JobState {
             adapt_trace,
             tokens_seen: 0,
             reducer,
+            obs: JobObs::disabled(),
             source,
             cfg,
         }
+    }
+
+    /// Attach an observability handle (replaces the disabled default).
+    pub fn set_obs(&mut self, obs: JobObs) {
+        self.obs = obs;
     }
 
     /// Hand params and bank back to the caller (the fine-tune client
@@ -155,12 +175,17 @@ impl JobState {
         // reducer a bitwise passthrough around `combine_grads`.
         let plan = self.reducer.plan(&self.bank, &self.shapes);
         let full_band = plan.iter().all(|p| p.is_none());
+        // Spans are attributed to the step being produced (1-based,
+        // the value `self.step` holds after the increment below).
+        let step_no = self.step + 1;
         let mut acc: Vec<Vec<f32>> =
             self.shapes.iter().map(|s| vec![0.0; s.numel()]).collect();
         let mut loss_sum = 0.0f32;
         let mut micro_count = 0usize;
         for _ in 0..self.cfg.grad_accum {
+            let fetch_t0 = self.obs.begin();
             let round = self.source.next_round(&self.params)?;
+            self.obs.end(Phase::GradFetch, fetch_t0, step_no);
             let mut worker_grads = Vec::with_capacity(round.len());
             for wb in round {
                 loss_sum += wb.loss;
@@ -169,8 +194,13 @@ impl JobState {
                 self.throughput.add_tokens(wb.tokens);
                 worker_grads.push(wb.grads);
             }
-            let combined =
-                self.reducer.combine(worker_grads, &plan, sharding)?;
+            let combined = self.reducer.combine_obs(
+                worker_grads,
+                &plan,
+                sharding,
+                step_no,
+                &mut self.obs,
+            )?;
             // Microbatch accumulation rides the same reused pool as
             // the optimizer step: chunked elementwise adds over the
             // flat buffer, fixed boundaries, one writer per element —
@@ -200,16 +230,26 @@ impl JobState {
         // enter through the bank's coefficient-domain seam — no
         // inverse+re-forward round trip.
         if full_band {
-            step_bank(&mut self.bank, &mut self.params, &grads, lr_t, sharding);
+            step_bank_obs(
+                &mut self.bank,
+                &mut self.params,
+                &grads,
+                lr_t,
+                sharding,
+                step_no,
+                &mut self.obs,
+            );
         } else {
             let coeff: Vec<bool> = plan.iter().map(|p| p.is_some()).collect();
-            step_bank_mixed(
+            step_bank_mixed_obs(
                 &mut self.bank,
                 &mut self.params,
                 &grads,
                 &coeff,
                 lr_t,
                 sharding,
+                step_no,
+                &mut self.obs,
             );
         }
         let mean_loss = loss_sum / micro_count.max(1) as f32;
@@ -221,9 +261,25 @@ impl JobState {
         // The controller is serial and deterministic, so training
         // stays bit-identical across thread counts.
         if let Some(ctl) = self.adapt.as_mut() {
-            if let Some(ev) =
-                ctl.post_step(self.step, &mut self.bank, &grads, sharding)
-            {
+            if let Some(ev) = ctl.post_step_obs(
+                self.step,
+                &mut self.bank,
+                &grads,
+                sharding,
+                &mut self.obs,
+            ) {
+                if self.obs.enabled() {
+                    self.obs.emit(sink::adapt_event(
+                        &self.curve.label,
+                        ev.step,
+                        ev.migrations,
+                        ev.resets,
+                        ev.state_bytes,
+                        &ev.histogram,
+                    ));
+                    self.obs.counter_add(keys::MIGRATIONS, ev.migrations as u64);
+                    self.obs.counter_add(keys::RESETS, ev.resets as u64);
+                }
                 self.adapt_trace.push(ev);
             }
         }
@@ -233,6 +289,33 @@ impl JobState {
             self.tokens_seen,
             self.throughput.elapsed_secs(),
         );
+        // Registry sync + step event: the typed ledgers stay the raw
+        // data; the registry is the unified totals view over them.
+        if self.obs.enabled() {
+            let (mut comm_bytes, mut comm_full) = (0usize, 0usize);
+            if let Some(rec) = self.reducer.comm.records.last() {
+                if rec.step == self.step {
+                    comm_bytes = rec.bytes;
+                    comm_full = rec.full_bytes;
+                }
+            }
+            self.obs.counter_add(keys::COMM_BYTES, comm_bytes as u64);
+            self.obs.counter_add(keys::COMM_FULL_BYTES, comm_full as u64);
+            self.obs.gauge_set(
+                keys::STATE_BYTES_LIVE,
+                total_state_bytes(&self.bank) as u64,
+            );
+            self.obs.emit(sink::step_event(
+                &self.curve.label,
+                self.step,
+                mean_loss,
+                self.tokens_seen,
+                comm_bytes,
+                comm_full,
+                self.throughput.elapsed_secs(),
+            ));
+            self.obs.maybe_flush_window(self.step);
+        }
         Ok(mean_loss)
     }
 
@@ -267,6 +350,12 @@ impl JobState {
                     (self.tokens_seen >> 24) as f32,
                 ],
             ),
+        );
+        // Elapsed wall seconds, so the resumed throughput stopwatch
+        // continues from the suspended run's clock instead of zero.
+        ck.insert(
+            "job::wall_secs",
+            Tensor::new(&[1], vec![self.throughput.elapsed_secs() as f32]),
         );
         Ok(ck)
     }
@@ -311,6 +400,15 @@ impl JobState {
             }
             None => 0,
         };
+        // Resume the wall clock from the checkpointed base (missing
+        // key — pre-wall_secs checkpoints — restarts from zero, the
+        // old behavior). `Throughput::resume` clamps malformed bases.
+        let wall_secs = ck
+            .tensors
+            .get("job::wall_secs")
+            .and_then(|t| t.data().first().copied())
+            .unwrap_or(0.0) as f64;
+        self.throughput = Throughput::resume(wall_secs, self.tokens_seen);
         self.source
             .fast_forward(self.step * self.cfg.grad_accum)
             .context("fast-forwarding gradient source")?;

@@ -1,0 +1,217 @@
+//! Observability integration: JSONL event-stream round-trip through
+//! `jsonx`, registry totals against the typed ledgers the rest of the
+//! suite pins (`ddp_determinism.rs` comm bytes, `memory_parity.rs`
+//! state bytes), tracing-on/off bit-identity, and the monotone
+//! wall-clock regression test.
+//!
+//! All tests are synthetic-source — no PJRT artifacts needed.
+
+use std::collections::BTreeMap;
+
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::jsonx::Json;
+use gwt::obs::{self, keys, Tracer};
+use gwt::optim::total_state_bytes;
+use gwt::serve::{JobEngine, JobSource};
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        preset: "nano".into(),
+        optimizer: OptSpec::gwt(2),
+        steps,
+        eval_every: steps,
+        grad_accum: 2,
+        dp_workers: 3,
+        ..Default::default()
+    }
+}
+
+fn trace_dir(tag: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join(format!("gwt_obs_{tag}_{}", std::process::id()));
+    dir.to_str().unwrap().to_string()
+}
+
+/// The schema contract, mirrored from `gwt trace check` and
+/// docs/observability.md — a drift in either side fails here.
+fn required_keys(ev: &str) -> &'static [&'static str] {
+    match ev {
+        "span" => &["job", "step", "phase", "ns"],
+        "step" => &[
+            "job",
+            "step",
+            "loss",
+            "tokens",
+            "comm_bytes",
+            "comm_full_bytes",
+            "wall_secs",
+        ],
+        "adapt" => {
+            &["job", "step", "migrations", "resets", "state_bytes", "histogram"]
+        }
+        "engine" => &["kind", "job", "detail"],
+        "window" => &["job", "step", "phases"],
+        "summary" => &["registry", "global_phases"],
+        other => panic!("unknown event kind {other:?}"),
+    }
+}
+
+/// Run one synthetic job to completion, optionally traced. Returns
+/// (per-step loss bits, param bits, final loss bits) — params read
+/// one round before completion so live state is still accessible.
+fn run_job(threads: usize, tracer: Option<Tracer>) -> (Vec<u32>, Vec<u32>, u32) {
+    let c = cfg(8);
+    let mut e = JobEngine::new(None, threads, 0.0);
+    if let Some(t) = tracer {
+        e.set_tracer(t);
+    }
+    e.submit("j", c.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..c.steps - 1 {
+        e.run_round().unwrap();
+    }
+    let state = e.job_state("j").unwrap();
+    let losses: Vec<u32> =
+        state.curve.points.iter().map(|p| p.loss.to_bits()).collect();
+    let params: Vec<u32> = state
+        .params
+        .iter()
+        .flat_map(|t| t.data().iter().map(|x| x.to_bits()))
+        .collect();
+    e.run_to_completion().unwrap();
+    let final_bits = e.summaries()[0].final_loss.to_bits();
+    e.tracer().write_summary();
+    (losses, params, final_bits)
+}
+
+#[test]
+fn traced_run_round_trips_through_jsonx() {
+    let dir = trace_dir("roundtrip");
+    let tracer = Tracer::to_dir(&dir).unwrap();
+    run_job(2, Some(tracer));
+    obs::set_timing(false);
+
+    let path = format!("{dir}/{}", gwt::obs::sink::EVENTS_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    // Satellite regression: wall_secs per step event is non-negative
+    // and monotone non-decreasing (the monotonic-clock contract).
+    let mut last_wall = -1.0f64;
+    let mut lines = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let ev = Json::parse(line)
+            .unwrap_or_else(|e| panic!("{path}:{}: {e:#}", i + 1));
+        let kind = ev.get("ev").unwrap().as_str().unwrap().to_string();
+        for key in required_keys(&kind) {
+            assert!(
+                ev.opt(key).is_some(),
+                "{path}:{}: {kind} event missing required key {key:?}",
+                i + 1
+            );
+        }
+        if kind == "span" {
+            let phase = ev.get("phase").unwrap().as_str().unwrap().to_string();
+            assert!(
+                gwt::obs::Phase::ALL.iter().any(|p| p.key() == phase),
+                "unknown span phase {phase:?}"
+            );
+        }
+        if kind == "step" {
+            let wall = ev.get("wall_secs").unwrap().as_f64().unwrap();
+            assert!(wall >= 0.0, "negative wall_secs {wall}");
+            assert!(wall >= last_wall, "wall_secs regressed: {last_wall} -> {wall}");
+            last_wall = wall;
+        }
+        *kinds.entry(kind).or_insert(0) += 1;
+        lines += 1;
+    }
+    assert!(lines > 0, "empty trace stream");
+    for expected in ["span", "step", "window", "engine", "summary"] {
+        assert!(
+            kinds.get(expected).copied().unwrap_or(0) > 0,
+            "no {expected:?} events in the stream (saw {kinds:?})"
+        );
+    }
+    // Every step produced one step event.
+    assert_eq!(kinds["step"], cfg(8).steps);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn registry_totals_match_typed_ledgers() {
+    // The registry is a *view* over the ledgers the determinism suite
+    // pins: COMM_BYTES must equal the CommLog sum (ddp_determinism's
+    // accounting) and STATE_BYTES_LIVE the bank's measured bytes
+    // (memory_parity's accounting).
+    let c = cfg(6);
+    let mut e = JobEngine::new(None, 2, 0.0);
+    let tracer = Tracer::enabled();
+    e.set_tracer(tracer.clone());
+    e.submit("j", c.clone(), 0, JobSource::Synthetic).unwrap();
+    for _ in 0..c.steps - 1 {
+        e.run_round().unwrap();
+    }
+    let state = e.job_state("j").unwrap();
+    let reg = tracer.registry().unwrap();
+    assert_eq!(
+        reg.counter(keys::COMM_BYTES) as usize,
+        state.reducer.comm.total_bytes(),
+        "registry comm bytes diverged from the CommLog ledger"
+    );
+    assert_eq!(
+        reg.counter(keys::COMM_FULL_BYTES) as usize,
+        state.reducer.comm.total_full_bytes(),
+        "registry full-band bytes diverged from the CommLog ledger"
+    );
+    assert_eq!(
+        reg.gauge(keys::STATE_BYTES_LIVE) as usize,
+        total_state_bytes(&state.bank),
+        "registry live state bytes diverged from the bank measurement"
+    );
+    assert!(state.reducer.comm.total_bytes() > 0, "test moved no bytes");
+    // The job's own run aggregation saw every inner update.
+    assert_eq!(
+        state.obs.run.get(gwt::obs::Phase::InnerUpdate).count as usize,
+        state.step
+    );
+}
+
+#[test]
+fn tracing_on_off_is_bit_identical() {
+    // The hard constraint: instrumentation must never touch numerics.
+    // Same job, same thread count — untraced vs fully traced (JSONL
+    // sink + global timing) must agree bit-for-bit on every loss and
+    // every parameter.
+    let (loss_off, params_off, final_off) = run_job(4, None);
+    let dir = trace_dir("bitident");
+    let tracer = Tracer::to_dir(&dir).unwrap();
+    let (loss_on, params_on, final_on) = run_job(4, Some(tracer));
+    obs::set_timing(false);
+    obs::reset_globals();
+    assert_eq!(loss_off, loss_on, "per-step losses diverged under tracing");
+    assert_eq!(params_off, params_on, "params diverged under tracing");
+    assert_eq!(final_off, final_on, "final loss diverged under tracing");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_gauges_track_admission() {
+    // Queue-depth / admitted-bytes gauges follow the engine's own
+    // admission arithmetic: with a budget fitting one job, the second
+    // queues.
+    let c = cfg(4);
+    let charge = JobEngine::charge_for(&c).unwrap();
+    // Fits one job, not two.
+    let budget_mb = (charge + charge / 2) as f64 / (1024.0 * 1024.0);
+    let mut e = JobEngine::new(None, 1, budget_mb);
+    let tracer = Tracer::enabled();
+    e.set_tracer(tracer.clone());
+    e.submit("a", c.clone(), 0, JobSource::Synthetic).unwrap();
+    e.submit("b", c, 0, JobSource::Synthetic).unwrap();
+    let reg = tracer.registry().unwrap();
+    assert_eq!(reg.gauge(keys::QUEUE_DEPTH), 1, "second job should queue");
+    assert!(reg.gauge(keys::ADMITTED_BYTES) > 0);
+    assert!(
+        reg.gauge(keys::PEAK_ADMITTED_BYTES) >= reg.gauge(keys::ADMITTED_BYTES)
+    );
+}

@@ -471,3 +471,66 @@ fn step_bank_zero_threads_is_serial() {
         assert_eq!(a.data(), b.data());
     }
 }
+
+/// The observability row of the determinism contract: the same bank
+/// steps with tracing fully on — an enabled `JobObs` span handle plus
+/// the process-global timing flag — are bit-identical to the untraced
+/// serial reference, for every optimizer spec and dispatcher. Spans
+/// only bracket existing calls; they never reorder work or feed a
+/// value back into the step. (Flipping the global timing flag is
+/// benign for concurrently-running tests: timing never touches
+/// numerics — exactly what this test pins.)
+#[test]
+fn tracing_toggle_is_bit_identical() {
+    use gwt::obs::{self, JobObs, Phase, Tracer};
+    use gwt::optim::step_bank_obs;
+
+    let shapes = nano_shapes();
+    for &opt in ALL_SPECS {
+        let cfg = TrainConfig { optimizer: opt, ..Default::default() };
+        // Untraced serial reference.
+        obs::set_timing(false);
+        let mut ser_bank = build_optimizers(&shapes, &cfg, None).unwrap();
+        let mut ser_w = init_weights(&shapes, 1);
+        for step in 0..3u64 {
+            let grads = step_grads(&shapes, step);
+            step_bank(&mut ser_bank, &mut ser_w, &grads, 0.01, &Sharding::Serial);
+        }
+        // Fully traced runs across the dispatcher grid.
+        obs::set_timing(true);
+        for threads in test_thread_grid() {
+            for sharding in dispatchers(threads) {
+                let mut obs_handle = JobObs::new(Tracer::enabled(), "pin");
+                let mut bank = build_optimizers(&shapes, &cfg, None).unwrap();
+                let mut w = init_weights(&shapes, 1);
+                for step in 0..3u64 {
+                    let grads = step_grads(&shapes, step);
+                    step_bank_obs(
+                        &mut bank,
+                        &mut w,
+                        &grads,
+                        0.01,
+                        &sharding,
+                        step as usize + 1,
+                        &mut obs_handle,
+                    );
+                }
+                assert_eq!(
+                    obs_handle.run.get(Phase::InnerUpdate).count,
+                    3,
+                    "traced run must have recorded its spans"
+                );
+                for (i, (a, b)) in ser_w.iter().zip(&w).enumerate() {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{opt:?} {sharding:?} traced vs untraced param {} ({})",
+                        i,
+                        shapes[i].name
+                    );
+                }
+            }
+        }
+    }
+    obs::set_timing(false);
+}
