@@ -6,7 +6,8 @@ use gwt::bench_harness::{
     runtime_or_none, time_bank_step, time_fn, write_bench_file, write_result,
     TableView,
 };
-use gwt::config::OptSpec;
+use gwt::config::{OptSpec, TrainConfig};
+use gwt::ddp::{BandPlan, GradReducer};
 use gwt::linalg::{matmul, svd_jacobi};
 use gwt::optim::{AdamHp, GwtAdam, MatrixOpt};
 use gwt::pool::{
@@ -308,6 +309,49 @@ fn main() -> anyhow::Result<()> {
                 approx_bytes as f64 / 1e6,
                 full_bytes / approx_bytes,
                 t_full.median_ns / t_approx.median_ns
+            ),
+        ]);
+
+        // Error-feedback overhead through the reducer itself: EF-on
+        // runs the full-width forward (vs the truncated one) plus the
+        // residual tree-mean and capture; wire bytes are identical.
+        // Both rows clone the worker gradients per iteration so the
+        // clone cost cancels out of the comparison.
+        let bp = BandPlan { basis: WaveletBasis::Haar, level, rows: m, cols: n };
+        let ef_plan = vec![Some(bp)];
+        let ef_grads: Vec<Vec<Vec<f32>>> =
+            ddp_shards.iter().map(|g| vec![g.clone()]).collect();
+        let ef_cfg = TrainConfig {
+            optimizer: OptSpec::parse("gwt-2")?,
+            replicas,
+            ..TrainConfig::default()
+        };
+        let mut red_off = GradReducer::new(&ef_cfg);
+        let ef_cfg = TrainConfig { ddp_error_feedback: true, ..ef_cfg };
+        let mut red_on = GradReducer::new(&ef_cfg);
+        let t_ef_off = time_fn(2, 9, || {
+            std::hint::black_box(
+                red_off.combine(ef_grads.clone(), &ef_plan, &ddp_pool).unwrap(),
+            );
+        });
+        let t_ef_on = time_fn(2, 9, || {
+            std::hint::black_box(
+                red_on.combine(ef_grads.clone(), &ef_plan, &ddp_pool).unwrap(),
+            );
+        });
+        table.row(vec![
+            "ddp combine ef off x4".into(),
+            format!("{m}x{n} l={level}"),
+            format!("{:.2} ms", t_ef_off.per_iter_ms()),
+            "approx reduce, details zeroed".into(),
+        ]);
+        table.row(vec![
+            "ddp combine ef on x4".into(),
+            format!("{m}x{n} l={level}"),
+            format!("{:.2} ms", t_ef_on.per_iter_ms()),
+            format!(
+                "same wire bytes, {:.2}x vs ef off",
+                t_ef_on.median_ns / t_ef_off.median_ns
             ),
         ]);
     }

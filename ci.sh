@@ -160,6 +160,26 @@ for path in auto rust; do
     done
 done
 
+# Error-feedback smoke: the approx-band reduce with the residual
+# delivery toggle on both settings, under both gwt_path settings.
+# The comm summary must be present either way — EF never changes the
+# wire bytes, only what lands in the detail positions (docs/ddp.md
+# "Error feedback"); the `ddp_reduce=approx` spelling also exercises
+# the `approx` alias of the default `auto`.
+for path in auto rust; do
+    for ef in on off; do
+        echo "== error-feedback smoke (gwt_path=$path ddp_error_feedback=$ef) =="
+        out=$(cargo run --release -- serve --synthetic \
+            -s gwt_path="$path" -s replicas=4 \
+            -s ddp_reduce=approx -s ddp_error_feedback="$ef" \
+            "name=e,optimizer=gwt-2,steps=6" | tee /dev/stderr)
+        grep -q "finished job 'e'" <<<"$out" \
+            || { echo "ef smoke: job never finished"; exit 1; }
+        grep -q "vs full" <<<"$out" \
+            || { echo "ef smoke: expected a comm summary"; exit 1; }
+    done
+done
+
 # Composed-spec e2e: one previously unreachable composition
 # (wavelet-compressed 8-bit Adam) trains via its CLI spec string,
 # under both gwt_path settings (the knob must be inert for non-Adam

@@ -435,9 +435,12 @@ pub enum DdpReduce {
 impl DdpReduce {
     pub fn parse(s: &str) -> Result<DdpReduce> {
         match s.trim().to_lowercase().as_str() {
-            "auto" => Ok(DdpReduce::Auto),
+            // `approx` is the documented name of what `auto` does on
+            // eligible parameters; accept it as an alias so the ISSUE
+            // / docs spelling works verbatim on the CLI.
+            "auto" | "approx" => Ok(DdpReduce::Auto),
             "full" => Ok(DdpReduce::Full),
-            other => bail!("ddp_reduce must be auto|full, got '{other}'"),
+            other => bail!("ddp_reduce must be auto|approx|full, got '{other}'"),
         }
     }
 
@@ -511,6 +514,17 @@ pub struct TrainConfig {
     /// `full` = always reduce full weight-domain gradients (bitwise
     /// the legacy `combine_grads` path). Inert when `replicas == 1`.
     pub ddp_reduce: DdpReduce,
+    /// Error feedback for the compressed all-reduce
+    /// (`ddp_error_feedback` key): each replica keeps the detail
+    /// bands its approximation-band reduce dropped (coefficient
+    /// domain) and the next combine delivers their tree-mean in the
+    /// detail positions — delayed by one combine — instead of zeros,
+    /// so approx-band mode converges like full-band instead of
+    /// permanently discarding detail energy (see
+    /// [`crate::ddp::ErrorFeedback`] and docs/ddp.md). Off by
+    /// default; inert unless `replicas > 1` and `ddp_reduce` is
+    /// `auto`/`approx` on a non-adaptive wavelet spec.
+    pub ddp_error_feedback: bool,
     /// Parallel step-engine worker threads for the optimizer bank /
     /// GWT row sharding / microbatch gradient accumulation — one
     /// persistent `pool::StepPool` spawned per run (`pool::Sharding`).
@@ -583,6 +597,7 @@ impl Default for TrainConfig {
             dp_workers: 1,
             replicas: 1,
             ddp_reduce: DdpReduce::Auto,
+            ddp_error_feedback: false,
             threads: 1,
             nl_gamma: 1.01,
             modulewise_lr: true,
@@ -623,6 +638,7 @@ impl TrainConfig {
             "dp_workers" => self.dp_workers = v.parse().context("dp_workers")?,
             "replicas" => self.replicas = v.parse().context("replicas")?,
             "ddp_reduce" => self.ddp_reduce = DdpReduce::parse(v)?,
+            "ddp_error_feedback" => self.ddp_error_feedback = parse_bool(v)?,
             "threads" => self.threads = v.parse().context("threads")?,
             "nl_gamma" => self.nl_gamma = v.parse().context("nl_gamma")?,
             "modulewise_lr" => self.modulewise_lr = parse_bool(v)?,
@@ -727,8 +743,26 @@ impl TrainConfig {
         if self.muon_ns_iters == 0 {
             bail!("muon_ns_iters must be positive");
         }
-        if self.serve_budget_mb < 0.0 {
-            bail!("serve_budget_mb must be >= 0 (0 = unbounded)");
+        // Both MiB budgets are multiplied by 1 MiB and cast with `as
+        // usize` downstream (`serve::engine`), where a NaN or
+        // negative value saturates to a 0-byte budget that rejects
+        // every job with a misleading "never fits" error — so reject
+        // non-finite values here, unconditionally (adapt_budget_mb is
+        // read by `JobEngine::charge_for` for *every* spec, not just
+        // adaptive ones).
+        if !self.serve_budget_mb.is_finite() || self.serve_budget_mb < 0.0 {
+            bail!(
+                "serve_budget_mb must be finite and >= 0 (0 = unbounded), \
+                 got {}",
+                self.serve_budget_mb
+            );
+        }
+        if !self.adapt_budget_mb.is_finite() || self.adapt_budget_mb < 0.0 {
+            bail!(
+                "adapt_budget_mb must be finite and >= 0 (0 = unbounded), \
+                 got {}",
+                self.adapt_budget_mb
+            );
         }
         if let Some(TransformSpec::Adaptive { .. }) = self.optimizer.transform() {
             if self.adapt_cadence == 0 {
@@ -739,9 +773,6 @@ impl TrainConfig {
             }
             if !(0.0..1.0).contains(&self.adapt_hysteresis) {
                 bail!("adapt_hysteresis must be in [0,1)");
-            }
-            if self.adapt_budget_mb < 0.0 {
-                bail!("adapt_budget_mb must be >= 0 (0 = unbounded)");
             }
             let p = presets::find(&self.preset)?;
             for (m, n) in p.gwt_shapes() {
@@ -844,6 +875,10 @@ impl TrainConfig {
         m.insert("replicas".into(), format!("{}", self.replicas));
         if self.replicas > 1 {
             m.insert("ddp_reduce".into(), self.ddp_reduce.label().into());
+            m.insert(
+                "ddp_error_feedback".into(),
+                if self.ddp_error_feedback { "on" } else { "off" }.into(),
+            );
         }
         m.insert("threads".into(), format!("{}", self.threads));
         m.insert("nl_gamma".into(), format!("{}", self.nl_gamma));
@@ -1081,7 +1116,20 @@ mod tests {
         assert_eq!(cfg.summary()["replicas"], "4");
         assert_eq!(cfg.summary()["ddp_reduce"], "full");
         cfg.validate().unwrap();
-        assert!(cfg.apply_text("ddp_reduce = approx").is_err());
+        // `approx` is an alias for the auto band-reduce; a genuinely
+        // unknown token still errors.
+        cfg.apply_text("ddp_reduce = approx").unwrap();
+        assert_eq!(cfg.ddp_reduce, DdpReduce::Auto);
+        assert!(cfg.apply_text("ddp_reduce = band").is_err());
+        // The EF toggle parses as a bool and shows next to ddp_reduce
+        // in the summary whenever replicas > 1.
+        assert!(!cfg.ddp_error_feedback);
+        assert_eq!(cfg.summary()["ddp_error_feedback"], "off");
+        cfg.apply_text("ddp_error_feedback = on").unwrap();
+        assert!(cfg.ddp_error_feedback);
+        assert_eq!(cfg.summary()["ddp_error_feedback"], "on");
+        assert!(cfg.apply_text("ddp_error_feedback = maybe").is_err());
+        cfg.ddp_error_feedback = false;
         // replicas and dp_workers are one axis — both > 1 is rejected.
         cfg.dp_workers = 2;
         assert!(cfg.validate().is_err());
@@ -1276,6 +1324,33 @@ mod tests {
         cfg.validate().unwrap();
         cfg.optimizer = OptSpec::parse("gwt-6+adam8bit").unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_non_finite_and_negative_budgets() {
+        // Regression: `serve::engine` converts both MiB budgets with
+        // a bare `(budget_mb * MB) as usize`, where NaN/negative
+        // saturate to 0 bytes — a budget that rejects every job with
+        // a misleading "never fits" error. Validation now catches
+        // them with a clear message, for every spec (adapt_budget_mb
+        // feeds `JobEngine::charge_for` on non-adaptive specs too).
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -0.5] {
+            let cfg =
+                TrainConfig { serve_budget_mb: bad, ..Default::default() };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("serve_budget_mb"), "{bad}: {err}");
+            let cfg =
+                TrainConfig { adapt_budget_mb: bad, ..Default::default() };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("adapt_budget_mb"), "{bad}: {err}");
+        }
+        // Zero (unbounded) and positive values stay valid.
+        let cfg = TrainConfig {
+            serve_budget_mb: 2.5,
+            adapt_budget_mb: 1.5,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Error-feedback accumulators for the compressed all-reduce.
+//!
+//! The approximation-band reduce is a *biased* compressor: detail
+//! bands are dropped every combine, so their gradient energy never
+//! reaches the optimizer. Textbook error feedback (EF/EF21) with this
+//! projection would be a mathematical no-op — the band truncation is
+//! a fixed orthogonal projector, so the residual (the detail bands)
+//! is exactly the component the transmitted subspace can never carry;
+//! adding it back before truncating changes nothing.
+//!
+//! What does recover the lost energy is **delayed delivery**: each
+//! replica keeps the detail bands its previous combine dropped (in
+//! coefficient domain), and the next combine tree-averages those
+//! saved residuals into the output's detail positions — coefficients
+//! the optimizer then actually steps on through its coefficient seam.
+//! The compressed path thus sees full coefficient information with a
+//! one-combine lag on the detail bands, instead of never:
+//!
+//! ```text
+//! combine(t):  wire     = mean_r approx(fwd(g_r(t)))     (unchanged)
+//!              details  = mean_r e_r                     (residuals of t-1)
+//!              e_r     <- details(fwd(g_r(t)))           (overwrite)
+//! ```
+//!
+//! Residuals start zero, which makes the first EF-on combine bitwise
+//! the EF-off combine. Wire and ledger bytes are unchanged — the
+//! residual exchange rides the shared address space of the in-process
+//! replicas (see docs/ddp.md for the multi-process transport caveat).
+//! Buffers are bounded (`R × rows × (cols - q)` f32 per planned
+//! parameter — no accumulation growth, since capture overwrites), are
+//! charged to the serve admission budget via
+//! [`crate::memory::ef_state_bytes`], and ride the checkpoint seam
+//! (`ddp::ef::{param}::{replica}` keys) so suspend→resume stays
+//! bit-identical.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::memory::ParamShape;
+use crate::tensor::Tensor;
+
+/// Per-parameter, per-replica residual store: the detail bands
+/// (coefficient domain) dropped by the previous approximation-band
+/// combine. Owned by [`super::GradReducer`] when `ddp_error_feedback`
+/// is on; slots are sized lazily from the band plan at the first
+/// combine (or from checkpoint tensors on restore).
+pub struct ErrorFeedback {
+    replicas: usize,
+    slots: Vec<Option<EfSlot>>,
+}
+
+struct EfSlot {
+    rows: usize,
+    detail_cols: usize,
+    /// One residual buffer per replica, in ascending replica order —
+    /// the same fixed order the reduce tree is defined over.
+    per_replica: Vec<Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    pub fn new(replicas: usize) -> ErrorFeedback {
+        assert!(replicas > 1, "error feedback needs replicas > 1");
+        ErrorFeedback { replicas, slots: Vec::new() }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Make sure slot `idx` holds `rows × detail_cols` buffers for
+    /// every replica, zero-initialized. Zero residuals are what make
+    /// the first EF-on combine bitwise the EF-off combine. A geometry
+    /// change (never expected mid-job — plans are stable for
+    /// non-adaptive specs) resets the slot to zeros.
+    pub fn ensure(&mut self, idx: usize, rows: usize, detail_cols: usize) {
+        if self.slots.len() <= idx {
+            self.slots.resize_with(idx + 1, || None);
+        }
+        let fits = matches!(
+            &self.slots[idx],
+            Some(s) if s.rows == rows && s.detail_cols == detail_cols
+        );
+        if !fits {
+            self.slots[idx] = Some(EfSlot {
+                rows,
+                detail_cols,
+                per_replica: vec![
+                    vec![0.0; rows * detail_cols];
+                    self.replicas
+                ],
+            });
+        }
+    }
+
+    /// The stored residuals for parameter `idx`, one buffer per
+    /// replica in ascending order. Callers `ensure` first.
+    pub fn residuals(&self, idx: usize) -> &[Vec<f32>] {
+        &self.slots[idx]
+            .as_ref()
+            .expect("EF slot read before ensure")
+            .per_replica
+    }
+
+    /// Overwrite replica `r`'s residual for parameter `idx` with the
+    /// detail portion of the full coefficient tensor `coeffs`
+    /// (`rows × cols` row-major, band layout `[A_l | D_l | … | D_1]`,
+    /// `q` approximation columns) — exactly the bands this combine
+    /// drops from the wire. Overwrite, not accumulate: the previous
+    /// residual was fully delivered by this combine's detail mean.
+    pub fn capture(
+        &mut self,
+        idx: usize,
+        r: usize,
+        coeffs: &[f32],
+        cols: usize,
+        q: usize,
+    ) {
+        let slot = self.slots[idx]
+            .as_mut()
+            .expect("EF slot written before ensure");
+        debug_assert_eq!(slot.detail_cols, cols - q);
+        let buf = &mut slot.per_replica[r];
+        for (brow, crow) in
+            buf.chunks_exact_mut(cols - q).zip(coeffs.chunks_exact(cols))
+        {
+            brow.copy_from_slice(&crow[q..]);
+        }
+    }
+
+    /// Measured bytes currently held (f32 residuals) — what the serve
+    /// accountant budgets via [`crate::memory::ef_state_bytes`].
+    pub fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| s.per_replica.len() * s.rows * s.detail_cols * 4)
+            .sum()
+    }
+
+    /// Global L2 norm over every stored residual (the obs gauge; f64
+    /// accumulation so the gauge is stable for large banks).
+    pub fn residual_norm(&self) -> f64 {
+        let ss: f64 = self
+            .slots
+            .iter()
+            .flatten()
+            .flat_map(|s| s.per_replica.iter())
+            .flat_map(|b| b.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        ss.sqrt()
+    }
+
+    /// Export every buffer for the checkpoint seam: key
+    /// `ddp::ef::{param-name}::{replica}`, tensor shape
+    /// `[rows, detail_cols]`. Slot indices map through `shapes` (bank
+    /// order), so the keys are stable across suspend/resume.
+    pub fn export_state(&self, shapes: &[ParamShape]) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (idx, slot) in self.slots.iter().enumerate() {
+            let Some(slot) = slot else { continue };
+            let name = &shapes[idx].name;
+            for (r, buf) in slot.per_replica.iter().enumerate() {
+                out.push((
+                    format!("ddp::ef::{name}::{r}"),
+                    Tensor::new(&[slot.rows, slot.detail_cols], buf.clone()),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Restore buffers exported by [`ErrorFeedback::export_state`].
+    /// Geometry comes from the checkpoint tensors themselves — the
+    /// band plan is not resolved until the first post-restore step —
+    /// and the post-import combine stream is bit-identical to the
+    /// exporter's (pinned in `rust/tests/ddp_determinism.rs`).
+    pub fn import_state(
+        &mut self,
+        state: &BTreeMap<String, Tensor>,
+        shapes: &[ParamShape],
+    ) -> Result<()> {
+        for (key, t) in state {
+            let Some(rest) = key.strip_prefix("ddp::ef::") else {
+                continue;
+            };
+            let Some((name, rep)) = rest.rsplit_once("::") else {
+                bail!("malformed EF checkpoint key '{key}'");
+            };
+            let Some(idx) = shapes.iter().position(|p| p.name == name) else {
+                bail!("EF checkpoint key '{key}' names an unknown parameter");
+            };
+            let r: usize = rep
+                .parse()
+                .with_context(|| format!("EF checkpoint key '{key}'"))?;
+            if r >= self.replicas {
+                bail!(
+                    "EF checkpoint key '{key}' replica {r} out of range \
+                     (replicas = {})",
+                    self.replicas
+                );
+            }
+            let shape = t.shape();
+            if shape.len() != 2 {
+                bail!("EF checkpoint tensor '{key}' is not 2-D");
+            }
+            self.ensure(idx, shape[0], shape[1]);
+            self.slots[idx]
+                .as_mut()
+                .unwrap()
+                .per_replica[r]
+                .copy_from_slice(t.data());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<ParamShape> {
+        vec![
+            ParamShape {
+                name: "blk.attn".into(),
+                shape: vec![4, 16],
+                eligible: true,
+            },
+            ParamShape { name: "norm".into(), shape: vec![8], eligible: false },
+        ]
+    }
+
+    #[test]
+    fn ensure_capture_and_norm() {
+        let mut ef = ErrorFeedback::new(2);
+        ef.ensure(0, 2, 3);
+        assert_eq!(ef.residuals(0).len(), 2);
+        assert!(ef.residuals(0).iter().all(|b| b.iter().all(|&x| x == 0.0)));
+        assert_eq!(ef.state_bytes(), 2 * 2 * 3 * 4);
+        assert_eq!(ef.residual_norm(), 0.0);
+        // cols=4, q=1: capture keeps columns 1..4 of each row.
+        let coeffs = vec![9.0, 1.0, 2.0, 2.0, 9.0, 0.0, 0.0, 4.0];
+        ef.ensure(0, 2, 3);
+        ef.capture(0, 1, &coeffs, 4, 1);
+        assert_eq!(ef.residuals(0)[1], vec![1.0, 2.0, 2.0, 0.0, 0.0, 4.0]);
+        assert_eq!(ef.residuals(0)[0], vec![0.0; 6]);
+        // sqrt(1+4+4+16) = 5.
+        assert_eq!(ef.residual_norm(), 5.0);
+        // Capture overwrites — no accumulation growth.
+        ef.capture(0, 1, &[0.0; 8], 4, 1);
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut ef = ErrorFeedback::new(2);
+        ef.ensure(0, 4, 8);
+        let coeffs: Vec<f32> = (0..4 * 16).map(|i| i as f32).collect();
+        ef.capture(0, 0, &coeffs, 16, 8);
+        ef.capture(0, 1, &coeffs, 16, 8);
+        let state: BTreeMap<String, Tensor> =
+            ef.export_state(&shapes()).into_iter().collect();
+        assert_eq!(state.len(), 2);
+        assert!(state.contains_key("ddp::ef::blk.attn::0"));
+        assert_eq!(state["ddp::ef::blk.attn::1"].shape(), &[4, 8]);
+        let mut restored = ErrorFeedback::new(2);
+        restored.import_state(&state, &shapes()).unwrap();
+        for r in 0..2 {
+            assert_eq!(restored.residuals(0)[r], ef.residuals(0)[r]);
+        }
+        assert_eq!(restored.state_bytes(), ef.state_bytes());
+    }
+
+    #[test]
+    fn import_rejects_malformed_keys() {
+        let shapes = shapes();
+        let mut ef = ErrorFeedback::new(2);
+        let t = Tensor::new(&[1, 2], vec![0.0, 0.0]);
+        // Unknown parameter name.
+        let mut state = BTreeMap::new();
+        state.insert("ddp::ef::ghost::0".to_string(), t.clone());
+        assert!(ef.import_state(&state, &shapes).is_err());
+        // Replica out of range.
+        let mut state = BTreeMap::new();
+        state.insert("ddp::ef::blk.attn::7".to_string(), t.clone());
+        assert!(ef.import_state(&state, &shapes).is_err());
+        // Non-numeric replica segment.
+        let mut state = BTreeMap::new();
+        state.insert("ddp::ef::blk.attn::x".to_string(), t);
+        assert!(ef.import_state(&state, &shapes).is_err());
+        // Foreign keys (params, opt state) are simply skipped.
+        let mut state = BTreeMap::new();
+        state.insert("opt::blk.attn::m".to_string(), Tensor::zeros(&[2]));
+        ef.import_state(&state, &shapes).unwrap();
+        assert_eq!(ef.state_bytes(), 0);
+    }
+}

@@ -28,7 +28,7 @@
 //!   asserted equal to the live `optim::total_state_bytes` for every
 //!   composition by `rust/tests/memory_parity.rs`.
 
-use crate::config::{InnerSpec, OptSpec, TransformSpec};
+use crate::config::{DdpReduce, InnerSpec, OptSpec, TrainConfig, TransformSpec};
 
 /// One weight matrix (or vector) with its GWT/low-rank eligibility.
 /// Eligible = attention + MLP 2D matrices (paper §IV-A).
@@ -277,6 +277,40 @@ pub fn measured_account(params: &[ParamShape], spec: OptSpec) -> MemoryReport {
             .map(|p| worst_state_bytes_units(p, spec, F32))
             .sum(),
     }
+}
+
+/// Bytes of DDP error-feedback residual state this config implies:
+/// `R · m · (n - n>>level) · 4` per eligible matrix (one f32 detail-
+/// band buffer per replica — see [`crate::ddp::ErrorFeedback`]), zero
+/// whenever the reducer would not build residuals at all. The gates
+/// mirror `GradReducer::new` + `plan` exactly: key on, R > 1, not
+/// full-band mode, and a static wavelet transform (adaptive specs are
+/// pinned full-band; other transforms expose no coefficient seam).
+/// The job engine adds this on top of `admission_charge` — unlike
+/// optimizer state, residual bytes scale with the replica count, so
+/// the spec-only account can't absorb them.
+pub fn ef_state_bytes(params: &[ParamShape], cfg: &TrainConfig) -> usize {
+    if !cfg.ddp_error_feedback
+        || cfg.replicas <= 1
+        || cfg.ddp_reduce == DdpReduce::Full
+    {
+        return 0;
+    }
+    let level = match cfg.optimizer {
+        OptSpec::Composed {
+            transform: TransformSpec::Wavelet { level, .. },
+            ..
+        } => level,
+        _ => return 0,
+    };
+    params
+        .iter()
+        .filter(|p| p.eligible && p.shape.len() == 2)
+        .map(|p| {
+            let (m, n) = (p.shape[0], p.shape[1]);
+            cfg.replicas * m * (n - (n >> level)) * F32
+        })
+        .sum()
 }
 
 /// Analytic *live* state bytes (implementation units) for an adaptive
@@ -641,6 +675,64 @@ mod tests {
         assert_eq!(live(1, WaveletBasis::Haar), rep.worst_state_bytes);
         assert_eq!(live(3, WaveletBasis::Db4), live(3, WaveletBasis::Haar));
         assert!(live(3, WaveletBasis::Haar) < rep.state_bytes);
+    }
+
+    #[test]
+    fn ef_state_bytes_gating_and_size() {
+        use crate::config::{DdpReduce, TrainConfig};
+        let params = [
+            ParamShape { name: "w".into(), shape: vec![16, 64], eligible: true },
+            ParamShape { name: "norm".into(), shape: vec![16], eligible: false },
+        ];
+        let mut cfg = TrainConfig {
+            optimizer: OptSpec::gwt(2),
+            replicas: 4,
+            ..Default::default()
+        };
+        // Key off: nothing charged.
+        assert_eq!(ef_state_bytes(&params, &cfg), 0);
+        cfg.ddp_error_feedback = true;
+        // R · m · (n - n>>level) · 4, eligible matrices only.
+        let want = 4 * 16 * (64 - 16) * F32;
+        assert_eq!(ef_state_bytes(&params, &cfg), want);
+        // Composed wavelet engines (generic seam) carry the same
+        // residual geometry — basis and inner don't change it.
+        for spec in ["gwt-2+adam8bit", "gwt-db4-2+sgdm", "gwt-2+adam-mini"] {
+            cfg.optimizer = OptSpec::parse(spec).unwrap();
+            assert_eq!(ef_state_bytes(&params, &cfg), want, "{spec}");
+        }
+        // Parity with the live reducer: after one planned combine the
+        // measured residual bytes equal the analytic charge (the norm
+        // param reduces full-band and holds no residual).
+        cfg.optimizer = OptSpec::gwt(2);
+        let mut r = crate::ddp::GradReducer::new(&cfg);
+        let bp = crate::ddp::BandPlan {
+            basis: WaveletBasis::Haar,
+            level: 2,
+            rows: 16,
+            cols: 64,
+        };
+        let worker_grads: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|w| vec![vec![w as f32 + 1.0; 16 * 64], vec![0.0; 16]])
+            .collect();
+        r.combine(
+            worker_grads,
+            &[Some(bp), None],
+            &crate::pool::Sharding::Serial,
+        )
+        .unwrap();
+        assert_eq!(r.ef_state_bytes(), want);
+        // Gates: single replica, full-band mode, adaptive, no seam.
+        cfg.replicas = 1;
+        assert_eq!(ef_state_bytes(&params, &cfg), 0);
+        cfg.replicas = 4;
+        cfg.ddp_reduce = DdpReduce::Full;
+        assert_eq!(ef_state_bytes(&params, &cfg), 0);
+        cfg.ddp_reduce = DdpReduce::Auto;
+        cfg.optimizer = OptSpec::adaptive(crate::adapt::AdaptPolicy::Greedy);
+        assert_eq!(ef_state_bytes(&params, &cfg), 0);
+        cfg.optimizer = OptSpec::galore(4);
+        assert_eq!(ef_state_bytes(&params, &cfg), 0);
     }
 
     #[test]

@@ -377,6 +377,24 @@ mod tests {
     }
 
     #[test]
+    fn comm_log_zero_traffic_edge_cases() {
+        // Records can exist with zero moved bytes (degenerate ledger
+        // input): the ratio must stay `None`, never a division by
+        // zero or an inf, and totals must be plain zeros.
+        let mut log = CommLog::default();
+        log.push(CommRecord { step: 1, full_bytes: 0, bytes: 0 });
+        log.push(CommRecord { step: 2, full_bytes: 0, bytes: 0 });
+        assert_eq!(log.total_bytes(), 0);
+        assert_eq!(log.total_full_bytes(), 0);
+        assert!(log.compression_ratio().is_none());
+        // A full-band-only log reads ratio 1.0 exactly.
+        log.push(CommRecord { step: 3, full_bytes: 64, bytes: 64 });
+        assert_eq!(log.compression_ratio().unwrap(), 1.0);
+        // CSV stays well-formed with zero rows present.
+        assert!(log.to_csv().contains("1,0,0"));
+    }
+
+    #[test]
     fn throughput_counts() {
         let mut t = Throughput::new();
         t.add_tokens(500);

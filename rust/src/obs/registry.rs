@@ -37,6 +37,11 @@ pub mod keys {
     pub const POOL_BUSY_NS: &str = "pool_busy_ns";
     /// Gauge: cumulative step-pool latch-wait (idle) nanoseconds.
     pub const POOL_IDLE_NS: &str = "pool_idle_ns";
+    /// Gauge: 1 when DDP error-feedback residual buffers are live.
+    pub const EF_ENABLED: &str = "ddp_ef_enabled";
+    /// Gauge: global L2 norm of the stored EF residuals, rounded
+    /// milli-units (registry values are u64).
+    pub const EF_RESIDUAL_NORM_MILLI: &str = "ddp_ef_residual_norm_milli";
     /// Counter: adaptive migrations applied (resets included).
     pub const MIGRATIONS: &str = "migrations";
     /// Counter: migrations that took the reset fallback.

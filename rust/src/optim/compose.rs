@@ -69,6 +69,44 @@ pub trait GradientTransform: Send {
     /// Bytes of transform-owned state (projection matrices; transient
     /// coefficient scratch excluded).
     fn state_bytes(&self) -> usize;
+
+    /// The coefficient-domain seam (mirrors
+    /// [`MatrixOpt::coeff_band`]): when [`GradientTransform::down`] is
+    /// exactly "wavelet forward transform, then truncate to the
+    /// approximation band", report that `(basis, level)` so a caller
+    /// who already holds the full coefficient tensor (`crate::ddp`'s
+    /// compressed all-reduce) can enter through
+    /// [`GradientTransform::down_from_coeffs`] /
+    /// [`GradientTransform::up_from_coeffs`] instead of paying an
+    /// inverse + re-forward round trip. Default: no seam.
+    fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
+        None
+    }
+
+    /// [`GradientTransform::down`] with the forward transform already
+    /// applied: `c` is the full coefficient tensor (row layout
+    /// `[A_l | D_l | … | D_1]` for the reported `(basis, level)`).
+    /// Contract: bit-identical to `down(g)` whenever `c == fwd(g)`.
+    /// Only callable when [`GradientTransform::coeff_band`] is `Some`.
+    fn down_from_coeffs(&mut self, c: &Tensor, out: &mut [f32]) {
+        let _ = (c, out);
+        unreachable!("transform has no coefficient-domain seam");
+    }
+
+    /// [`GradientTransform::up`] reading the pass-through detail
+    /// coefficients from `c` instead of recomputing the forward
+    /// transform of `g`. Same bit-identity contract and callability
+    /// rule as [`GradientTransform::down_from_coeffs`].
+    fn up_from_coeffs(
+        &mut self,
+        c: &Tensor,
+        u: &[f32],
+        denoms: Option<&[f32]>,
+        out: &mut [f32],
+    ) {
+        let _ = (c, u, denoms, out);
+        unreachable!("transform has no coefficient-domain seam");
+    }
 }
 
 /// Optimizer state machine over a flat compact domain.
@@ -423,22 +461,56 @@ impl MatrixOpt for Composed {
         }
     }
 
-    /// Coefficient-domain seam: only the fused Wavelet×Adam engine
-    /// steps directly on wavelet coefficients today. The Generic
-    /// engine's `InnerOpt::step` interface would need a band-aware
-    /// denominator pipeline to match — until then, `ddp` reduces
-    /// full-band for those specs.
+    /// Coefficient-domain seam: the fused Wavelet×Adam engine steps
+    /// directly on wavelet coefficients, and the Generic engine
+    /// delegates to its transform's own seam — `Some` exactly for the
+    /// Wavelet × {Adam8bit, AdamMini, SgdM} compositions, whose
+    /// `down` is fwd-then-truncate (`Wavelet::down_from_coeffs` /
+    /// `up_from_coeffs` read the coefficient tensor instead of
+    /// recomputing the transform). Non-wavelet transforms and the
+    /// Direct engine report `None`, so `ddp` reduces those full-band.
     fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
         match &self.engine {
             Engine::Fused(f) => f.coeff_band(),
-            Engine::Direct(_) | Engine::Generic { .. } => None,
+            Engine::Generic { transform, .. } => transform.coeff_band(),
+            Engine::Direct(_) => None,
         }
     }
 
     fn direction_from_coeffs(&mut self, c: &Tensor, lr_eff: f32) -> Option<Tensor> {
         match &mut self.engine {
             Engine::Fused(f) => f.direction_from_coeffs(c, lr_eff),
-            Engine::Direct(_) | Engine::Generic { .. } => None,
+            Engine::Generic { transform, inner, cbuf, ubuf, dbuf } => {
+                transform.coeff_band()?;
+                assert_eq!(c.shape(), &self.shape[..]);
+                // Mirrors the Generic arm of `direction` from the
+                // post-transform point on: same inner step, same
+                // denominator plumbing, same bias-correction scale —
+                // bit-identical to `direction(g)` on `c == fwd(g)`.
+                // No ForwardTransform span: no transform runs here
+                // (`down_from_coeffs` only copies the band out).
+                transform.down_from_coeffs(c, cbuf);
+                let want = !dbuf.is_empty();
+                let bc = inner.step(
+                    cbuf,
+                    ubuf,
+                    if want { Some(&mut dbuf[..]) } else { None },
+                );
+                let mut out = vec![0.0f32; c.len()];
+                transform.up_from_coeffs(
+                    c,
+                    ubuf,
+                    if want { Some(&dbuf[..]) } else { None },
+                    &mut out,
+                );
+                if bc != 1.0 {
+                    for x in &mut out {
+                        *x *= bc;
+                    }
+                }
+                Some(Tensor::new(&self.shape, out))
+            }
+            Engine::Direct(_) => None,
         }
     }
 }
@@ -517,6 +589,66 @@ mod tests {
             }
             assert_eq!(fused.state_bytes(), generic.state_bytes());
         }
+    }
+
+    #[test]
+    fn generic_coeff_entry_matches_weight_entry_bitwise() {
+        // The generic coefficient seam: for every Wavelet × non-Adam
+        // inner, `direction_from_coeffs(fwd(g))` is bit-identical to
+        // `direction(g)` — the `MatrixOpt` contract `ddp`'s
+        // approximation-band reduce relies on now that these
+        // compositions stop falling back to full-band.
+        for inner in [InnerSpec::Adam8bit, InnerSpec::AdamMini, InnerSpec::SgdM]
+        {
+            for basis in WaveletBasis::ALL {
+                let (rows, cols, level) = (13usize, 32usize, 2usize);
+                let o = opts();
+                let spec = TransformSpec::wavelet(basis, level);
+                let mut weight =
+                    Composed::build(&[rows, cols], spec, inner, &o).unwrap();
+                let mut coeff =
+                    Composed::build(&[rows, cols], spec, inner, &o).unwrap();
+                assert_eq!(coeff.coeff_band(), Some((basis, level)));
+                let mut rng = Rng::new(47);
+                let mut scratch = vec![0.0f32; cols];
+                for step in 0..4 {
+                    let g = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+                    let mut cdata = g.data().to_vec();
+                    for r in 0..rows {
+                        basis.fwd_row(
+                            &mut cdata[r * cols..(r + 1) * cols],
+                            level,
+                            &mut scratch,
+                        );
+                    }
+                    let c = Tensor::new(&[rows, cols], cdata);
+                    let a = weight.direction(&g, 0.0);
+                    let b = coeff.direction_from_coeffs(&c, 0.0).unwrap();
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{inner:?} {basis:?} step {step}"
+                    );
+                }
+            }
+        }
+        // The seam is absent off the wavelet transform.
+        let direct = Composed::build(
+            &[8, 32],
+            TransformSpec::Identity,
+            InnerSpec::Adam8bit,
+            &opts(),
+        )
+        .unwrap();
+        assert!(direct.coeff_band().is_none());
+        let lowrank = Composed::build(
+            &[8, 32],
+            TransformSpec::LowRank { rank_denom: 4 },
+            InnerSpec::Adam,
+            &opts(),
+        )
+        .unwrap();
+        assert!(lowrank.coeff_band().is_none());
     }
 
     #[test]

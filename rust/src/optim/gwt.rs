@@ -163,6 +163,55 @@ impl GradientTransform for Wavelet {
     fn state_bytes(&self) -> usize {
         0
     }
+
+    fn coeff_band(&self) -> Option<(WaveletBasis, usize)> {
+        Some((self.basis, self.level))
+    }
+
+    fn down_from_coeffs(&mut self, c: &Tensor, out: &mut [f32]) {
+        assert_eq!(c.shape(), &[self.rows, self.cols]);
+        let q = self.q;
+        // `down` is fwd-then-truncate; with the coefficients already
+        // in hand the truncation is a row-wise copy — bit-identical
+        // to `down(g)` whenever `c == fwd(g)` (fwd is deterministic).
+        for r in 0..self.rows {
+            out[r * q..(r + 1) * q].copy_from_slice(&c.row(r)[..q]);
+        }
+    }
+
+    fn up_from_coeffs(
+        &mut self,
+        c: &Tensor,
+        u: &[f32],
+        denoms: Option<&[f32]>,
+        out: &mut [f32],
+    ) {
+        assert_eq!(c.shape(), &[self.rows, self.cols]);
+        let (n, q, level) = (self.cols, self.q, self.level);
+        for r in 0..self.rows {
+            // Same row loop as `up`, reading the detail coefficients
+            // from `c` instead of recomputing the forward transform.
+            let crow = c.row(r);
+            let orow = &mut out[r * n..(r + 1) * n];
+            orow[..q].copy_from_slice(&u[r * q..(r + 1) * q]);
+            match denoms {
+                Some(d) => {
+                    let drow = &d[r * q..(r + 1) * q];
+                    let mut off = q;
+                    for k in (1..=level).rev() {
+                        let w = n >> k;
+                        let rep = 1usize << (level - k);
+                        for j in 0..w {
+                            orow[off + j] = crow[off + j] / drow[j / rep];
+                        }
+                        off += w;
+                    }
+                }
+                None => orow[q..].copy_from_slice(&crow[q..]),
+            }
+            self.basis.inv_row(orow, level, &mut self.scratch);
+        }
+    }
 }
 
 pub struct GwtAdam {

@@ -38,7 +38,7 @@ use super::job::JobState;
 use super::source::{GradSource, PretrainSource, SyntheticSource};
 use crate::config::{presets, TrainConfig, TransformSpec};
 use crate::data::DataLoader;
-use crate::memory::measured_account;
+use crate::memory::{ef_state_bytes, measured_account};
 use crate::obs::{keys, sink, JobObs, Tracer};
 use crate::pool::Sharding;
 use crate::runtime::Runtime;
@@ -246,21 +246,26 @@ impl JobEngine {
 
     /// Worst-case admission charge for a job config: the budget-facing
     /// column of `memory::measured_account`, capped by the job's own
-    /// adaptive budget when it has one.
+    /// adaptive budget when it has one, plus the job's DDP
+    /// error-feedback residual bytes (`memory::ef_state_bytes`) when
+    /// `ddp_error_feedback` is on.
     ///
-    /// The charge is independent of `cfg.replicas`: DDP replicas here
-    /// are *logical* (per-replica data shards and gradients, one
+    /// The bank charge is independent of `cfg.replicas`: DDP replicas
+    /// here are *logical* (per-replica data shards and gradients, one
     /// shared parameter set and optimizer bank — see `crate::ddp`), so
     /// a replicated job holds exactly one bank's worth of optimizer
-    /// state and stays admissible under the same byte budget as its
-    /// single-replica twin. Per-replica gradient buffers are
-    /// transient, like every other gradient in the engine, and are
-    /// not budget-charged.
+    /// state. Per-replica gradient buffers are transient, like every
+    /// other gradient in the engine, and are not budget-charged — but
+    /// error-feedback residuals are *persistent* per-replica state
+    /// (they live across steps and ride checkpoints), so they are
+    /// charged on top, and that term does scale with the replica
+    /// count.
     pub fn charge_for(cfg: &TrainConfig) -> Result<usize> {
         let preset = presets::find(&cfg.preset)?;
         let cap = (cfg.adapt_budget_mb * MB) as usize;
-        Ok(measured_account(&preset.param_shapes(), cfg.optimizer)
-            .admission_charge(cap))
+        let shapes = preset.param_shapes();
+        Ok(measured_account(&shapes, cfg.optimizer).admission_charge(cap)
+            + ef_state_bytes(&shapes, cfg))
     }
 
     /// Submit a job; it is admitted immediately if the budget allows,
@@ -633,6 +638,27 @@ mod tests {
             e.events()[0],
             EngineEvent::Queued { .. }
         ));
+    }
+
+    #[test]
+    fn ef_residuals_raise_the_admission_charge() {
+        // The accountant must see error-feedback buffers or the serve
+        // budget cap is a lie: same spec, EF on vs off, and the delta
+        // is exactly `memory::ef_state_bytes` (replica-scaled).
+        let base = tiny_cfg(OptSpec::gwt(2), 2);
+        let mut ef = tiny_cfg(OptSpec::gwt(2), 2);
+        ef.replicas = 4;
+        ef.ddp_error_feedback = true;
+        let plain = JobEngine::charge_for(&base).unwrap();
+        let with_ef = JobEngine::charge_for(&ef).unwrap();
+        let shapes = presets::find("nano").unwrap().param_shapes();
+        let residuals = crate::memory::ef_state_bytes(&shapes, &ef);
+        assert!(residuals > 0);
+        assert_eq!(with_ef, plain + residuals);
+        // Replicas alone (EF off) still charge like the single twin.
+        let mut rep = tiny_cfg(OptSpec::gwt(2), 2);
+        rep.replicas = 4;
+        assert_eq!(JobEngine::charge_for(&rep).unwrap(), plain);
     }
 
     #[test]

@@ -305,6 +305,17 @@ impl JobState {
                 keys::STATE_BYTES_LIVE,
                 total_state_bytes(&self.bank) as u64,
             );
+            // Error-feedback health: toggle + residual-norm gauge
+            // (rounded milli-units — registry values are u64). Off
+            // means both gauges sit at 0, same as before EF existed.
+            if self.reducer.ef_enabled() {
+                self.obs.gauge_set(keys::EF_ENABLED, 1);
+                self.obs.gauge_set(
+                    keys::EF_RESIDUAL_NORM_MILLI,
+                    (self.reducer.ef_residual_norm() * 1000.0).round()
+                        as u64,
+                );
+            }
             self.obs.emit(sink::step_event(
                 &self.curve.label,
                 self.step,
@@ -338,6 +349,13 @@ impl JobState {
             for (key, t) in state {
                 ck.insert(&format!("opt::{}::{}", opt.name, key), t);
             }
+        }
+        // Error-feedback residuals (empty with EF off): without them
+        // a resumed EF job would restart from zero residuals and the
+        // first post-resume combine would silently drop one combine's
+        // detail energy — suspend/resume must stay bit-identical.
+        for (key, t) in self.reducer.export_ef_state(&self.shapes) {
+            ck.insert(&key, t);
         }
         // Split across two f32 lanes so counts beyond 2^24 survive
         // the round trip exactly.
@@ -391,6 +409,13 @@ impl JobState {
                 format!("restoring optimizer state for '{}'", opt.name)
             })?;
         }
+        // Error-feedback residuals: geometry comes from the tensors
+        // themselves; a checkpoint without `ddp::ef::*` keys (EF off,
+        // or taken before any planned combine) leaves the buffers at
+        // their zero cold start. No-op when this job's EF is off.
+        self.reducer
+            .import_ef_state(&ck.tensors, &self.shapes)
+            .context("restoring DDP error-feedback residuals")?;
         self.step = ck.step as usize;
         self.tokens_seen = match ck.tensors.get("job::tokens_seen") {
             Some(t) => {

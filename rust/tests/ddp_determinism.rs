@@ -10,11 +10,17 @@
 //! 3. The communication ledger matches the plan exactly:
 //!    (R-1) x payload x 4 bytes per parameter per combine, with the
 //!    approximation band exactly 2^level smaller than full-band.
+//! 4. Error feedback (`ddp_error_feedback = on`): the EF-on
+//!    trajectory is pinned across the same R x threads x SIMD grid,
+//!    survives suspend/resume with live residual buffers, and closes
+//!    at least half of the full-band-vs-approx convergence gap on a
+//!    decaying-noise quadratic.
 //!
 //! Synthetic sources throughout — no PJRT artifacts needed.
 
 use gwt::adapt::AdaptiveOpt;
 use gwt::config::{DdpReduce, OptSpec, TrainConfig};
+use gwt::ddp::GradReducer;
 use gwt::memory::ParamShape;
 use gwt::optim::{build_optimizers, step_bank, step_bank_mixed};
 use gwt::pool::Sharding;
@@ -273,6 +279,222 @@ fn single_replica_keeps_the_ledger_empty() {
 }
 
 #[test]
+fn error_feedback_changes_the_approx_trajectory() {
+    // Vacuity guard for the EF battery: EF-on must actually engage
+    // (diverge from EF-off), and remain distinct from full-band (the
+    // detail bands arrive one combine late, not instantly).
+    let mut off = cfg(OptSpec::gwt(2), 4);
+    off.replicas = 4;
+    let mut on = off.clone();
+    on.ddp_error_feedback = true;
+    let (_, p_off, _) = run_solo(1, &off);
+    let (_, p_on, _) = run_solo(1, &on);
+    assert_ne!(p_on, p_off, "error feedback must engage the reduce");
+    let mut full = off.clone();
+    full.ddp_reduce = DdpReduce::Full;
+    let (_, p_full, _) = run_solo(1, &full);
+    assert_ne!(p_on, p_full, "EF is delayed delivery, not full-band");
+}
+
+#[test]
+fn ef_grid_bit_identical_across_threads_and_simd() {
+    // EF-on trajectories are a pure function of the config, like the
+    // EF-off grid pin: both tree reductions (wire band + residuals)
+    // ride the fixed ascending-replica order, and residual capture is
+    // per-row independent. Reference is serial + forced-scalar.
+    for r in [2usize, 4] {
+        let mut c = cfg(OptSpec::gwt(2), 4);
+        c.grad_accum = 2;
+        c.replicas = r;
+        c.ddp_error_feedback = true;
+        kernels::set_mode(SimdMode::Scalar);
+        let (loss0, params0, final0) = run_solo(1, &c);
+        for (label, mode) in
+            [("scalar", SimdMode::Scalar), ("auto", SimdMode::Auto)]
+        {
+            kernels::set_mode(mode);
+            for threads in test_thread_grid() {
+                let (loss, params, fin) = run_solo(threads, &c);
+                assert_eq!(
+                    loss, loss0,
+                    "ef r={r} simd={label} threads={threads}: loss bits"
+                );
+                assert_eq!(
+                    params, params0,
+                    "ef r={r} simd={label} threads={threads}: param bits"
+                );
+                assert_eq!(
+                    fin, final0,
+                    "ef r={r} simd={label} threads={threads}: final loss"
+                );
+            }
+        }
+        kernels::set_mode(kernels::mode_from_env());
+    }
+}
+
+#[test]
+fn ef_suspend_resume_with_live_residuals_bit_identical() {
+    // Residuals are load-bearing state: a suspend after step 3 has
+    // live buffers, and the resumed run must replay the uninterrupted
+    // trajectory to the last bit.
+    let mut c = cfg(OptSpec::gwt(2), 6);
+    c.replicas = 2;
+    c.ddp_error_feedback = true;
+    let sharding = Sharding::Serial;
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut a =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    let mut loss_a = Vec::new();
+    for _ in 0..c.steps {
+        loss_a.push(a.step_once(&sharding).unwrap().to_bits());
+    }
+    // Interrupted twin: 3 steps, snapshot, restore into a fresh job.
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut b1 =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    for _ in 0..3 {
+        b1.step_once(&sharding).unwrap();
+    }
+    assert!(
+        b1.reducer.ef_state_bytes() > 0,
+        "no live residuals to checkpoint"
+    );
+    let mut ck = b1.snapshot().unwrap();
+    assert!(
+        ck.tensors.keys().any(|k| k.starts_with("ddp::ef::")),
+        "snapshot must carry the EF buffers"
+    );
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut b2 =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    b2.restore(&ck).unwrap();
+    let mut loss_b = Vec::new();
+    for _ in 0..3 {
+        loss_b.push(b2.step_once(&sharding).unwrap().to_bits());
+    }
+    assert_eq!(&loss_a[3..], &loss_b[..], "resumed loss bits");
+    assert_eq!(param_bits(&a.params), param_bits(&b2.params));
+    // Control: stripping the EF tensors from the checkpoint must
+    // change the resumed trajectory — the zero cold start silently
+    // drops one combine's detail energy.
+    ck.tensors.retain(|k, _| !k.starts_with("ddp::ef::"));
+    let src = SyntheticSource::new(&c).unwrap();
+    let mut b3 =
+        JobState::new(c.clone(), Box::new(src), None, &sharding).unwrap();
+    b3.restore(&ck).unwrap();
+    for _ in 0..3 {
+        b3.step_once(&sharding).unwrap();
+    }
+    assert_ne!(
+        param_bits(&a.params),
+        param_bits(&b3.params),
+        "EF buffers must be load-bearing in the checkpoint"
+    );
+}
+
+#[test]
+fn ef_closes_the_full_band_convergence_gap() {
+    // Decaying-noise quadratic: each replica reports
+    // grad = (w - target) + noise_r with per-step-decaying noise, and
+    // the loss is measured directly as ||w - target||_F (a pure
+    // function of the params, not fabricated by a source). Full-band
+    // converges to the target; approx-only never moves the detail
+    // components of the error (their update coefficients are exactly
+    // zero); EF delivers them one combine late and must close at
+    // least half the gap.
+    let shapes = vec![ParamShape {
+        name: "layers.00.attn.wq".into(),
+        shape: vec![16, 64],
+        eligible: true,
+    }];
+    let run = |reduce: DdpReduce, ef: bool| -> f64 {
+        let c = TrainConfig {
+            optimizer: OptSpec::gwt(2),
+            replicas: 4,
+            ddp_reduce: reduce,
+            ddp_error_feedback: ef,
+            ..Default::default()
+        };
+        let mut bank = build_optimizers(&shapes, &c, None).unwrap();
+        let mut rng = Rng::new(77);
+        let mut w: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let target: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let mut reducer = GradReducer::new(&c);
+        let plan = reducer.plan(&bank, &shapes);
+        let flags: Vec<bool> = plan.iter().map(|p| p.is_some()).collect();
+        let sharding = Sharding::Serial;
+        for step in 0..100u64 {
+            let scale = 0.5 * 0.9f32.powi(step as i32);
+            let worker_grads: Vec<Vec<Vec<f32>>> = (0..c.replicas)
+                .map(|r| {
+                    let mut nrng = Rng::new(1000 + step * 17 + r as u64);
+                    w.iter()
+                        .zip(&target)
+                        .map(|(wi, ti)| {
+                            let noise =
+                                nrng.normal_vec(wi.data().len(), scale);
+                            wi.data()
+                                .iter()
+                                .zip(ti.data())
+                                .zip(&noise)
+                                .map(|((a, b), n)| a - b + n)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let combined =
+                reducer.combine(worker_grads, &plan, &sharding).unwrap();
+            let grads: Vec<Tensor> = combined
+                .into_iter()
+                .zip(&shapes)
+                .map(|(g, s)| Tensor::new(&s.shape, g))
+                .collect();
+            if flags.iter().any(|&f| f) {
+                step_bank_mixed(
+                    &mut bank, &mut w, &grads, &flags, 0.05, &sharding,
+                );
+            } else {
+                step_bank(&mut bank, &mut w, &grads, 0.05, &sharding);
+            }
+        }
+        w.iter()
+            .zip(&target)
+            .flat_map(|(wi, ti)| {
+                wi.data()
+                    .iter()
+                    .zip(ti.data())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+            })
+            .sum::<f64>()
+            .sqrt()
+    };
+    let full = run(DdpReduce::Full, false);
+    let approx = run(DdpReduce::Auto, false);
+    let ef = run(DdpReduce::Auto, true);
+    let gap = approx - full;
+    assert!(
+        gap > 0.0,
+        "dropping detail bands must cost accuracy: approx {approx:.4} \
+         vs full {full:.4}"
+    );
+    assert!(ef < approx, "EF-on ({ef:.4}) must beat EF-off ({approx:.4})");
+    assert!(
+        approx - ef >= 0.5 * gap,
+        "EF must close at least half the full-band gap: closed \
+         {:.4} of {gap:.4} (full {full:.4}, approx {approx:.4}, ef {ef:.4})",
+        approx - ef
+    );
+}
+
+#[test]
 fn coeff_domain_step_matches_weight_domain_step_bitwise() {
     // The seam the compressed reduce feeds: stepping the bank with
     // forward-transformed gradients through `step_bank_mixed` must be
@@ -291,6 +513,11 @@ fn coeff_domain_step_matches_weight_domain_step_bitwise() {
         OptSpec::gwt(2),
         OptSpec::gwt_basis(WaveletBasis::Db4, 2),
         OptSpec::parse("gwt-2+adam").unwrap(),
+        // The generic Composed seam: same contract as the fused
+        // engine, for every inner it reaches.
+        OptSpec::parse("gwt-2+adam8bit").unwrap(),
+        OptSpec::parse("gwt-2+adam-mini").unwrap(),
+        OptSpec::parse("gwt-db4-2+sgdm").unwrap(),
     ];
     for spec in specs {
         let cfg = TrainConfig { optimizer: spec, ..Default::default() };
